@@ -1,0 +1,41 @@
+//! Accelerator design-space sweep: regenerate Figs. 8–10 and explore the
+//! bitwidth axis (ablation for the DESIGN.md §Perf discussion).
+//!
+//! ```bash
+//! cargo run --release --example accel_sweep
+//! ```
+
+use dnateq::accel::{
+    alexnet_shapes, geomean, resnet50_shapes, transformer_shapes, uniform_bits, AccelConfig,
+    Comparison, EnergyModel,
+};
+
+fn main() {
+    let cfg = AccelConfig::default();
+    let em = EnergyModel::default();
+    println!("Fixed-bitwidth sweep over the full-size workloads (Figs. 8/9 axes)\n");
+    println!("{:<14} {:>5} {:>9} {:>9}", "network", "bits", "speedup", "energy×");
+    for (name, shapes) in [
+        ("alexnet", alexnet_shapes()),
+        ("resnet50", resnet50_shapes()),
+        ("transformer", transformer_shapes(25)),
+    ] {
+        for bits in 3..=7u8 {
+            let cmp = Comparison::run(&cfg, &em, &shapes, &uniform_bits(&shapes, bits));
+            println!("{:<14} {:>5} {:>9.2} {:>9.2}", name, bits, cmp.speedup(), cmp.energy_savings());
+        }
+        println!();
+    }
+
+    println!("Fig. 10 — counting-step dynamic energy (pJ):");
+    for n in 3..=7u8 {
+        println!("  {n}-bit: {:.3}", em.counting_step_pj(n));
+    }
+    println!("  INT8 MAC: {:.3}", em.mac_int8_pj);
+
+    let s3: Vec<f64> = [alexnet_shapes(), resnet50_shapes(), transformer_shapes(25)]
+        .iter()
+        .map(|sh| Comparison::run(&cfg, &em, sh, &uniform_bits(sh, 4)).speedup())
+        .collect();
+    println!("\ngeomean speedup @4 bits: {:.2}", geomean(&s3));
+}

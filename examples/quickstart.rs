@@ -1,0 +1,61 @@
+//! Quickstart: calibrate DNA-TEQ on a synthetic FC stack and print a
+//! Table-V-style row — no artifacts required.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use dnateq::dnateq::{
+    calibrate_model, CalibrationInput, CalibrationOptions, LayerKind, LayerTensors,
+};
+use dnateq::tensor::{SplitMix64, Tensor};
+
+fn main() {
+    // 1. Synthesize a "model": six FC layers with exponential-ish weights
+    //    and activation traces (the tensor population of §III-A).
+    let mut rng = SplitMix64::new(7);
+    let layers = (0..6)
+        .map(|i| LayerTensors {
+            name: format!("fc{i}"),
+            kind: LayerKind::Fc,
+            weights: Tensor::rand_signed_exponential(&[512 * 128], 4.0, &mut rng),
+            acts: Tensor::rand_signed_exponential(&[1 << 14], 0.8, &mut rng),
+            is_first: i == 0,
+        })
+        .collect();
+    let input = CalibrationInput { model: "quickstart".into(), layers };
+
+    // 2. A stand-in accuracy model: degrades smoothly with quantization
+    //    error (real pipelines plug in quantized inference here — see
+    //    `repro calibrate`).
+    let eval = |cfg: &dnateq::dnateq::QuantConfig| 1.0 - cfg.accumulated_rmae() * 0.02;
+
+    // 3. Run the Fig.-3 pipeline: per-layer base search + bitwidth sweep
+    //    inside a network-level Thr_w controller.
+    let report = calibrate_model(&input, 1.0, &CalibrationOptions::default(), eval);
+
+    println!("DNA-TEQ quickstart — calibrated `{}`", report.config.model);
+    println!(
+        "{:<8} {:>6} {:>10} {:>12} {:>12} {:>8}",
+        "layer", "bits", "base", "rmae(w)", "rmae(act)", "seed"
+    );
+    for l in &report.config.layers {
+        println!(
+            "{:<8} {:>6} {:>10.4} {:>12.5} {:>12.5} {:>8}",
+            l.name,
+            l.n_bits,
+            l.base,
+            l.weights.rmae,
+            l.acts.rmae,
+            if l.seeded_by_weights { "W" } else { "A" }
+        );
+    }
+    println!(
+        "\naccepted Thr_w {:.1}% | avg bitwidth {:.2} | compression vs INT8 {:.1}% | accuracy {:.4} (fp32 {:.4})",
+        report.config.thr_w * 100.0,
+        report.config.avg_bitwidth(),
+        report.config.compression_ratio() * 100.0,
+        report.accuracy,
+        report.baseline_accuracy,
+    );
+}

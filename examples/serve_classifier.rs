@@ -1,0 +1,80 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §E2E workload).
+//!
+//! Loads the trained AlexNet-mini, serves batched classification
+//! requests through the coordinator with THREE backends — the rust f32
+//! engine, the DNA-TEQ fake-quantized engine, and the PJRT-compiled AOT
+//! artifact — and reports accuracy + latency/throughput for each.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_classifier
+//! ```
+
+use anyhow::Result;
+use dnateq::coordinator::{
+    AlexNetBackend, Backend, Coordinator, CoordinatorConfig, Output, Payload,
+    PjrtClassifierBackend,
+};
+use dnateq::dataset::ImageDataset;
+use dnateq::dnateq::CalibrationOptions;
+use dnateq::nn::{AlexNetMini, WeightMap};
+use dnateq::report::calibrate_or_load;
+use dnateq::artifact_path;
+use std::sync::Arc;
+
+fn drive(name: &str, backend: Arc<dyn Backend>, data: &ImageDataset, n: usize) -> Result<()> {
+    let c = Coordinator::start(backend, CoordinatorConfig::default());
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let idx = i % data.len();
+        rxs.push((idx, c.submit(Payload::Image(data.image(idx)))?));
+    }
+    let mut hits = 0usize;
+    for (idx, rx) in rxs {
+        if let Output::ClassId(k) = rx.recv()?.output {
+            if k == data.labels[idx] {
+                hits += 1;
+            }
+        }
+    }
+    let snap = c.shutdown();
+    println!("{name:<18} accuracy {:.4} | {}", hits as f64 / n as f64, snap.summary());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let data = ImageDataset::load(artifact_path("data"), "eval")?;
+    let n = 256;
+
+    let w = WeightMap::load_dir(artifact_path("models/alexnet_mini"))?;
+    drive(
+        "engine-fp32",
+        Arc::new(AlexNetBackend::fp32(AlexNetMini::from_weights(&w)?, "fp32")),
+        &data,
+        n,
+    )?;
+
+    let outcome = calibrate_or_load("alexnet_mini", false, &CalibrationOptions::default())?;
+    println!(
+        "  (DNA-TEQ config: avg {:.2} bits, compression {:.1}%)",
+        outcome.config.avg_bitwidth(),
+        outcome.config.compression_ratio() * 100.0
+    );
+    drive(
+        "engine-dnateq",
+        Arc::new(AlexNetBackend::quantized(
+            AlexNetMini::from_weights(&w)?,
+            &outcome.config,
+            "dnateq",
+        )),
+        &data,
+        n,
+    )?;
+
+    drive(
+        "pjrt-aot",
+        Arc::new(PjrtClassifierBackend::spawn(artifact_path("alexnet_fp32.hlo.txt"))?),
+        &data,
+        n,
+    )?;
+    Ok(())
+}

@@ -1,0 +1,302 @@
+"""AOT build entrypoint (`make artifacts` → `python -m compile.aot`).
+
+Runs ONCE at build time; python never touches the request path. Steps:
+
+1. generate the synthetic datasets (train/calib/eval splits) → `data/*.bt`
+2. train the three mini models → `models/<name>/*.bt` + `manifest.json`
+3. lower HLO **text** artifacts for the rust PJRT runtime:
+     - `<model>_fp32.hlo.txt` — FP32 forward, weights baked in
+     - `transformer_enc/dec.hlo.txt` — fixed-shape encoder/decoder
+     - `dnateq_fc.hlo.txt` — an FC layer whose weights & input run through
+       the L1 Pallas exponential quantizer (proves L1→L2→L3 composition)
+     - `pair_hist.hlo.txt` — the L1 counting-stage kernel standalone
+
+HLO text (not serialized protos) is the interchange format — jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+With ``--quantized <config.json>`` (a rust-calibrated QuantConfig) it
+additionally lowers `alexnet_dnateq.hlo.txt`, the fully DNA-TEQ-quantized
+classifier.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen, models, train
+from .btio import write_bt
+from .kernels.exp_dot import pair_histogram_pallas
+from .kernels.exp_quant import exp_roundtrip_pallas
+
+SEED = 20230713
+STAMP_VERSION = 8  # bump to force a rebuild
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the rust-loadable form)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the baked-in trained weights MUST
+    # survive the text round-trip (default printing elides them as
+    # `constant({...})`, which parses back as zeros on the rust side).
+    return comp.as_hlo_text(True)
+
+
+def dump_hlo(path: str, fn, *arg_specs):
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def build_datasets(data_dir: str, log=print):
+    log("[1/3] datasets")
+    splits = {
+        "train": datagen.gen_images(2048, SEED),
+        "calib": datagen.gen_images(48, SEED + 1),
+        "eval": datagen.gen_images(512, SEED + 2),
+    }
+    for split, (imgs, labels) in splits.items():
+        write_bt(os.path.join(data_dir, f"{split}_images.bt"), imgs)
+        write_bt(os.path.join(data_dir, f"{split}_labels.bt"), labels)
+    seq_splits = {
+        "train": datagen.gen_seqs(8192, SEED + 3),
+        "calib": datagen.gen_seqs(48, SEED + 4),
+        "eval": datagen.gen_seqs(256, SEED + 5),
+    }
+    for split, (src, tgt) in seq_splits.items():
+        write_bt(os.path.join(data_dir, f"{split}_src.bt"), src)
+        write_bt(os.path.join(data_dir, f"{split}_tgt.bt"), tgt)
+    return splits, seq_splits
+
+
+def train_models(art: str, splits, seq_splits, steps_scale: float, log=print):
+    log("[2/3] training mini models (build-time only)")
+    imgs, labels = splits["train"]
+    eimgs, elabels = splits["eval"]
+    manifest = {}
+
+    log(" alexnet_mini")
+    p = models.init_alexnet(SEED + 10)
+    p = train.train_classifier(
+        models.alexnet_forward, p, imgs, labels,
+        steps=int(320 * steps_scale), batch=24, lr=1.5e-3, seed=SEED + 11, log=log,
+    )
+    acc = train.eval_classifier(models.alexnet_forward, p, eimgs, elabels)
+    log(f"  alexnet_mini eval top-1 = {acc:.4f}")
+    save_model(art, "alexnet_mini", p, {"baseline_top1": acc})
+    manifest["alexnet_mini"] = (p, acc)
+
+    log(" resnet_mini")
+    p = models.init_resnet(SEED + 20)
+    p = train.train_classifier(
+        models.resnet_forward, p, imgs, labels,
+        steps=int(300 * steps_scale), batch=24, lr=1e-3, seed=SEED + 21, log=log,
+    )
+    acc = train.eval_classifier(models.resnet_forward, p, eimgs, elabels)
+    log(f"  resnet_mini eval top-1 = {acc:.4f}")
+    save_model(art, "resnet_mini", p, {"baseline_top1": acc})
+    manifest["resnet_mini"] = (p, acc)
+
+    log(" transformer_mini")
+    src, tgt = seq_splits["train"]
+    esrc, etgt = seq_splits["eval"]
+    p = models.init_transformer(SEED + 30)
+    p = train.train_transformer(
+        p, src, tgt, steps=int(1400 * steps_scale), batch=48, lr=2e-3, seed=SEED + 31, log=log
+    )
+    acc = train.eval_transformer(p, esrc, etgt)
+    log(f"  transformer_mini eval token-acc = {acc:.4f}")
+    save_model(art, "transformer_mini", p, {"baseline_token_acc": acc})
+    manifest["transformer_mini"] = (p, acc)
+    return manifest
+
+
+def save_model(art: str, name: str, params: dict, metrics: dict):
+    mdir = os.path.join(art, "models", name)
+    exported = models.export_weights(params, name)
+    for k, v in exported.items():
+        write_bt(os.path.join(mdir, f"{k}.bt"), v)
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(
+            {"model": name, "tensors": {k: list(v.shape) for k, v in exported.items()}, **metrics},
+            f,
+            indent=1,
+        )
+
+
+def lower_hlo(art: str, trained, log=print):
+    log("[3/3] lowering HLO artifacts")
+    f32 = jnp.float32
+
+    alex_p, _ = trained["alexnet_mini"]
+    dump_hlo(
+        os.path.join(art, "alexnet_fp32.hlo.txt"),
+        lambda x: (models.alexnet_forward(alex_p, x),),
+        jax.ShapeDtypeStruct((1, 3, 32, 32), f32),
+    )
+
+    res_p, _ = trained["resnet_mini"]
+    dump_hlo(
+        os.path.join(art, "resnet_fp32.hlo.txt"),
+        lambda x: (models.resnet_forward(res_p, x),),
+        jax.ShapeDtypeStruct((1, 3, 32, 32), f32),
+    )
+
+    tr_p, _ = trained["transformer_mini"]
+    L = datagen.MAX_LEN
+    dump_hlo(
+        os.path.join(art, "transformer_enc.hlo.txt"),
+        lambda src: (models.transformer_encode(tr_p, src),),
+        jax.ShapeDtypeStruct((1, L), jnp.int32),
+    )
+    dump_hlo(
+        os.path.join(art, "transformer_dec.hlo.txt"),
+        lambda tgt, enc, src: (models.transformer_decode(tr_p, tgt, enc, src),),
+        jax.ShapeDtypeStruct((1, L), jnp.int32),
+        jax.ShapeDtypeStruct((1, L, models.D_MODEL), f32),
+        jax.ShapeDtypeStruct((1, L), jnp.int32),
+    )
+
+    # L1→L2→L3 composition proof: FC whose weights AND input pass through
+    # the Pallas exponential quantizer, lowered into one HLO the rust
+    # runtime executes and cross-checks against its own engine.
+    w_demo = np.asarray(alex_p["fc2.w"])  # [128, 256]
+    qparams = dict(base=1.22, alpha=float(np.abs(w_demo).max() / 1.22**7), beta=0.0, n_bits=4)
+
+    def dnateq_fc(x):
+        wq = exp_roundtrip_pallas(jnp.asarray(w_demo), **qparams)
+        xq = exp_roundtrip_pallas(x, 1.22, 0.05, 0.0, 4)
+        return (xq @ wq.T,)
+
+    dump_hlo(
+        os.path.join(art, "dnateq_fc.hlo.txt"),
+        dnateq_fc,
+        jax.ShapeDtypeStruct((1, 256), f32),
+    )
+
+    # Standalone counting-stage kernel (term-1 histogram, n=4 → 29 bins).
+    def pair_hist(ac, asn, wc, wsn):
+        return (pair_histogram_pallas(ac, asn, wc, wsn, 4),)
+
+    i32 = jnp.int32
+    dump_hlo(
+        os.path.join(art, "pair_hist.hlo.txt"),
+        pair_hist,
+        jax.ShapeDtypeStruct((4096,), i32),
+        jax.ShapeDtypeStruct((4096,), i32),
+        jax.ShapeDtypeStruct((4096,), i32),
+        jax.ShapeDtypeStruct((4096,), i32),
+    )
+
+
+def load_params_from_bt(art: str, model: str) -> dict:
+    """Rebuild a jax param dict from the dumped .bt weights (conv tensors
+    are re-folded to OIHW). Enables re-lowering HLO without retraining."""
+    from .btio import read_bt
+
+    mdir = os.path.join(art, "models", model)
+    params = {}
+    for fn in sorted(os.listdir(mdir)):
+        if not fn.endswith(".bt"):
+            continue
+        key = fn[: -len(".bt")]
+        arr = read_bt(os.path.join(mdir, fn))
+        if model == "alexnet_mini" and key.endswith(".w") and key.startswith("conv"):
+            idx = int(key[4]) - 1
+            c_in = 3 if idx == 0 else models.ALEX_CONV_CH[idx - 1]
+            arr = arr.reshape(arr.shape[0], c_in, 3, 3)
+        if model == "resnet_mini" and key.endswith(".w") and not key.startswith("fc"):
+            name = key[:-2]
+            for pname, c_in, c_out, _s, k in models.resnet_conv_plan():
+                if pname == name:
+                    arr = arr.reshape(c_out, c_in, k, k)
+                    break
+        params[key] = jnp.asarray(arr)
+    return params
+
+
+def lower_quantized(art: str, config_path: str, log=print):
+    """Second-pass lowering: DNA-TEQ-quantized AlexNet from a rust
+    QuantConfig (closes the loop rust-calibration → quantized HLO)."""
+    log(f"[quantized] lowering with {config_path}")
+    with open(config_path) as f:
+        cfg = json.load(f)
+    by_name = {l["name"]: l for l in cfg["layers"]}
+    params = load_params_from_bt(art, "alexnet_mini")
+
+    def fq(name, t, which):
+        lq = by_name.get(name)
+        if lq is None:
+            return t
+        side = lq["weights"] if which == "w" else lq["acts"]
+        return exp_roundtrip_pallas(t, lq["base"], side["alpha"], side["beta"], int(lq["n_bits"]))
+
+    dump_hlo(
+        os.path.join(art, "alexnet_dnateq.hlo.txt"),
+        lambda x: (models.alexnet_forward(params, x, fake_quant=fq),),
+        jax.ShapeDtypeStruct((1, 3, 32, 32), jnp.float32),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="artifacts dir (default: ../artifacts)")
+    ap.add_argument("--force", action="store_true", help="rebuild even if stamp matches")
+    ap.add_argument("--steps-scale", type=float, default=1.0, help="scale training budgets")
+    ap.add_argument("--quantized", default=None, help="QuantConfig JSON → quantized HLO pass")
+    ap.add_argument("--lower-only", action="store_true", help="re-lower HLO from dumped weights")
+    args = ap.parse_args()
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    art = args.out or os.path.join(here, "..", "..", "artifacts")
+    art = os.path.abspath(art)
+    os.makedirs(art, exist_ok=True)
+
+    if args.quantized:
+        lower_quantized(art, args.quantized)
+        return
+
+    if args.lower_only:
+        import json as _json
+
+        trained = {}
+        for m in ["alexnet_mini", "resnet_mini", "transformer_mini"]:
+            man = _json.load(open(os.path.join(art, "models", m, "manifest.json")))
+            acc = man.get("baseline_top1", man.get("baseline_token_acc", 0.0))
+            trained[m] = (load_params_from_bt(art, m), acc)
+        lower_hlo(art, trained)
+        return
+
+    stamp_path = os.path.join(art, ".stamp.json")
+    stamp = {"version": STAMP_VERSION, "seed": SEED, "steps_scale": args.steps_scale}
+    if not args.force and os.path.exists(stamp_path):
+        with open(stamp_path) as f:
+            if json.load(f) == stamp:
+                print(f"artifacts up to date in {art} (stamp v{STAMP_VERSION}); use --force to rebuild")
+                return
+
+    t0 = time.time()
+    splits, seq_splits = build_datasets(os.path.join(art, "data"))
+    trained = train_models(art, splits, seq_splits, args.steps_scale)
+    lower_hlo(art, trained)
+    with open(stamp_path, "w") as f:
+        json.dump(stamp, f)
+    print(f"artifacts built in {time.time()-t0:.1f}s → {art}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""`.bt` binary tensor interchange with the rust side.
+
+Layout (little-endian), mirrored in ``rust/src/tensor/io.rs``::
+
+    magic   : 4 bytes  b"BT01"
+    dtype   : u32      0 = f32, 1 = i8, 2 = i32
+    ndim    : u32
+    dims    : ndim x u64
+    payload : prod(dims) x sizeof(dtype)
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+
+import numpy as np
+
+MAGIC = b"BT01"
+_DTYPES = {0: np.float32, 1: np.int8, 2: np.int32}
+_TAGS = {np.dtype(np.float32): 0, np.dtype(np.int8): 1, np.dtype(np.int32): 2}
+
+
+def write_bt(path: str, arr: np.ndarray) -> None:
+    """Write an array as `.bt`, creating parent directories."""
+    arr = np.ascontiguousarray(arr)
+    if arr.dtype not in _TAGS:
+        # Normalize common trainer dtypes.
+        if np.issubdtype(arr.dtype, np.floating):
+            arr = arr.astype(np.float32)
+        elif np.issubdtype(arr.dtype, np.integer):
+            arr = arr.astype(np.int32)
+        else:
+            raise TypeError(f"unsupported dtype {arr.dtype}")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", _TAGS[arr.dtype], arr.ndim))
+        for d in arr.shape:
+            f.write(struct.pack("<Q", d))
+        f.write(arr.tobytes())
+
+
+def read_bt(path: str) -> np.ndarray:
+    """Read a `.bt` file back into a numpy array."""
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        if magic != MAGIC:
+            raise ValueError(f"bad magic {magic!r} in {path}")
+        tag, ndim = struct.unpack("<II", f.read(8))
+        dims = [struct.unpack("<Q", f.read(8))[0] for _ in range(ndim)]
+        dtype = _DTYPES[tag]
+        n = int(np.prod(dims)) if dims else 1
+        data = np.frombuffer(f.read(n * np.dtype(dtype).itemsize), dtype=dtype)
+        return data.reshape(dims)

@@ -1,0 +1,2 @@
+# L1: Pallas kernels for DNA-TEQ's compute hot spots (exponential
+# quantizer + counting dot-product), validated against ref.py oracles.

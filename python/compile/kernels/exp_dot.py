@@ -1,0 +1,139 @@
+"""L1 Pallas kernel: the counting stage of the exponential dot product.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): a custom increment datapath
+does not exist on TPU, so the signed exponent histogram is formulated as
+a **one-hot contraction on the MXU** — each reduction block builds a
+`[K_table, block]` one-hot of the pair indices and contracts it with the
+signed-validity vector, accumulating the table in VMEM across the grid
+(the table is ≤ 253 f32 ≈ 1 KiB, trivially resident; the block operands
+are 2×128·128 i32 = 128 KiB).
+
+`interpret=True` for CPU execution (see exp_quant.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Reduction block per grid step.
+BLOCK = 128 * 128
+
+
+def _pair_hist_kernel(a_code_ref, a_sign_ref, w_code_ref, w_sign_ref, hist_ref, *, rm, zero_code, k_table):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    ac = a_code_ref[...].reshape(-1)
+    asn = a_sign_ref[...].reshape(-1)
+    wc = w_code_ref[...].reshape(-1)
+    wsn = w_sign_ref[...].reshape(-1)
+    valid = (ac != zero_code) & (wc != zero_code)
+    s = (asn * wsn * valid.astype(jnp.int32)).astype(jnp.float32)
+    idx = jnp.clip(ac + wc + 2 * rm, 0, k_table - 1)
+    # One-hot contraction — the MXU-friendly histogram (f32 accumulate).
+    onehot = (idx[None, :] == jnp.arange(k_table, dtype=jnp.int32)[:, None]).astype(jnp.float32)
+    hist_ref[...] += onehot @ s
+
+
+def pair_histogram_pallas(a_codes, a_signs, w_codes, w_signs, n_bits: int):
+    """Signed histogram of exponent sums (term 1 of Eq. 8).
+
+    Inputs are flat i32 vectors of equal length; zero-code pairs are
+    skipped. Returns an i32 table of length `4·R_max + 1`.
+    """
+    rm = (1 << (n_bits - 1)) - 1
+    zero_code = -(1 << (n_bits - 1))
+    k_table = 4 * rm + 1
+    n = a_codes.shape[0]
+    pad = (-n) % BLOCK
+    z = lambda v, fill: jnp.concatenate([v, jnp.full(pad, fill, dtype=v.dtype)]) if pad else v
+    # Padding uses the zero code → masked out of every term.
+    a_codes = z(a_codes.astype(jnp.int32), zero_code)
+    w_codes = z(w_codes.astype(jnp.int32), zero_code)
+    a_signs = z(a_signs.astype(jnp.int32), 1)
+    w_signs = z(w_signs.astype(jnp.int32), 1)
+    grid = a_codes.shape[0] // BLOCK
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    hist = pl.pallas_call(
+        functools.partial(_pair_hist_kernel, rm=rm, zero_code=zero_code, k_table=k_table),
+        out_shape=jax.ShapeDtypeStruct((k_table,), jnp.float32),
+        grid=(grid,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=pl.BlockSpec((k_table,), lambda i: (0,)),
+        interpret=True,
+    )(a_codes, a_signs, w_codes, w_signs)
+    return hist.astype(jnp.int32)
+
+
+def _single_hist_kernel(code_ref, sign_ref, other_ref, osign_ref, hist_ref, *, rm, zero_code, k_table):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    c = code_ref[...].reshape(-1)
+    s1 = sign_ref[...].reshape(-1)
+    o = other_ref[...].reshape(-1)
+    s2 = osign_ref[...].reshape(-1)
+    valid = (c != zero_code) & (o != zero_code)
+    s = (s1 * s2 * valid.astype(jnp.int32)).astype(jnp.float32)
+    idx = jnp.clip(c + rm, 0, k_table - 1)
+    onehot = (idx[None, :] == jnp.arange(k_table, dtype=jnp.int32)[:, None]).astype(jnp.float32)
+    hist_ref[...] += onehot @ s
+
+
+def single_histogram_pallas(codes, signs, other_codes, other_signs, n_bits: int):
+    """Signed histogram of one side's exponents (terms 2/3 of Eq. 8)."""
+    rm = (1 << (n_bits - 1)) - 1
+    zero_code = -(1 << (n_bits - 1))
+    k_table = 2 * rm + 1
+    n = codes.shape[0]
+    pad = (-n) % BLOCK
+    z = lambda v, fill: jnp.concatenate([v, jnp.full(pad, fill, dtype=v.dtype)]) if pad else v
+    codes = z(codes.astype(jnp.int32), zero_code)
+    other_codes = z(other_codes.astype(jnp.int32), zero_code)
+    signs = z(signs.astype(jnp.int32), 1)
+    other_signs = z(other_signs.astype(jnp.int32), 1)
+    grid = codes.shape[0] // BLOCK
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    hist = pl.pallas_call(
+        functools.partial(_single_hist_kernel, rm=rm, zero_code=zero_code, k_table=k_table),
+        out_shape=jax.ShapeDtypeStruct((k_table,), jnp.float32),
+        grid=(grid,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=pl.BlockSpec((k_table,), lambda i: (0,)),
+        interpret=True,
+    )(codes, signs, other_codes, other_signs)
+    return hist.astype(jnp.int32)
+
+
+def exp_dot_pallas(
+    a_codes, a_signs, w_codes, w_signs, base, alpha_a, beta_a, alpha_w, beta_w, n_bits: int
+):
+    """Full exponential dot product: Pallas counting stage + jnp
+    post-processing (mirroring the hardware's counting/Dequantizer split,
+    §V-C/D)."""
+    rm = (1 << (n_bits - 1)) - 1
+    pair = pair_histogram_pallas(a_codes, a_signs, w_codes, w_signs, n_bits)
+    wh = single_histogram_pallas(w_codes, w_signs, a_codes, a_signs, n_bits)
+    ah = single_histogram_pallas(a_codes, a_signs, w_codes, w_signs, n_bits)
+    sign_count = jnp.sum(pair)
+    blut_pair = jnp.power(base, jnp.arange(-2 * rm, 2 * rm + 1, dtype=jnp.float32))
+    blut_single = jnp.power(base, jnp.arange(-rm, rm + 1, dtype=jnp.float32))
+    t1 = jnp.sum(pair * blut_pair)
+    t2 = jnp.sum(wh * blut_single)
+    t3 = jnp.sum(ah * blut_single)
+    return (
+        alpha_a * alpha_w * t1
+        + alpha_w * beta_a * t2
+        + alpha_a * beta_w * t3
+        + beta_a * beta_w * sign_count
+    )

@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: LogExpQuant (Eqs. 2–3) as a tiled elementwise pass.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the quantizer is a pure
+VPU elementwise kernel — `BlockSpec` tiles of 256×128 f32 (128 KiB)
+stream HBM→VMEM while the log/round/clip pipeline runs at vector rate.
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust
+runtime can load (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM-friendly tile: 256×128 f32 = 128 KiB per operand buffer.
+TILE_ROWS = 256
+TILE_COLS = 128
+
+
+def _roundtrip_kernel(x_ref, o_ref, *, base, alpha, beta, rm):
+    x = x_ref[...]
+    mag = jnp.abs(x)
+    arg = (mag - beta) / alpha
+    safe = jnp.maximum(arg, 1e-30)
+    i = jnp.round(jnp.log(safe) * (1.0 / jnp.log(base)))
+    i = jnp.where(arg <= 0.0, -float(rm), i)
+    i = jnp.clip(i, -float(rm), float(rm))
+    q = alpha * jnp.exp(i * jnp.log(base)) + beta
+    o_ref[...] = jnp.where(x == 0.0, 0.0, jnp.sign(x) * q).astype(x.dtype)
+
+
+def exp_roundtrip_pallas(x, base: float, alpha: float, beta: float, n_bits: int):
+    """Fake-quantize an arbitrary-shape f32 tensor with the exponential
+    scheme. Tiles the flattened tensor; remainder handled by padding with
+    zeros (which quantize to exact zeros)."""
+    rm = (1 << (n_bits - 1)) - 1
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    tile = TILE_ROWS * TILE_COLS
+    n = flat.shape[0]
+    pad = (-n) % tile
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros(pad, dtype=flat.dtype)])
+    grid = flat.shape[0] // tile
+    out = pl.pallas_call(
+        functools.partial(
+            _roundtrip_kernel, base=float(base), alpha=float(alpha), beta=float(beta), rm=rm
+        ),
+        out_shape=jax.ShapeDtypeStruct((grid * TILE_ROWS, TILE_COLS), flat.dtype),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((TILE_ROWS, TILE_COLS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE_ROWS, TILE_COLS), lambda i: (i, 0)),
+        interpret=True,
+    )(flat.reshape(grid * TILE_ROWS, TILE_COLS))
+    return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+def _encode_kernel(x_ref, code_ref, sign_ref, *, base, alpha, beta, rm, zero_code):
+    x = x_ref[...]
+    mag = jnp.abs(x)
+    arg = (mag - beta) / alpha
+    safe = jnp.maximum(arg, 1e-30)
+    i = jnp.round(jnp.log(safe) * (1.0 / jnp.log(base)))
+    i = jnp.where(arg <= 0.0, -float(rm), i)
+    i = jnp.clip(i, -float(rm), float(rm))
+    code_ref[...] = jnp.where(x == 0.0, zero_code, i.astype(jnp.int32)).astype(jnp.int32)
+    sign_ref[...] = jnp.where(x < 0.0, -1, 1).astype(jnp.int32)
+
+
+def exp_encode_pallas(x, base: float, alpha: float, beta: float, n_bits: int):
+    """Quantize to (codes, signs) — the runtime Quantizer stage (§V-B)."""
+    rm = (1 << (n_bits - 1)) - 1
+    zero_code = -(1 << (n_bits - 1))
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    tile = TILE_ROWS * TILE_COLS
+    n = flat.shape[0]
+    pad = (-n) % tile
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros(pad, dtype=flat.dtype)])
+    grid = flat.shape[0] // tile
+    codes, signs = pl.pallas_call(
+        functools.partial(
+            _encode_kernel,
+            base=float(base),
+            alpha=float(alpha),
+            beta=float(beta),
+            rm=rm,
+            zero_code=zero_code,
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((grid * TILE_ROWS, TILE_COLS), jnp.int32),
+            jax.ShapeDtypeStruct((grid * TILE_ROWS, TILE_COLS), jnp.int32),
+        ),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((TILE_ROWS, TILE_COLS), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((TILE_ROWS, TILE_COLS), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_ROWS, TILE_COLS), lambda i: (i, 0)),
+        ),
+        interpret=True,
+    )(flat.reshape(grid * TILE_ROWS, TILE_COLS))
+    codes = codes.reshape(-1)[:n].reshape(orig_shape)
+    signs = signs.reshape(-1)[:n].reshape(orig_shape)
+    return codes, signs

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package is checked against these references by
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes, bitwidths and
+parameters). The math mirrors Eqs. 2–5 (quantizer) and Eq. 8 (counting
+dot product) and is also the spec the rust engine implements.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def r_max(n_bits: int) -> int:
+    """R_max = 2^{n-1} - 1 (Eq. 2)."""
+    return (1 << (n_bits - 1)) - 1
+
+
+def exp_roundtrip_ref(x, base, alpha, beta, n_bits: int):
+    """Fake-quantization: quantize-dequantize with the exponential scheme.
+
+    `x̄ = sign(x)·(α·b^i + β)` with `i = clip(round(log_b((|x|−β)/α)))`;
+    exact zeros map to zero (the reserved code, §III-B); magnitudes below
+    the smallest interval clamp to `R_min`.
+    """
+    rm = r_max(n_bits)
+    mag = jnp.abs(x)
+    arg = (mag - beta) / alpha
+    safe = jnp.maximum(arg, 1e-30)
+    i = jnp.round(jnp.log(safe) / jnp.log(base))
+    i = jnp.where(arg <= 0.0, -rm, i)
+    i = jnp.clip(i, -rm, rm)
+    q = alpha * jnp.power(base, i) + beta
+    return jnp.where(x == 0.0, 0.0, jnp.sign(x) * q).astype(x.dtype)
+
+
+def exp_encode_ref(x, base, alpha, beta, n_bits: int):
+    """Exponent codes + signs. Zero uses code `-2^{n-1}` (= R_min − 1)."""
+    rm = r_max(n_bits)
+    mag = jnp.abs(x)
+    arg = (mag - beta) / alpha
+    safe = jnp.maximum(arg, 1e-30)
+    i = jnp.round(jnp.log(safe) / jnp.log(base))
+    i = jnp.where(arg <= 0.0, -rm, i)
+    i = jnp.clip(i, -rm, rm)
+    zero_code = -(1 << (n_bits - 1))
+    codes = jnp.where(x == 0.0, zero_code, i).astype(jnp.int32)
+    signs = jnp.where(x < 0.0, -1, 1).astype(jnp.int32)
+    return codes, signs
+
+
+def pair_histogram_ref(a_codes, a_signs, w_codes, w_signs, n_bits: int):
+    """Counting stage of Eq. 8, term 1: signed histogram of exponent sums.
+
+    ``hist[k] = Σ_i s_i · 1[a_i + w_i = k − 2·R_max]`` over the pairs where
+    neither side is the zero code. Table length `4·R_max + 1 ≤ 2^{n+1}`.
+    """
+    rm = r_max(n_bits)
+    zero_code = -(1 << (n_bits - 1))
+    valid = (a_codes != zero_code) & (w_codes != zero_code)
+    s = (a_signs * w_signs) * valid.astype(jnp.int32)
+    idx = jnp.clip(a_codes + w_codes + 2 * rm, 0, 4 * rm)
+    hist = jnp.zeros(4 * rm + 1, dtype=jnp.int32)
+    return hist.at[idx].add(s)
+
+
+def single_histogram_ref(codes, pair_signs, other_codes, n_bits: int):
+    """Counting stage, terms 2/3: signed histogram of one side's exponents
+    (masked where either side is zero)."""
+    rm = r_max(n_bits)
+    zero_code = -(1 << (n_bits - 1))
+    valid = (codes != zero_code) & (other_codes != zero_code)
+    s = pair_signs * valid.astype(jnp.int32)
+    idx = jnp.clip(codes + rm, 0, 2 * rm)
+    hist = jnp.zeros(2 * rm + 1, dtype=jnp.int32)
+    return hist.at[idx].add(s)
+
+
+def exp_dot_ref(
+    a_codes, a_signs, w_codes, w_signs, base, alpha_a, beta_a, alpha_w, beta_w, n_bits: int
+):
+    """Full exponential dot product (Eq. 8): histograms → BLUT → 4 terms."""
+    rm = r_max(n_bits)
+    pair = pair_histogram_ref(a_codes, a_signs, w_codes, w_signs, n_bits)
+    s = a_signs * w_signs
+    wh = single_histogram_ref(w_codes, s, a_codes, n_bits)
+    ah = single_histogram_ref(a_codes, s, w_codes, n_bits)
+    sign_count = jnp.sum(pair)
+    blut_pair = jnp.power(base, jnp.arange(-2 * rm, 2 * rm + 1, dtype=jnp.float32))
+    blut_single = jnp.power(base, jnp.arange(-rm, rm + 1, dtype=jnp.float32))
+    t1 = jnp.sum(pair * blut_pair)
+    t2 = jnp.sum(wh * blut_single)
+    t3 = jnp.sum(ah * blut_single)
+    return (
+        alpha_a * alpha_w * t1
+        + alpha_w * beta_a * t2
+        + alpha_a * beta_w * t3
+        + beta_a * beta_w * sign_count
+    )

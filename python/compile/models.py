@@ -1,0 +1,304 @@
+"""L2 JAX model zoo — mirrors ``rust/src/nn/{alexnet,resnet,transformer}.rs``
+weight-for-weight (same layer names, shapes and forward semantics), so the
+trained parameters dump straight into the rust engine.
+
+Conventions shared with rust:
+  * images NCHW f32, conv weights exported as ``[c_out, c_in·k·k]``;
+  * FC weights ``[out, in]``;
+  * LayerNorm eps 1e-5; sinusoidal positions ``pos/10000^(2(i//2)/d)``
+    (sin on even dims, cos on odd);
+  * transformer: pre-LN, 4 heads, d=128, ff=256, 2+2 layers, vocab 32.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x, w, b, stride=1, pad=1):
+    """NCHW conv; w is [out, in, k, k]."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def maxpool2x2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def linear(x, w, b):
+    """x [., in] @ w[out, in]^T + b."""
+    return x @ w.T + b
+
+
+def layernorm(x, g, b, eps=1e-5):
+    mean = x.mean(-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * g + b
+
+
+def positional(length: int, d: int) -> np.ndarray:
+    """Sinusoidal positions — must match rust `add_positional` exactly."""
+    pe = np.zeros((length, d), dtype=np.float32)
+    for pos in range(length):
+        for i in range(d):
+            angle = pos / (10000.0 ** ((2 * (i // 2)) / d))
+            pe[pos, i] = math.sin(angle) if i % 2 == 0 else math.cos(angle)
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# AlexNet-mini (5 conv + 3 fc; pools after conv1, conv2, conv5)
+# ---------------------------------------------------------------------------
+
+ALEX_CONV_CH = [32, 64, 96, 96, 64]
+ALEX_FC_DIMS = [64 * 4 * 4, 256, 128, 10]
+
+
+def init_alexnet(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    p = {}
+    c_in = 3
+    for i, c_out in enumerate(ALEX_CONV_CH):
+        fan = c_in * 9
+        p[f"conv{i+1}.w"] = rng.normal(0, math.sqrt(2.0 / fan), (c_out, c_in, 3, 3)).astype(
+            np.float32
+        )
+        p[f"conv{i+1}.b"] = np.zeros(c_out, np.float32)
+        c_in = c_out
+    for i in range(3):
+        fan = ALEX_FC_DIMS[i]
+        p[f"fc{i+1}.w"] = rng.normal(0, math.sqrt(2.0 / fan), (ALEX_FC_DIMS[i + 1], fan)).astype(
+            np.float32
+        )
+        p[f"fc{i+1}.b"] = np.zeros(ALEX_FC_DIMS[i + 1], np.float32)
+    return {k: jnp.asarray(v) for k, v in p.items()}
+
+
+def alexnet_forward(params, x, fake_quant=None):
+    """x: [n, 3, 32, 32] → logits [n, 10].
+
+    ``fake_quant``: optional ``fn(layer_name, tensor, which) -> tensor``
+    hook applying quantization to weights (`which='w'`) and layer inputs
+    (`which='a'`) — used by the DNA-TEQ AOT variant to splice the L1
+    Pallas quantizer into the graph.
+    """
+    fq = fake_quant or (lambda name, t, which: t)
+    for i in range(5):
+        name = f"conv{i+1}"
+        x = fq(name, x, "a")
+        x = conv2d(x, fq(name, params[f"{name}.w"], "w"), params[f"{name}.b"])
+        x = jax.nn.relu(x)
+        if i in (0, 1, 4):
+            x = maxpool2x2(x)
+    x = x.reshape(x.shape[0], -1)
+    for i in range(3):
+        name = f"fc{i+1}"
+        x = fq(name, x, "a")
+        x = linear(x, fq(name, params[f"{name}.w"], "w"), params[f"{name}.b"])
+        if i < 2:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# ResNet-mini (stem + 3 stages × 2 basic blocks + fc head)
+# ---------------------------------------------------------------------------
+
+RES_STAGE_CH = [16, 32, 64]
+
+
+def resnet_conv_plan():
+    """(name, c_in, c_out, stride, k) in forward order — mirrors rust."""
+    plan = [("conv0", 3, RES_STAGE_CH[0], 1, 3)]
+    c_in = RES_STAGE_CH[0]
+    for s, c_out in enumerate(RES_STAGE_CH):
+        for b in range(2):
+            stride = 2 if (s > 0 and b == 0) else 1
+            plan.append((f"s{s+1}b{b+1}c1", c_in, c_out, stride, 3))
+            plan.append((f"s{s+1}b{b+1}c2", c_out, c_out, 1, 3))
+            if c_in != c_out or stride != 1:
+                plan.append((f"s{s+1}b{b+1}d", c_in, c_out, stride, 1))
+            c_in = c_out
+    return plan
+
+
+def init_resnet(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    p = {}
+    for name, c_in, c_out, _stride, k in resnet_conv_plan():
+        fan = c_in * k * k
+        p[f"{name}.w"] = rng.normal(0, math.sqrt(2.0 / fan), (c_out, c_in, k, k)).astype(
+            np.float32
+        )
+        p[f"{name}.b"] = np.zeros(c_out, np.float32)
+    p["fc.w"] = rng.normal(0, 0.2, (10, RES_STAGE_CH[2])).astype(np.float32)
+    p["fc.b"] = np.zeros(10, np.float32)
+    return {k: jnp.asarray(v) for k, v in p.items()}
+
+
+def resnet_forward(params, x, fake_quant=None):
+    fq = fake_quant or (lambda name, t, which: t)
+
+    def conv(name, x, stride, pad):
+        xi = fq(name, x, "a")
+        return conv2d(xi, fq(name, params[f"{name}.w"], "w"), params[f"{name}.b"], stride, pad)
+
+    x = jax.nn.relu(conv("conv0", x, 1, 1))
+    c_in = RES_STAGE_CH[0]
+    for s, c_out in enumerate(RES_STAGE_CH):
+        for b in range(2):
+            stride = 2 if (s > 0 and b == 0) else 1
+            h = jax.nn.relu(conv(f"s{s+1}b{b+1}c1", x, stride, 1))
+            h = conv(f"s{s+1}b{b+1}c2", h, 1, 1)
+            if c_in != c_out or stride != 1:
+                shortcut = conv(f"s{s+1}b{b+1}d", x, stride, 0)
+            else:
+                shortcut = x
+            x = jax.nn.relu(h + shortcut)
+            c_in = c_out
+    x = x.mean(axis=(2, 3))  # global average pool
+    x = fq("fc", x, "a")
+    return linear(x, fq("fc", params["fc.w"], "w"), params["fc.b"])
+
+
+# ---------------------------------------------------------------------------
+# Transformer-mini (pre-LN encoder-decoder)
+# ---------------------------------------------------------------------------
+
+VOCAB, D_MODEL, N_HEADS, D_FF, N_ENC, N_DEC = 32, 128, 4, 256, 2, 2
+HEAD_DIM = D_MODEL // N_HEADS
+PAD, BOS, EOS = 0, 1, 2
+
+
+def init_transformer(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    p = {}
+
+    def lin(name, o, i):
+        p[f"{name}.w"] = rng.normal(0, math.sqrt(1.0 / i), (o, i)).astype(np.float32)
+        p[f"{name}.b"] = np.zeros(o, np.float32)
+
+    def ln(name):
+        p[f"{name}.g"] = np.ones(D_MODEL, np.float32)
+        p[f"{name}.b"] = np.zeros(D_MODEL, np.float32)
+
+    p["src_emb"] = rng.normal(0, 0.1, (VOCAB, D_MODEL)).astype(np.float32)
+    p["tgt_emb"] = rng.normal(0, 0.1, (VOCAB, D_MODEL)).astype(np.float32)
+    for i in range(N_ENC):
+        for q in ["q", "k", "v", "o"]:
+            lin(f"enc{i}.{q}", D_MODEL, D_MODEL)
+        lin(f"enc{i}.ff1", D_FF, D_MODEL)
+        lin(f"enc{i}.ff2", D_MODEL, D_FF)
+        ln(f"enc{i}.ln1")
+        ln(f"enc{i}.ln2")
+    for i in range(N_DEC):
+        for q in ["s.q", "s.k", "s.v", "s.o", "c.q", "c.k", "c.v", "c.o"]:
+            lin(f"dec{i}.{q}", D_MODEL, D_MODEL)
+        lin(f"dec{i}.ff1", D_FF, D_MODEL)
+        lin(f"dec{i}.ff2", D_MODEL, D_FF)
+        ln(f"dec{i}.ln1")
+        ln(f"dec{i}.ln2")
+        ln(f"dec{i}.ln3")
+    ln("enc_ln")
+    ln("dec_ln")
+    lin("out", VOCAB, D_MODEL)
+    return {k: jnp.asarray(v) for k, v in p.items()}
+
+
+def _attention(params, prefix, x_q, x_kv, mask, fq):
+    """Batched multi-head attention. x_q [n, Lq, d], x_kv [n, Lkv, d];
+    mask [n, Lq, Lkv] additive (0 or -inf)."""
+    n, lq, _ = x_q.shape
+    lkv = x_kv.shape[1]
+
+    def proj(name, x):
+        xi = fq(name, x, "a")
+        return linear(xi, fq(name, params[f"{name}.w"], "w"), params[f"{name}.b"])
+
+    q = proj(f"{prefix}.q", x_q).reshape(n, lq, N_HEADS, HEAD_DIM)
+    k = proj(f"{prefix}.k", x_kv).reshape(n, lkv, N_HEADS, HEAD_DIM)
+    v = proj(f"{prefix}.v", x_kv).reshape(n, lkv, N_HEADS, HEAD_DIM)
+    scores = jnp.einsum("nqhd,nkhd->nhqk", q, k) / math.sqrt(HEAD_DIM)
+    scores = scores + mask[:, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("nhqk,nkhd->nqhd", probs, v).reshape(n, lq, D_MODEL)
+    return proj(f"{prefix}.o", ctx)
+
+
+def _ff(params, prefix, x, fq):
+    def proj(name, x, act=False):
+        xi = fq(name, x, "a")
+        y = linear(xi, fq(name, params[f"{name}.w"], "w"), params[f"{name}.b"])
+        return jax.nn.relu(y) if act else y
+
+    return proj(f"{prefix}.ff2", proj(f"{prefix}.ff1", x, act=True))
+
+
+def transformer_encode(params, src, fake_quant=None):
+    """src: [n, L] int32 (PAD-filled) → [n, L, d]."""
+    fq = fake_quant or (lambda name, t, which: t)
+    n, length = src.shape
+    x = params["src_emb"][src] + jnp.asarray(positional(length, D_MODEL))[None]
+    pad_mask = jnp.where(src == PAD, -1e9, 0.0)[:, None, :]  # [n, 1, Lkv]
+    mask = jnp.broadcast_to(pad_mask, (n, length, length))
+    for i in range(N_ENC):
+        h = layernorm(x, params[f"enc{i}.ln1.g"], params[f"enc{i}.ln1.b"])
+        x = x + _attention(params, f"enc{i}", h, h, mask, fq)
+        h = layernorm(x, params[f"enc{i}.ln2.g"], params[f"enc{i}.ln2.b"])
+        x = x + _ff(params, f"enc{i}", h, fq)
+    return layernorm(x, params["enc_ln.g"], params["enc_ln.b"])
+
+
+def transformer_decode(params, tgt, enc_out, src, fake_quant=None):
+    """tgt: [n, Lt] int32 → logits [n, Lt, vocab]."""
+    fq = fake_quant or (lambda name, t, which: t)
+    n, lt = tgt.shape
+    ls = enc_out.shape[1]
+    x = params["tgt_emb"][tgt] + jnp.asarray(positional(lt, D_MODEL))[None]
+    causal = jnp.where(jnp.arange(lt)[None, :] > jnp.arange(lt)[:, None], -1e9, 0.0)
+    tgt_pad = jnp.where(tgt == PAD, -1e9, 0.0)[:, None, :]
+    self_mask = jnp.broadcast_to(causal[None], (n, lt, lt)) + tgt_pad
+    cross_mask = jnp.broadcast_to(jnp.where(src == PAD, -1e9, 0.0)[:, None, :], (n, lt, ls))
+    for i in range(N_DEC):
+        h = layernorm(x, params[f"dec{i}.ln1.g"], params[f"dec{i}.ln1.b"])
+        x = x + _attention(params, f"dec{i}.s", h, h, self_mask, fq)
+        h = layernorm(x, params[f"dec{i}.ln2.g"], params[f"dec{i}.ln2.b"])
+        x = x + _attention(params, f"dec{i}.c", h, enc_out, cross_mask, fq)
+        h = layernorm(x, params[f"dec{i}.ln3.g"], params[f"dec{i}.ln3.b"])
+        x = x + _ff(params, f"dec{i}", h, fq)
+    x = layernorm(x, params["dec_ln.g"], params["dec_ln.b"])
+    xo = fq("out", x, "a")
+    return linear(xo, fq("out", params["out.w"], "w"), params["out.b"])
+
+
+# ---------------------------------------------------------------------------
+# Export helpers
+# ---------------------------------------------------------------------------
+
+
+def export_weights(params: dict, model: str) -> dict:
+    """Reshape to the rust layouts: conv [out, in·k·k]; pass through FC,
+    embeddings and norms."""
+    out = {}
+    for k, v in params.items():
+        arr = np.asarray(v)
+        if arr.ndim == 4:  # conv OIHW → [O, I*K*K]
+            arr = arr.reshape(arr.shape[0], -1)
+        out[k] = arr.astype(np.float32)
+    return out

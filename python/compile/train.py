@@ -1,0 +1,135 @@
+"""Build-time training of the mini model zoo (runs once in `make
+artifacts`). Hand-rolled Adam (no optimizer deps), jitted steps,
+single-host CPU."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datagen, models
+
+
+# ---------------------------------------------------------------------------
+# Minimal Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Classifier training (AlexNet-mini / ResNet-mini)
+# ---------------------------------------------------------------------------
+
+
+def _ce_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def train_classifier(forward, params, images, labels, *, steps, batch, lr, seed, log=print):
+    """SGD over the synthetic image task; returns trained params."""
+    state = adam_init(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(params, state, xb, yb):
+        def loss_fn(p):
+            return _ce_loss(forward(p, xb), yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state = adam_update(params, grads, state, lr)
+        return params, state, loss
+
+    n = images.shape[0]
+    t0 = time.time()
+    for s in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        params, state, loss = step(params, state, jnp.asarray(images[idx]), jnp.asarray(labels[idx]))
+        if s % 50 == 0 or s == steps - 1:
+            log(f"  step {s:4d} loss {float(loss):.4f} ({time.time()-t0:.1f}s)")
+    return params
+
+
+def eval_classifier(forward, params, images, labels, batch=64):
+    hits = 0
+    fwd = jax.jit(forward)
+    for i in range(0, images.shape[0], batch):
+        logits = fwd(params, jnp.asarray(images[i : i + batch]))
+        hits += int((np.asarray(logits).argmax(-1) == labels[i : i + batch]).sum())
+    return hits / images.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Transformer training
+# ---------------------------------------------------------------------------
+
+
+def train_transformer(params, src, tgt, *, steps, batch, lr, seed, log=print):
+    state = adam_init(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(params, state, sb, tb):
+        def loss_fn(p):
+            enc = models.transformer_encode(p, sb)
+            logits = models.transformer_decode(p, tb[:, :-1], enc, sb)
+            gold = tb[:, 1:]
+            mask = (gold != datagen.PAD).astype(jnp.float32)
+            logp = jax.nn.log_softmax(logits)
+            nll = -jnp.take_along_axis(logp, gold[..., None], axis=-1)[..., 0]
+            return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state = adam_update(params, grads, state, lr)
+        return params, state, loss
+
+    n = src.shape[0]
+    t0 = time.time()
+    for s in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        params, state, loss = step(params, state, jnp.asarray(src[idx]), jnp.asarray(tgt[idx]))
+        if s % 100 == 0 or s == steps - 1:
+            log(f"  step {s:4d} loss {float(loss):.4f} ({time.time()-t0:.1f}s)")
+    return params
+
+
+def eval_transformer(params, src, tgt, batch=64):
+    """Teacher-forced next-token accuracy over non-PAD positions."""
+    hits, total = 0, 0
+
+    @jax.jit
+    def fwd(params, sb, tb):
+        enc = models.transformer_encode(params, sb)
+        return models.transformer_decode(params, tb[:, :-1], enc, sb)
+
+    for i in range(0, src.shape[0], batch):
+        sb = jnp.asarray(src[i : i + batch])
+        tb = jnp.asarray(tgt[i : i + batch])
+        logits = np.asarray(fwd(params, sb, tb))
+        gold = np.asarray(tb)[:, 1:]
+        mask = gold != datagen.PAD
+        hits += int(((logits.argmax(-1) == gold) & mask).sum())
+        total += int(mask.sum())
+    return hits / max(total, 1)

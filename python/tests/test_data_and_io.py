@@ -1,0 +1,81 @@
+"""Dataset spec (shared with rust) + `.bt` interchange."""
+
+import os
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import datagen
+from compile.btio import read_bt, write_bt
+
+settings.register_profile("ci2", max_examples=25, deadline=None)
+settings.load_profile("ci2")
+
+
+def test_cipher_is_bijective():
+    toks = np.arange(3, datagen.VOCAB)
+    out = datagen.cipher(toks)
+    assert sorted(out.tolist()) == toks.tolist()
+
+
+def test_translate_spec():
+    payload = np.array([3, 10, 20])
+    t = datagen.translate(payload)
+    assert t.tolist() == [int(datagen.cipher(20)), int(datagen.cipher(10)), int(datagen.cipher(3))]
+
+
+def test_gen_seqs_structure():
+    src, tgt = datagen.gen_seqs(50, 1)
+    assert src.shape == (50, datagen.MAX_LEN)
+    for i in range(50):
+        s = src[i][src[i] != datagen.PAD]
+        t = tgt[i][tgt[i] != datagen.PAD]
+        assert s[-1] == datagen.EOS and t[0] == datagen.BOS and t[-1] == datagen.EOS
+        payload = s[:-1]
+        np.testing.assert_array_equal(t[1:-1], datagen.translate(payload))
+
+
+def test_gen_images_stats():
+    imgs, labels = datagen.gen_images(64, 2)
+    assert imgs.shape == (64, 3, 32, 32)
+    assert imgs.dtype == np.float32
+    assert labels.min() >= 0 and labels.max() <= 9
+    # Signal + bounded noise stays in a sane range.
+    assert np.abs(imgs).max() < 2.0
+
+
+@given(
+    shape=st.lists(st.integers(1, 6), min_size=1, max_size=4),
+    seed=st.integers(0, 2**31),
+)
+def test_bt_roundtrip_f32(shape, seed):
+    rng = np.random.default_rng(seed)
+    arr = rng.standard_normal(shape).astype(np.float32)
+    path = f"/tmp/dnateq-pytest-{os.getpid()}.bt"
+    write_bt(path, arr)
+    back = read_bt(path)
+    np.testing.assert_array_equal(back, arr)
+    os.remove(path)
+
+
+def test_bt_roundtrip_i32():
+    arr = np.array([[1, -2], [3, 4]], dtype=np.int32)
+    path = f"/tmp/dnateq-pytest-i32-{os.getpid()}.bt"
+    write_bt(path, arr)
+    back = read_bt(path)
+    assert back.dtype == np.int32
+    np.testing.assert_array_equal(back, arr)
+    os.remove(path)
+
+
+def test_bt_rejects_bad_magic():
+    path = f"/tmp/dnateq-pytest-bad-{os.getpid()}.bt"
+    with open(path, "wb") as f:
+        f.write(b"NOPE" + b"\x00" * 16)
+    try:
+        read_bt(path)
+        raise AssertionError("expected ValueError")
+    except ValueError:
+        pass
+    finally:
+        os.remove(path)

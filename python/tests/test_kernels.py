@@ -1,0 +1,140 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE L1 correctness signal.
+
+Hypothesis sweeps shapes, bitwidths and quantizer parameters; assertions
+are `assert_allclose` (exact for integer outputs).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.exp_dot import (
+    exp_dot_pallas,
+    pair_histogram_pallas,
+    single_histogram_pallas,
+)
+from compile.kernels.exp_quant import exp_encode_pallas, exp_roundtrip_pallas
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def signed_expo(n, seed, scale=0.5, zero_every=7):
+    rng = np.random.default_rng(seed)
+    x = np.sign(rng.standard_normal(n)) * rng.exponential(scale, n)
+    if zero_every:
+        x[::zero_every] = 0.0
+    return jnp.asarray(x, dtype=jnp.float32)
+
+
+@given(
+    n=st.integers(1, 5000),
+    n_bits=st.integers(3, 7),
+    base=st.floats(1.05, 1.9),
+    alpha=st.floats(0.01, 2.0),
+    beta=st.floats(0.0, 0.05),
+    seed=st.integers(0, 2**31),
+)
+def test_roundtrip_matches_ref(n, n_bits, base, alpha, beta, seed):
+    x = signed_expo(n, seed)
+    want = ref.exp_roundtrip_ref(x, base, alpha, beta, n_bits)
+    got = exp_roundtrip_pallas(x, base, alpha, beta, n_bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@given(
+    n=st.integers(1, 5000),
+    n_bits=st.integers(3, 7),
+    base=st.floats(1.05, 1.9),
+    seed=st.integers(0, 2**31),
+)
+def test_encode_matches_ref(n, n_bits, base, seed):
+    x = signed_expo(n, seed)
+    want_c, want_s = ref.exp_encode_ref(x, base, 0.3, 0.001, n_bits)
+    got_c, got_s = exp_encode_pallas(x, base, 0.3, 0.001, n_bits)
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+
+
+def _codes(n, n_bits, seed):
+    x = signed_expo(n, seed)
+    return ref.exp_encode_ref(x, 1.3, 0.4, 0.002, n_bits)
+
+
+@given(n=st.integers(1, 40000), n_bits=st.integers(3, 7), seed=st.integers(0, 2**31))
+def test_pair_histogram_matches_ref(n, n_bits, seed):
+    ac, asn = _codes(n, n_bits, seed)
+    wc, wsn = _codes(n, n_bits, seed + 1)
+    want = ref.pair_histogram_ref(ac, asn, wc, wsn, n_bits)
+    got = pair_histogram_pallas(ac, asn, wc, wsn, n_bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(n=st.integers(1, 20000), n_bits=st.integers(3, 7), seed=st.integers(0, 2**31))
+def test_single_histogram_matches_ref(n, n_bits, seed):
+    ac, asn = _codes(n, n_bits, seed)
+    wc, wsn = _codes(n, n_bits, seed + 1)
+    want = ref.single_histogram_ref(wc, asn * wsn, ac, n_bits)
+    got = single_histogram_pallas(wc, wsn, ac, asn, n_bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(n=st.integers(8, 8000), n_bits=st.integers(3, 6), seed=st.integers(0, 2**31))
+def test_exp_dot_matches_ref(n, n_bits, seed):
+    ac, asn = _codes(n, n_bits, seed)
+    wc, wsn = _codes(n, n_bits, seed + 1)
+    args = (1.3, 0.4, 0.002, 0.1, 0.001, n_bits)
+    want = float(ref.exp_dot_ref(ac, asn, wc, wsn, *args))
+    got = float(exp_dot_pallas(ac, asn, wc, wsn, *args))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_exp_dot_equals_dequantized_dot():
+    """Eq. 8 sanity: counting reconstruction == dot of dequantized values."""
+    n_bits = 5
+    x = signed_expo(3000, 42)
+    w = signed_expo(3000, 43, scale=0.15)
+    base, aa, ba, aw, bw = 1.22, 0.4, 0.003, 0.05, 0.0005
+    ac, asn = ref.exp_encode_ref(x, base, aa, ba, n_bits)
+    wc, wsn = ref.exp_encode_ref(w, base, aw, bw, n_bits)
+    got = float(ref.exp_dot_ref(ac, asn, wc, wsn, base, aa, ba, aw, bw, n_bits))
+    xq = np.asarray(ref.exp_roundtrip_ref(x, base, aa, ba, n_bits), dtype=np.float64)
+    wq = np.asarray(ref.exp_roundtrip_ref(w, base, aw, bw, n_bits), dtype=np.float64)
+    np.testing.assert_allclose(got, float(xq @ wq), rtol=1e-3)
+
+
+def test_zero_preservation():
+    x = jnp.zeros(100, dtype=jnp.float32)
+    out = exp_roundtrip_pallas(x, 1.3, 1.0, 0.01, 4)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(100, np.float32))
+    codes, signs = exp_encode_pallas(x, 1.3, 1.0, 0.01, 4)
+    assert (np.asarray(codes) == -8).all()
+    assert (np.asarray(signs) == 1).all()
+
+
+@pytest.mark.parametrize("n_bits", [3, 4, 5, 6, 7])
+def test_codes_within_clip_range(n_bits):
+    x = signed_expo(4096, 7, scale=2.0)
+    codes, _ = exp_encode_pallas(x, 1.4, 0.2, 0.001, n_bits)
+    c = np.asarray(codes)
+    rm = (1 << (n_bits - 1)) - 1
+    nz = c[c != -(1 << (n_bits - 1))]
+    assert nz.min() >= -rm and nz.max() <= rm
+
+
+def test_rmae_decreases_with_bitwidth():
+    """More exponent bits → lower quantization error (Eq. 6 monotonicity)."""
+    x = signed_expo(8192, 11)
+    prev = np.inf
+    for n_bits in range(3, 8):
+        rm = (1 << (n_bits - 1)) - 1
+        base = float(np.abs(np.asarray(x)).max()) ** (1.0 / rm)
+        base = max(base, 1.0001)
+        alpha = float(np.abs(np.asarray(x)).max()) / base**rm
+        q = np.asarray(exp_roundtrip_pallas(x, base, alpha, 0.0, n_bits))
+        xa = np.abs(np.asarray(x))
+        rmae = np.abs(np.abs(q) - xa).sum() / xa.sum()
+        assert rmae < prev * 1.05, f"n={n_bits}: {rmae} vs {prev}"
+        prev = rmae

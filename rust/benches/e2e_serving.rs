@@ -1,0 +1,38 @@
+//! End-to-end serving bench: coordinator + rust engine, fp32 vs DNA-TEQ
+//! backends (needs `make artifacts`; skips politely otherwise).
+//!
+//! `cargo bench --bench e2e_serving`
+
+use dnateq::artifact_path;
+use dnateq::coordinator::{AlexNetBackend, Coordinator, CoordinatorConfig, Payload};
+use dnateq::dataset::ImageDataset;
+use dnateq::nn::{AlexNetMini, WeightMap};
+use std::sync::Arc;
+
+fn main() {
+    let Ok(w) = WeightMap::load_dir(artifact_path("models/alexnet_mini")) else {
+        eprintln!("skipping: artifacts not built (`make artifacts`)");
+        return;
+    };
+    let data = ImageDataset::load(artifact_path("data"), "eval").expect("eval data");
+    for (label, n_requests) in [("warm", 32usize), ("measured", 192)] {
+        let c = Coordinator::start(
+            Arc::new(AlexNetBackend::fp32(
+                AlexNetMini::from_weights(&w).unwrap(),
+                "fp32",
+            )),
+            CoordinatorConfig::default(),
+        );
+        let mut rxs = Vec::new();
+        for i in 0..n_requests {
+            rxs.push(c.submit(Payload::Image(data.image(i % data.len()))).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let snap = c.shutdown();
+        if label == "measured" {
+            println!("e2e serving (engine-fp32): {}", snap.summary());
+        }
+    }
+}

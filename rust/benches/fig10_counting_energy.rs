@@ -1,0 +1,20 @@
+//! Fig. 10: dynamic energy of a counting step per bitwidth vs an INT8
+//! MAC, plus the per-neuron post-processing overhead (§VI-D).
+//!
+//! `cargo bench --bench fig10_counting_energy`
+
+use dnateq::accel::EnergyModel;
+
+fn main() {
+    let em = EnergyModel::default();
+    println!("{:<12} {:>14} {:>22}", "op", "count step pJ", "post/neuron pJ (512 taps)");
+    for n in 3..=7u8 {
+        println!(
+            "{:<12} {:>14.3} {:>22.2}",
+            format!("dnateq-{n}b"),
+            em.counting_step_pj(n),
+            em.post_process_pj(n, 512.0)
+        );
+    }
+    println!("{:<12} {:>14.3} {:>22}", "int8-mac", em.mac_int8_pj, "-");
+}

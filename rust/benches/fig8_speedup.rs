@@ -1,0 +1,46 @@
+//! Figs. 8 & 9: accelerator simulation of the full-size workloads with
+//! calibrated bitwidths (falls back to 5-bit uniform without configs).
+//!
+//! `cargo bench --bench fig8_speedup`
+
+use dnateq::accel::{
+    alexnet_shapes, assign_bits, geomean, resnet50_shapes, transformer_shapes, uniform_bits,
+    AccelConfig, Comparison, EnergyModel,
+};
+use dnateq::artifact_path;
+use dnateq::dnateq::QuantConfig;
+
+fn main() {
+    let cfg = AccelConfig::default();
+    let em = EnergyModel::default();
+    let mut speedups = Vec::new();
+    let mut savings = Vec::new();
+    println!("{:<14} {:>9} {:>9} {:>9}", "network", "avg bits", "speedup", "energy×");
+    for (name, mini, shapes) in [
+        ("alexnet", "alexnet_mini", alexnet_shapes()),
+        ("resnet50", "resnet_mini", resnet50_shapes()),
+        ("transformer", "transformer_mini", transformer_shapes(25)),
+    ] {
+        let bits = match QuantConfig::load_json(artifact_path(&format!("configs/{mini}.json"))) {
+            // configs/<m>.json stores the full outcome; the config field
+            // is nested — fall back to uniform if parsing fails.
+            _ => match std::fs::read_to_string(artifact_path(&format!("configs/{mini}.json"))) {
+                Ok(raw) => match dnateq::util::Json::parse(&raw)
+                    .ok()
+                    .and_then(|j| j.get("config").cloned())
+                    .and_then(|c| QuantConfig::from_json(&c).ok())
+                {
+                    Some(c) => assign_bits(&shapes, &c, 5),
+                    None => uniform_bits(&shapes, 5),
+                },
+                Err(_) => uniform_bits(&shapes, 5),
+            },
+        };
+        let avg = bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64;
+        let cmp = Comparison::run(&cfg, &em, &shapes, &bits);
+        println!("{:<14} {:>9.2} {:>9.2} {:>9.2}", name, avg, cmp.speedup(), cmp.energy_savings());
+        speedups.push(cmp.speedup());
+        savings.push(cmp.energy_savings());
+    }
+    println!("{:<14} {:>9} {:>9.2} {:>9.2}", "geomean", "", geomean(&speedups), geomean(&savings));
+}

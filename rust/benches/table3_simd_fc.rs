@@ -1,0 +1,32 @@
+//! Table III: FC execution time, INT8 baseline vs DNA-TEQ counting
+//! engine at 3/4 bits, sizes 1024/2048/4096.
+//!
+//! `cargo bench --bench table3_simd_fc`
+
+use dnateq::dnateq::ExpQuantParams;
+use dnateq::expdot::{CountingFc, Int8Fc};
+use dnateq::tensor::{SplitMix64, Tensor};
+use dnateq::util::bench::{bench, black_box};
+
+fn main() {
+    let mut rng = SplitMix64::new(0xF00D);
+    println!("Table III bench — per-forward latency (batch 1)\n");
+    for n in [1024usize, 2048, 4096] {
+        let w = Tensor::rand_signed_exponential(&[n, n], 4.0, &mut rng);
+        let x = Tensor::rand_signed_exponential(&[1, n], 1.0, &mut rng);
+        let int8 = Int8Fc::new(&w, None);
+        println!("{}", bench(&format!("FC({n},{n}) int8"), 900, || {
+            black_box(int8.forward(&x));
+        }).summary());
+        for bits in [3u8, 4] {
+            let wp = ExpQuantParams::init_for_tensor(&w, bits);
+            let mut ap = ExpQuantParams { base: wp.base, alpha: 1.0, beta: 0.0, n_bits: bits };
+            ap.refit_scale_offset(&x);
+            let fc = CountingFc::new(&w, wp, ap, None);
+            println!("{}", bench(&format!("FC({n},{n}) dnateq {bits}-bit"), 900, || {
+                black_box(fc.forward(&x));
+            }).summary());
+        }
+        println!();
+    }
+}

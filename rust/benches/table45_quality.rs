@@ -1,0 +1,38 @@
+//! Tables IV & V data prep: quantizer-quality microbench — RMAE of
+//! DNA-TEQ vs uniform at matched bitwidths on exponential populations,
+//! and the wall-time of Algorithm 1 itself.
+//!
+//! `cargo bench --bench table45_quality`
+
+use dnateq::dnateq::{search_base, ExpQuantParams, SearchOptions, UniformParams};
+use dnateq::tensor::{SplitMix64, Tensor};
+use dnateq::util::bench::{bench, black_box};
+
+fn main() {
+    let mut rng = SplitMix64::new(0x7AB1E);
+    let t = Tensor::rand_signed_exponential(&[1 << 16], 3.0, &mut rng);
+    println!("{:<8} {:>14} {:>14} {:>8}", "bits", "uniform RMAE", "dnateq RMAE", "ratio");
+    for n in 3..=7u8 {
+        let u = UniformParams::calibrate(&t, n).rmae(&t);
+        let d = search_base(&t, n, &SearchOptions::default()).rmae;
+        println!("{:<8} {:>14.4} {:>14.4} {:>8.2}", n, u, d, u / d);
+    }
+    println!();
+    for n in [3u8, 5, 7] {
+        println!(
+            "{}",
+            bench(&format!("Algorithm-1 base search (64k elems, {n}-bit)"), 600, || {
+                black_box(search_base(&t, n, &SearchOptions::default()));
+            })
+            .summary()
+        );
+    }
+    let p = ExpQuantParams::init_for_tensor(&t, 4);
+    println!(
+        "{}",
+        bench("LogExpQuant roundtrip (64k elems)", 400, || {
+            black_box(p.roundtrip(&t));
+        })
+        .summary()
+    );
+}

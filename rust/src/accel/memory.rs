@@ -1,0 +1,106 @@
+//! Vault memory + mesh NoC timing model.
+//!
+//! Weights/activations stream from the 3D-stacked vaults through the
+//! 2-D-mesh routers into PE buffers. The model is bandwidth-centric
+//! (the regime these accelerators operate in) with burst granularity,
+//! per-transfer latency, and NoC hop accounting for the energy model.
+
+use super::config::AccelConfig;
+
+/// DRAM burst granularity (bytes) — transfers round up.
+pub const BURST_BYTES: u64 = 32;
+/// Fixed vault access latency per independent transfer (cycles at the
+/// logic-die clock): tRCD+CAS through the TSVs + FIFO synchronization.
+pub const VAULT_LATENCY_CYCLES: u64 = 24;
+
+/// A modeled transfer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Transfer {
+    pub bytes: u64,
+    /// Cycles until the last byte arrives (bandwidth + latency).
+    pub cycles: u64,
+    /// Total NoC byte-hops (for energy accounting).
+    pub byte_hops: f64,
+}
+
+/// Memory-system timing model.
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryModel {
+    pub cfg: AccelConfig,
+}
+
+impl MemoryModel {
+    pub fn new(cfg: AccelConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Stream `bytes` spread across all vaults (weights/activations are
+    /// interleaved vault-round-robin, the Neurocube layout).
+    pub fn stream(&self, bytes: u64) -> Transfer {
+        if bytes == 0 {
+            return Transfer::default();
+        }
+        let bursts = bytes.div_ceil(BURST_BYTES);
+        let padded = bursts * BURST_BYTES;
+        let seconds = padded as f64 / self.cfg.effective_bw();
+        let bw_cycles = (seconds * self.cfg.freq_hz).ceil() as u64;
+        Transfer {
+            bytes: padded,
+            cycles: bw_cycles + VAULT_LATENCY_CYCLES + self.cfg.hop_cycles * 2,
+            byte_hops: padded as f64 * self.cfg.avg_mesh_hops(),
+        }
+    }
+
+    /// Cycles to broadcast `bytes` from one tile to all PEs (activation
+    /// broadcast): bounded by the mesh bisection, modeled as a pipelined
+    /// multicast tree of depth `2·(dim−1)`.
+    pub fn broadcast_cycles(&self, bytes: u64) -> u64 {
+        let depth = 2 * (self.cfg.mesh_dim as u64 - 1);
+        // One flit (burst) per cycle per link once the pipeline fills.
+        bytes.div_ceil(BURST_BYTES) + depth * self.cfg.hop_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bytes_is_free() {
+        let m = MemoryModel::new(AccelConfig::default());
+        assert_eq!(m.stream(0).cycles, 0);
+    }
+
+    #[test]
+    fn bursts_round_up() {
+        let m = MemoryModel::new(AccelConfig::default());
+        let t = m.stream(1);
+        assert_eq!(t.bytes, BURST_BYTES);
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_transfers() {
+        let m = MemoryModel::new(AccelConfig::default());
+        let small = m.stream(1024);
+        let big = m.stream(16 * 1024 * 1024);
+        // 16 MB at 56 GB/s effective and 300 MHz ≈ 86k cycles.
+        assert!(big.cycles > 70_000 && big.cycles < 110_000, "{}", big.cycles);
+        assert!(big.cycles > small.cycles * 100);
+    }
+
+    #[test]
+    fn halving_bytes_roughly_halves_cycles() {
+        // The core mechanism behind DNA-TEQ's speedup: fewer weight bytes.
+        let m = MemoryModel::new(AccelConfig::default());
+        let full = m.stream(8 * 1024 * 1024).cycles as f64;
+        let half = m.stream(4 * 1024 * 1024).cycles as f64;
+        let ratio = full / half;
+        assert!((1.8..2.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn broadcast_scales_with_bytes() {
+        let m = MemoryModel::new(AccelConfig::default());
+        assert!(m.broadcast_cycles(4096) > m.broadcast_cycles(64));
+    }
+}

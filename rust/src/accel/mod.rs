@@ -1,0 +1,26 @@
+//! Cycle-level model of the DNA-TEQ accelerator vs. the INT8 baseline
+//! (§V hardware, §VI-A methodology, Figs. 8–10 + §VI-D overheads).
+//!
+//! Both designs share the 3D-stacked organization (4 GB, 4×4 vaults and
+//! PEs, 10 GB/s/vault, 300 MHz logic die; [`config`]). The baseline's
+//! PEs hold 16 INT8 MAC units; DNA-TEQ's hold 16 Counter-Sets plus the
+//! runtime exponential Quantizer and two FP16 Dequantizers ([`pe`]).
+//! Timing comes from a bandwidth/latency vault + mesh model ([`memory`]);
+//! energy/area from published per-event constants calibrated to the
+//! paper's own reported totals ([`energy`] — the Synopsys/CACTI/DRAMSim3
+//! substitution is documented in DESIGN.md).
+
+pub mod config;
+pub mod energy;
+pub mod memory;
+pub mod pe;
+pub mod sim;
+pub mod workload;
+
+pub use config::{AccelConfig, Scheme};
+pub use energy::{AreaModel, EnergyModel};
+pub use memory::MemoryModel;
+pub use sim::{geomean, simulate_layer, simulate_network, Comparison, LayerSim, NetworkSim};
+pub use workload::{
+    alexnet_shapes, assign_bits, resnet50_shapes, transformer_shapes, uniform_bits, LayerShape,
+};

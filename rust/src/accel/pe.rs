@@ -1,0 +1,164 @@
+//! PE pipeline timing (§V-B/C/D).
+//!
+//! Both accelerators process a layer as three stages:
+//!
+//! * **Pre-processing** — runtime quantization of incoming FP16
+//!   activations (8 per cycle per PE, §V-B); runs *concurrently* with the
+//!   compute stage, so it only binds when faster than compute.
+//! * **Counting / MAC** — one operation per unit per cycle: a Counter-Set
+//!   indexes+increments, a MAC multiplies+accumulates.
+//! * **Post-processing** — serial per-layer Dequantizer pass (§V-D):
+//!   DNA-TEQ multiplies every count-table entry by its BLUT power
+//!   (`4·R_max+1` pair entries + 2·(`2·R_max+1`) single entries per
+//!   neuron) on 2 FP16 units per PE; INT8 needs one scale multiply per
+//!   output.
+
+use super::config::{AccelConfig, Scheme};
+
+/// Activations quantized per cycle per PE (§V-B: batches of eight).
+pub const QUANTIZER_THROUGHPUT: u64 = 8;
+
+/// BLUT entries visited per output neuron at bitwidth `n`.
+pub fn blut_entries(n_bits: u8) -> u64 {
+    let r_max = ((1u64 << (n_bits - 1)) - 1) as u64;
+    (4 * r_max + 1) + 2 * (2 * r_max + 1)
+}
+
+/// Cycles of the compute (counting/MAC) stage.
+pub fn compute_cycles(cfg: &AccelConfig, macs: u64) -> u64 {
+    macs.div_ceil(cfg.total_units() as u64)
+}
+
+/// Cycles of the concurrent pre-processing stage (DNA-TEQ only; the
+/// INT8 baseline's linear quantizer also keeps pace — divide by the same
+/// throughput for symmetry).
+pub fn preprocess_cycles(cfg: &AccelConfig, in_elems: u64) -> u64 {
+    in_elems.div_ceil(QUANTIZER_THROUGHPUT * cfg.n_pes as u64)
+}
+
+/// Expected nonzero count-table entries per neuron: `taps` contributions
+/// scattered into `blut_entries(n)` bins (balls-in-bins). The Dequantizer
+/// skips empty entries — a zero count contributes nothing to Eq. 8.
+pub fn occupied_entries(n_bits: u8, taps: u64) -> u64 {
+    let entries = blut_entries(n_bits) as f64;
+    let occ = entries * (1.0 - (-(taps as f64) / entries).exp());
+    occ.ceil().min(entries) as u64
+}
+
+/// Cycles of the post-processing stage.
+pub fn postprocess_cycles(
+    cfg: &AccelConfig,
+    scheme: Scheme,
+    out_elems: u64,
+    taps: u64,
+    n_bits: u8,
+) -> u64 {
+    let units = (cfg.dequant_units_per_pe * cfg.n_pes) as u64;
+    match scheme {
+        // One dequant multiply per output activation.
+        Scheme::Int8 => out_elems.div_ceil(units),
+        // Count tables drain at a bank row per unit-cycle (§V-C banking),
+        // skipping empty entries.
+        Scheme::DnaTeq => (out_elems * occupied_entries(n_bits, taps))
+            .div_ceil(units * cfg.dequant_vector_width as u64),
+    }
+}
+
+/// At `n ≤ 6` the Counter-Set SRAMs have spare banks (they are sized for
+/// the 7-bit worst case, §V-C), so the Dequantizer drains one bank set
+/// while the next neuron group counts into the other — post-processing
+/// overlaps counting. At `n = 7` every bank is live and the stages run
+/// serially (§V-D), which is exactly the regime §VI-D flags as costly.
+pub fn post_overlaps(n_bits: u8) -> bool {
+    n_bits <= 6
+}
+
+/// Total pipeline cycles for a layer's compute phase (memory overlap is
+/// handled by the caller): counting overlapped with pre-processing, then
+/// serial post-processing.
+pub fn pipeline_cycles(
+    cfg: &AccelConfig,
+    scheme: Scheme,
+    macs: u64,
+    in_elems: u64,
+    out_elems: u64,
+    n_bits: u8,
+) -> u64 {
+    let compute = compute_cycles(cfg, macs).max(preprocess_cycles(cfg, in_elems));
+    let taps = macs / out_elems.max(1);
+    let post = postprocess_cycles(cfg, scheme, out_elems, taps, n_bits);
+    if scheme == Scheme::DnaTeq && !post_overlaps(n_bits) {
+        compute + post
+    } else {
+        compute.max(post)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blut_entries_match_hardware_tables() {
+        // n=3: R_max=3 → 13 pair + 2·7 = 27 entries.
+        assert_eq!(blut_entries(3), 27);
+        // n=7: R_max=63 → 253 + 2·127 = 507.
+        assert_eq!(blut_entries(7), 507);
+    }
+
+    #[test]
+    fn compute_stage_is_throughput_bound() {
+        let cfg = AccelConfig::default();
+        assert_eq!(compute_cycles(&cfg, 256), 1);
+        assert_eq!(compute_cycles(&cfg, 257), 2);
+    }
+
+    #[test]
+    fn preprocessing_hides_behind_compute_for_convs() {
+        // Conv layers: many MACs per activation → pre never binds.
+        let cfg = AccelConfig::default();
+        let macs = 100_000_000;
+        let in_elems = 150_528; // 3·224·224
+        assert!(preprocess_cycles(&cfg, in_elems) < compute_cycles(&cfg, macs));
+    }
+
+    #[test]
+    fn int8_postprocessing_negligible() {
+        let cfg = AccelConfig::default();
+        let p = postprocess_cycles(&cfg, Scheme::Int8, 4096, 4096, 8);
+        assert_eq!(p, 128);
+    }
+
+    #[test]
+    fn dnateq_post_grows_with_bitwidth() {
+        let cfg = AccelConfig::default();
+        let p3 = postprocess_cycles(&cfg, Scheme::DnaTeq, 4096, 4096, 3);
+        let p7 = postprocess_cycles(&cfg, Scheme::DnaTeq, 4096, 4096, 7);
+        assert!(p7 > p3 * 10, "p3={p3} p7={p7}");
+    }
+
+    #[test]
+    fn occupancy_bounded_by_taps_and_entries() {
+        assert!(occupied_entries(7, 16) <= 17);
+        assert_eq!(occupied_entries(3, 100_000), blut_entries(3));
+    }
+
+    #[test]
+    fn post_small_vs_counting_for_deep_layers() {
+        // §V-D: "its latency is very small compared to the counting
+        // stage" — true when inputs-per-neuron ≫ BLUT entries / units.
+        let cfg = AccelConfig::default();
+        // ResNet conv: 4608 taps per output neuron, 100k outputs.
+        let out_elems = 100_352u64;
+        let macs = out_elems * 4608;
+        let post = postprocess_cycles(&cfg, Scheme::DnaTeq, out_elems, 4608, 5);
+        let count = compute_cycles(&cfg, macs);
+        assert!(post < count / 3, "post {post} vs count {count}");
+    }
+
+    #[test]
+    fn seven_bit_serializes_post() {
+        assert!(post_overlaps(3) && post_overlaps(6));
+        assert!(!post_overlaps(7));
+    }
+}

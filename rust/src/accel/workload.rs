@@ -1,0 +1,207 @@
+//! Accelerator workloads: per-layer shapes of the paper's *full-size*
+//! evaluation networks (§VI-A).
+//!
+//! The accuracy pipeline runs on the mini models (trained weights
+//! required), but the accelerator simulation needs only layer *shapes*
+//! and per-layer bitwidths — so Figs. 8–10 are regenerated on the real
+//! AlexNet / ResNet-50 / Transformer-base geometries, with bitwidths
+//! transplanted from the calibrated mini configs by relative layer
+//! position (DESIGN.md §Substitutions).
+
+use crate::dnateq::QuantConfig;
+
+/// Shape of one CONV/FC layer as the accelerator sees it.
+#[derive(Clone, Debug)]
+pub struct LayerShape {
+    pub name: String,
+    /// Multiply-accumulates (= counting steps) per inference.
+    pub macs: u64,
+    /// Weight elements.
+    pub w_elems: u64,
+    /// Input activation elements.
+    pub in_elems: u64,
+    /// Output activation elements.
+    pub out_elems: u64,
+}
+
+impl LayerShape {
+    fn conv(name: &str, c_in: u64, c_out: u64, k: u64, h_in: u64, stride: u64) -> Self {
+        let h_out = h_in / stride;
+        Self {
+            name: name.into(),
+            macs: c_out * c_in * k * k * h_out * h_out,
+            w_elems: c_out * c_in * k * k,
+            in_elems: c_in * h_in * h_in,
+            out_elems: c_out * h_out * h_out,
+        }
+    }
+
+    fn fc(name: &str, in_f: u64, out_f: u64, rows: u64) -> Self {
+        Self {
+            name: name.into(),
+            macs: in_f * out_f * rows,
+            w_elems: in_f * out_f,
+            in_elems: in_f * rows,
+            out_elems: out_f * rows,
+        }
+    }
+
+    /// Arithmetic intensity proxy: MACs per weight element (reuse).
+    pub fn weight_reuse(&self) -> f64 {
+        self.macs as f64 / self.w_elems.max(1) as f64
+    }
+}
+
+/// AlexNet (one-tower ImageNet variant, Krizhevsky 2014).
+pub fn alexnet_shapes() -> Vec<LayerShape> {
+    vec![
+        LayerShape::conv("conv1", 3, 64, 11, 224, 4),
+        LayerShape::conv("conv2", 64, 192, 5, 27, 1),
+        LayerShape::conv("conv3", 192, 384, 3, 13, 1),
+        LayerShape::conv("conv4", 384, 256, 3, 13, 1),
+        LayerShape::conv("conv5", 256, 256, 3, 13, 1),
+        LayerShape::fc("fc6", 9216, 4096, 1),
+        LayerShape::fc("fc7", 4096, 4096, 1),
+        LayerShape::fc("fc8", 4096, 1000, 1),
+    ]
+}
+
+/// ResNet-50 (ImageNet): bottleneck stages [3,4,6,3].
+pub fn resnet50_shapes() -> Vec<LayerShape> {
+    let mut v = vec![LayerShape::conv("conv1", 3, 64, 7, 224, 2)];
+    let stages: [(u64, u64, u64, u64); 4] = [
+        // (blocks, mid_channels, out_channels, spatial)
+        (3, 64, 256, 56),
+        (4, 128, 512, 28),
+        (6, 256, 1024, 14),
+        (3, 512, 2048, 7),
+    ];
+    let mut c_in = 64u64;
+    for (s, &(blocks, mid, out, hw)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            let h_in = hw * stride;
+            let p = format!("s{}b{}", s + 1, b + 1);
+            v.push(LayerShape::conv(&format!("{p}c1"), c_in, mid, 1, h_in, stride));
+            v.push(LayerShape::conv(&format!("{p}c2"), mid, mid, 3, hw, 1));
+            v.push(LayerShape::conv(&format!("{p}c3"), mid, out, 1, hw, 1));
+            if b == 0 {
+                v.push(LayerShape::conv(&format!("{p}d"), c_in, out, 1, h_in, stride));
+            }
+            c_in = out;
+        }
+    }
+    v.push(LayerShape::fc("fc", 2048, 1000, 1));
+    v
+}
+
+/// Transformer base (WMT En–De, Vaswani 2017): 6+6 layers, d=512,
+/// d_ff=2048, shared 32k vocab head; `l` tokens per sequence.
+pub fn transformer_shapes(l: u64) -> Vec<LayerShape> {
+    let d = 512u64;
+    let dff = 2048u64;
+    let mut v = Vec::new();
+    for i in 0..6 {
+        for p in ["q", "k", "v", "o"] {
+            v.push(LayerShape::fc(&format!("enc{i}.{p}"), d, d, l));
+        }
+        v.push(LayerShape::fc(&format!("enc{i}.ff1"), d, dff, l));
+        v.push(LayerShape::fc(&format!("enc{i}.ff2"), dff, d, l));
+    }
+    for i in 0..6 {
+        for p in ["s.q", "s.k", "s.v", "s.o", "c.q", "c.k", "c.v", "c.o"] {
+            v.push(LayerShape::fc(&format!("dec{i}.{p}"), d, d, l));
+        }
+        v.push(LayerShape::fc(&format!("dec{i}.ff1"), d, dff, l));
+        v.push(LayerShape::fc(&format!("dec{i}.ff2"), dff, d, l));
+    }
+    v.push(LayerShape::fc("out", d, 32_000, l));
+    v
+}
+
+/// Transplant per-layer bitwidths from a calibrated (mini) config onto a
+/// full-size shape list by relative layer position. Falls back to
+/// `default_bits` when the config is empty.
+pub fn assign_bits(shapes: &[LayerShape], cfg: &QuantConfig, default_bits: u8) -> Vec<u8> {
+    if cfg.layers.is_empty() {
+        return vec![default_bits; shapes.len()];
+    }
+    (0..shapes.len())
+        .map(|i| {
+            let j = i * cfg.layers.len() / shapes.len();
+            cfg.layers[j.min(cfg.layers.len() - 1)].n_bits
+        })
+        .collect()
+}
+
+/// Uniform bit assignment helper.
+pub fn uniform_bits(shapes: &[LayerShape], bits: u8) -> Vec<u8> {
+    vec![bits; shapes.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_macs_in_published_range() {
+        // One-tower AlexNet ≈ 0.7–1.2 GMACs.
+        let total: u64 = alexnet_shapes().iter().map(|l| l.macs).sum();
+        assert!((600e6..1.3e9).contains(&(total as f64)), "total {total}");
+        // FC6 is the famous 38M-weight layer.
+        let fc6 = &alexnet_shapes()[5];
+        assert_eq!(fc6.w_elems, 9216 * 4096);
+    }
+
+    #[test]
+    fn resnet50_macs_and_params_in_published_range() {
+        let shapes = resnet50_shapes();
+        let macs: u64 = shapes.iter().map(|l| l.macs).sum();
+        let params: u64 = shapes.iter().map(|l| l.w_elems).sum();
+        assert!((3.2e9..4.6e9).contains(&(macs as f64)), "macs {macs}");
+        assert!((20e6..28e6).contains(&(params as f64)), "params {params}");
+        // 16 bottleneck blocks → 1 stem + 48 block convs + 4 proj + 1 fc.
+        assert_eq!(shapes.len(), 54);
+    }
+
+    #[test]
+    fn transformer_fc_count_matches_paper_population() {
+        // 6·6 + 6·10 + 1 = 97 FC layers ≈ the paper's "96 FC layers"
+        // (they exclude the vocabulary head).
+        let shapes = transformer_shapes(25);
+        assert_eq!(shapes.len(), 97);
+    }
+
+    #[test]
+    fn fc_layers_have_no_weight_reuse() {
+        let shapes = alexnet_shapes();
+        assert_eq!(shapes[5].weight_reuse(), 1.0);
+        // Conv layers reuse weights across spatial positions.
+        assert!(shapes[2].weight_reuse() > 100.0);
+    }
+
+    #[test]
+    fn assign_bits_transplants_by_position() {
+        use crate::dnateq::{LayerKind, LayerQuant, TensorQuant};
+        let mk = |n: u8| LayerQuant {
+            name: format!("l{n}"),
+            kind: LayerKind::Fc,
+            n_bits: n,
+            base: 1.2,
+            weights: TensorQuant { alpha: 1.0, beta: 0.0, rmae: 0.0, elems: 1 },
+            acts: TensorQuant { alpha: 1.0, beta: 0.0, rmae: 0.0, elems: 1 },
+            seeded_by_weights: true,
+            rss_w: 0.0,
+            rss_a: 0.0,
+            converged: true,
+        };
+        let cfg = QuantConfig { model: "m".into(), thr_w: 0.01, layers: vec![mk(3), mk(7)] };
+        let shapes = alexnet_shapes();
+        let bits = assign_bits(&shapes, &cfg, 5);
+        assert_eq!(bits.len(), 8);
+        assert_eq!(bits[0], 3); // first half ← first mini layer
+        assert_eq!(bits[7], 7); // second half ← second mini layer
+        let empty = QuantConfig { model: "m".into(), thr_w: 0.01, layers: vec![] };
+        assert_eq!(assign_bits(&shapes, &empty, 5), vec![5; 8]);
+    }
+}

@@ -1,0 +1,213 @@
+//! Concrete inference backends for the serving coordinator.
+
+use super::request::{Output, Payload};
+use super::server::Backend;
+use crate::dnateq::QuantConfig;
+use crate::expdot::CountingFc;
+use crate::nn::eval::ImageModel;
+use crate::nn::{AlexNetMini, ExecPlan, ResNetMini, TransformerMini};
+use crate::runtime::Executable;
+use crate::tensor::Tensor;
+
+/// Classifier backend over the rust f32/fake-quant engine.
+pub struct ClassifierBackend<M: ImageModel + 'static> {
+    pub model: M,
+    pub plan: ExecPlan,
+    pub label: String,
+}
+
+impl<M: ImageModel + 'static> ClassifierBackend<M> {
+    pub fn fp32(model: M, label: &str) -> Self {
+        Self { model, plan: ExecPlan::fp32(), label: label.to_string() }
+    }
+
+    pub fn quantized(model: M, cfg: &QuantConfig, label: &str) -> Self {
+        let plan = ExecPlan::exp(&model, cfg);
+        Self { model, plan, label: label.to_string() }
+    }
+}
+
+impl<M: ImageModel + 'static> Backend for ClassifierBackend<M> {
+    fn infer(&self, batch: &[Payload]) -> Vec<Output> {
+        batch
+            .iter()
+            .map(|p| match p {
+                Payload::Image(img) => Output::ClassId(self.model.predict(img, &self.plan)),
+                Payload::Seq(_) => Output::ClassId(usize::MAX), // wrong modality
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+/// Type aliases for the two CNN backends.
+pub type AlexNetBackend = ClassifierBackend<AlexNetMini>;
+pub type ResNetBackend = ClassifierBackend<ResNetMini>;
+
+/// Translator backend: greedy decode via the rust engine.
+pub struct TranslatorBackend {
+    pub model: TransformerMini,
+    pub plan: ExecPlan,
+    pub max_len: usize,
+}
+
+impl Backend for TranslatorBackend {
+    fn infer(&self, batch: &[Payload]) -> Vec<Output> {
+        batch
+            .iter()
+            .map(|p| match p {
+                Payload::Seq(src) => {
+                    Output::Tokens(self.model.greedy_decode(src, self.max_len, &self.plan))
+                }
+                Payload::Image(_) => Output::Tokens(vec![]),
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &str {
+        "translator"
+    }
+}
+
+/// PJRT backend: runs the AOT-compiled FP32 classifier artifact.
+///
+/// PJRT handles are `!Send` (raw pointers + `Rc` inside the xla crate),
+/// so the executable lives on a dedicated owner thread; the backend
+/// forwards images over a channel and waits for logits. No python
+/// anywhere on this path — the HLO was compiled at `make artifacts`.
+pub struct PjrtClassifierBackend {
+    tx: std::sync::Mutex<std::sync::mpsc::Sender<(Tensor, std::sync::mpsc::SyncSender<usize>)>>,
+    _owner: std::thread::JoinHandle<()>,
+}
+
+impl PjrtClassifierBackend {
+    /// Spawn the owner thread: create the CPU client, load + compile the
+    /// artifact, then serve inference requests until the channel closes.
+    pub fn spawn(artifact: std::path::PathBuf) -> anyhow::Result<Self> {
+        let (tx, rx) =
+            std::sync::mpsc::channel::<(Tensor, std::sync::mpsc::SyncSender<usize>)>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::sync_channel::<anyhow::Result<()>>(1);
+        let owner = std::thread::spawn(move || {
+            let exe: Executable = match crate::runtime::Runtime::cpu()
+                .and_then(|rt| rt.load_hlo(&artifact))
+            {
+                Ok(exe) => {
+                    let _ = ready_tx.send(Ok(()));
+                    exe
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok((img, reply)) = rx.recv() {
+                let input = Tensor::from_vec(&[1, 3, 32, 32], img.data().to_vec());
+                let class = exe.run1(&input).map(|l| l.argmax()).unwrap_or(usize::MAX);
+                let _ = reply.send(class);
+            }
+        });
+        ready_rx.recv().map_err(|_| anyhow::anyhow!("pjrt owner thread died"))??;
+        Ok(Self { tx: std::sync::Mutex::new(tx), _owner: owner })
+    }
+}
+
+impl Backend for PjrtClassifierBackend {
+    fn infer(&self, batch: &[Payload]) -> Vec<Output> {
+        batch
+            .iter()
+            .map(|p| match p {
+                Payload::Image(img) => {
+                    let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
+                    let sent = self.tx.lock().unwrap().send((img.clone(), rtx)).is_ok();
+                    if !sent {
+                        return Output::ClassId(usize::MAX);
+                    }
+                    Output::ClassId(rrx.recv().unwrap_or(usize::MAX))
+                }
+                Payload::Seq(_) => Output::ClassId(usize::MAX),
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+}
+
+/// Counting-engine backend: an FC head evaluated entirely in the
+/// exponential domain (demonstrates the §IV software path end-to-end).
+pub struct CountingFcBackend {
+    pub fc: CountingFc,
+}
+
+impl Backend for CountingFcBackend {
+    fn infer(&self, batch: &[Payload]) -> Vec<Output> {
+        batch
+            .iter()
+            .map(|p| match p {
+                Payload::Image(img) => {
+                    let flat = Tensor::from_vec(&[1, img.len()], img.data().to_vec());
+                    let out = self.fc.forward(&flat);
+                    Output::ClassId(out.argmax())
+                }
+                Payload::Seq(_) => Output::ClassId(usize::MAX),
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &str {
+        "counting-fc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{Coordinator, CoordinatorConfig};
+    use crate::dataset::{ImageDataset, SeqDataset};
+    use std::sync::Arc;
+
+    #[test]
+    fn classifier_backend_serves_images() {
+        let backend = Arc::new(AlexNetBackend::fp32(AlexNetMini::random(201), "alexnet-fp32"));
+        let c = Coordinator::start(backend, CoordinatorConfig::default());
+        let data = ImageDataset::synthetic(4, 202);
+        for i in 0..4 {
+            let resp = c.submit_wait(Payload::Image(data.image(i))).unwrap();
+            match resp.output {
+                Output::ClassId(k) => assert!(k < 10),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(c.shutdown().completed, 4);
+    }
+
+    #[test]
+    fn translator_backend_decodes() {
+        let backend = Arc::new(TranslatorBackend {
+            model: TransformerMini::random(203),
+            plan: ExecPlan::fp32(),
+            max_len: 8,
+        });
+        let c = Coordinator::start(backend, CoordinatorConfig::default());
+        let data = SeqDataset::synthetic(2, 204);
+        let resp = c.submit_wait(Payload::Seq(data.src[0].clone())).unwrap();
+        match resp.output {
+            Output::Tokens(toks) => assert!(!toks.is_empty()),
+            other => panic!("unexpected {other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn wrong_modality_yields_sentinel() {
+        let backend = Arc::new(AlexNetBackend::fp32(AlexNetMini::random(205), "x"));
+        let c = Coordinator::start(backend, CoordinatorConfig::default());
+        let resp = c.submit_wait(Payload::Seq(vec![1, 2])).unwrap();
+        assert_eq!(resp.output, Output::ClassId(usize::MAX));
+        c.shutdown();
+    }
+}

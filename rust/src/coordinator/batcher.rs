@@ -1,0 +1,171 @@
+//! Dynamic batcher: group queued requests up to `max_batch`, waiting at
+//! most `max_wait` for stragglers once the first request of a batch
+//! arrives (the standard serving trade-off between latency and batch
+//! efficiency).
+//!
+//! Invariants (property-tested below):
+//! * conservation — every submitted request appears in exactly one batch;
+//! * FIFO — batch concatenation preserves submission order;
+//! * bound — every batch has `1..=max_batch` requests.
+
+use super::request::Request;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Batch-forming policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Pulls requests off the shared queue and forms batches. Multiple
+/// workers may share one `Batcher` (the receiver is mutex-guarded; each
+/// batch is formed under the lock so interleaving cannot split FIFO
+/// order *within* a batch).
+pub struct Batcher {
+    rx: Mutex<Receiver<Request>>,
+    cfg: BatcherConfig,
+}
+
+impl Batcher {
+    pub fn new(rx: Receiver<Request>, cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch >= 1);
+        Self { rx: Mutex::new(rx), cfg }
+    }
+
+    /// Block for the next batch. Returns `None` once the queue is closed
+    /// and drained (worker shutdown signal).
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let rx = self.rx.lock().unwrap();
+        // Block for the first request.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return None,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.cfg.max_wait;
+        while batch.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Payload, Request};
+    use crate::tensor::SplitMix64;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn mk_request(id: u64) -> (Request, mpsc::Receiver<super::super::request::Response>) {
+        let (tx, rx) = mpsc::sync_channel(1);
+        (
+            Request { id, payload: Payload::Seq(vec![1, 2]), submitted: Instant::now(), respond_to: tx },
+            rx,
+        )
+    }
+
+    #[test]
+    fn batches_respect_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        let b = Batcher::new(rx, BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(50) });
+        let mut keep = Vec::new();
+        for i in 0..7 {
+            let (r, rx) = mk_request(i);
+            keep.push(rx);
+            tx.send(r).unwrap();
+        }
+        drop(tx);
+        let mut sizes = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(!batch.is_empty() && batch.len() <= 3);
+            sizes.push(batch.len());
+        }
+        assert_eq!(sizes.iter().sum::<usize>(), 7);
+        assert_eq!(sizes[0], 3);
+    }
+
+    #[test]
+    fn closed_empty_queue_returns_none() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        drop(tx);
+        let b = Batcher::new(rx, BatcherConfig::default());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn max_wait_flushes_partial_batches() {
+        let (tx, rx) = mpsc::channel();
+        let b = Batcher::new(
+            rx,
+            BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(5) },
+        );
+        let (r, _keep) = mk_request(0);
+        tx.send(r).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn property_conservation_and_fifo() {
+        // Random request counts / batch configs: every id appears exactly
+        // once, in submission order across concatenated batches.
+        crate::util::prop::for_all(
+            crate::util::prop::PropConfig { cases: 32, seed: 0xBA7C4 },
+            |rng: &mut SplitMix64, size| {
+                let n = 1 + rng.next_below(8 * size.max(1));
+                let max_batch = 1 + rng.next_below(9);
+                (n, max_batch)
+            },
+            |&(n, max_batch)| {
+                let (tx, rx) = mpsc::channel();
+                let b = Batcher::new(
+                    rx,
+                    BatcherConfig {
+                        max_batch,
+                        max_wait: Duration::from_micros(200),
+                    },
+                );
+                let mut keep = Vec::new();
+                for i in 0..n {
+                    let (r, rx2) = mk_request(i as u64);
+                    keep.push(rx2);
+                    tx.send(r).map_err(|e| e.to_string())?;
+                }
+                drop(tx);
+                let mut seen = Vec::new();
+                while let Some(batch) = b.next_batch() {
+                    if batch.is_empty() || batch.len() > max_batch {
+                        return Err(format!("bad batch size {}", batch.len()));
+                    }
+                    seen.extend(batch.iter().map(|r| r.id));
+                }
+                let want: Vec<u64> = (0..n as u64).collect();
+                if seen != want {
+                    return Err(format!("order/conservation broken: {seen:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

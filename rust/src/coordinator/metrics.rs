@@ -1,0 +1,150 @@
+//! Serving metrics: counters + latency distribution.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Shared metrics sink (thread-safe).
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    completed: AtomicU64,
+    batches: AtomicU64,
+    batch_items: AtomicU64,
+    /// End-to-end latencies (seconds).
+    e2e: Mutex<Vec<f64>>,
+    /// Queue-wait latencies (seconds).
+    queue: Mutex<Vec<f64>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            started: Instant::now(),
+            completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_items: AtomicU64::new(0),
+            e2e: Mutex::new(Vec::new()),
+            queue: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_items.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_response(&self, e2e_s: f64, queue_s: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.e2e.lock().unwrap().push(e2e_s);
+        self.queue.lock().unwrap().push(queue_s);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let e2e = self.e2e.lock().unwrap().clone();
+        let queue = self.queue.lock().unwrap().clone();
+        let completed = self.completed.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed).max(1);
+        MetricsSnapshot {
+            completed,
+            throughput_rps: completed as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
+            avg_batch: self.batch_items.load(Ordering::Relaxed) as f64 / batches as f64,
+            e2e: Percentiles::of(e2e),
+            queue: Percentiles::of(queue),
+        }
+    }
+}
+
+/// Latency percentiles (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Percentiles {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Percentiles {
+    pub fn of(mut xs: Vec<f64>) -> Self {
+        if xs.is_empty() {
+            return Self::default();
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| xs[((xs.len() as f64 - 1.0) * p).floor() as usize];
+        Self {
+            mean: xs.iter().sum::<f64>() / xs.len() as f64,
+            p50: q(0.50),
+            p95: q(0.95),
+            p99: q(0.99),
+            max: *xs.last().unwrap(),
+        }
+    }
+}
+
+/// Point-in-time view of the metrics.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub throughput_rps: f64,
+    pub avg_batch: f64,
+    pub e2e: Percentiles,
+    pub queue: Percentiles,
+}
+
+impl MetricsSnapshot {
+    pub fn summary(&self) -> String {
+        format!(
+            "{} req, {:.1} req/s, avg batch {:.2}, e2e p50/p95/p99 = {:.2}/{:.2}/{:.2} ms",
+            self.completed,
+            self.throughput_rps,
+            self.avg_batch,
+            self.e2e.p50 * 1e3,
+            self.e2e.p95 * 1e3,
+            self.e2e.p99 * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_known_data() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let p = Percentiles::of(xs);
+        assert_eq!(p.p50, 50.0);
+        assert_eq!(p.p95, 95.0);
+        assert_eq!(p.p99, 99.0);
+        assert_eq!(p.max, 100.0);
+        assert!((p.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_percentiles_are_zero() {
+        let p = Percentiles::of(vec![]);
+        assert_eq!(p.p99, 0.0);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(2);
+        for _ in 0..6 {
+            m.record_response(0.010, 0.001);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 6);
+        assert!((s.avg_batch - 3.0).abs() < 1e-9);
+        assert!((s.e2e.p50 - 0.010).abs() < 1e-9);
+        assert!(s.summary().contains("6 req"));
+    }
+}

@@ -1,0 +1,19 @@
+//! Serving coordinator (L3): submission queue → dynamic batcher → worker
+//! pool over a pluggable inference [`server::Backend`] (rust engine,
+//! exponential counting engine, or a PJRT-compiled AOT artifact), with
+//! per-request latency metrics and bounded-queue backpressure.
+
+pub mod backends;
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use backends::{
+    AlexNetBackend, ClassifierBackend, CountingFcBackend, PjrtClassifierBackend, ResNetBackend,
+    TranslatorBackend,
+};
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::{Metrics, MetricsSnapshot, Percentiles};
+pub use request::{Output, Payload, Request, Response};
+pub use server::{Backend, Coordinator, CoordinatorConfig, EchoBackend};

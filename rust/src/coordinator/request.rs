@@ -1,0 +1,41 @@
+//! Request/response types of the serving layer.
+
+use crate::tensor::Tensor;
+use std::sync::mpsc::SyncSender;
+use std::time::Instant;
+
+/// What a client submits.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// One `[3, 32, 32]` image for the CNN classifiers.
+    Image(Tensor),
+    /// A source token sequence for the translator.
+    Seq(Vec<usize>),
+}
+
+/// What the backend produces.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Output {
+    ClassId(usize),
+    Logits(Tensor),
+    Tokens(Vec<usize>),
+}
+
+/// Internal queued request.
+pub struct Request {
+    pub id: u64,
+    pub payload: Payload,
+    pub submitted: Instant,
+    pub respond_to: SyncSender<Response>,
+}
+
+/// Completed response with timing.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub output: Output,
+    /// Time spent queued before the batch formed (seconds).
+    pub queue_s: f64,
+    /// End-to-end latency (seconds).
+    pub e2e_s: f64,
+}

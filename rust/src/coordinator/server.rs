@@ -1,0 +1,220 @@
+//! The serving coordinator: submission queue → dynamic batcher → worker
+//! pool → per-request response channels. Pure std (threads + mpsc); the
+//! backend is pluggable ([`Backend`]) — rust engine, counting engine, or
+//! a PJRT executable.
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::request::{Output, Payload, Request, Response};
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Inference backend: maps a batch of payloads to outputs (1:1, in
+/// order). Must be cheap to share across worker threads.
+pub trait Backend: Send + Sync + 'static {
+    fn infer(&self, batch: &[Payload]) -> Vec<Output>;
+    fn name(&self) -> &str {
+        "backend"
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    pub batcher: BatcherConfig,
+    pub workers: usize,
+    /// Submission queue bound (backpressure: submit blocks when full).
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self { batcher: BatcherConfig::default(), workers: 2, queue_depth: 256 }
+    }
+}
+
+/// Handle to a running serving instance.
+pub struct Coordinator {
+    tx: Option<SyncSender<Request>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl Coordinator {
+    /// Start the worker pool over `backend`.
+    pub fn start<B: Backend + ?Sized>(backend: Arc<B>, cfg: CoordinatorConfig) -> Self {
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+        let batcher = Arc::new(Batcher::new(rx, cfg.batcher));
+        let metrics = Arc::new(Metrics::new());
+        let workers = (0..cfg.workers.max(1))
+            .map(|_| {
+                let batcher = Arc::clone(&batcher);
+                let backend = Arc::clone(&backend);
+                let metrics = Arc::clone(&metrics);
+                std::thread::spawn(move || {
+                    while let Some(batch) = batcher.next_batch() {
+                        metrics.record_batch(batch.len());
+                        let formed = Instant::now();
+                        let payloads: Vec<Payload> =
+                            batch.iter().map(|r| r.payload.clone()).collect();
+                        let outputs = backend.infer(&payloads);
+                        debug_assert_eq!(outputs.len(), batch.len());
+                        for (req, output) in batch.into_iter().zip(outputs) {
+                            let e2e = req.submitted.elapsed().as_secs_f64();
+                            let queue = formed.duration_since(req.submitted).as_secs_f64();
+                            metrics.record_response(e2e, queue);
+                            // A dropped client receiver is not an error.
+                            let _ = req.respond_to.send(Response {
+                                id: req.id,
+                                output,
+                                queue_s: queue,
+                                e2e_s: e2e,
+                            });
+                        }
+                    }
+                })
+            })
+            .collect();
+        Self { tx: Some(tx), workers, metrics, next_id: AtomicU64::new(0) }
+    }
+
+    /// Submit a request; returns the response channel (async-style).
+    pub fn submit(&self, payload: Payload) -> Result<Receiver<Response>> {
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            payload,
+            submitted: Instant::now(),
+            respond_to: rtx,
+        };
+        self.tx
+            .as_ref()
+            .expect("coordinator running")
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("coordinator shut down"))?;
+        Ok(rrx)
+    }
+
+    /// Submit and block for the response.
+    pub fn submit_wait(&self, payload: Payload) -> Result<Response> {
+        let rx = self.submit(payload)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("worker dropped response"))
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Drain and stop all workers, returning final metrics.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.tx.take(); // close the queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+/// Trivial backend used by tests: echoes sequence payloads, classifies
+/// images as 0 after a configurable busy-delay.
+pub struct EchoBackend {
+    pub delay_us: u64,
+}
+
+impl Backend for EchoBackend {
+    fn infer(&self, batch: &[Payload]) -> Vec<Output> {
+        if self.delay_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(self.delay_us));
+        }
+        batch
+            .iter()
+            .map(|p| match p {
+                Payload::Seq(s) => Output::Tokens(s.clone()),
+                Payload::Image(_) => Output::ClassId(0),
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &str {
+        "echo"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_and_echoes() {
+        let c = Coordinator::start(Arc::new(EchoBackend { delay_us: 0 }), CoordinatorConfig::default());
+        let resp = c.submit_wait(Payload::Seq(vec![4, 5, 6])).unwrap();
+        assert_eq!(resp.output, Output::Tokens(vec![4, 5, 6]));
+        let snap = c.shutdown();
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn many_concurrent_clients_all_answered() {
+        let c = Arc::new(Coordinator::start(
+            Arc::new(EchoBackend { delay_us: 50 }),
+            CoordinatorConfig {
+                batcher: BatcherConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
+                workers: 3,
+                queue_depth: 64,
+            },
+        ));
+        let mut clients = Vec::new();
+        for t in 0..4 {
+            let c = Arc::clone(&c);
+            clients.push(std::thread::spawn(move || {
+                for i in 0..25 {
+                    let resp = c.submit_wait(Payload::Seq(vec![t, i])).unwrap();
+                    assert_eq!(resp.output, Output::Tokens(vec![t, i]));
+                }
+            }));
+        }
+        for cl in clients {
+            cl.join().unwrap();
+        }
+        let c = Arc::try_unwrap(c).ok().expect("sole owner");
+        let snap = c.shutdown();
+        assert_eq!(snap.completed, 100);
+        assert!(snap.avg_batch >= 1.0);
+        assert!(snap.e2e.p50 > 0.0);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let c = Coordinator::start(Arc::new(EchoBackend { delay_us: 0 }), CoordinatorConfig::default());
+        let snap = c.shutdown();
+        assert_eq!(snap.completed, 0);
+    }
+
+    #[test]
+    fn batching_actually_groups() {
+        // One slow worker + many queued requests → avg batch > 1.
+        let c = Arc::new(Coordinator::start(
+            Arc::new(EchoBackend { delay_us: 2000 }),
+            CoordinatorConfig {
+                batcher: BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(4) },
+                workers: 1,
+                queue_depth: 256,
+            },
+        ));
+        let mut rxs = Vec::new();
+        for i in 0..64 {
+            rxs.push(c.submit(Payload::Seq(vec![i])).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let c = Arc::try_unwrap(c).ok().expect("sole owner");
+        let snap = c.shutdown();
+        assert_eq!(snap.completed, 64);
+        assert!(snap.avg_batch > 1.5, "avg batch {}", snap.avg_batch);
+    }
+}

@@ -1,0 +1,238 @@
+//! Evaluation/calibration workloads (§VI-A, substitutions in DESIGN.md).
+//!
+//! * [`ImageDataset`] — 32×32×3 10-class images. The python compile path
+//!   trains the CNN minis on its synthetic set and dumps calib/eval
+//!   splits as `.bt`; [`ImageDataset::synthetic`] generates an equivalent
+//!   population in rust for tests and benches.
+//! * [`SeqDataset`] — the synthetic reversal-translation task standing in
+//!   for WMT En–De: `tgt = BOS ++ cipher(reverse(payload)) ++ EOS`.
+//!   The cipher spec is shared verbatim with `python/compile/datagen.py`.
+
+use crate::nn::transformer::{BOS, EOS, PAD, VOCAB};
+use crate::tensor::{load_tensor, SplitMix64, Tensor};
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// Labeled image set, NCHW.
+#[derive(Clone, Debug)]
+pub struct ImageDataset {
+    /// `[n, 3, 32, 32]`.
+    pub images: Tensor,
+    pub labels: Vec<usize>,
+}
+
+impl ImageDataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Image `i` as a standalone `[3, 32, 32]` tensor.
+    pub fn image(&self, i: usize) -> Tensor {
+        Tensor::from_vec(&[3, 32, 32], self.images.batch(i).to_vec())
+    }
+
+    /// Load `<dir>/<split>_images.bt` + `<dir>/<split>_labels.bt`.
+    pub fn load<P: AsRef<Path>>(dir: P, split: &str) -> Result<Self> {
+        let dir = dir.as_ref();
+        let images = load_tensor(dir.join(format!("{split}_images.bt")))
+            .with_context(|| format!("loading {split} images"))?;
+        let labels_t = load_tensor(dir.join(format!("{split}_labels.bt")))
+            .with_context(|| format!("loading {split} labels"))?;
+        ensure!(images.ndim() == 4, "images must be [n,3,32,32]");
+        ensure!(images.shape()[0] == labels_t.len(), "image/label count mismatch");
+        let labels = labels_t.data().iter().map(|&x| x as usize).collect();
+        Ok(Self { images, labels })
+    }
+
+    /// Deterministic synthetic population: each class is a distinct
+    /// spatial frequency/orientation pattern plus noise — separable by a
+    /// small CNN, same footprint as the python training set.
+    pub fn synthetic(n: usize, seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut data = Vec::with_capacity(n * 3 * 32 * 32);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let class = rng.next_below(10);
+            labels.push(class);
+            let fx = 1.0 + (class % 5) as f32;
+            let fy = 1.0 + (class / 5) as f32 * 2.0;
+            let phase = rng.next_f32() * std::f32::consts::TAU;
+            for c in 0..3usize {
+                for y in 0..32usize {
+                    for x in 0..32usize {
+                        let signal = ((x as f32 * fx / 32.0 * std::f32::consts::TAU
+                            + y as f32 * fy / 32.0 * std::f32::consts::TAU
+                            + phase)
+                            .sin())
+                            * (1.0 - 0.2 * c as f32);
+                        let noise = (rng.next_f32() - 0.5) * 0.6;
+                        data.push(signal + noise);
+                    }
+                }
+            }
+        }
+        Self { images: Tensor::from_vec(&[n, 3, 32, 32], data), labels }
+    }
+
+    /// First `n` samples as a new dataset (calibration subset).
+    pub fn take(&self, n: usize) -> Self {
+        let n = n.min(self.len());
+        let stride = 3 * 32 * 32;
+        Self {
+            images: Tensor::from_vec(&[n, 3, 32, 32], self.images.data()[..n * stride].to_vec()),
+            labels: self.labels[..n].to_vec(),
+        }
+    }
+}
+
+/// The substitution cipher of the synthetic translation task: a bijection
+/// over the payload alphabet `[3, VOCAB)`.
+pub fn cipher(tok: usize) -> usize {
+    debug_assert!((3..VOCAB).contains(&tok));
+    let payload = VOCAB - 3; // 29 symbols; 5 is coprime with 29
+    3 + ((tok - 3) * 5 + 7) % payload
+}
+
+/// Reference translation: reverse the payload and cipher each token.
+pub fn translate(src_payload: &[usize]) -> Vec<usize> {
+    src_payload.iter().rev().map(|&t| cipher(t)).collect()
+}
+
+/// Sequence-to-sequence dataset (token ids, unpadded rows).
+#[derive(Clone, Debug)]
+pub struct SeqDataset {
+    /// Source: `payload ++ [EOS]`.
+    pub src: Vec<Vec<usize>>,
+    /// Target: `[BOS] ++ translated payload ++ [EOS]`.
+    pub tgt: Vec<Vec<usize>>,
+}
+
+impl SeqDataset {
+    pub fn len(&self) -> usize {
+        self.src.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.src.is_empty()
+    }
+
+    /// Load from `[n, max_len]` PAD-filled `.bt` matrices.
+    pub fn load<P: AsRef<Path>>(dir: P, split: &str) -> Result<Self> {
+        let dir = dir.as_ref();
+        let unpad = |t: &Tensor| -> Vec<Vec<usize>> {
+            let (n, l) = (t.shape()[0], t.shape()[1]);
+            (0..n)
+                .map(|i| {
+                    t.data()[i * l..(i + 1) * l]
+                        .iter()
+                        .map(|&x| x as usize)
+                        .take_while(|&x| x != PAD)
+                        .collect()
+                })
+                .collect()
+        };
+        let src_t = load_tensor(dir.join(format!("{split}_src.bt")))
+            .with_context(|| format!("loading {split} src"))?;
+        let tgt_t = load_tensor(dir.join(format!("{split}_tgt.bt")))
+            .with_context(|| format!("loading {split} tgt"))?;
+        ensure!(src_t.ndim() == 2 && tgt_t.ndim() == 2, "seq data must be 2-D");
+        ensure!(src_t.shape()[0] == tgt_t.shape()[0], "src/tgt count mismatch");
+        Ok(Self { src: unpad(&src_t), tgt: unpad(&tgt_t) })
+    }
+
+    /// Deterministic synthetic sample of the reversal-translation task.
+    pub fn synthetic(n: usize, seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut src = Vec::with_capacity(n);
+        let mut tgt = Vec::with_capacity(n);
+        for _ in 0..n {
+            let len = 4 + rng.next_below(9); // payload length 4..=12
+            let payload: Vec<usize> = (0..len).map(|_| 3 + rng.next_below(VOCAB - 3)).collect();
+            let mut s = payload.clone();
+            s.push(EOS);
+            let mut t = vec![BOS];
+            t.extend(translate(&payload));
+            t.push(EOS);
+            src.push(s);
+            tgt.push(t);
+        }
+        Self { src, tgt }
+    }
+
+    pub fn take(&self, n: usize) -> Self {
+        let n = n.min(self.len());
+        Self { src: self.src[..n].to_vec(), tgt: self.tgt[..n].to_vec() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cipher_is_bijective() {
+        let mut seen = [false; VOCAB];
+        for t in 3..VOCAB {
+            let c = cipher(t);
+            assert!((3..VOCAB).contains(&c));
+            assert!(!seen[c], "cipher collision at {t} -> {c}");
+            seen[c] = true;
+        }
+    }
+
+    #[test]
+    fn translate_reverses_and_ciphers() {
+        let payload = vec![3, 10, 20];
+        let t = translate(&payload);
+        assert_eq!(t, vec![cipher(20), cipher(10), cipher(3)]);
+    }
+
+    #[test]
+    fn synthetic_images_shapes_and_classes() {
+        let d = ImageDataset::synthetic(32, 161);
+        assert_eq!(d.len(), 32);
+        assert_eq!(d.images.shape(), &[32, 3, 32, 32]);
+        assert!(d.labels.iter().all(|&l| l < 10));
+        assert_eq!(d.image(5).shape(), &[3, 32, 32]);
+    }
+
+    #[test]
+    fn synthetic_seq_structure() {
+        let d = SeqDataset::synthetic(20, 162);
+        for (s, t) in d.src.iter().zip(&d.tgt) {
+            assert_eq!(*s.last().unwrap(), EOS);
+            assert_eq!(t[0], BOS);
+            assert_eq!(*t.last().unwrap(), EOS);
+            assert_eq!(t.len(), s.len() + 1); // BOS + payload + EOS vs payload + EOS
+            let payload = &s[..s.len() - 1];
+            assert_eq!(&t[1..t.len() - 1], translate(payload).as_slice());
+        }
+    }
+
+    #[test]
+    fn take_truncates() {
+        let d = ImageDataset::synthetic(10, 163);
+        assert_eq!(d.take(4).len(), 4);
+        assert_eq!(d.take(100).len(), 10);
+        let s = SeqDataset::synthetic(10, 164);
+        assert_eq!(s.take(3).len(), 3);
+    }
+
+    #[test]
+    fn load_roundtrip_via_bt() {
+        use crate::tensor::save_tensor;
+        let dir = crate::util::TempDir::new().unwrap();
+        let d = ImageDataset::synthetic(4, 165);
+        save_tensor(dir.path().join("eval_images.bt"), &d.images).unwrap();
+        let labels =
+            Tensor::from_vec(&[4], d.labels.iter().map(|&l| l as f32).collect());
+        save_tensor(dir.path().join("eval_labels.bt"), &labels).unwrap();
+        let d2 = ImageDataset::load(dir.path(), "eval").unwrap();
+        assert_eq!(d2.len(), 4);
+        assert_eq!(d2.labels, d.labels);
+    }
+}

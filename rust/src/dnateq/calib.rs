@@ -1,0 +1,253 @@
+//! End-to-end model calibration (Fig. 3, step 4 + the network-level
+//! `Thr_w` controller of §III-B / §VI-E).
+//!
+//! The flow: for a candidate `Thr_w`, every layer runs the bitwidth sweep
+//! of [`super::search`]; the resulting [`QuantConfig`] is scored by a
+//! caller-supplied accuracy evaluator (full quantized inference on the
+//! eval set); `Thr_w` then iterates in 1% steps while the accuracy loss
+//! stays under the budget — reproducing both Table V and the Fig. 11
+//! sensitivity sweep.
+
+use super::config::{LayerKind, LayerQuant, QuantConfig, TensorQuant};
+use super::search::{activation_threshold, search_layer, SearchOptions};
+use crate::tensor::Tensor;
+use crate::util::parallel_map;
+
+/// One layer's calibration inputs: trained weights plus an activation
+/// trace from running inference over the calibration subset.
+#[derive(Clone, Debug)]
+pub struct LayerTensors {
+    pub name: String,
+    pub kind: LayerKind,
+    pub weights: Tensor,
+    /// Flattened input-activation trace of this layer.
+    pub acts: Tensor,
+    /// First layer of the network gets `Thr_w / 10` (§VI-E).
+    pub is_first: bool,
+}
+
+/// Calibration inputs for a whole model.
+#[derive(Clone, Debug)]
+pub struct CalibrationInput {
+    pub model: String,
+    pub layers: Vec<LayerTensors>,
+}
+
+/// One point of the `Thr_w` sweep (a Fig. 11 sample).
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    pub thr_w: f64,
+    pub accuracy: f64,
+    pub accuracy_loss: f64,
+    pub avg_bitwidth: f64,
+    pub compression_ratio: f64,
+}
+
+/// Result of [`calibrate_model`].
+#[derive(Clone, Debug)]
+pub struct CalibrationReport {
+    /// The accepted configuration (largest `Thr_w` with loss < budget).
+    pub config: QuantConfig,
+    /// Accuracy of the accepted configuration.
+    pub accuracy: f64,
+    /// FP32 reference accuracy the loss is measured against.
+    pub baseline_accuracy: f64,
+    /// Every `Thr_w` step evaluated (Fig. 11 series, including the first
+    /// rejected point).
+    pub sweep: Vec<SweepPoint>,
+}
+
+/// Build a [`QuantConfig`] for a fixed network-level `Thr_w` by running
+/// the per-layer search on every layer (in parallel — layers are
+/// independent in the offline phase).
+pub fn config_for_threshold(
+    input: &CalibrationInput,
+    thr_w: f64,
+    opts: &SearchOptions,
+) -> QuantConfig {
+    let layers: Vec<LayerQuant> = parallel_map(&input.layers, |lt| {
+            // First-layer special case: 10× tighter (§VI-E).
+            let layer_thr_w = if lt.is_first { thr_w / 10.0 } else { thr_w };
+            let thr_act = activation_threshold(
+                layer_thr_w,
+                lt.acts.mean_abs() as f64,
+                lt.weights.mean_abs() as f64,
+            );
+            let res = search_layer(&lt.weights, &lt.acts, layer_thr_w, thr_act, opts);
+            LayerQuant {
+                name: lt.name.clone(),
+                kind: lt.kind,
+                n_bits: res.n_bits,
+                base: res.base,
+                weights: TensorQuant {
+                    alpha: res.w_params.alpha,
+                    beta: res.w_params.beta,
+                    rmae: res.rmae_w,
+                    elems: lt.weights.len(),
+                },
+                acts: TensorQuant {
+                    alpha: res.a_params.alpha,
+                    beta: res.a_params.beta,
+                    rmae: res.rmae_a,
+                    elems: lt.acts.len(),
+                },
+                seeded_by_weights: res.seeded_by_weights,
+                rss_w: res.rss_w,
+                rss_a: res.rss_a,
+                converged: res.converged,
+            }
+        });
+    QuantConfig { model: input.model.clone(), thr_w, layers }
+}
+
+/// Options for the network-level threshold controller.
+#[derive(Clone, Copy, Debug)]
+pub struct CalibrationOptions {
+    pub search: SearchOptions,
+    /// Accuracy-loss budget (paper: 1% absolute / 1 BLEU point).
+    pub max_accuracy_loss: f64,
+    /// `Thr_w` step per iteration (paper: 1% = 0.01).
+    pub thr_step: f64,
+    /// Upper bound on `Thr_w` (paper's Transformer reached 30%).
+    pub thr_max: f64,
+}
+
+impl Default for CalibrationOptions {
+    fn default() -> Self {
+        Self {
+            search: SearchOptions::default(),
+            max_accuracy_loss: 0.01,
+            thr_step: 0.01,
+            thr_max: 0.40,
+        }
+    }
+}
+
+/// Full DNA-TEQ calibration: iterate `Thr_w` in `thr_step` increments
+/// while the model-level accuracy loss (measured by `eval`, which runs
+/// quantized inference) stays within budget. Returns the last accepted
+/// configuration plus the whole sweep for Fig. 11.
+///
+/// `eval(config) -> accuracy` must return accuracy in the same unit as
+/// `baseline_accuracy` (top-1 fraction, or a 0–1-normalized BLEU).
+pub fn calibrate_model(
+    input: &CalibrationInput,
+    baseline_accuracy: f64,
+    opts: &CalibrationOptions,
+    mut eval: impl FnMut(&QuantConfig) -> f64,
+) -> CalibrationReport {
+    let mut sweep = Vec::new();
+    let mut accepted: Option<(QuantConfig, f64)> = None;
+
+    let mut thr = opts.thr_step;
+    while thr <= opts.thr_max + 1e-12 {
+        let config = config_for_threshold(input, thr, &opts.search);
+        let acc = eval(&config);
+        let loss = baseline_accuracy - acc;
+        sweep.push(SweepPoint {
+            thr_w: thr,
+            accuracy: acc,
+            accuracy_loss: loss,
+            avg_bitwidth: config.avg_bitwidth(),
+            compression_ratio: config.compression_ratio(),
+        });
+        if loss <= opts.max_accuracy_loss {
+            let at_floor = config.layers.iter().all(|l| l.n_bits == opts.search.min_bits);
+            accepted = Some((config, acc));
+            if at_floor {
+                // Every layer already at the minimum bitwidth — a larger
+                // threshold cannot compress further (Transformer case).
+                break;
+            }
+        } else {
+            break; // paper: continue while loss < budget
+        }
+        thr += opts.thr_step;
+    }
+
+    let (config, accuracy) = accepted.unwrap_or_else(|| {
+        // Even Thr_w = step broke the budget: keep the tightest config —
+        // the caller sees the loss in the sweep and can react.
+        let config = config_for_threshold(input, opts.thr_step, &opts.search);
+        let acc = sweep.first().map(|s| s.accuracy).unwrap_or(0.0);
+        (config, acc)
+    });
+
+    CalibrationReport { config, accuracy, baseline_accuracy, sweep }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+
+    fn mk_input(n_layers: usize, seed: u64) -> CalibrationInput {
+        let mut rng = SplitMix64::new(seed);
+        let layers = (0..n_layers)
+            .map(|i| LayerTensors {
+                name: format!("fc{i}"),
+                kind: LayerKind::Fc,
+                weights: Tensor::rand_signed_exponential(&[2048], 3.0, &mut rng),
+                acts: Tensor::rand_signed_exponential(&[4096], 0.7, &mut rng),
+                is_first: i == 0,
+            })
+            .collect();
+        CalibrationInput { model: "toy".into(), layers }
+    }
+
+    #[test]
+    fn config_has_all_layers_with_valid_bits() {
+        let input = mk_input(4, 61);
+        let cfg = config_for_threshold(&input, 0.05, &SearchOptions::default());
+        assert_eq!(cfg.layers.len(), 4);
+        for l in &cfg.layers {
+            assert!((3..=7).contains(&l.n_bits));
+            assert!(l.base > 1.0);
+        }
+    }
+
+    #[test]
+    fn first_layer_is_tighter() {
+        // With a loose global threshold the first layer's 10× tighter
+        // budget should usually force at least as many bits.
+        let input = mk_input(4, 62);
+        let cfg = config_for_threshold(&input, 0.20, &SearchOptions::default());
+        let first = cfg.layers[0].n_bits;
+        let rest_min = cfg.layers[1..].iter().map(|l| l.n_bits).min().unwrap();
+        assert!(first >= rest_min, "first {first} vs rest min {rest_min}");
+    }
+
+    #[test]
+    fn threshold_controller_stops_on_loss() {
+        let input = mk_input(3, 63);
+        // Synthetic accuracy model: degrades with threshold.
+        let eval = |cfg: &QuantConfig| 0.9 - cfg.thr_w * 0.4;
+        let report = calibrate_model(&input, 0.9, &CalibrationOptions::default(), eval);
+        // loss(thr) = 0.4·thr ≤ 0.01 ⇒ thr ≤ 0.025 ⇒ accepted thr = 0.02.
+        assert!((report.config.thr_w - 0.02).abs() < 1e-9, "thr {}", report.config.thr_w);
+        assert_eq!(report.sweep.len(), 3); // 0.01 ok, 0.02 ok, 0.03 rejected
+        assert!(report.sweep.last().unwrap().accuracy_loss > 0.01);
+    }
+
+    #[test]
+    fn sweep_bitwidth_monotone_nonincreasing() {
+        let input = mk_input(3, 64);
+        let eval = |_: &QuantConfig| 1.0; // never lose accuracy
+        let mut opts = CalibrationOptions::default();
+        opts.thr_max = 0.10;
+        let report = calibrate_model(&input, 1.0, &opts, eval);
+        let bits: Vec<f64> = report.sweep.iter().map(|s| s.avg_bitwidth).collect();
+        for w in bits.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "bitwidth increased along sweep: {bits:?}");
+        }
+    }
+
+    #[test]
+    fn hopeless_budget_still_returns_config() {
+        let input = mk_input(2, 65);
+        let eval = |_: &QuantConfig| 0.0; // always catastrophic
+        let report = calibrate_model(&input, 1.0, &CalibrationOptions::default(), eval);
+        assert_eq!(report.sweep.len(), 1);
+        assert!((report.config.thr_w - 0.01).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,315 @@
+//! Serializable calibration output: per-layer DNA-TEQ parameters.
+//!
+//! A [`QuantConfig`] is the artifact the offline search produces and the
+//! runtime consumes — it fully determines how every CONV/FC layer of a
+//! model quantizes its weights and activations. Serialized as JSON via
+//! the crate's own codec ([`crate::util::json`]).
+
+use super::quant::ExpQuantParams;
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Layer operator kind (the paper quantizes CONV and FC layers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Fc,
+}
+
+impl LayerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerKind::Conv => "CONV",
+            LayerKind::Fc => "FC",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "CONV" => LayerKind::Conv,
+            "FC" => LayerKind::Fc,
+            other => bail!("unknown layer kind `{other}`"),
+        })
+    }
+}
+
+/// Per-tensor (weights or activations) scale/offset + achieved error.
+#[derive(Clone, Copy, Debug)]
+pub struct TensorQuant {
+    pub alpha: f64,
+    pub beta: f64,
+    /// RMAE achieved on the calibration trace.
+    pub rmae: f64,
+    /// Element count (drives weighted averages & compression accounting).
+    pub elems: usize,
+}
+
+impl TensorQuant {
+    fn to_json(self) -> Json {
+        let mut o = Json::obj();
+        o.set("alpha", self.alpha)
+            .set("beta", self.beta)
+            .set("rmae", self.rmae)
+            .set("elems", self.elems);
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            alpha: j.req("alpha")?.as_f64()?,
+            beta: j.req("beta")?.as_f64()?,
+            rmae: j.req("rmae")?.as_f64()?,
+            elems: j.req("elems")?.as_usize()?,
+        })
+    }
+}
+
+/// Full quantization record for one layer.
+#[derive(Clone, Debug)]
+pub struct LayerQuant {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Exponent bitwidth `n` (shared by both tensors).
+    pub n_bits: u8,
+    /// Exponential base `b` (shared by both tensors).
+    pub base: f64,
+    pub weights: TensorQuant,
+    pub acts: TensorQuant,
+    /// Which tensor seeded Algorithm 1 (lower RSS; step 2 of Fig. 3).
+    pub seeded_by_weights: bool,
+    pub rss_w: f64,
+    pub rss_a: f64,
+    /// Whether the bitwidth sweep met both thresholds.
+    pub converged: bool,
+}
+
+impl LayerQuant {
+    pub fn w_params(&self) -> ExpQuantParams {
+        ExpQuantParams {
+            base: self.base,
+            alpha: self.weights.alpha,
+            beta: self.weights.beta,
+            n_bits: self.n_bits,
+        }
+    }
+
+    pub fn a_params(&self) -> ExpQuantParams {
+        ExpQuantParams {
+            base: self.base,
+            alpha: self.acts.alpha,
+            beta: self.acts.beta,
+            n_bits: self.n_bits,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str())
+            .set("kind", self.kind.name())
+            .set("n_bits", self.n_bits)
+            .set("base", self.base)
+            .set("weights", self.weights.to_json())
+            .set("acts", self.acts.to_json())
+            .set("seeded_by_weights", self.seeded_by_weights)
+            .set("rss_w", self.rss_w)
+            .set("rss_a", self.rss_a)
+            .set("converged", self.converged);
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.req("name")?.as_str()?.to_string(),
+            kind: LayerKind::parse(j.req("kind")?.as_str()?)?,
+            n_bits: j.req("n_bits")?.as_usize()? as u8,
+            base: j.req("base")?.as_f64()?,
+            weights: TensorQuant::from_json(j.req("weights")?)?,
+            acts: TensorQuant::from_json(j.req("acts")?)?,
+            seeded_by_weights: j.req("seeded_by_weights")?.as_bool()?,
+            rss_w: j.req("rss_w")?.as_f64()?,
+            rss_a: j.req("rss_a")?.as_f64()?,
+            converged: j.req("converged")?.as_bool()?,
+        })
+    }
+}
+
+/// Calibrated quantization for a whole model.
+#[derive(Clone, Debug)]
+pub struct QuantConfig {
+    pub model: String,
+    /// The network-level weight-error threshold this config was built at.
+    pub thr_w: f64,
+    pub layers: Vec<LayerQuant>,
+}
+
+impl QuantConfig {
+    /// Parameter-weighted average exponent bitwidth (Table V "AVG
+    /// Bitwidth"). Weighted by weight-element count, matching how the
+    /// paper's compression ratios reduce to `1 − avg_bits/8`.
+    pub fn avg_bitwidth(&self) -> f64 {
+        let total: usize = self.layers.iter().map(|l| l.weights.elems).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.layers
+            .iter()
+            .map(|l| l.n_bits as f64 * l.weights.elems as f64)
+            .sum::<f64>()
+            / total as f64
+    }
+
+    /// Compression ratio over the INT8 baseline (Table V), computed the
+    /// way the paper's numbers reduce: `1 − avg_bits / 8`.
+    pub fn compression_ratio(&self) -> f64 {
+        1.0 - self.avg_bitwidth() / 8.0
+    }
+
+    /// Storage-honest compression including the sign bit:
+    /// `1 − (avg_bits + 1) / 8`.
+    pub fn compression_ratio_with_sign(&self) -> f64 {
+        1.0 - (self.avg_bitwidth() + 1.0) / 8.0
+    }
+
+    /// Accumulated RMAE of weights + activations across layers (Table IV
+    /// reports this sum for each scheme).
+    pub fn accumulated_rmae(&self) -> f64 {
+        self.layers.iter().map(|l| l.weights.rmae + l.acts.rmae).sum()
+    }
+
+    /// Histogram of layers per bitwidth (drives accelerator power-gating
+    /// and the 7-bit overhead discussion, §VI-D).
+    pub fn bitwidth_histogram(&self) -> [usize; 9] {
+        let mut h = [0usize; 9];
+        for l in &self.layers {
+            h[(l.n_bits as usize).min(8)] += 1;
+        }
+        h
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&LayerQuant> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("model", self.model.as_str())
+            .set("thr_w", self.thr_w)
+            .set("layers", self.layers.iter().map(|l| l.to_json()).collect::<Vec<_>>());
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let layers = j
+            .req("layers")?
+            .as_arr()?
+            .iter()
+            .map(LayerQuant::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            model: j.req("model")?.as_str()?.to_string(),
+            thr_w: j.req("thr_w")?.as_f64()?,
+            layers,
+        })
+    }
+
+    pub fn save_json<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().encode_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load_json<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref();
+        let raw = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&Json::parse(&raw)?).context("parsing QuantConfig JSON")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_layer(name: &str, n: u8, elems: usize) -> LayerQuant {
+        LayerQuant {
+            name: name.into(),
+            kind: LayerKind::Fc,
+            n_bits: n,
+            base: 1.3,
+            weights: TensorQuant { alpha: 1.0, beta: 0.0, rmae: 0.01, elems },
+            acts: TensorQuant { alpha: 2.0, beta: 0.1, rmae: 0.02, elems: elems / 2 },
+            seeded_by_weights: true,
+            rss_w: 0.5,
+            rss_a: 1.5,
+            converged: true,
+        }
+    }
+
+    #[test]
+    fn avg_bitwidth_is_weighted() {
+        let cfg = QuantConfig {
+            model: "m".into(),
+            thr_w: 0.01,
+            layers: vec![mk_layer("a", 3, 3000), mk_layer("b", 7, 1000)],
+        };
+        // (3*3000 + 7*1000) / 4000 = 4.0
+        assert!((cfg.avg_bitwidth() - 4.0).abs() < 1e-9);
+        assert!((cfg.compression_ratio() - 0.5).abs() < 1e-9);
+        assert!((cfg.compression_ratio_with_sign() - 0.375).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accumulated_rmae_sums_both_tensors() {
+        let cfg = QuantConfig {
+            model: "m".into(),
+            thr_w: 0.01,
+            layers: vec![mk_layer("a", 3, 10), mk_layer("b", 4, 10)],
+        };
+        assert!((cfg.accumulated_rmae() - 0.06).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = QuantConfig {
+            model: "alexnet_mini".into(),
+            thr_w: 0.04,
+            layers: vec![mk_layer("conv1", 5, 100), mk_layer("fc1", 3, 50)],
+        };
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("cfg.json");
+        cfg.save_json(&p).unwrap();
+        let cfg2 = QuantConfig::load_json(&p).unwrap();
+        assert_eq!(cfg2.model, cfg.model);
+        assert_eq!(cfg2.layers.len(), 2);
+        assert_eq!(cfg2.layers[0].n_bits, 5);
+        assert_eq!(cfg2.layers[1].kind, LayerKind::Fc);
+        let lp = cfg2.layers[0].w_params();
+        assert_eq!(lp.n_bits, 5);
+        assert_eq!(lp.base, 1.3);
+        assert!((cfg2.layers[0].acts.beta - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bitwidth_histogram_counts_layers() {
+        let cfg = QuantConfig {
+            model: "m".into(),
+            thr_w: 0.01,
+            layers: vec![mk_layer("a", 3, 10), mk_layer("b", 3, 10), mk_layer("c", 7, 10)],
+        };
+        let h = cfg.bitwidth_histogram();
+        assert_eq!(h[3], 2);
+        assert_eq!(h[7], 1);
+    }
+
+    #[test]
+    fn load_rejects_malformed() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("bad.json");
+        std::fs::write(&p, "{\"model\": 1}").unwrap();
+        assert!(QuantConfig::load_json(&p).is_err());
+    }
+}

@@ -1,0 +1,31 @@
+//! DNA-TEQ — the paper's contribution (§III).
+//!
+//! Tensors are represented as `x̄ = sign(x) · (α·bⁱ + β)` with per-layer
+//! parameters found by an adaptive offline search:
+//!
+//! 1. [`rss`] — goodness-of-fit analysis selecting the tensor that starts
+//!    the base search (step 2 of Fig. 3; Tables I & II).
+//! 2. [`search`] — Algorithm 1 (`SOB`) plus the bitwidth loop (3→7 bits)
+//!    and the network-level `Thr_w` controller (step 3–4 of Fig. 3;
+//!    Fig. 11).
+//! 3. [`quant`] — the quantizer itself (Eqs. 2–5) and RMAE (Eq. 6).
+//! 4. [`uniform`] — the linear INT-n baseline DNA-TEQ is compared against
+//!    (Tables IV & V).
+//! 5. [`calib`] — end-to-end calibration of a model: traces → [`config`].
+
+pub mod calib;
+pub mod config;
+pub mod quant;
+pub mod rss;
+pub mod search;
+pub mod uniform;
+
+pub use calib::{
+    calibrate_model, config_for_threshold, CalibrationInput, CalibrationOptions,
+    CalibrationReport, LayerTensors, SweepPoint,
+};
+pub use config::{LayerKind, LayerQuant, QuantConfig, TensorQuant};
+pub use quant::{ExpQuantParams, QuantizedTensor, ZERO_CODE_SENTINEL};
+pub use rss::{fit_distributions, DistKind, FitReport};
+pub use search::{search_base, search_layer, LayerSearchResult, SearchOptions};
+pub use uniform::UniformParams;

@@ -1,0 +1,357 @@
+//! The exponential quantizer (Eqs. 2–5) and its parameter initialization.
+//!
+//! A tensor element `x` is stored as a sign bit plus an `n`-bit signed
+//! exponent code `i`, reconstructing to `x̄ = sign(x)·(α·bⁱ + β)`.
+//! The code `-(2^{n-1})` (one below `R_min`) is reserved for exact zero
+//! (§III-B), so an `n`-bit quantization has `2ⁿ - 1` usable intervals.
+
+use crate::tensor::Tensor;
+
+/// Reserved exponent code for exact zeros: `-(2^{n-1})`, i.e. `R_min - 1`.
+/// Stored here as the i8 sentinel for the widest supported n (n ≤ 7 keeps
+/// every code in i8 range).
+pub const ZERO_CODE_SENTINEL: i8 = i8::MIN; // normalized sentinel in memory
+
+/// Per-tensor exponential quantization parameters
+/// (`x̄ = sign(x)·(α·bⁱ + β)` with `i ∈ [R_min, R_max]`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExpQuantParams {
+    /// Exponential base `b` (shared between both tensors of a layer).
+    pub base: f64,
+    /// Scale factor `α`.
+    pub alpha: f64,
+    /// Offset `β`.
+    pub beta: f64,
+    /// Exponent bitwidth `n` (3..=7); codes live in `[-(2^{n-1}-1), 2^{n-1}-1]`.
+    pub n_bits: u8,
+}
+
+impl ExpQuantParams {
+    /// `R_max = 2^{n-1} - 1` (Eq. 2).
+    pub fn r_max(&self) -> i32 {
+        (1i32 << (self.n_bits - 1)) - 1
+    }
+
+    /// `R_min = -(2^{n-1} - 1)`.
+    pub fn r_min(&self) -> i32 {
+        -self.r_max()
+    }
+
+    /// Number of distinct representable magnitudes (`2ⁿ - 1` intervals).
+    pub fn levels(&self) -> usize {
+        (1usize << self.n_bits) - 1
+    }
+
+    /// Initialize `b` and `α` for a tensor per Eq. 4, covering the full
+    /// scale range (FSR): `α·b^{R_max} = max(|t|)`.
+    ///
+    /// Eq. 4's literal init `b = max(t)^{1/R_max}` (which makes `α = 1`)
+    /// assumes `max(|t|) > 1`; for sub-unit tensors (typical weights) it
+    /// would produce a degenerate base `b ≤ 1`. In that case we initialize
+    /// from the tensor's dynamic range instead —
+    /// `b = (max/min_nz)^{1/(R_max - R_min)}` — which covers the same FSR
+    /// and hands a well-formed starting point to Algorithm 1's search
+    /// (documented in DESIGN.md §Substitutions).
+    pub fn init_for_tensor(t: &Tensor, n_bits: u8) -> Self {
+        let max = t.abs_max() as f64;
+        let min_nz = {
+            let m = t.abs_min_nonzero() as f64;
+            if m.is_finite() {
+                m
+            } else {
+                1e-6
+            }
+        };
+        let r_max = ((1i32 << (n_bits - 1)) - 1) as f64;
+        let mut base = if max > 1.0 {
+            max.powf(1.0 / r_max)
+        } else {
+            (max.max(1e-12) / min_nz.min(max).max(1e-12)).powf(1.0 / (2.0 * r_max))
+        };
+        base = base.max(MIN_BASE);
+        let mut p = Self { base, alpha: 1.0, beta: 0.0, n_bits };
+        p.refit_scale_offset(t);
+        p
+    }
+
+    /// Recompute `α` (FSR coverage, Eq. 4) and `β` (Eq. 5) for the current
+    /// base against a tensor — the `Update(α, β, NewBase)` step of
+    /// Algorithm 1.
+    pub fn refit_scale_offset(&mut self, t: &Tensor) {
+        let max = t.abs_max() as f64;
+        let min_nz = {
+            let m = t.abs_min_nonzero() as f64;
+            if m.is_finite() {
+                m
+            } else {
+                0.0
+            }
+        };
+        let r_max = self.r_max() as f64;
+        let r_min = self.r_min() as f64;
+        // α so that the top interval reaches the tensor max (FSR).
+        self.alpha = if max > 0.0 { max / self.base.powf(r_max) } else { 1.0 };
+        // Eq. 5: β = min(t) − α·b^{R_min − 0.5}; the two-term form in the
+        // paper telescopes to this (term 1 shifts intervals to the tensor
+        // minimum, term 2 compensates the rounding boundary).
+        self.beta = min_nz - self.alpha * self.base.powf(r_min - 0.5);
+    }
+
+    /// Quantize one magnitude to an exponent code (Eq. 2). Caller handles
+    /// the zero special case.
+    #[inline]
+    pub fn encode_magnitude(&self, mag: f64) -> i32 {
+        debug_assert!(mag > 0.0);
+        let arg = (mag - self.beta) / self.alpha;
+        if arg <= 0.0 {
+            // Below the smallest representable magnitude: clamp to R_min.
+            return self.r_min();
+        }
+        let i = (arg.ln() / self.base.ln()).round() as i64;
+        i.clamp(self.r_min() as i64, self.r_max() as i64) as i32
+    }
+
+    /// Reconstruct a magnitude from an exponent code.
+    #[inline]
+    pub fn decode_magnitude(&self, code: i32) -> f64 {
+        self.alpha * self.base.powi(code) + self.beta
+    }
+
+    /// Quantize a full tensor into sign/exponent storage.
+    pub fn quantize(&self, t: &Tensor) -> QuantizedTensor {
+        let mut codes = Vec::with_capacity(t.len());
+        let mut signs = Vec::with_capacity(t.len());
+        for &x in t.data() {
+            if x == 0.0 {
+                codes.push(ZERO_CODE_SENTINEL);
+                signs.push(1i8);
+            } else {
+                codes.push(self.encode_magnitude(x.abs() as f64) as i8);
+                signs.push(if x < 0.0 { -1 } else { 1 });
+            }
+        }
+        QuantizedTensor { shape: t.shape().to_vec(), codes, signs, params: *self }
+    }
+
+    /// Quantize-then-dequantize (the "fake quant" path used for error and
+    /// accuracy evaluation).
+    pub fn roundtrip(&self, t: &Tensor) -> Tensor {
+        let data = t
+            .data()
+            .iter()
+            .map(|&x| {
+                if x == 0.0 {
+                    0.0
+                } else {
+                    let code = self.encode_magnitude(x.abs() as f64);
+                    let mag = self.decode_magnitude(code);
+                    (x.signum() as f64 * mag) as f32
+                }
+            })
+            .collect();
+        Tensor::from_vec(t.shape(), data)
+    }
+
+    /// RMAE (Eq. 6) of quantizing `t` with these parameters.
+    pub fn rmae(&self, t: &Tensor) -> f64 {
+        let denom: f64 = t.data().iter().map(|&x| x.abs() as f64).sum();
+        if denom == 0.0 {
+            return 0.0;
+        }
+        let mut num = 0.0f64;
+        for &x in t.data() {
+            if x == 0.0 {
+                continue; // exact zero code
+            }
+            let code = self.encode_magnitude(x.abs() as f64);
+            let mag = self.decode_magnitude(code);
+            num += (x.abs() as f64 - mag).abs();
+        }
+        num / denom
+    }
+
+    /// Effective stored bits per element. The paper's averages (Table V)
+    /// count the exponent bitwidth `n`; the sign bit is reported
+    /// separately in EXPERIMENTS.md.
+    pub fn bits_per_element(&self) -> f64 {
+        self.n_bits as f64
+    }
+}
+
+/// Floor for the exponential base: `b ≤ 1` makes the level set
+/// non-monotone/degenerate, so initialization and search clamp here.
+pub const MIN_BASE: f64 = 1.0001;
+
+/// A tensor stored in DNA-TEQ form: per-element sign and `n`-bit exponent
+/// code (zeros use [`ZERO_CODE_SENTINEL`]).
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub shape: Vec<usize>,
+    /// Exponent codes in `[R_min, R_max]`, or `ZERO_CODE_SENTINEL`.
+    pub codes: Vec<i8>,
+    /// `+1` / `-1` (sign of the original value; `+1` for zeros).
+    pub signs: Vec<i8>,
+    pub params: ExpQuantParams,
+}
+
+impl QuantizedTensor {
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// Dequantize back to f32.
+    pub fn dequantize(&self) -> Tensor {
+        let data = self
+            .codes
+            .iter()
+            .zip(&self.signs)
+            .map(|(&c, &s)| {
+                if c == ZERO_CODE_SENTINEL {
+                    0.0
+                } else {
+                    (s as f64 * self.params.decode_magnitude(c as i32)) as f32
+                }
+            })
+            .collect();
+        Tensor::from_vec(&self.shape, data)
+    }
+
+    /// Memory footprint in bits (n exponent bits + 1 sign bit per element),
+    /// the honest storage accounting.
+    pub fn storage_bits(&self) -> usize {
+        self.len() * (self.params.n_bits as usize + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+
+    fn expo_tensor(n: usize, seed: u64) -> Tensor {
+        let mut rng = SplitMix64::new(seed);
+        Tensor::rand_signed_exponential(&[n], 3.0, &mut rng)
+    }
+
+    #[test]
+    fn r_bounds_match_paper() {
+        let p = ExpQuantParams { base: 1.3, alpha: 1.0, beta: 0.0, n_bits: 3 };
+        assert_eq!(p.r_max(), 3);
+        assert_eq!(p.r_min(), -3);
+        assert_eq!(p.levels(), 7);
+        let p7 = ExpQuantParams { base: 1.1, alpha: 1.0, beta: 0.0, n_bits: 7 };
+        assert_eq!(p7.r_max(), 63);
+    }
+
+    #[test]
+    fn init_covers_full_scale_range() {
+        let t = expo_tensor(4096, 1);
+        for n in 3..=7u8 {
+            let p = ExpQuantParams::init_for_tensor(&t, n);
+            assert!(p.base > 1.0, "base {} must exceed 1", p.base);
+            let top = p.decode_magnitude(p.r_max());
+            let max = t.abs_max() as f64;
+            // FSR: top level reaches the max magnitude (β shifts it a bit).
+            assert!(
+                (top - max).abs() / max < 0.35,
+                "n={n}: top level {top} vs max {max}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_maps_to_zero_exactly() {
+        let t = Tensor::from_vec(&[4], vec![0.0, 1.0, -2.0, 0.0]);
+        let p = ExpQuantParams::init_for_tensor(&t, 4);
+        let q = p.quantize(&t);
+        let d = q.dequantize();
+        assert_eq!(d.data()[0], 0.0);
+        assert_eq!(d.data()[3], 0.0);
+        assert_eq!(q.codes[0], ZERO_CODE_SENTINEL);
+    }
+
+    #[test]
+    fn sign_is_preserved() {
+        let t = expo_tensor(2000, 2);
+        let p = ExpQuantParams::init_for_tensor(&t, 5);
+        let d = p.roundtrip(&t);
+        for (&x, &y) in t.data().iter().zip(d.data()) {
+            if x != 0.0 {
+                assert_eq!(x.signum(), y.signum(), "sign flip at {x} -> {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn codes_within_clip_range() {
+        let t = expo_tensor(5000, 3);
+        let p = ExpQuantParams::init_for_tensor(&t, 4);
+        let q = p.quantize(&t);
+        for &c in &q.codes {
+            if c != ZERO_CODE_SENTINEL {
+                assert!((c as i32) >= p.r_min() && (c as i32) <= p.r_max());
+            }
+        }
+    }
+
+    #[test]
+    fn rmae_decreases_with_bitwidth() {
+        let t = expo_tensor(8192, 4);
+        let mut prev = f64::INFINITY;
+        for n in 3..=7u8 {
+            let p = ExpQuantParams::init_for_tensor(&t, n);
+            let e = p.rmae(&t);
+            assert!(e < prev * 1.05, "n={n}: RMAE {e} vs prev {prev}");
+            prev = e;
+        }
+        // 7-bit exponential quantization of an exponential tensor is tight.
+        assert!(prev < 0.05, "7-bit RMAE too high: {prev}");
+    }
+
+    #[test]
+    fn rmae_matches_roundtrip_rmae() {
+        let t = expo_tensor(1024, 5);
+        let p = ExpQuantParams::init_for_tensor(&t, 5);
+        let direct = p.rmae(&t);
+        let via_roundtrip = p.roundtrip(&t).rmae(&t) as f64;
+        assert!((direct - via_roundtrip).abs() < 1e-4, "{direct} vs {via_roundtrip}");
+    }
+
+    #[test]
+    fn encode_monotone_in_magnitude() {
+        let t = expo_tensor(512, 6);
+        let p = ExpQuantParams::init_for_tensor(&t, 5);
+        let mut prev_code = i32::MIN;
+        let mut mags: Vec<f64> = t.data().iter().map(|x| x.abs() as f64).filter(|&m| m > 0.0).collect();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for m in mags {
+            let c = p.encode_magnitude(m);
+            assert!(c >= prev_code, "monotonicity violated at mag {m}");
+            prev_code = c;
+        }
+    }
+
+    #[test]
+    fn storage_bits_counts_sign() {
+        let t = expo_tensor(100, 7);
+        let p = ExpQuantParams::init_for_tensor(&t, 3);
+        let q = p.quantize(&t);
+        assert_eq!(q.storage_bits(), 100 * 4);
+    }
+
+    #[test]
+    fn sub_unit_tensor_gets_valid_base() {
+        // Typical weight tensor: max |w| ≈ 0.2 — Eq. 4's literal init
+        // would give b < 1; we must still get a sane quantizer.
+        let mut rng = SplitMix64::new(8);
+        let t = Tensor::rand_normal(&[4096], 0.0, 0.05, &mut rng);
+        let p = ExpQuantParams::init_for_tensor(&t, 5);
+        assert!(p.base > 1.0);
+        let e = p.rmae(&t);
+        assert!(e < 0.30, "sub-unit init RMAE {e}");
+    }
+}

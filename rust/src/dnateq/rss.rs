@@ -1,0 +1,222 @@
+//! Goodness-of-fit analysis (§III-A, Tables I & II, Figs. 1 & 2).
+//!
+//! The empirical density of a tensor's *absolute values* is compared
+//! against four candidate distributions via the Residual Sum of Squares
+//! (Eq. 1). Each candidate is parameterized by its maximum-likelihood /
+//! moment estimate from the data, then evaluated at the histogram bin
+//! centers. The distribution with the lowest RSS selects which tensor of
+//! a layer seeds Algorithm 1's base search (step 2 of Fig. 3).
+
+use crate::tensor::{Histogram, Tensor};
+
+/// Number of histogram bins used for all RSS computations. Matching the
+/// paper's exact bin count is impossible (unreported); RSS *ordering*
+/// across distributions is insensitive to this for the populations here.
+pub const RSS_BINS: usize = 100;
+
+/// Candidate distribution families from Tables I & II.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DistKind {
+    Normal,
+    Exponential,
+    Pareto,
+    Uniform,
+}
+
+impl DistKind {
+    pub const ALL: [DistKind; 4] =
+        [DistKind::Normal, DistKind::Exponential, DistKind::Pareto, DistKind::Uniform];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DistKind::Normal => "Normal",
+            DistKind::Exponential => "Exponential",
+            DistKind::Pareto => "Pareto",
+            DistKind::Uniform => "Uniform",
+        }
+    }
+}
+
+/// Fitted distribution over magnitudes with its RSS against the empirical
+/// density.
+#[derive(Clone, Copy, Debug)]
+pub struct Fit {
+    pub kind: DistKind,
+    pub rss: f64,
+    /// Family-specific parameters:
+    /// Normal: (μ, σ); Exponential: (λ, 0); Pareto: (x_m, a); Uniform: (lo, hi).
+    pub p0: f64,
+    pub p1: f64,
+}
+
+/// Full fit report for one tensor.
+#[derive(Clone, Debug)]
+pub struct FitReport {
+    pub fits: Vec<Fit>,
+    /// Histogram bin centers (for Figs. 1 & 2 CSV emission).
+    pub centers: Vec<f32>,
+    /// Empirical density per bin.
+    pub density: Vec<f32>,
+}
+
+impl FitReport {
+    /// The distribution family with the lowest RSS.
+    pub fn best(&self) -> Fit {
+        *self
+            .fits
+            .iter()
+            .min_by(|a, b| a.rss.partial_cmp(&b.rss).unwrap())
+            .expect("non-empty fits")
+    }
+
+    pub fn rss_of(&self, kind: DistKind) -> f64 {
+        self.fits.iter().find(|f| f.kind == kind).map(|f| f.rss).unwrap_or(f64::NAN)
+    }
+
+    /// Predicted density series for a family (for figure CSVs).
+    pub fn predicted(&self, kind: DistKind) -> Vec<f64> {
+        let fit = self.fits.iter().find(|f| f.kind == kind).copied().unwrap();
+        self.centers.iter().map(|&c| pdf(fit, c as f64)).collect()
+    }
+}
+
+fn pdf(fit: Fit, x: f64) -> f64 {
+    match fit.kind {
+        DistKind::Normal => {
+            let (mu, sigma) = (fit.p0, fit.p1.max(1e-12));
+            let z = (x - mu) / sigma;
+            (-0.5 * z * z).exp() / (sigma * (2.0 * std::f64::consts::PI).sqrt())
+        }
+        DistKind::Exponential => {
+            let lambda = fit.p0;
+            if x < 0.0 {
+                0.0
+            } else {
+                lambda * (-lambda * x).exp()
+            }
+        }
+        DistKind::Pareto => {
+            let (xm, a) = (fit.p0.max(1e-12), fit.p1);
+            if x < xm {
+                0.0
+            } else {
+                a * xm.powf(a) / x.powf(a + 1.0)
+            }
+        }
+        DistKind::Uniform => {
+            let (lo, hi) = (fit.p0, fit.p1);
+            if x < lo || x > hi || hi <= lo {
+                0.0
+            } else {
+                1.0 / (hi - lo)
+            }
+        }
+    }
+}
+
+/// Fit all four families to the magnitudes of `t` and report RSS values
+/// (Eq. 1) against the empirical histogram density.
+pub fn fit_distributions(t: &Tensor) -> FitReport {
+    let mags: Vec<f32> = t.data().iter().map(|x| x.abs()).filter(|&m| m > 0.0).collect();
+    fit_magnitudes(&mags)
+}
+
+/// Same as [`fit_distributions`] but over pre-extracted magnitudes.
+pub fn fit_magnitudes(mags: &[f32]) -> FitReport {
+    assert!(!mags.is_empty(), "cannot fit an empty tensor");
+    let hi = mags.iter().cloned().fold(f32::MIN, f32::max).max(1e-9);
+    let hist = Histogram::build(mags, 0.0, hi, RSS_BINS);
+    let centers = hist.centers();
+    let density = hist.density();
+
+    let n = mags.len() as f64;
+    let mean = mags.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = mags.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    let min = mags.iter().cloned().fold(f32::MAX, f32::min) as f64;
+
+    // MLE / moment parameter estimates per family.
+    let normal = Fit { kind: DistKind::Normal, rss: 0.0, p0: mean, p1: var.sqrt() };
+    let expo = Fit { kind: DistKind::Exponential, rss: 0.0, p0: 1.0 / mean.max(1e-12), p1: 0.0 };
+    let pareto_a = {
+        let xm = min.max(1e-12);
+        let s: f64 = mags.iter().map(|&x| ((x as f64).max(xm) / xm).ln()).sum();
+        (n / s.max(1e-12)).min(1e6)
+    };
+    let pareto = Fit { kind: DistKind::Pareto, rss: 0.0, p0: min, p1: pareto_a };
+    let uniform = Fit { kind: DistKind::Uniform, rss: 0.0, p0: 0.0, p1: hi as f64 };
+
+    let mut fits = vec![normal, expo, pareto, uniform];
+    for fit in &mut fits {
+        let mut rss = 0.0f64;
+        for (&c, &d) in centers.iter().zip(&density) {
+            let pred = pdf(*fit, c as f64);
+            let resid = d as f64 - pred;
+            rss += resid * resid;
+        }
+        fit.rss = rss;
+    }
+    FitReport { fits, centers, density }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+
+    #[test]
+    fn exponential_data_prefers_exponential() {
+        let mut rng = SplitMix64::new(21);
+        let t = Tensor::rand_signed_exponential(&[50_000], 2.5, &mut rng);
+        let rep = fit_distributions(&t);
+        assert_eq!(rep.best().kind, DistKind::Exponential, "fits: {:?}", rep.fits);
+        // λ̂ ≈ rate
+        assert!((rep.best().p0 - 2.5).abs() < 0.15, "λ̂ = {}", rep.best().p0);
+    }
+
+    #[test]
+    fn uniform_data_prefers_uniform() {
+        let mut rng = SplitMix64::new(22);
+        let t = Tensor::rand_uniform(&[50_000], 0.0, 1.0, &mut rng);
+        let rep = fit_distributions(&t);
+        assert_eq!(rep.best().kind, DistKind::Uniform, "fits: {:?}", rep.fits);
+    }
+
+    #[test]
+    fn halfnormal_magnitudes_do_not_pick_uniform() {
+        // |N(0,1)| — bell magnitudes. Exact winner between Normal and
+        // Exponential depends on folding, but Uniform/Pareto must lose.
+        let mut rng = SplitMix64::new(23);
+        let t = Tensor::rand_normal(&[50_000], 0.0, 1.0, &mut rng);
+        let rep = fit_distributions(&t);
+        let best = rep.best().kind;
+        assert!(
+            best == DistKind::Normal || best == DistKind::Exponential,
+            "best = {best:?}"
+        );
+        assert!(rep.rss_of(DistKind::Uniform) > rep.best().rss);
+    }
+
+    #[test]
+    fn report_has_all_families_and_series() {
+        let mut rng = SplitMix64::new(24);
+        let t = Tensor::rand_signed_exponential(&[5_000], 1.0, &mut rng);
+        let rep = fit_distributions(&t);
+        assert_eq!(rep.fits.len(), 4);
+        assert_eq!(rep.centers.len(), RSS_BINS);
+        assert_eq!(rep.density.len(), RSS_BINS);
+        for kind in DistKind::ALL {
+            assert!(rep.rss_of(kind).is_finite(), "{kind:?} rss not finite");
+            assert_eq!(rep.predicted(kind).len(), RSS_BINS);
+        }
+    }
+
+    #[test]
+    fn density_integrates_to_one() {
+        let mut rng = SplitMix64::new(25);
+        let t = Tensor::rand_signed_exponential(&[20_000], 4.0, &mut rng);
+        let rep = fit_distributions(&t);
+        let w = rep.centers[1] - rep.centers[0];
+        let mass: f32 = rep.density.iter().map(|&d| d * w).sum();
+        assert!((mass - 1.0).abs() < 1e-3, "mass {mass}");
+    }
+}

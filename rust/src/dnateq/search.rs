@@ -1,0 +1,272 @@
+//! The adaptive offline parameter search (§III-B, Fig. 3 steps 2–4).
+//!
+//! * [`search_base`] — Algorithm 1 (`SOB`): hill-climb the exponential
+//!   base `b` by ±ε, refitting `α`/`β` (Eqs. 4–5) at every step, until the
+//!   RMAE (Eq. 6) stops improving.
+//! * [`search_layer`] — the per-layer bitwidth loop: RSS selects which
+//!   tensor seeds the search, `n` sweeps 3→7 bits until both tensors meet
+//!   their error thresholds (`Thr_w`, `Thr_act` from Eq. 7).
+
+use super::quant::{ExpQuantParams, MIN_BASE};
+use super::rss::fit_distributions;
+use crate::tensor::Tensor;
+
+/// Knobs of the offline search. Defaults mirror the paper.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchOptions {
+    /// Base exploration step ε (Algorithm 1 line 4).
+    pub epsilon: f64,
+    /// Lowest bitwidth tried (paper: 3).
+    pub min_bits: u8,
+    /// Highest bitwidth tried (paper: 7).
+    pub max_bits: u8,
+    /// Safety cap on hill-climb iterations (the paper's loop terminates
+    /// on first non-improvement; this guards degenerate plateaus).
+    pub max_iters: usize,
+}
+
+impl Default for SearchOptions {
+    fn default() -> Self {
+        Self { epsilon: 0.01, min_bits: 3, max_bits: 7, max_iters: 4096 }
+    }
+}
+
+/// Result of [`search_base`] on one tensor.
+#[derive(Clone, Copy, Debug)]
+pub struct BaseSearchResult {
+    pub params: ExpQuantParams,
+    pub rmae: f64,
+    pub iterations: usize,
+}
+
+/// Algorithm 1 — Searching pseudo-Optimal Base (`SOB`).
+///
+/// Initializes `b`, `α`, `β` from Eqs. 4–5, picks the descent direction by
+/// probing `b ± ε`, then walks until the quantization error no longer
+/// improves.
+pub fn search_base(t: &Tensor, n_bits: u8, opts: &SearchOptions) -> BaseSearchResult {
+    // Line 2: Initialize(b, α, β).
+    let init = ExpQuantParams::init_for_tensor(t, n_bits);
+    // Line 3: InitErr.
+    let init_err = init.rmae(t);
+
+    let eval = |base: f64| -> (ExpQuantParams, f64) {
+        let mut p = ExpQuantParams { base: base.max(MIN_BASE), ..init };
+        p.refit_scale_offset(t);
+        (p, p.rmae(t))
+    };
+
+    // Lines 4–8: probe both directions, pick the best of {Init, Inc, Dec}.
+    let (inc_p, inc_err) = eval(init.base + opts.epsilon);
+    let (dec_p, dec_err) = eval(init.base - opts.epsilon);
+
+    let (mut cur_p, mut cur_err, step) = if inc_err < init_err && inc_err <= dec_err {
+        (inc_p, inc_err, opts.epsilon)
+    } else if dec_err < init_err && dec_err < inc_err {
+        (dec_p, dec_err, -opts.epsilon)
+    } else {
+        // Initialization already at a local optimum.
+        return BaseSearchResult { params: init, rmae: init_err, iterations: 1 };
+    };
+
+    // Lines 9–19: walk in the chosen direction while the error improves.
+    let mut iters = 1usize;
+    while iters < opts.max_iters {
+        iters += 1;
+        let next_base = cur_p.base + step;
+        if next_base <= MIN_BASE {
+            break;
+        }
+        let (new_p, new_err) = eval(next_base);
+        if new_err < cur_err {
+            cur_p = new_p;
+            cur_err = new_err;
+        } else {
+            break; // Search = False
+        }
+    }
+    BaseSearchResult { params: cur_p, rmae: cur_err, iterations: iters }
+}
+
+/// Derive the partner tensor's `α`/`β` for a fixed shared base/bitwidth —
+/// "for the other tensor of this layer the same base is used, and we
+/// simply compute the α and β parameters in the same manner" (§III-B).
+pub fn fit_partner(t: &Tensor, base: f64, n_bits: u8) -> ExpQuantParams {
+    let mut p = ExpQuantParams { base, alpha: 1.0, beta: 0.0, n_bits };
+    p.refit_scale_offset(t);
+    p
+}
+
+/// `Thr_act = Thr_w × log(mean(|Act|) / mean(|W|))` (Eq. 7), with the
+/// scale factor clamped to stay a usable threshold when the magnitude
+/// ratio is close to (or below) `e` — the paper leaves that regime
+/// unspecified; clamping keeps Thr_act within [0.5×, 20×] of Thr_w.
+pub fn activation_threshold(thr_w: f64, mean_abs_act: f64, mean_abs_w: f64) -> f64 {
+    let ratio = (mean_abs_act.max(1e-12) / mean_abs_w.max(1e-12)).ln();
+    thr_w * ratio.clamp(0.5, 20.0)
+}
+
+/// Outcome of the per-layer search (step 3–4 of Fig. 3).
+#[derive(Clone, Debug)]
+pub struct LayerSearchResult {
+    /// Chosen exponent bitwidth `n`.
+    pub n_bits: u8,
+    /// Shared exponential base `b`.
+    pub base: f64,
+    /// Weight-tensor parameters.
+    pub w_params: ExpQuantParams,
+    /// Activation-tensor parameters.
+    pub a_params: ExpQuantParams,
+    pub rmae_w: f64,
+    pub rmae_a: f64,
+    /// True if weights had the lower RSS and seeded the base search.
+    pub seeded_by_weights: bool,
+    pub rss_w: f64,
+    pub rss_a: f64,
+    /// Whether both thresholds were met (false ⇒ fell back to `max_bits`).
+    pub converged: bool,
+    /// Total Algorithm-1 iterations spent across the bitwidth sweep.
+    pub iterations: usize,
+}
+
+/// Full per-layer search: pick the seed tensor by RSS, sweep bitwidths
+/// from `min_bits` up, accept the first `n` meeting both thresholds.
+pub fn search_layer(
+    weights: &Tensor,
+    acts: &Tensor,
+    thr_w: f64,
+    thr_act: f64,
+    opts: &SearchOptions,
+) -> LayerSearchResult {
+    let rss_w = fit_distributions(weights).best().rss;
+    let rss_a = fit_distributions(acts).best().rss;
+    let seeded_by_weights = rss_w < rss_a;
+
+    let (seed, partner) =
+        if seeded_by_weights { (weights, acts) } else { (acts, weights) };
+
+    let mut total_iters = 0usize;
+    let mut last: Option<LayerSearchResult> = None;
+    for n in opts.min_bits..=opts.max_bits {
+        let seed_res = search_base(seed, n, opts);
+        total_iters += seed_res.iterations;
+        let partner_params = fit_partner(partner, seed_res.params.base, n);
+        let partner_err = partner_params.rmae(partner);
+
+        let (w_params, a_params, rmae_w, rmae_a) = if seeded_by_weights {
+            (seed_res.params, partner_params, seed_res.rmae, partner_err)
+        } else {
+            (partner_params, seed_res.params, partner_err, seed_res.rmae)
+        };
+
+        let res = LayerSearchResult {
+            n_bits: n,
+            base: seed_res.params.base,
+            w_params,
+            a_params,
+            rmae_w,
+            rmae_a,
+            seeded_by_weights,
+            rss_w,
+            rss_a,
+            converged: rmae_w <= thr_w && rmae_a <= thr_act,
+            iterations: total_iters,
+        };
+        if res.converged {
+            return res;
+        }
+        last = Some(res);
+    }
+    // No bitwidth satisfied both thresholds: report the widest attempt
+    // (the paper keeps 7-bit layers; <3% of layers land here).
+    last.expect("at least one bitwidth attempted")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+
+    fn expo(n: usize, rate: f32, seed: u64) -> Tensor {
+        let mut rng = SplitMix64::new(seed);
+        Tensor::rand_signed_exponential(&[n], rate, &mut rng)
+    }
+
+    #[test]
+    fn sob_never_worse_than_init() {
+        let t = expo(8192, 2.0, 31);
+        let opts = SearchOptions::default();
+        for n in 3..=7u8 {
+            let init = ExpQuantParams::init_for_tensor(&t, n);
+            let res = search_base(&t, n, &opts);
+            assert!(
+                res.rmae <= init.rmae(&t) + 1e-12,
+                "n={n}: searched {} vs init {}",
+                res.rmae,
+                init.rmae(&t)
+            );
+        }
+    }
+
+    #[test]
+    fn sob_terminates_quickly() {
+        let t = expo(4096, 3.0, 32);
+        let res = search_base(&t, 5, &SearchOptions::default());
+        assert!(res.iterations < 2048, "iterations {}", res.iterations);
+        assert!(res.params.base > 1.0);
+    }
+
+    #[test]
+    fn layer_search_prefers_lower_bits_for_tolerant_thresholds() {
+        let w = expo(4096, 2.0, 33);
+        let a = expo(4096, 0.5, 34);
+        let tight = search_layer(&w, &a, 0.01, 0.02, &SearchOptions::default());
+        let loose = search_layer(&w, &a, 0.30, 0.40, &SearchOptions::default());
+        assert!(
+            loose.n_bits <= tight.n_bits,
+            "loose {} vs tight {}",
+            loose.n_bits,
+            tight.n_bits
+        );
+        assert!(loose.converged);
+    }
+
+    #[test]
+    fn layer_search_shares_base_between_tensors() {
+        let w = expo(2048, 2.0, 35);
+        let a = expo(2048, 1.0, 36);
+        let res = search_layer(&w, &a, 0.05, 0.10, &SearchOptions::default());
+        assert_eq!(res.w_params.base, res.a_params.base);
+        assert_eq!(res.w_params.n_bits, res.a_params.n_bits);
+    }
+
+    #[test]
+    fn layer_search_falls_back_to_max_bits() {
+        // Impossible thresholds: must report max_bits, not converge.
+        let w = expo(2048, 2.0, 37);
+        let a = expo(2048, 1.0, 38);
+        let res = search_layer(&w, &a, 1e-9, 1e-9, &SearchOptions::default());
+        assert_eq!(res.n_bits, 7);
+        assert!(!res.converged);
+    }
+
+    #[test]
+    fn threshold_scaling_clamped() {
+        // Act magnitudes 100× weights → ln(100) ≈ 4.6 scale.
+        let t = activation_threshold(0.01, 1.0, 0.01);
+        assert!((t - 0.01 * 100f64.ln()).abs() < 1e-9);
+        // Act magnitudes equal to weights → clamp at 0.5×, not 0.
+        let t2 = activation_threshold(0.01, 1.0, 1.0);
+        assert!((t2 - 0.005).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seed_selection_follows_rss() {
+        // Weights strongly exponential, activations uniform: weights seed.
+        let w = expo(20_000, 3.0, 39);
+        let mut rng = SplitMix64::new(40);
+        let a = Tensor::rand_uniform(&[20_000], -1.0, 1.0, &mut rng);
+        let res = search_layer(&w, &a, 0.2, 0.4, &SearchOptions::default());
+        assert!(res.seeded_by_weights, "rss_w={} rss_a={}", res.rss_w, res.rss_a);
+    }
+}

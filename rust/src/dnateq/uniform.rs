@@ -1,0 +1,126 @@
+//! Linear (uniform) quantization baseline (§II, Tables IV & V).
+//!
+//! Symmetric linear quantizer: `q = clip(round(x / Δ), -(2^{n-1}-1),
+//! 2^{n-1}-1)`, `x̄ = q·Δ` with `Δ = max|x| / (2^{n-1}-1)`. This is the
+//! INT8 scheme of the baseline accelerator and, at matched bitwidths, the
+//! "Uniform Quantization" row of Table IV.
+
+use crate::tensor::{Tensor, TensorI8};
+
+/// Parameters of a symmetric uniform quantizer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UniformParams {
+    /// Step size Δ.
+    pub delta: f64,
+    /// Bitwidth n (≤ 8; values stored in i8).
+    pub n_bits: u8,
+}
+
+impl UniformParams {
+    pub fn q_max(&self) -> i32 {
+        (1i32 << (self.n_bits - 1)) - 1
+    }
+
+    /// Calibrate Δ from the tensor's max magnitude (full-scale symmetric).
+    pub fn calibrate(t: &Tensor, n_bits: u8) -> Self {
+        assert!((2..=8).contains(&n_bits), "uniform bitwidth {n_bits} out of range");
+        let q_max = ((1i32 << (n_bits - 1)) - 1) as f64;
+        let max = t.abs_max() as f64;
+        Self { delta: if max > 0.0 { max / q_max } else { 1.0 }, n_bits }
+    }
+
+    #[inline]
+    pub fn encode(&self, x: f32) -> i8 {
+        let q = (x as f64 / self.delta).round() as i64;
+        q.clamp(-(self.q_max() as i64), self.q_max() as i64) as i8
+    }
+
+    #[inline]
+    pub fn decode(&self, q: i8) -> f32 {
+        (q as f64 * self.delta) as f32
+    }
+
+    pub fn quantize(&self, t: &Tensor) -> TensorI8 {
+        TensorI8::from_vec(t.shape(), t.data().iter().map(|&x| self.encode(x)).collect())
+    }
+
+    pub fn dequantize(&self, q: &TensorI8) -> Tensor {
+        Tensor::from_vec(q.shape(), q.data().iter().map(|&v| self.decode(v)).collect())
+    }
+
+    /// Quantize-dequantize roundtrip for error/accuracy evaluation.
+    pub fn roundtrip(&self, t: &Tensor) -> Tensor {
+        t.map(|x| self.decode(self.encode(x)))
+    }
+
+    /// RMAE (Eq. 6) of this quantizer on `t`.
+    pub fn rmae(&self, t: &Tensor) -> f64 {
+        let denom: f64 = t.data().iter().map(|&x| x.abs() as f64).sum();
+        if denom == 0.0 {
+            return 0.0;
+        }
+        let num: f64 = t
+            .data()
+            .iter()
+            .map(|&x| (self.decode(self.encode(x)) as f64 - x as f64).abs())
+            .sum();
+        num / denom
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+
+    #[test]
+    fn int8_roundtrip_is_tight_for_uniform_data() {
+        let mut rng = SplitMix64::new(51);
+        let t = Tensor::rand_uniform(&[10_000], -1.0, 1.0, &mut rng);
+        let p = UniformParams::calibrate(&t, 8);
+        assert!(p.rmae(&t) < 0.01, "INT8 RMAE {}", p.rmae(&t));
+    }
+
+    #[test]
+    fn low_bit_uniform_hurts_exponential_data() {
+        // The paper's core observation: exponential-shaped tensors are
+        // poorly served by low-bit uniform quantization.
+        let mut rng = SplitMix64::new(52);
+        let t = Tensor::rand_signed_exponential(&[10_000], 3.0, &mut rng);
+        let u4 = UniformParams::calibrate(&t, 4);
+        let e4 = crate::dnateq::quant::ExpQuantParams::init_for_tensor(&t, 4);
+        assert!(
+            e4.rmae(&t) < u4.rmae(&t),
+            "exp {} should beat uniform {}",
+            e4.rmae(&t),
+            u4.rmae(&t)
+        );
+    }
+
+    #[test]
+    fn encode_respects_clip() {
+        let t = Tensor::from_vec(&[2], vec![1.0, -1.0]);
+        let p = UniformParams::calibrate(&t, 4);
+        assert_eq!(p.encode(10.0), 7);
+        assert_eq!(p.encode(-10.0), -7);
+        assert_eq!(p.encode(0.0), 0);
+    }
+
+    #[test]
+    fn quantize_dequantize_shapes() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.1, -0.2, 0.3, -0.4, 0.5, -0.6]);
+        let p = UniformParams::calibrate(&t, 8);
+        let q = p.quantize(&t);
+        assert_eq!(q.shape(), t.shape());
+        let d = p.dequantize(&q);
+        assert!(d.rmae(&t) < 0.01);
+    }
+
+    #[test]
+    fn zero_tensor_is_safe() {
+        let t = Tensor::zeros(&[16]);
+        let p = UniformParams::calibrate(&t, 8);
+        assert_eq!(p.rmae(&t), 0.0);
+        assert_eq!(p.roundtrip(&t).data(), t.data());
+    }
+}

@@ -1,0 +1,179 @@
+//! Per-layer reconstruction context for the exponential dot product.
+//!
+//! Holds the Base-LookUp Tables (BLUT, §V-D) — precomputed powers of the
+//! shared base — plus the four coefficient products of Eq. 8, so the
+//! counting engines only accumulate integer counts and do a short
+//! float post-process per output neuron.
+
+use crate::dnateq::ExpQuantParams;
+
+/// Reconstruction context shared by all counting engines for one layer.
+#[derive(Clone, Debug)]
+pub struct ExpDotContext {
+    /// Activation-tensor parameters.
+    pub a_params: ExpQuantParams,
+    /// Weight-tensor parameters.
+    pub w_params: ExpQuantParams,
+    /// `R_max` of the shared bitwidth.
+    pub r_max: i32,
+    /// BLUT for term 1: `b^k` for `k ∈ [2·R_min, 2·R_max]`
+    /// (`blut_pair[k - 2·R_min]`); `2^{n+1}` entries in hardware.
+    pub blut_pair: Vec<f64>,
+    /// BLUT for terms 2 & 3: `b^i` for `i ∈ [R_min, R_max]`
+    /// (`blut_single[i - R_min]`); `2^n` entries in hardware.
+    pub blut_single: Vec<f64>,
+    /// αA·αW — coefficient of term 1.
+    pub c1: f64,
+    /// αW·βA — coefficient of term 2 (counts of weight exponents).
+    pub c2: f64,
+    /// αA·βW — coefficient of term 3 (counts of activation exponents).
+    pub c3: f64,
+    /// βA·βW — coefficient of term 4 (signed pair count).
+    pub c4: f64,
+}
+
+impl ExpDotContext {
+    /// Build the context. Panics if the two tensors do not share base and
+    /// bitwidth — DNA-TEQ constrains them per layer exactly so the
+    /// exponent-sum trick works (§III-B).
+    pub fn new(a_params: ExpQuantParams, w_params: ExpQuantParams) -> Self {
+        assert_eq!(
+            a_params.n_bits, w_params.n_bits,
+            "layer tensors must share bitwidth"
+        );
+        assert!(
+            (a_params.base - w_params.base).abs() < 1e-12,
+            "layer tensors must share base"
+        );
+        let r_max = a_params.r_max();
+        let base = a_params.base;
+        let blut_pair: Vec<f64> = (-2 * r_max..=2 * r_max).map(|k| base.powi(k)).collect();
+        let blut_single: Vec<f64> = (-r_max..=r_max).map(|i| base.powi(i)).collect();
+        Self {
+            a_params,
+            w_params,
+            r_max,
+            blut_pair,
+            blut_single,
+            c1: a_params.alpha * w_params.alpha,
+            c2: w_params.alpha * a_params.beta,
+            c3: a_params.alpha * w_params.beta,
+            c4: a_params.beta * w_params.beta,
+        }
+    }
+
+    /// Number of entries in the pair table (`4·R_max + 1 ≤ 2^{n+1}`).
+    #[inline]
+    pub fn pair_table_len(&self) -> usize {
+        (4 * self.r_max + 1) as usize
+    }
+
+    /// Number of entries in the single-exponent tables (`2·R_max + 1 < 2^n`).
+    #[inline]
+    pub fn single_table_len(&self) -> usize {
+        (2 * self.r_max + 1) as usize
+    }
+
+    /// Index into the pair table for an exponent sum `a + w`.
+    #[inline]
+    pub fn pair_index(&self, code_sum: i32) -> usize {
+        (code_sum + 2 * self.r_max) as usize
+    }
+
+    /// Index into a single table for an exponent `i`.
+    #[inline]
+    pub fn single_index(&self, code: i32) -> usize {
+        (code + self.r_max) as usize
+    }
+
+    /// Reconstruct one output value from the four count tables
+    /// (the Dequantizer stage, §V-D): each count is multiplied by its
+    /// `b^int` from the BLUT and the terms are combined with the
+    /// coefficient products.
+    pub fn reconstruct(
+        &self,
+        pair_counts: &[i32],
+        w_counts: &[i32],
+        a_counts: &[i32],
+        sign_count: i32,
+    ) -> f32 {
+        debug_assert_eq!(pair_counts.len(), self.pair_table_len());
+        debug_assert_eq!(w_counts.len(), self.single_table_len());
+        debug_assert_eq!(a_counts.len(), self.single_table_len());
+        let mut t1 = 0.0f64;
+        for (c, p) in pair_counts.iter().zip(&self.blut_pair) {
+            if *c != 0 {
+                t1 += *c as f64 * p;
+            }
+        }
+        let mut t2 = 0.0f64;
+        let mut t3 = 0.0f64;
+        for ((cw, ca), p) in w_counts.iter().zip(a_counts).zip(&self.blut_single) {
+            if *cw != 0 {
+                t2 += *cw as f64 * p;
+            }
+            if *ca != 0 {
+                t3 += *ca as f64 * p;
+            }
+        }
+        (self.c1 * t1 + self.c2 * t2 + self.c3 * t3 + self.c4 * sign_count as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(n: u8, base: f64, alpha: f64, beta: f64) -> ExpQuantParams {
+        ExpQuantParams { base, alpha, beta, n_bits: n }
+    }
+
+    #[test]
+    fn table_sizes_match_hardware_budget() {
+        // §V-C: AC1 has 2^{n+1} entries worst case, AC2/AC3 have 2^n.
+        for n in 3..=7u8 {
+            let p = params(n, 1.3, 1.0, 0.0);
+            let ctx = ExpDotContext::new(p, p);
+            assert!(ctx.pair_table_len() <= 1 << (n + 1), "n={n}");
+            assert!(ctx.single_table_len() <= 1 << n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn pair_index_covers_extremes() {
+        let p = params(4, 1.2, 1.0, 0.0);
+        let ctx = ExpDotContext::new(p, p);
+        assert_eq!(ctx.pair_index(-2 * ctx.r_max), 0);
+        assert_eq!(ctx.pair_index(2 * ctx.r_max), ctx.pair_table_len() - 1);
+    }
+
+    #[test]
+    fn reconstruct_single_pair_matches_direct_product() {
+        // One activation a = α_A·b^2 + β_A, one weight w = -(α_W·b^-1 + β_W).
+        let pa = params(4, 1.25, 0.7, 0.01);
+        let pw = params(4, 1.25, 0.3, 0.002);
+        let ctx = ExpDotContext::new(pa, pw);
+        let mut pair = vec![0i32; ctx.pair_table_len()];
+        let mut wc = vec![0i32; ctx.single_table_len()];
+        let mut ac = vec![0i32; ctx.single_table_len()];
+        // signs: s = -1
+        pair[ctx.pair_index(2 + (-1))] -= 1;
+        wc[ctx.single_index(-1)] -= 1;
+        ac[ctx.single_index(2)] -= 1;
+        let got = ctx.reconstruct(&pair, &wc, &ac, -1);
+
+        let a_val = 0.7 * 1.25f64.powi(2) + 0.01;
+        let w_val = 0.3 * 1.25f64.powi(-1) + 0.002;
+        let want = -(a_val * w_val);
+        // `got` is f32; compare at f32 precision.
+        assert!((got as f64 - want).abs() < 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
+    #[should_panic(expected = "share base")]
+    fn mismatched_bases_rejected() {
+        let pa = params(4, 1.25, 1.0, 0.0);
+        let pw = params(4, 1.30, 1.0, 0.0);
+        ExpDotContext::new(pa, pw);
+    }
+}

@@ -1,0 +1,359 @@
+//! Counting engines for the exponential dot product.
+//!
+//! [`exp_dot_reference`] is the direct per-pair realization of Eq. 8 —
+//! the correctness oracle. [`CountingFc`] is the optimized FC kernel
+//! mirroring the paper's SIMD design (§IV): per-neuron counter arrays
+//! sized `4·R_max+1 ≤ 2^{n+1}` kept hot in L1, activations quantized once
+//! per input vector and broadcast across a block of output neurons, and
+//! nibble-packed weights for 3-bit layers.
+
+use super::context::ExpDotContext;
+use super::pack::{nibble_lut, pack_codes, PackedCodes};
+use crate::dnateq::{ExpQuantParams, QuantizedTensor, ZERO_CODE_SENTINEL};
+use crate::tensor::Tensor;
+
+/// Reference exponential dot product over two quantized vectors: fills
+/// the four count tables pair-by-pair, then reconstructs. Semantically
+/// identical to `dot(dequant(a), dequant(w))` up to float association.
+pub fn exp_dot_reference(ctx: &ExpDotContext, a: &QuantizedTensor, w: &QuantizedTensor) -> f32 {
+    assert_eq!(a.len(), w.len(), "vector length mismatch");
+    let mut pair = vec![0i32; ctx.pair_table_len()];
+    let mut wc = vec![0i32; ctx.single_table_len()];
+    let mut ac = vec![0i32; ctx.single_table_len()];
+    let mut sign_count = 0i32;
+    for i in 0..a.len() {
+        let (ca, cw) = (a.codes[i], w.codes[i]);
+        if ca == ZERO_CODE_SENTINEL || cw == ZERO_CODE_SENTINEL {
+            continue; // a zero factor annihilates the product
+        }
+        let s = (a.signs[i] * w.signs[i]) as i32;
+        pair[ctx.pair_index(ca as i32 + cw as i32)] += s;
+        wc[ctx.single_index(cw as i32)] += s;
+        ac[ctx.single_index(ca as i32)] += s;
+        sign_count += s;
+    }
+    ctx.reconstruct(&pair, &wc, &ac, sign_count)
+}
+
+/// Weight storage of one FC layer for the counting kernel.
+enum WeightStore {
+    /// One byte per element: `code + R_max` in the low bits (0xFF = zero),
+    /// sign in a parallel vector.
+    Bytes { plus: Vec<u8>, signs: Vec<i8> },
+    /// Nibble-packed 3-bit codes (two elements per byte).
+    Packed(PackedCodes),
+}
+
+/// FC layer executed entirely in the exponential domain (§IV).
+///
+/// Weights are quantized offline at construction; activations are
+/// quantized per forward call (the runtime Quantizer stage, §V-B).
+pub struct CountingFc {
+    ctx: ExpDotContext,
+    store: WeightStore,
+    /// [out, in] dims.
+    pub out_features: usize,
+    pub in_features: usize,
+    bias: Option<Vec<f32>>,
+}
+
+/// Output neurons processed per activation pass. Each neuron needs a
+/// pair-count array (≤ 2^{n+1} i32 = 1 KiB at n=7); a block of 8 keeps
+/// all live counters within L1 (§IV discusses exactly this pressure).
+const NEURON_BLOCK: usize = 8;
+
+impl CountingFc {
+    /// Quantize `weights` (`[out, in]`) with `w_params` and prepare the
+    /// counting kernel. `a_params` is used to quantize activations at
+    /// forward time (shared base/bitwidth enforced by [`ExpDotContext`]).
+    pub fn new(
+        weights: &Tensor,
+        w_params: ExpQuantParams,
+        a_params: ExpQuantParams,
+        bias: Option<Vec<f32>>,
+    ) -> Self {
+        assert_eq!(weights.ndim(), 2, "CountingFc expects [out, in] weights");
+        let (out_features, in_features) = (weights.shape()[0], weights.shape()[1]);
+        if let Some(b) = &bias {
+            assert_eq!(b.len(), out_features);
+        }
+        let q = w_params.quantize(weights);
+        let ctx = ExpDotContext::new(a_params, w_params);
+        let store = if w_params.n_bits == 3 {
+            WeightStore::Packed(pack_codes(&q))
+        } else {
+            let r_max = w_params.r_max();
+            let plus = q
+                .codes
+                .iter()
+                .map(|&c| if c == ZERO_CODE_SENTINEL { 0xFF } else { (c as i32 + r_max) as u8 })
+                .collect();
+            WeightStore::Bytes { plus, signs: q.signs }
+        };
+        Self { ctx, store, out_features, in_features, bias }
+    }
+
+    pub fn context(&self) -> &ExpDotContext {
+        &self.ctx
+    }
+
+    /// Bytes of weight storage (drives the Table III footprint analysis).
+    pub fn weight_bytes(&self) -> usize {
+        match &self.store {
+            WeightStore::Bytes { plus, signs } => plus.len() + signs.len() / 8 + 1,
+            WeightStore::Packed(p) => p.bytes.len(),
+        }
+    }
+
+    /// Forward one batch (`[batch, in]` → `[batch, out]`). Activations
+    /// are exponentially quantized here (runtime pre-processing stage).
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.ndim(), 2);
+        assert_eq!(x.shape()[1], self.in_features, "input feature mismatch");
+        let batch = x.shape()[0];
+        let mut out = vec![0.0f32; batch * self.out_features];
+        let qa = self.ctx.a_params.quantize(x);
+        for b in 0..batch {
+            let a_codes = &qa.codes[b * self.in_features..(b + 1) * self.in_features];
+            let a_signs = &qa.signs[b * self.in_features..(b + 1) * self.in_features];
+            self.forward_one(a_codes, a_signs, &mut out[b * self.out_features..(b + 1) * self.out_features]);
+        }
+        Tensor::from_vec(&[batch, self.out_features], out)
+    }
+
+    /// One input vector against all output neurons.
+    fn forward_one(&self, a_codes: &[i8], a_signs: &[i8], out: &mut [f32]) {
+        let r_max = self.ctx.r_max;
+        // Pre-shift activation codes once: `a + R_max` (0xFF = zero), the
+        // same trick the Input Shift-Reg plays in hardware (§V-B).
+        let a_plus: Vec<u8> = a_codes
+            .iter()
+            .map(|&c| if c == ZERO_CODE_SENTINEL { 0xFF } else { (c as i32 + r_max) as u8 })
+            .collect();
+
+        let plen = self.ctx.pair_table_len();
+        let slen = self.ctx.single_table_len();
+        // Counter block: NEURON_BLOCK × (pair + w + a) tables plus one
+        // trash slot per table (branchless zero handling), L1-resident.
+        let mut pair = vec![0i32; NEURON_BLOCK * (plen + 1)];
+        let mut wcnt = vec![0i32; NEURON_BLOCK * (slen + 1)];
+        let mut acnt = vec![0i32; NEURON_BLOCK * (slen + 1)];
+
+        let mut j0 = 0usize;
+        while j0 < self.out_features {
+            let jn = (j0 + NEURON_BLOCK).min(self.out_features);
+            let width = jn - j0;
+            pair[..width * (plen + 1)].fill(0);
+            wcnt[..width * (slen + 1)].fill(0);
+            acnt[..width * (slen + 1)].fill(0);
+
+            match &self.store {
+                WeightStore::Bytes { plus, signs } => {
+                    for (jj, j) in (j0..jn).enumerate() {
+                        let wrow = &plus[j * self.in_features..(j + 1) * self.in_features];
+                        let srow = &signs[j * self.in_features..(j + 1) * self.in_features];
+                        let p = &mut pair[jj * (plen + 1)..(jj + 1) * (plen + 1)];
+                        let wc = &mut wcnt[jj * (slen + 1)..(jj + 1) * (slen + 1)];
+                        let ac = &mut acnt[jj * (slen + 1)..(jj + 1) * (slen + 1)];
+                        // Inner loop of the §IV hot spot. A branchless
+                        // trash-slot variant was measured 8% slower (see
+                        // EXPERIMENTS.md §Perf): zero-skip branches are
+                        // well-predicted and skipping saves table RMWs.
+                        for i in 0..self.in_features {
+                            let ap = a_plus[i] as usize;
+                            let wp = unsafe { *wrow.get_unchecked(i) } as usize;
+                            if ap == 0xFF || wp == 0xFF {
+                                continue;
+                            }
+                            let s =
+                                (a_signs[i] as i32) * (unsafe { *srow.get_unchecked(i) } as i32);
+                            unsafe {
+                                *p.get_unchecked_mut(ap + wp) += s;
+                                *wc.get_unchecked_mut(wp) += s;
+                                *ac.get_unchecked_mut(ap) += s;
+                            }
+                        }
+                    }
+                }
+                WeightStore::Packed(packed) => {
+                    // Extended LUT: invalid/zero nibbles map to the trash
+                    // slot with sign 0 — fully branchless on the weight
+                    // side too.
+                    let lut = nibble_lut(r_max);
+                    for (jj, j) in (j0..jn).enumerate() {
+                        let row_off = j * self.in_features;
+                        let p = &mut pair[jj * (plen + 1)..(jj + 1) * (plen + 1)];
+                        let wc = &mut wcnt[jj * (slen + 1)..(jj + 1) * (slen + 1)];
+                        let ac = &mut acnt[jj * (slen + 1)..(jj + 1) * (slen + 1)];
+                        debug_assert!(row_off % 2 == 0, "in_features must keep rows byte-aligned");
+                        let row_bytes = &packed.bytes[row_off / 2..(row_off + self.in_features).div_ceil(2)];
+                        for i in 0..self.in_features {
+                            let ap = a_plus[i] as usize;
+                            let byte = unsafe { *row_bytes.get_unchecked(i / 2) };
+                            let nib = (byte >> ((i & 1) * 4)) & 0xF;
+                            let (wp, wsign) = unsafe { *lut.get_unchecked(nib as usize) };
+                            if ap == 0xFF || wsign == 0 {
+                                continue;
+                            }
+                            let s = (a_signs[i] as i32) * (wsign as i32);
+                            unsafe {
+                                *p.get_unchecked_mut(ap + wp as usize) += s;
+                                *wc.get_unchecked_mut(wp as usize) += s;
+                                *ac.get_unchecked_mut(ap) += s;
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Post-processing (Dequantizer stage): short float pass —
+            // slices exclude the trash slot.
+            for (jj, j) in (j0..jn).enumerate() {
+                let pbase = jj * (plen + 1);
+                let sbase = jj * (slen + 1);
+                let sign_count: i32 = pair[pbase..pbase + plen].iter().sum();
+                let v = self.ctx.reconstruct(
+                    &pair[pbase..pbase + plen],
+                    &wcnt[sbase..sbase + slen],
+                    &acnt[sbase..sbase + slen],
+                    sign_count,
+                );
+                out[j] = v + self.bias.as_ref().map_or(0.0, |b| b[j]);
+            }
+            j0 = jn;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+
+    fn shared_params(w: &Tensor, a: &Tensor, n: u8) -> (ExpQuantParams, ExpQuantParams) {
+        let wp = ExpQuantParams::init_for_tensor(w, n);
+        let mut ap = ExpQuantParams { base: wp.base, alpha: 1.0, beta: 0.0, n_bits: n };
+        ap.refit_scale_offset(a);
+        (wp, ap)
+    }
+
+    fn f32_dot(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+
+    #[test]
+    fn reference_dot_equals_dequantized_dot() {
+        let mut rng = SplitMix64::new(81);
+        for n in [3u8, 4, 5, 7] {
+            let w = Tensor::rand_signed_exponential(&[512], 3.0, &mut rng);
+            let a = Tensor::rand_signed_exponential(&[512], 0.8, &mut rng);
+            let (wp, ap) = shared_params(&w, &a, n);
+            let qw = wp.quantize(&w);
+            let qa = ap.quantize(&a);
+            let ctx = ExpDotContext::new(ap, wp);
+            let got = exp_dot_reference(&ctx, &qa, &qw) as f64;
+            let want = f32_dot(qa.dequantize().data(), qw.dequantize().data());
+            let tol = want.abs().max(1.0) * 1e-4;
+            assert!((got - want).abs() < tol, "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn counting_fc_matches_dequantized_matmul() {
+        let mut rng = SplitMix64::new(82);
+        for n in [3u8, 4, 6] {
+            let (outf, inf, batch) = (13, 96, 3);
+            let w = Tensor::rand_signed_exponential(&[outf, inf], 2.0, &mut rng);
+            let x = Tensor::rand_signed_exponential(&[batch, inf], 0.9, &mut rng);
+            let (wp, ap) = shared_params(&w, &x, n);
+            let fc = CountingFc::new(&w, wp, ap, None);
+            let got = fc.forward(&x);
+
+            let dq_w = wp.quantize(&w).dequantize();
+            let dq_x = ap.quantize(&x).dequantize();
+            for b in 0..batch {
+                for j in 0..outf {
+                    let want = f32_dot(dq_x.row(b), dq_w.row(j));
+                    let got_v = got.data()[b * outf + j] as f64;
+                    let tol = want.abs().max(0.5) * 2e-4;
+                    assert!(
+                        (got_v - want).abs() < tol,
+                        "n={n} b={b} j={j}: {got_v} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn counting_fc_handles_zeros_and_bias() {
+        let mut rng = SplitMix64::new(83);
+        let (outf, inf) = (5, 64);
+        let mut w = Tensor::rand_signed_exponential(&[outf, inf], 2.0, &mut rng);
+        let mut x = Tensor::rand_signed_exponential(&[1, inf], 1.0, &mut rng);
+        for i in (0..inf).step_by(3) {
+            x.data_mut()[i] = 0.0;
+        }
+        for i in (0..outf * inf).step_by(7) {
+            w.data_mut()[i] = 0.0;
+        }
+        let (wp, ap) = shared_params(&w, &x, 4);
+        let bias = vec![1.0f32; outf];
+        let fc = CountingFc::new(&w, wp, ap, Some(bias));
+        let got = fc.forward(&x);
+
+        let dq_w = wp.quantize(&w).dequantize();
+        let dq_x = ap.quantize(&x).dequantize();
+        for j in 0..outf {
+            let want = f32_dot(dq_x.row(0), dq_w.row(j)) + 1.0;
+            let got_v = got.data()[j] as f64;
+            assert!((got_v - want).abs() < 1e-3, "j={j}: {got_v} vs {want}");
+        }
+    }
+
+    #[test]
+    fn packed_path_used_for_3bit() {
+        let mut rng = SplitMix64::new(84);
+        let w = Tensor::rand_signed_exponential(&[16, 128], 2.0, &mut rng);
+        let x = Tensor::rand_signed_exponential(&[1, 128], 1.0, &mut rng);
+        let (wp3, ap3) = shared_params(&w, &x, 3);
+        let fc3 = CountingFc::new(&w, wp3, ap3, None);
+        // 16×128 elements at 0.5 B each.
+        assert_eq!(fc3.weight_bytes(), 16 * 128 / 2);
+        let (wp5, ap5) = shared_params(&w, &x, 5);
+        let fc5 = CountingFc::new(&w, wp5, ap5, None);
+        assert!(fc5.weight_bytes() > fc3.weight_bytes());
+    }
+
+    #[test]
+    fn property_counting_equals_reference() {
+        use crate::util::prop::{for_all, PropConfig};
+        for_all(
+            PropConfig { cases: 24, seed: 0xC0FFEE },
+            |rng, size| {
+                let inf = 8 * size.max(2);
+                let n = 3 + (rng.next_below(5) as u8); // 3..=7
+                let w = Tensor::rand_signed_exponential(&[3, inf], 2.0, rng);
+                let x = Tensor::rand_signed_exponential(&[1, inf], 1.0, rng);
+                (w, x, n)
+            },
+            |(w, x, n)| {
+                let (wp, ap) = shared_params(w, x, *n);
+                let fc = CountingFc::new(w, wp, ap, None);
+                let got = fc.forward(x);
+                let ctx = ExpDotContext::new(ap, wp);
+                let qa = ap.quantize(x);
+                for j in 0..3 {
+                    let wq = wp.quantize(&Tensor::from_vec(&[w.shape()[1]], w.row(j).to_vec()));
+                    let want = exp_dot_reference(&ctx, &qa, &wq);
+                    let g = got.data()[j];
+                    let tol = want.abs().max(0.5) * 1e-3;
+                    if (g - want).abs() > tol {
+                        return Err(format!("j={j}: {g} vs {want}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! INT8 dot-product baseline (§IV, Fig. 4).
+//!
+//! Mirrors the paper's best-effort VNNI implementation: weights quantized
+//! offline to INT8, activations quantized dynamically per input vector,
+//! i32-accumulating GEMV with an unrolled inner loop (the portable analog
+//! of `VPDPBUSD`), then a single dequantization multiply per output.
+
+use crate::dnateq::UniformParams;
+use crate::tensor::Tensor;
+
+/// INT8 FC layer: the Table III / accelerator-baseline reference point.
+pub struct Int8Fc {
+    w_q: Vec<i8>,
+    w_params: UniformParams,
+    pub out_features: usize,
+    pub in_features: usize,
+    bias: Option<Vec<f32>>,
+}
+
+impl Int8Fc {
+    /// Quantize `[out, in]` weights offline (symmetric INT8).
+    pub fn new(weights: &Tensor, bias: Option<Vec<f32>>) -> Self {
+        assert_eq!(weights.ndim(), 2, "Int8Fc expects [out, in] weights");
+        let (out_features, in_features) = (weights.shape()[0], weights.shape()[1]);
+        if let Some(b) = &bias {
+            assert_eq!(b.len(), out_features);
+        }
+        let w_params = UniformParams::calibrate(weights, 8);
+        let w_q = weights.data().iter().map(|&x| w_params.encode(x)).collect();
+        Self { w_q, w_params, out_features, in_features, bias }
+    }
+
+    /// Weight storage in bytes (1 B/element).
+    pub fn weight_bytes(&self) -> usize {
+        self.w_q.len()
+    }
+
+    /// Forward one batch (`[batch, in]` → `[batch, out]`): dynamic INT8
+    /// activation quantization + i32 GEMV + dequantization.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.ndim(), 2);
+        assert_eq!(x.shape()[1], self.in_features, "input feature mismatch");
+        let batch = x.shape()[0];
+        let a_params = UniformParams::calibrate(x, 8);
+        let mut a_q = vec![0i8; self.in_features];
+        let mut out = vec![0.0f32; batch * self.out_features];
+        let scale = (a_params.delta * self.w_params.delta) as f32;
+
+        for b in 0..batch {
+            let row = x.row(b);
+            for (dst, &src) in a_q.iter_mut().zip(row) {
+                *dst = a_params.encode(src);
+            }
+            let orow = &mut out[b * self.out_features..(b + 1) * self.out_features];
+            for j in 0..self.out_features {
+                let wrow = &self.w_q[j * self.in_features..(j + 1) * self.in_features];
+                orow[j] = gemv_i8(&a_q, wrow) as f32 * scale
+                    + self.bias.as_ref().map_or(0.0, |bb| bb[j]);
+            }
+        }
+        Tensor::from_vec(&[batch, self.out_features], out)
+    }
+}
+
+/// i32-accumulating i8 dot product, unrolled ×4 with independent partial
+/// sums so the autovectorizer maps it onto pmaddwd-style lanes.
+#[inline]
+pub fn gemv_i8(a: &[i8], w: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), w.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] as i32 * w[i] as i32;
+        s1 += a[i + 1] as i32 * w[i + 1] as i32;
+        s2 += a[i + 2] as i32 * w[i + 2] as i32;
+        s3 += a[i + 3] as i32 * w[i + 3] as i32;
+    }
+    let mut tail = 0i32;
+    for i in chunks * 4..n {
+        tail += a[i] as i32 * w[i] as i32;
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+
+    #[test]
+    fn gemv_matches_naive() {
+        let mut rng = SplitMix64::new(91);
+        let a: Vec<i8> = (0..1001).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect();
+        let w: Vec<i8> = (0..1001).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect();
+        let naive: i32 = a.iter().zip(&w).map(|(&x, &y)| x as i32 * y as i32).sum();
+        assert_eq!(gemv_i8(&a, &w), naive);
+    }
+
+    #[test]
+    fn int8_fc_approximates_f32_matmul() {
+        let mut rng = SplitMix64::new(92);
+        let (outf, inf, batch) = (9, 257, 2);
+        let w = Tensor::rand_normal(&[outf, inf], 0.0, 0.1, &mut rng);
+        let x = Tensor::rand_uniform(&[batch, inf], -1.0, 1.0, &mut rng);
+        let fc = Int8Fc::new(&w, None);
+        let got = fc.forward(&x);
+        for b in 0..batch {
+            for j in 0..outf {
+                let want: f64 = x
+                    .row(b)
+                    .iter()
+                    .zip(w.row(j))
+                    .map(|(&a, &ww)| a as f64 * ww as f64)
+                    .sum();
+                let got_v = got.data()[b * outf + j] as f64;
+                // INT8 error budget: ~1% of the accumulated magnitude.
+                let mag: f64 = x.row(b).iter().zip(w.row(j)).map(|(&a, &ww)| (a * ww).abs() as f64).sum();
+                assert!(
+                    (got_v - want).abs() < mag * 0.02 + 1e-3,
+                    "b={b} j={j}: {got_v} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bias_applied() {
+        let w = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let x = Tensor::from_vec(&[1, 2], vec![0.5, -0.5]);
+        let fc = Int8Fc::new(&w, Some(vec![10.0, 20.0]));
+        let y = fc.forward(&x);
+        assert!((y.data()[0] - 10.5).abs() < 0.05);
+        assert!((y.data()[1] - 19.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn weight_bytes_one_per_element() {
+        let w = Tensor::zeros(&[4, 8]);
+        let fc = Int8Fc::new(&w, None);
+        assert_eq!(fc.weight_bytes(), 32);
+    }
+}

@@ -1,0 +1,30 @@
+//! Exponential-domain dot product (§III-C) and its software
+//! implementations (§IV).
+//!
+//! With both tensors in the form `S(α·bⁱ + β)` and a shared base `b`, a
+//! dot product expands into four terms (Eq. 8), each computable by
+//! *counting exponent occurrences* instead of multiplying:
+//!
+//! ```text
+//! Σ AᵢWᵢ = αA·αW Σ s·b^(aᵢ+wᵢ)  +  αW·βA Σ s·b^(wᵢ)
+//!        + αA·βW Σ s·b^(aᵢ)     +  βA·βW Σ s
+//! ```
+//!
+//! * [`context`] — per-layer reconstruction context: base-power lookup
+//!   tables (the hardware BLUT) and the four coefficient products.
+//! * [`counting`] — the counting engines: a reference per-pair
+//!   implementation and the register-blocked FC kernel that mirrors the
+//!   paper's SIMD design (counter arrays kept L1/register-resident).
+//! * [`int8`] — the VNNI-style INT8 dot-product baseline of Table III.
+//! * [`pack`] — nibble packing of (sign, exponent) codes; the 2×
+//!   footprint reduction is where the large-layer speedups come from.
+
+pub mod context;
+pub mod counting;
+pub mod int8;
+pub mod pack;
+
+pub use context::ExpDotContext;
+pub use counting::{exp_dot_reference, CountingFc};
+pub use int8::Int8Fc;
+pub use pack::{pack_codes, unpack_codes, PackedCodes};

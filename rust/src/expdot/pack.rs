@@ -1,0 +1,154 @@
+//! Nibble packing of (sign, exponent) codes.
+//!
+//! For 3-bit layers a full (sign, exponent) pair fits in 4 bits, so two
+//! tensor elements pack per byte — the 2× footprint reduction over INT8
+//! that drives the large-layer speedups of Table III. Encoding:
+//!
+//! ```text
+//! nibble = 0xF                      for exact zero
+//!          sign<<3 | (code + R_max) otherwise  (code ∈ [-3, 3] → 0..6)
+//! ```
+
+use crate::dnateq::{QuantizedTensor, ZERO_CODE_SENTINEL};
+
+/// Zero marker nibble.
+pub const ZERO_NIBBLE: u8 = 0xF;
+
+/// Packed 3-bit (sign, exponent) codes, two per byte, low nibble first.
+#[derive(Clone, Debug)]
+pub struct PackedCodes {
+    /// Packed payload.
+    pub bytes: Vec<u8>,
+    /// Number of logical elements (may be odd).
+    pub len: usize,
+}
+
+/// Pack a 3-bit quantized tensor. Panics if `n_bits != 3` — wider codes
+/// use the byte-per-element layout.
+pub fn pack_codes(q: &QuantizedTensor) -> PackedCodes {
+    assert_eq!(q.params.n_bits, 3, "nibble packing requires 3-bit codes");
+    let r_max = q.params.r_max(); // = 3
+    let nibble = |idx: usize| -> u8 {
+        let c = q.codes[idx];
+        if c == ZERO_CODE_SENTINEL {
+            ZERO_NIBBLE
+        } else {
+            let sign_bit = if q.signs[idx] < 0 { 8u8 } else { 0u8 };
+            sign_bit | (c as i32 + r_max) as u8
+        }
+    };
+    let len = q.codes.len();
+    let mut bytes = Vec::with_capacity(len.div_ceil(2));
+    let mut i = 0;
+    while i + 1 < len {
+        bytes.push(nibble(i) | (nibble(i + 1) << 4));
+        i += 2;
+    }
+    if i < len {
+        bytes.push(nibble(i) | (ZERO_NIBBLE << 4));
+    }
+    PackedCodes { bytes, len }
+}
+
+/// Unpack to parallel (codes, signs) vectors (zeros restored to the
+/// sentinel). Mainly for tests — the hot kernels consume nibbles via a
+/// 16-entry LUT without materializing this.
+pub fn unpack_codes(p: &PackedCodes, r_max: i32) -> (Vec<i8>, Vec<i8>) {
+    let mut codes = Vec::with_capacity(p.len);
+    let mut signs = Vec::with_capacity(p.len);
+    for i in 0..p.len {
+        let byte = p.bytes[i / 2];
+        let nib = if i % 2 == 0 { byte & 0xF } else { byte >> 4 };
+        if nib == ZERO_NIBBLE {
+            codes.push(ZERO_CODE_SENTINEL);
+            signs.push(1);
+        } else {
+            codes.push(((nib & 0x7) as i32 - r_max) as i8);
+            signs.push(if nib & 0x8 != 0 { -1 } else { 1 });
+        }
+    }
+    (codes, signs)
+}
+
+/// Decode LUT for the counting kernel: maps a nibble to
+/// `(code + R_max, sign)` with `(0xFF, 0)` for zero — so the kernel's
+/// inner loop is a table load + add + signed increment.
+pub fn nibble_lut(r_max: i32) -> [(u8, i8); 16] {
+    let mut lut = [(0xFFu8, 0i8); 16];
+    for nib in 0u8..16 {
+        if nib == ZERO_NIBBLE {
+            continue;
+        }
+        let code = (nib & 0x7) as i32 - r_max;
+        if code > r_max {
+            continue; // unreachable encodings stay marked invalid
+        }
+        let sign = if nib & 0x8 != 0 { -1i8 } else { 1i8 };
+        lut[nib as usize] = ((code + r_max) as u8, sign);
+    }
+    lut
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnateq::ExpQuantParams;
+    use crate::tensor::{SplitMix64, Tensor};
+
+    fn quantized(n_elems: usize, seed: u64) -> QuantizedTensor {
+        let mut rng = SplitMix64::new(seed);
+        let mut t = Tensor::rand_signed_exponential(&[n_elems], 2.0, &mut rng);
+        // Sprinkle exact zeros.
+        for i in (0..n_elems).step_by(17) {
+            t.data_mut()[i] = 0.0;
+        }
+        let p = ExpQuantParams::init_for_tensor(&t, 3);
+        p.quantize(&t)
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_even() {
+        let q = quantized(1024, 71);
+        let packed = pack_codes(&q);
+        assert_eq!(packed.bytes.len(), 512);
+        let (codes, signs) = unpack_codes(&packed, q.params.r_max());
+        assert_eq!(codes, q.codes);
+        assert_eq!(signs, q.signs);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_odd() {
+        let q = quantized(333, 72);
+        let packed = pack_codes(&q);
+        assert_eq!(packed.bytes.len(), 167);
+        let (codes, signs) = unpack_codes(&packed, q.params.r_max());
+        assert_eq!(codes, q.codes);
+        assert_eq!(signs, q.signs);
+    }
+
+    #[test]
+    fn footprint_is_half_a_byte_per_element() {
+        let q = quantized(4096, 73);
+        let packed = pack_codes(&q);
+        assert_eq!(packed.bytes.len() * 2, 4096);
+    }
+
+    #[test]
+    fn lut_matches_unpack() {
+        let r_max = 3;
+        let lut = nibble_lut(r_max);
+        let q = quantized(256, 74);
+        let packed = pack_codes(&q);
+        for i in 0..packed.len {
+            let byte = packed.bytes[i / 2];
+            let nib = if i % 2 == 0 { byte & 0xF } else { byte >> 4 };
+            let (plus, sign) = lut[nib as usize];
+            if q.codes[i] == crate::dnateq::ZERO_CODE_SENTINEL {
+                assert_eq!(sign, 0);
+            } else {
+                assert_eq!(plus as i32, q.codes[i] as i32 + r_max);
+                assert_eq!(sign, q.signs[i]);
+            }
+        }
+    }
+}

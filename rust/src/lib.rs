@@ -1,0 +1,68 @@
+//! # DNA-TEQ — Adaptive Exponential Quantization of Tensors for DNN Inference
+//!
+//! Reproduction of *DNA-TEQ* (Khabbazan, Riera, González, 2023) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the complete system: calibration pipeline
+//!   (distribution analysis, Algorithm-1 base search, bitwidth selection),
+//!   the exponential-domain dot-product engine, an f32 inference engine for
+//!   the evaluated model zoo, a cycle-level simulator of the DNA-TEQ
+//!   accelerator vs. an INT8 baseline, and a serving coordinator that runs
+//!   AOT-compiled model artifacts through PJRT.
+//! * **L2 (python/compile)** — JAX model definitions + build-time training,
+//!   lowered once to HLO text artifacts (`make artifacts`).
+//! * **L1 (python/compile/kernels)** — Pallas kernels for exponential
+//!   quantization and the counting dot-product, validated against pure-jnp
+//!   oracles.
+//!
+//! Python never runs on the request path; the rust binary is self-contained
+//! once `artifacts/` exists.
+//!
+//! ## Crate map
+//!
+//! | module | paper section | role |
+//! |---|---|---|
+//! | [`tensor`] | — | nd-array substrate + binary interchange with python |
+//! | [`dataset`] | §VI-A | synthetic workload readers/generators |
+//! | [`nn`] | §VI-A | f32 inference engine + mini model zoo |
+//! | [`dnateq`] | §III | the quantization methodology (the contribution) |
+//! | [`expdot`] | §III-C, §IV | exponential dot-product engines (SW impl.) |
+//! | [`accel`] | §V, §VI-C/D | 3D-stacked accelerator simulator + energy |
+//! | [`runtime`] | — | PJRT loading/execution of AOT artifacts |
+//! | [`coordinator`] | — | serving: router, batcher, workers, metrics |
+//! | [`report`] | §VI | table/figure emitters for every paper exhibit |
+
+pub mod accel;
+pub mod coordinator;
+pub mod dataset;
+pub mod dnateq;
+pub mod expdot;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Canonical location of build artifacts relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve a path under the artifacts directory, honoring the
+/// `DNATEQ_ARTIFACTS` environment variable (used by tests and examples run
+/// from other working directories).
+pub fn artifact_path(rel: &str) -> std::path::PathBuf {
+    let base = std::env::var("DNATEQ_ARTIFACTS").unwrap_or_else(|_| {
+        // Walk up from CWD looking for an `artifacts/` dir so examples work
+        // from target/ subdirectories too.
+        let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+        loop {
+            let cand = dir.join(ARTIFACTS_DIR);
+            if cand.is_dir() {
+                return cand.to_string_lossy().into_owned();
+            }
+            if !dir.pop() {
+                return ARTIFACTS_DIR.to_string();
+            }
+        }
+    });
+    std::path::Path::new(&base).join(rel)
+}

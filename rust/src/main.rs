@@ -1,0 +1,236 @@
+//! `repro` — DNA-TEQ reproduction CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   calibrate [--model M] [--force]   run the Fig.-3 pipeline (cached)
+//!   report    [--all|--table N|--figure N|--area] regenerate exhibits
+//!   simulate                          accelerator comparison (Figs. 8/9)
+//!   serve     [--model M] [--requests N] [--backend engine|pjrt|quantized]
+//!   infer     [--model M] [--index I] one PJRT inference from artifacts
+
+use anyhow::{bail, Context, Result};
+use dnateq::coordinator::{
+    AlexNetBackend, Coordinator, CoordinatorConfig, Payload, PjrtClassifierBackend,
+};
+use dnateq::dataset::ImageDataset;
+use dnateq::dnateq::CalibrationOptions;
+use dnateq::report::{calibrate_or_load, tables, CalibOutcome, MODELS};
+use dnateq::runtime::Runtime;
+use dnateq::{artifact_path, nn::AlexNetMini, nn::WeightMap};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` and bare flags.
+struct Args {
+    cmd: String,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut flags = BTreeMap::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let k = rest[i].trim_start_matches('-').to_string();
+            if i + 1 < rest.len() && !rest[i + 1].starts_with('-') {
+                flags.insert(k, rest[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(k, "true".into());
+                i += 1;
+            }
+        }
+        Self { cmd, flags }
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.flags.contains_key(k)
+    }
+}
+
+fn calib_options(quick: bool) -> CalibrationOptions {
+    let mut o = CalibrationOptions::default();
+    if quick {
+        o.thr_max = 0.10;
+    }
+    o
+}
+
+fn all_outcomes(force: bool, quick: bool) -> Result<BTreeMap<String, CalibOutcome>> {
+    let opts = calib_options(quick);
+    MODELS
+        .iter()
+        .map(|m| Ok((m.to_string(), calibrate_or_load(m, force, &opts)?)))
+        .collect()
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse();
+    match args.cmd.as_str() {
+        "calibrate" => {
+            let force = args.has("force");
+            let quick = args.has("quick");
+            let models: Vec<&str> = match args.get("model") {
+                Some(m) => vec![m],
+                None => MODELS.to_vec(),
+            };
+            for m in models {
+                let o = calibrate_or_load(m, force, &calib_options(quick))?;
+                println!(
+                    "{m}: thr_w {:.2}% | avg bits {:.2} | compression {:.1}% | fp32 {:.4} → dnateq {:.4}",
+                    o.config.thr_w * 100.0,
+                    o.config.avg_bitwidth(),
+                    o.config.compression_ratio() * 100.0,
+                    o.fp32_accuracy,
+                    o.dnateq_accuracy
+                );
+            }
+        }
+        "report" => {
+            let quick = args.has("quick");
+            let outcomes = all_outcomes(args.has("force"), quick)?;
+            let want = |k: &str, v: &str| {
+                args.has("all") || args.get(k) == Some(v)
+            };
+            let mut printed = false;
+            if want("table", "1") {
+                println!("{}", tables::table_rss(&outcomes, true)?);
+                printed = true;
+            }
+            if want("table", "2") {
+                println!("{}", tables::table_rss(&outcomes, false)?);
+                printed = true;
+            }
+            if want("figure", "1") {
+                println!("{}", tables::figure_fit(true)?);
+                printed = true;
+            }
+            if want("figure", "2") {
+                println!("{}", tables::figure_fit(false)?);
+                printed = true;
+            }
+            if want("table", "3") {
+                println!("{}", tables::table3(quick)?);
+                printed = true;
+            }
+            if want("table", "4") {
+                println!("{}", tables::table4(&outcomes)?);
+                printed = true;
+            }
+            if want("table", "5") {
+                println!("{}", tables::table5(&outcomes)?);
+                printed = true;
+            }
+            if want("figure", "8") || want("figure", "9") {
+                println!("{}", tables::figures_8_9(&outcomes)?);
+                printed = true;
+            }
+            if want("figure", "10") {
+                println!("{}", tables::figure10()?);
+                printed = true;
+            }
+            if want("figure", "11") {
+                println!("{}", tables::figure11(&outcomes)?);
+                printed = true;
+            }
+            if args.has("all") || args.has("area") {
+                println!("{}", tables::area_report());
+                println!("{}", tables::bitwidth_histogram(&outcomes));
+                printed = true;
+            }
+            if !printed {
+                bail!("nothing selected: use --all, --table N, --figure N or --area");
+            }
+        }
+        "simulate" => {
+            let outcomes = all_outcomes(false, args.has("quick"))?;
+            println!("{}", tables::figures_8_9(&outcomes)?);
+            println!("{}", tables::figure10()?);
+        }
+        "serve" => {
+            let n: usize = args.get("requests").unwrap_or("64").parse()?;
+            let backend_kind = args.get("backend").unwrap_or("engine");
+            let data = ImageDataset::load(artifact_path("data"), "eval")?;
+            let cfg = CoordinatorConfig::default();
+            let coordinator = match backend_kind {
+                "pjrt" => Coordinator::start(
+                    Arc::new(PjrtClassifierBackend::spawn(artifact_path("alexnet_fp32.hlo.txt"))?),
+                    cfg,
+                ),
+                "quantized" => {
+                    let w = WeightMap::load_dir(artifact_path("models/alexnet_mini"))?;
+                    let model = AlexNetMini::from_weights(&w)?;
+                    let o = calibrate_or_load("alexnet_mini", false, &calib_options(true))?;
+                    Coordinator::start(
+                        Arc::new(AlexNetBackend::quantized(model, &o.config, "alexnet-dnateq")),
+                        cfg,
+                    )
+                }
+                _ => {
+                    let w = WeightMap::load_dir(artifact_path("models/alexnet_mini"))?;
+                    Coordinator::start(
+                        Arc::new(AlexNetBackend::fp32(AlexNetMini::from_weights(&w)?, "alexnet-fp32")),
+                        cfg,
+                    )
+                }
+            };
+            let mut hits = 0usize;
+            let mut rxs = Vec::new();
+            for i in 0..n {
+                rxs.push((i % data.len(), coordinator.submit(Payload::Image(data.image(i % data.len())))?));
+            }
+            for (idx, rx) in rxs {
+                let resp = rx.recv().context("response channel closed")?;
+                if let dnateq::coordinator::Output::ClassId(k) = resp.output {
+                    if k == data.labels[idx] {
+                        hits += 1;
+                    }
+                }
+            }
+            let snap = coordinator.shutdown();
+            println!("backend={backend_kind} accuracy={:.4}", hits as f64 / n as f64);
+            println!("{}", snap.summary());
+        }
+        "infer" => {
+            let model = args.get("model").unwrap_or("alexnet");
+            let index: usize = args.get("index").unwrap_or("0").parse()?;
+            let rt = Runtime::cpu()?;
+            let exe = rt.load_hlo(artifact_path(&format!("{model}_fp32.hlo.txt")))?;
+            let data = ImageDataset::load(artifact_path("data"), "eval")?;
+            let img = data.image(index);
+            let input = dnateq::tensor::Tensor::from_vec(&[1, 3, 32, 32], img.data().to_vec());
+            let logits = exe.run1(&input)?;
+            println!(
+                "platform={} model={model} sample={index} predicted={} label={}",
+                rt.platform(),
+                logits.argmax(),
+                data.labels[index]
+            );
+        }
+        "help" | _ => {
+            println!(
+                "repro — DNA-TEQ reproduction\n\
+                 usage: repro <calibrate|report|simulate|serve|infer> [flags]\n  \
+                 calibrate [--model M] [--force] [--quick]\n  \
+                 report    --all | --table N | --figure N | --area [--quick]\n  \
+                 simulate  [--quick]\n  \
+                 serve     [--backend engine|pjrt|quantized] [--requests N]\n  \
+                 infer     [--model alexnet|resnet] [--index I]"
+            );
+        }
+    }
+    Ok(())
+}

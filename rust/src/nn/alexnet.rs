@@ -1,0 +1,224 @@
+//! AlexNet-mini: the AlexNet-class CNN of the evaluation (§VI-A).
+//!
+//! Same layer population as AlexNet — five CONV layers with pooling
+//! followed by three FC layers — scaled to 32×32×3 inputs and 10 classes
+//! (the ImageNet substitution is documented in DESIGN.md). Layer names
+//! (`conv1..conv5`, `fc1..fc3`) are the calibration keys shared with the
+//! python training side.
+
+use super::layer::{Conv2d, ExecPlan, HasQuantLayers, Linear, QLayerRef};
+use super::ops::{maxpool2x2, relu_inplace};
+use super::trace::TraceStore;
+use super::weights::WeightMap;
+use crate::dnateq::LayerKind;
+use crate::tensor::{SplitMix64, Tensor};
+use anyhow::Result;
+
+/// Input geometry.
+pub const IN_CHANNELS: usize = 3;
+pub const IN_HW: usize = 32;
+pub const NUM_CLASSES: usize = 10;
+
+/// Channel plan of the five conv layers.
+const CONV_CH: [usize; 5] = [32, 64, 96, 96, 64];
+/// FC sizes: flatten(64·4·4) → 256 → 128 → 10.
+const FC_DIMS: [usize; 4] = [64 * 4 * 4, 256, 128, NUM_CLASSES];
+
+/// The model.
+pub struct AlexNetMini {
+    pub convs: Vec<Conv2d>,
+    pub fcs: Vec<Linear>,
+}
+
+impl AlexNetMini {
+    /// Build from trained weights (see `python/compile/models.py`).
+    pub fn from_weights(w: &WeightMap) -> Result<Self> {
+        let mut convs = Vec::new();
+        let mut c_in = IN_CHANNELS;
+        for (i, &c_out) in CONV_CH.iter().enumerate() {
+            let name = format!("conv{}", i + 1);
+            let weights = w.tensor(&format!("{name}.w"), &[c_out, c_in * 9])?;
+            let bias = w.vec(&format!("{name}.b"), c_out)?;
+            convs.push(Conv2d::new(&name, weights, bias, c_in, 3, 1, 1));
+            c_in = c_out;
+        }
+        let mut fcs = Vec::new();
+        for i in 0..3 {
+            let name = format!("fc{}", i + 1);
+            let weights = w.tensor(&format!("{name}.w"), &[FC_DIMS[i + 1], FC_DIMS[i]])?;
+            let bias = w.vec(&format!("{name}.b"), FC_DIMS[i + 1])?;
+            fcs.push(Linear::new(&name, weights, bias));
+        }
+        Ok(Self { convs, fcs })
+    }
+
+    /// Random He-initialized instance (tests/benches without artifacts).
+    pub fn random(seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut w = WeightMap::new();
+        let mut c_in = IN_CHANNELS;
+        for (i, &c_out) in CONV_CH.iter().enumerate() {
+            let fan_in = (c_in * 9) as f32;
+            let std = (2.0 / fan_in).sqrt();
+            w.insert(
+                &format!("conv{}.w", i + 1),
+                Tensor::rand_normal(&[c_out, c_in * 9], 0.0, std, &mut rng),
+            );
+            w.insert(&format!("conv{}.b", i + 1), Tensor::zeros(&[c_out]));
+            c_in = c_out;
+        }
+        for i in 0..3 {
+            let std = (2.0 / FC_DIMS[i] as f32).sqrt();
+            w.insert(
+                &format!("fc{}.w", i + 1),
+                Tensor::rand_normal(&[FC_DIMS[i + 1], FC_DIMS[i]], 0.0, std, &mut rng),
+            );
+            w.insert(&format!("fc{}.b", i + 1), Tensor::zeros(&[FC_DIMS[i + 1]]));
+        }
+        Self::from_weights(&w).expect("random init is well-formed")
+    }
+
+    /// Forward one image `[3, 32, 32]` → logits `[10]`.
+    pub fn forward(
+        &self,
+        image: &Tensor,
+        plan: &ExecPlan,
+        mut trace: Option<&mut TraceStore>,
+    ) -> Tensor {
+        assert_eq!(image.shape(), &[IN_CHANNELS, IN_HW, IN_HW], "bad input shape");
+        let mut x = image.clone();
+        for (i, conv) in self.convs.iter().enumerate() {
+            x = conv.forward(&x, plan, trace.as_deref_mut());
+            relu_inplace(&mut x);
+            // Pools after conv1, conv2, conv5 (32→16→8→…→4).
+            if i == 0 || i == 1 || i == 4 {
+                x = maxpool2x2(&x);
+            }
+        }
+        let flat = x.len();
+        let mut h = x.reshape(&[1, flat]);
+        for (i, fc) in self.fcs.iter().enumerate() {
+            h = fc.forward(&h, plan, trace.as_deref_mut());
+            if i + 1 < self.fcs.len() {
+                relu_inplace(&mut h);
+            }
+        }
+        h.reshape(&[NUM_CLASSES])
+    }
+
+    /// Predicted class of one image.
+    pub fn predict(&self, image: &Tensor, plan: &ExecPlan) -> usize {
+        self.forward(image, plan, None).argmax()
+    }
+
+    /// Multiply-accumulate count per forward pass (drives the accelerator
+    /// simulation workload, §VI-C).
+    pub fn macs_per_layer(&self) -> Vec<(String, u64)> {
+        let mut out = Vec::new();
+        let mut hw = IN_HW;
+        for (i, conv) in self.convs.iter().enumerate() {
+            // Output spatial size = input (pad 1, k 3, stride 1).
+            let macs = (conv.c_out * conv.c_in * 9 * hw * hw) as u64;
+            out.push((conv.name.clone(), macs));
+            if i == 0 || i == 1 || i == 4 {
+                hw /= 2;
+            }
+        }
+        for fc in &self.fcs {
+            out.push((fc.name.clone(), (fc.in_features() * fc.out_features()) as u64));
+        }
+        out
+    }
+}
+
+impl HasQuantLayers for AlexNetMini {
+    fn model_name(&self) -> &str {
+        "alexnet_mini"
+    }
+
+    fn quant_layers(&self) -> Vec<QLayerRef<'_>> {
+        let mut v: Vec<QLayerRef> = self
+            .convs
+            .iter()
+            .map(|c| QLayerRef { name: &c.name, kind: LayerKind::Conv, weights: &c.weights })
+            .collect();
+        v.extend(
+            self.fcs
+                .iter()
+                .map(|f| QLayerRef { name: &f.name, kind: LayerKind::Fc, weights: &f.weights }),
+        );
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shape_and_determinism() {
+        let m = AlexNetMini::random(131);
+        let mut rng = SplitMix64::new(132);
+        let img = Tensor::rand_normal(&[3, 32, 32], 0.0, 1.0, &mut rng);
+        let a = m.forward(&img, &ExecPlan::fp32(), None);
+        let b = m.forward(&img, &ExecPlan::fp32(), None);
+        assert_eq!(a.shape(), &[10]);
+        assert_eq!(a, b);
+        assert!(a.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn has_eight_quant_layers() {
+        let m = AlexNetMini::random(133);
+        let layers = m.quant_layers();
+        assert_eq!(layers.len(), 8);
+        assert_eq!(layers[0].name, "conv1");
+        assert_eq!(layers[0].kind, LayerKind::Conv);
+        assert_eq!(layers[7].name, "fc3");
+        assert_eq!(layers[7].kind, LayerKind::Fc);
+    }
+
+    #[test]
+    fn trace_covers_every_layer() {
+        let m = AlexNetMini::random(134);
+        let mut rng = SplitMix64::new(135);
+        let img = Tensor::rand_normal(&[3, 32, 32], 0.0, 1.0, &mut rng);
+        let mut trace = TraceStore::new(1 << 16);
+        m.forward(&img, &ExecPlan::fp32(), Some(&mut trace));
+        assert_eq!(trace.len(), 8);
+        assert_eq!(trace.layer_names()[0], "conv1");
+    }
+
+    #[test]
+    fn int8_plan_keeps_prediction_on_easy_input() {
+        // With a strong synthetic margin, INT8 must not flip the argmax.
+        let m = AlexNetMini::random(136);
+        let mut rng = SplitMix64::new(137);
+        let img = Tensor::rand_normal(&[3, 32, 32], 0.0, 1.0, &mut rng);
+        let fp = m.forward(&img, &ExecPlan::fp32(), None);
+        let q = m.forward(&img, &ExecPlan::int8(&m), None);
+        assert!(q.rmae(&fp) < 0.25, "INT8 output RMAE {}", q.rmae(&fp));
+    }
+
+    #[test]
+    fn macs_match_architecture() {
+        let m = AlexNetMini::random(138);
+        let macs = m.macs_per_layer();
+        assert_eq!(macs.len(), 8);
+        // conv1: 32 out-ch × 27 taps × 32×32 positions.
+        assert_eq!(macs[0].1, 32 * 27 * 32 * 32);
+        // fc1: 1024×256.
+        assert_eq!(macs[5].1, 1024 * 256);
+    }
+
+    #[test]
+    fn from_weights_rejects_bad_shapes() {
+        let m = AlexNetMini::random(139);
+        let mut wm = WeightMap::new();
+        for lr in m.quant_layers() {
+            wm.insert(&format!("{}.w", lr.name), lr.weights.clone());
+        }
+        // Missing biases.
+        assert!(AlexNetMini::from_weights(&wm).is_err());
+    }
+}

@@ -1,0 +1,251 @@
+//! Dataset-level evaluation + calibration-trace collection.
+//!
+//! These are the two halves of the paper's outer loop (Fig. 3): collect
+//! FP32 activation traces over the calibration subset (step 1), and
+//! measure quantized accuracy over the eval set to drive the `Thr_w`
+//! controller (step 4).
+
+use super::alexnet::AlexNetMini;
+use super::layer::{ExecPlan, HasQuantLayers};
+use super::resnet::ResNetMini;
+use super::trace::TraceStore;
+use super::transformer::TransformerMini;
+use crate::dataset::{ImageDataset, SeqDataset};
+use crate::dnateq::{CalibrationInput, LayerTensors};
+use crate::tensor::Tensor;
+use crate::util::parallel_map;
+
+/// Unified image-classifier interface over the two CNN minis.
+pub trait ImageModel: HasQuantLayers + Send + Sync {
+    fn logits(
+        &self,
+        image: &Tensor,
+        plan: &ExecPlan,
+        trace: Option<&mut TraceStore>,
+    ) -> Tensor;
+
+    fn predict(&self, image: &Tensor, plan: &ExecPlan) -> usize {
+        self.logits(image, plan, None).argmax()
+    }
+}
+
+impl ImageModel for AlexNetMini {
+    fn logits(&self, image: &Tensor, plan: &ExecPlan, trace: Option<&mut TraceStore>) -> Tensor {
+        self.forward(image, plan, trace)
+    }
+}
+
+impl ImageModel for ResNetMini {
+    fn logits(&self, image: &Tensor, plan: &ExecPlan, trace: Option<&mut TraceStore>) -> Tensor {
+        self.forward(image, plan, trace)
+    }
+}
+
+/// Top-1 accuracy of a classifier over a dataset (parallel over samples).
+pub fn eval_classifier<M: ImageModel>(model: &M, data: &ImageDataset, plan: &ExecPlan) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    let idx: Vec<usize> = (0..data.len()).collect();
+    let hits = parallel_map(&idx, |&i| {
+        usize::from(model.predict(&data.image(i), plan) == data.labels[i])
+    });
+    hits.iter().sum::<usize>() as f64 / data.len() as f64
+}
+
+/// Teacher-forced next-token accuracy of the translator — the smooth
+/// BLEU stand-in used by the `Thr_w` controller (greedy-decode BLEU is
+/// reported separately by [`eval_translator_bleu`]).
+pub fn eval_translator(model: &TransformerMini, data: &SeqDataset, plan: &ExecPlan) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    let idx: Vec<usize> = (0..data.len()).collect();
+    let counts = parallel_map(&idx, |&i| {
+        let src = &data.src[i];
+        let tgt = &data.tgt[i];
+        let enc = model.encode(src, plan, None);
+        // Predict tgt[1..] from tgt[..len-1].
+        let logits = model.decode(&tgt[..tgt.len() - 1], &enc, plan, None);
+        let mut hit = 0usize;
+        for (pos, &gold) in tgt[1..].iter().enumerate() {
+            if logits.row(pos).iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+                == gold
+            {
+                hit += 1;
+            }
+        }
+        (hit, tgt.len() - 1)
+    });
+    let (hits, total) = counts.iter().fold((0usize, 0usize), |(h, t), &(hh, tt)| (h + hh, t + tt));
+    hits as f64 / total.max(1) as f64
+}
+
+/// Corpus-level BLEU (up to 4-grams, uniform weights, brevity penalty)
+/// over greedy decodes — the Table V "BLEU" metric.
+pub fn eval_translator_bleu(model: &TransformerMini, data: &SeqDataset, plan: &ExecPlan) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    let idx: Vec<usize> = (0..data.len()).collect();
+    let pairs = parallel_map(&idx, |&i| {
+        let hyp = model.greedy_decode(&data.src[i], data.tgt[i].len() + 4, plan);
+        // Strip BOS/EOS from both sides for n-gram matching.
+        let strip = |s: &[usize]| -> Vec<usize> {
+            s.iter().copied().filter(|&t| t > 2).collect()
+        };
+        (strip(&hyp), strip(&data.tgt[i]))
+    });
+    corpus_bleu(&pairs)
+}
+
+/// Standard corpus BLEU-4.
+pub fn corpus_bleu(pairs: &[(Vec<usize>, Vec<usize>)]) -> f64 {
+    let mut match_n = [0usize; 4];
+    let mut total_n = [0usize; 4];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    for (hyp, reference) in pairs {
+        hyp_len += hyp.len();
+        ref_len += reference.len();
+        for n in 1..=4usize {
+            if hyp.len() < n {
+                continue;
+            }
+            total_n[n - 1] += hyp.len() - n + 1;
+            // Clipped n-gram matches.
+            let mut ref_counts: std::collections::HashMap<&[usize], usize> =
+                std::collections::HashMap::new();
+            if reference.len() >= n {
+                for w in reference.windows(n) {
+                    *ref_counts.entry(w).or_default() += 1;
+                }
+            }
+            for w in hyp.windows(n) {
+                if let Some(c) = ref_counts.get_mut(w) {
+                    if *c > 0 {
+                        *c -= 1;
+                        match_n[n - 1] += 1;
+                    }
+                }
+            }
+        }
+    }
+    let mut log_prec = 0.0f64;
+    for n in 0..4 {
+        if total_n[n] == 0 || match_n[n] == 0 {
+            return 0.0;
+        }
+        log_prec += (match_n[n] as f64 / total_n[n] as f64).ln();
+    }
+    let bp = if hyp_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len.max(1) as f64).exp()
+    };
+    bp * (log_prec / 4.0).exp() * 100.0
+}
+
+/// Cap on retained activation values per layer during calibration.
+pub const TRACE_CAP: usize = 1 << 16;
+
+/// Collect a [`CalibrationInput`] for a CNN by tracing FP32 inference
+/// over the calibration subset (step 1 of Fig. 3).
+pub fn collect_image_calibration<M: ImageModel>(model: &M, calib: &ImageDataset) -> CalibrationInput {
+    let mut trace = TraceStore::new(TRACE_CAP);
+    let plan = ExecPlan::fp32();
+    for i in 0..calib.len() {
+        model.logits(&calib.image(i), &plan, Some(&mut trace));
+    }
+    build_input(model, trace)
+}
+
+/// Collect a [`CalibrationInput`] for the translator.
+pub fn collect_seq_calibration(model: &TransformerMini, calib: &SeqDataset) -> CalibrationInput {
+    let mut trace = TraceStore::new(TRACE_CAP);
+    let plan = ExecPlan::fp32();
+    for i in 0..calib.len() {
+        let enc = model.encode(&calib.src[i], &plan, Some(&mut trace));
+        let tgt = &calib.tgt[i];
+        model.decode(&tgt[..tgt.len() - 1], &enc, &plan, Some(&mut trace));
+    }
+    build_input(model, trace)
+}
+
+fn build_input(model: &dyn HasQuantLayers, mut trace: TraceStore) -> CalibrationInput {
+    let mut layers = Vec::new();
+    for (i, lr) in model.quant_layers().iter().enumerate() {
+        let acts = trace
+            .take(lr.name)
+            .unwrap_or_else(|| panic!("no activation trace for layer {}", lr.name));
+        layers.push(LayerTensors {
+            name: lr.name.to_string(),
+            kind: lr.kind,
+            weights: lr.weights.clone(),
+            acts,
+            is_first: i == 0,
+        });
+    }
+    CalibrationInput { model: model.model_name().to_string(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classifier_eval_in_unit_interval() {
+        let m = AlexNetMini::random(171);
+        let d = ImageDataset::synthetic(16, 172);
+        let acc = eval_classifier(&m, &d, &ExecPlan::fp32());
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn translator_eval_in_unit_interval() {
+        let m = TransformerMini::random(173);
+        let d = SeqDataset::synthetic(4, 174);
+        let acc = eval_translator(&m, &d, &ExecPlan::fp32());
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn bleu_perfect_match_is_100() {
+        let pairs = vec![(vec![3, 4, 5, 6, 7], vec![3, 4, 5, 6, 7])];
+        assert!((corpus_bleu(&pairs) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bleu_no_match_is_0() {
+        let pairs = vec![(vec![3, 3, 3, 3], vec![4, 5, 6, 7])];
+        assert_eq!(corpus_bleu(&pairs), 0.0);
+    }
+
+    #[test]
+    fn bleu_partial_between() {
+        let pairs = vec![(vec![3, 4, 5, 6, 9], vec![3, 4, 5, 6, 7])];
+        let b = corpus_bleu(&pairs);
+        assert!(b > 0.0 && b < 100.0, "bleu {b}");
+    }
+
+    #[test]
+    fn image_calibration_covers_all_layers() {
+        let m = AlexNetMini::random(175);
+        let d = ImageDataset::synthetic(2, 176);
+        let input = collect_image_calibration(&m, &d);
+        assert_eq!(input.layers.len(), 8);
+        assert!(input.layers[0].is_first);
+        assert!(!input.layers[1].is_first);
+        assert!(input.layers.iter().all(|l| !l.acts.is_empty()));
+        assert_eq!(input.model, "alexnet_mini");
+    }
+
+    #[test]
+    fn seq_calibration_covers_all_layers() {
+        let m = TransformerMini::random(177);
+        let d = SeqDataset::synthetic(2, 178);
+        let input = collect_seq_calibration(&m, &d);
+        assert_eq!(input.layers.len(), 33);
+        assert_eq!(input.model, "transformer_mini");
+    }
+}

@@ -1,0 +1,356 @@
+//! Quantizable layers (CONV / FC) and execution plans.
+//!
+//! Accuracy evaluation uses *fake quantization*: weights and input
+//! activations are passed through quantize→dequantize with the scheme
+//! under test, then the f32 engine computes the layer — exactly how the
+//! paper measures accuracy loss (§VI-A, TensorFlow implementation). The
+//! bit-true counting engine in [`crate::expdot`] is validated against
+//! this separately and used on the serving path.
+
+use super::linalg::{gemm, gemm_bt, im2col};
+use super::trace::TraceStore;
+use crate::dnateq::{ExpQuantParams, LayerKind, QuantConfig, UniformParams};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// How to treat one layer's tensors during forward.
+#[derive(Clone, Debug)]
+pub struct LayerExec {
+    /// Replacement (fake-quantized) weights, if quantizing.
+    pub weights_override: Option<Tensor>,
+    /// How to fake-quantize the input activations.
+    pub act: ActQuant,
+}
+
+/// Activation quantization applied at layer input.
+#[derive(Clone, Debug)]
+pub enum ActQuant {
+    None,
+    /// Exponential with calibrated per-layer parameters.
+    Exp(ExpQuantParams),
+    /// Uniform symmetric at `n` bits, Δ calibrated dynamically per input
+    /// (how both the INT8 baseline and Table IV's uniform rows work).
+    Uniform(u8),
+}
+
+impl ActQuant {
+    fn apply(&self, x: &Tensor) -> Option<Tensor> {
+        match self {
+            ActQuant::None => None,
+            ActQuant::Exp(p) => Some(p.roundtrip(x)),
+            ActQuant::Uniform(n) => Some(UniformParams::calibrate(x, *n).roundtrip(x)),
+        }
+    }
+}
+
+/// A reference to one quantizable layer of a model.
+pub struct QLayerRef<'a> {
+    pub name: &'a str,
+    pub kind: LayerKind,
+    pub weights: &'a Tensor,
+}
+
+/// Models expose their quantizable layers so generic plan builders and
+/// the calibration pipeline can walk them.
+pub trait HasQuantLayers {
+    fn model_name(&self) -> &str;
+    fn quant_layers(&self) -> Vec<QLayerRef<'_>>;
+}
+
+/// Execution plan: per-layer overrides; empty = plain FP32.
+#[derive(Clone, Debug, Default)]
+pub struct ExecPlan {
+    layers: HashMap<String, LayerExec>,
+}
+
+impl ExecPlan {
+    /// Plain FP32 execution.
+    pub fn fp32() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&LayerExec> {
+        self.layers.get(name)
+    }
+
+    pub fn insert(&mut self, name: &str, exec: LayerExec) {
+        self.layers.insert(name.to_string(), exec);
+    }
+
+    /// DNA-TEQ plan: fake-quantize every calibrated layer with its
+    /// exponential parameters.
+    pub fn exp(model: &dyn HasQuantLayers, cfg: &QuantConfig) -> Self {
+        let mut plan = Self::default();
+        for lr in model.quant_layers() {
+            if let Some(lq) = cfg.layer(lr.name) {
+                plan.insert(
+                    lr.name,
+                    LayerExec {
+                        weights_override: Some(lq.w_params().roundtrip(lr.weights)),
+                        act: ActQuant::Exp(lq.a_params()),
+                    },
+                );
+            }
+        }
+        plan
+    }
+
+    /// Uniform quantization at the *same per-layer bitwidths* DNA-TEQ
+    /// found — the "Uniform Quantization" row of Table IV.
+    pub fn uniform_matched(model: &dyn HasQuantLayers, cfg: &QuantConfig) -> Self {
+        let mut plan = Self::default();
+        for lr in model.quant_layers() {
+            if let Some(lq) = cfg.layer(lr.name) {
+                let wp = UniformParams::calibrate(lr.weights, lq.n_bits);
+                plan.insert(
+                    lr.name,
+                    LayerExec {
+                        weights_override: Some(wp.roundtrip(lr.weights)),
+                        act: ActQuant::Uniform(lq.n_bits),
+                    },
+                );
+            }
+        }
+        plan
+    }
+
+    /// INT8 everywhere — the baseline accelerator's scheme (Table V).
+    pub fn int8(model: &dyn HasQuantLayers) -> Self {
+        let mut plan = Self::default();
+        for lr in model.quant_layers() {
+            let wp = UniformParams::calibrate(lr.weights, 8);
+            plan.insert(
+                lr.name,
+                LayerExec {
+                    weights_override: Some(wp.roundtrip(lr.weights)),
+                    act: ActQuant::Uniform(8),
+                },
+            );
+        }
+        plan
+    }
+}
+
+/// 2-D convolution, NCHW, weights stored `[c_out, c_in·kh·kw]` for the
+/// im2col GEMM.
+#[derive(Clone, Debug)]
+pub struct Conv2d {
+    pub name: String,
+    pub weights: Tensor,
+    pub bias: Vec<f32>,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2d {
+    pub fn new(
+        name: &str,
+        weights: Tensor,
+        bias: Vec<f32>,
+        c_in: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Self {
+        assert_eq!(weights.ndim(), 2, "conv weights must be [c_out, c_in*k*k]");
+        let c_out = weights.shape()[0];
+        assert_eq!(weights.shape()[1], c_in * k * k, "conv weight shape mismatch");
+        assert_eq!(bias.len(), c_out);
+        Self { name: name.into(), weights, bias, c_in, c_out, k, stride, pad }
+    }
+
+    /// Forward one image `[c_in, h, w]` → `[c_out, oh, ow]`.
+    pub fn forward(
+        &self,
+        x: &Tensor,
+        plan: &ExecPlan,
+        trace: Option<&mut TraceStore>,
+    ) -> Tensor {
+        assert_eq!(x.ndim(), 3);
+        assert_eq!(x.shape()[0], self.c_in, "{}: channel mismatch", self.name);
+        let exec = plan.get(&self.name);
+
+        let xq = exec.and_then(|e| e.act.apply(x));
+        let input = xq.as_ref().unwrap_or(x);
+        if let Some(t) = trace {
+            // The calibration trace records the *pre-quantization* input —
+            // step 1 of Fig. 3 traces FP32 activations.
+            t.record(&self.name, x.data());
+        }
+
+        let (h, w) = (x.shape()[1], x.shape()[2]);
+        let (patches, oh, ow) =
+            im2col(input.data(), self.c_in, h, w, self.k, self.k, self.stride, self.pad);
+        let weights = exec
+            .and_then(|e| e.weights_override.as_ref())
+            .unwrap_or(&self.weights);
+        let mut out = gemm(weights, &patches);
+        // Add bias per output channel.
+        let data = out.data_mut();
+        for oc in 0..self.c_out {
+            let b = self.bias[oc];
+            for v in &mut data[oc * oh * ow..(oc + 1) * oh * ow] {
+                *v += b;
+            }
+        }
+        out.reshape(&[self.c_out, oh, ow])
+    }
+}
+
+/// Fully-connected layer, weights `[out, in]`.
+#[derive(Clone, Debug)]
+pub struct Linear {
+    pub name: String,
+    pub weights: Tensor,
+    pub bias: Vec<f32>,
+}
+
+impl Linear {
+    pub fn new(name: &str, weights: Tensor, bias: Vec<f32>) -> Self {
+        assert_eq!(weights.ndim(), 2, "linear weights must be [out, in]");
+        assert_eq!(bias.len(), weights.shape()[0]);
+        Self { name: name.into(), weights, bias }
+    }
+
+    pub fn in_features(&self) -> usize {
+        self.weights.shape()[1]
+    }
+
+    pub fn out_features(&self) -> usize {
+        self.weights.shape()[0]
+    }
+
+    /// Forward `[rows, in]` → `[rows, out]`.
+    pub fn forward(
+        &self,
+        x: &Tensor,
+        plan: &ExecPlan,
+        trace: Option<&mut TraceStore>,
+    ) -> Tensor {
+        assert_eq!(x.ndim(), 2);
+        assert_eq!(x.shape()[1], self.in_features(), "{}: feature mismatch", self.name);
+        let exec = plan.get(&self.name);
+        let xq = exec.and_then(|e| e.act.apply(x));
+        let input = xq.as_ref().unwrap_or(x);
+        if let Some(t) = trace {
+            t.record(&self.name, x.data());
+        }
+        let weights = exec
+            .and_then(|e| e.weights_override.as_ref())
+            .unwrap_or(&self.weights);
+        let mut out = gemm_bt(input, weights);
+        let (rows, cols) = (out.shape()[0], out.shape()[1]);
+        let data = out.data_mut();
+        for r in 0..rows {
+            for c in 0..cols {
+                data[r * cols + c] += self.bias[c];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+
+    struct OneFc {
+        fc: Linear,
+    }
+
+    impl HasQuantLayers for OneFc {
+        fn model_name(&self) -> &str {
+            "onefc"
+        }
+        fn quant_layers(&self) -> Vec<QLayerRef<'_>> {
+            vec![QLayerRef { name: &self.fc.name, kind: LayerKind::Fc, weights: &self.fc.weights }]
+        }
+    }
+
+    fn mk_fc(seed: u64) -> OneFc {
+        let mut rng = SplitMix64::new(seed);
+        let w = Tensor::rand_signed_exponential(&[4, 16], 2.0, &mut rng);
+        OneFc { fc: Linear::new("fc0", w, vec![0.0; 4]) }
+    }
+
+    #[test]
+    fn fp32_plan_is_identity() {
+        let m = mk_fc(111);
+        let mut rng = SplitMix64::new(112);
+        let x = Tensor::rand_normal(&[2, 16], 0.0, 1.0, &mut rng);
+        let plan = ExecPlan::fp32();
+        let y = m.fc.forward(&x, &plan, None);
+        let want = gemm_bt(&x, &m.fc.weights);
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn int8_plan_close_to_fp32() {
+        let m = mk_fc(113);
+        let mut rng = SplitMix64::new(114);
+        let x = Tensor::rand_normal(&[2, 16], 0.0, 1.0, &mut rng);
+        let plan = ExecPlan::int8(&m);
+        let y = m.fc.forward(&x, &plan, None);
+        let want = m.fc.forward(&x, &ExecPlan::fp32(), None);
+        let err = y.rmae(&want);
+        assert!(err < 0.05, "INT8 RMAE {err}");
+    }
+
+    #[test]
+    fn exp_plan_uses_config_layers_only() {
+        use crate::dnateq::{LayerQuant, TensorQuant};
+        let m = mk_fc(115);
+        // Config naming a different layer: plan stays empty.
+        let cfg = QuantConfig {
+            model: "onefc".into(),
+            thr_w: 0.01,
+            layers: vec![LayerQuant {
+                name: "other".into(),
+                kind: LayerKind::Fc,
+                n_bits: 4,
+                base: 1.2,
+                weights: TensorQuant { alpha: 1.0, beta: 0.0, rmae: 0.0, elems: 1 },
+                acts: TensorQuant { alpha: 1.0, beta: 0.0, rmae: 0.0, elems: 1 },
+                seeded_by_weights: true,
+                rss_w: 0.0,
+                rss_a: 0.0,
+                converged: true,
+            }],
+        };
+        let plan = ExecPlan::exp(&m, &cfg);
+        // The plan walks *model* layers: `fc0` is absent from the config
+        // and `other` is absent from the model, so the plan stays empty.
+        assert!(plan.get("fc0").is_none());
+        assert!(plan.get("other").is_none());
+    }
+
+    #[test]
+    fn conv_bias_and_shapes() {
+        let mut rng = SplitMix64::new(116);
+        let w = Tensor::rand_normal(&[2, 3 * 9], 0.0, 0.5, &mut rng);
+        let conv = Conv2d::new("c", w, vec![1.0, -1.0], 3, 3, 1, 1);
+        let x = Tensor::rand_normal(&[3, 5, 5], 0.0, 1.0, &mut rng);
+        let y = conv.forward(&x, &ExecPlan::fp32(), None);
+        assert_eq!(y.shape(), &[2, 5, 5]);
+        // Bias shifts whole channels.
+        let y0 = conv.forward(&Tensor::zeros(&[3, 5, 5]), &ExecPlan::fp32(), None);
+        assert!(y0.data()[..25].iter().all(|&v| v == 1.0));
+        assert!(y0.data()[25..].iter().all(|&v| v == -1.0));
+    }
+
+    #[test]
+    fn trace_records_prequant_input() {
+        let m = mk_fc(117);
+        let mut rng = SplitMix64::new(118);
+        let x = Tensor::rand_normal(&[1, 16], 0.0, 1.0, &mut rng);
+        let mut trace = TraceStore::new(1024);
+        let plan = ExecPlan::int8(&m);
+        m.fc.forward(&x, &plan, Some(&mut trace));
+        let rec = trace.take("fc0").unwrap();
+        assert_eq!(rec.data(), x.data());
+    }
+}

@@ -1,0 +1,34 @@
+//! f32 inference engine + the evaluated model zoo (§VI-A).
+//!
+//! Three mini models mirror the paper's benchmarks (the ImageNet/WMT
+//! substitutions are documented in DESIGN.md):
+//!
+//! * [`alexnet::AlexNetMini`] — 5 CONV + 3 FC classifier (AlexNet class)
+//! * [`resnet::ResNetMini`] — residual CNN, 15 CONV + 1 FC (ResNet class)
+//! * [`transformer::TransformerMini`] — encoder-decoder, 33 FC layers
+//!
+//! Quantized execution uses [`layer::ExecPlan`]s (fake quantization — the
+//! paper's accuracy methodology); [`eval`] hosts the dataset-level
+//! accuracy metrics and the calibration-trace collector that feeds
+//! [`crate::dnateq::calibrate_model`].
+
+pub mod alexnet;
+pub mod eval;
+pub mod layer;
+pub mod linalg;
+pub mod ops;
+pub mod resnet;
+pub mod trace;
+pub mod transformer;
+pub mod weights;
+
+pub use alexnet::AlexNetMini;
+pub use eval::{
+    collect_image_calibration, collect_seq_calibration, eval_classifier, eval_translator,
+    eval_translator_bleu,
+};
+pub use layer::{ActQuant, Conv2d, ExecPlan, HasQuantLayers, LayerExec, Linear, QLayerRef};
+pub use resnet::ResNetMini;
+pub use trace::TraceStore;
+pub use transformer::TransformerMini;
+pub use weights::WeightMap;

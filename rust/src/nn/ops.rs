@@ -1,0 +1,198 @@
+//! Elementwise / structural ops of the inference engine.
+
+use crate::tensor::Tensor;
+
+/// ReLU in place.
+pub fn relu_inplace(t: &mut Tensor) {
+    for v in t.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// GELU (tanh approximation) in place — used by the Transformer FFN.
+pub fn gelu_inplace(t: &mut Tensor) {
+    for v in t.data_mut() {
+        let x = *v;
+        let inner = 0.7978845608f32 * (x + 0.044715 * x * x * x);
+        *v = 0.5 * x * (1.0 + inner.tanh());
+    }
+}
+
+/// Row-wise softmax of a 2-D tensor (numerically stabilized).
+pub fn softmax_rows(t: &Tensor) -> Tensor {
+    assert_eq!(t.ndim(), 2);
+    let (rows, cols) = (t.shape()[0], t.shape()[1]);
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let row = t.row(r);
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        let orow = &mut out[r * cols..(r + 1) * cols];
+        for (o, &x) in orow.iter_mut().zip(row) {
+            let e = (x - m).exp();
+            *o = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    Tensor::from_vec(&[rows, cols], out)
+}
+
+/// Row-wise LayerNorm with learned gain/bias.
+pub fn layernorm_rows(t: &Tensor, gamma: &[f32], beta: &[f32], eps: f32) -> Tensor {
+    assert_eq!(t.ndim(), 2);
+    let (rows, cols) = (t.shape()[0], t.shape()[1]);
+    assert_eq!(gamma.len(), cols);
+    assert_eq!(beta.len(), cols);
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let row = t.row(r);
+        let mean = row.iter().sum::<f32>() / cols as f32;
+        let var = row.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        let orow = &mut out[r * cols..(r + 1) * cols];
+        for i in 0..cols {
+            orow[i] = (row[i] - mean) * inv * gamma[i] + beta[i];
+        }
+    }
+    Tensor::from_vec(&[rows, cols], out)
+}
+
+/// 2×2 max pooling (stride 2) over a `[c, h, w]` tensor. Odd trailing
+/// rows/cols are dropped (floor semantics, matching jax `max_pool` with
+/// VALID padding).
+pub fn maxpool2x2(t: &Tensor) -> Tensor {
+    assert_eq!(t.ndim(), 3);
+    let (c, h, w) = (t.shape()[0], t.shape()[1], t.shape()[2]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; c * oh * ow];
+    let data = t.data();
+    for ch in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut m = f32::NEG_INFINITY;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let v = data[(ch * h + oy * 2 + dy) * w + ox * 2 + dx];
+                        m = m.max(v);
+                    }
+                }
+                out[(ch * oh + oy) * ow + ox] = m;
+            }
+        }
+    }
+    Tensor::from_vec(&[c, oh, ow], out)
+}
+
+/// Global average pooling: `[c, h, w]` → `[c]`.
+pub fn global_avg_pool(t: &Tensor) -> Tensor {
+    assert_eq!(t.ndim(), 3);
+    let (c, h, w) = (t.shape()[0], t.shape()[1], t.shape()[2]);
+    let hw = (h * w) as f32;
+    let out = (0..c)
+        .map(|ch| t.data()[ch * h * w..(ch + 1) * h * w].iter().sum::<f32>() / hw)
+        .collect();
+    Tensor::from_vec(&[c], out)
+}
+
+/// Embedding lookup: token ids → `[len, d_model]`.
+pub fn embed(ids: &[usize], table: &Tensor) -> Tensor {
+    assert_eq!(table.ndim(), 2);
+    let d = table.shape()[1];
+    let mut out = Vec::with_capacity(ids.len() * d);
+    for &id in ids {
+        assert!(id < table.shape()[0], "token id {id} out of vocab");
+        out.extend_from_slice(table.row(id));
+    }
+    Tensor::from_vec(&[ids.len(), d], out)
+}
+
+/// Sinusoidal positional encoding added in place to `[len, d]` rows.
+pub fn add_positional(t: &mut Tensor) {
+    assert_eq!(t.ndim(), 2);
+    let (len, d) = (t.shape()[0], t.shape()[1]);
+    let data = t.data_mut();
+    for pos in 0..len {
+        for i in 0..d {
+            let angle = pos as f32 / 10000f32.powf((2 * (i / 2)) as f32 / d as f32);
+            data[pos * d + i] += if i % 2 == 0 { angle.sin() } else { angle.cos() };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut t = Tensor::from_vec(&[4], vec![-1.0, 0.0, 2.0, -0.5]);
+        relu_inplace(&mut t);
+        assert_eq!(t.data(), &[0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 1000.0, 1000.0, 1000.0]);
+        let s = softmax_rows(&t);
+        for r in 0..2 {
+            let sum: f32 = s.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+        // Large logits don't overflow (stabilized).
+        assert!(s.data().iter().all(|x| x.is_finite()));
+        assert!((s.data()[5] - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let t = Tensor::from_vec(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        let n = layernorm_rows(&t, &g, &b, 1e-5);
+        let mean: f32 = n.row(0).iter().sum::<f32>() / 4.0;
+        let var: f32 = n.row(0).iter().map(|&x| x * x).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn maxpool_picks_window_max() {
+        let t = Tensor::from_vec(&[1, 2, 4], vec![1., 5., 2., 0., 3., 4., 0., 9.]);
+        let p = maxpool2x2(&t);
+        assert_eq!(p.shape(), &[1, 1, 2]);
+        assert_eq!(p.data(), &[5.0, 9.0]);
+    }
+
+    #[test]
+    fn gap_averages_channels() {
+        let t = Tensor::from_vec(&[2, 1, 2], vec![1.0, 3.0, 10.0, 20.0]);
+        let g = global_avg_pool(&t);
+        assert_eq!(g.data(), &[2.0, 15.0]);
+    }
+
+    #[test]
+    fn embed_looks_up_rows() {
+        let table = Tensor::from_vec(&[3, 2], vec![0., 1., 10., 11., 20., 21.]);
+        let e = embed(&[2, 0], &table);
+        assert_eq!(e.data(), &[20., 21., 0., 1.]);
+    }
+
+    #[test]
+    fn positional_encoding_deterministic_and_bounded() {
+        let mut a = Tensor::zeros(&[4, 8]);
+        add_positional(&mut a);
+        let mut b = Tensor::zeros(&[4, 8]);
+        add_positional(&mut b);
+        assert_eq!(a, b);
+        assert!(a.data().iter().all(|&x| (-1.0..=1.0).contains(&x)));
+        // Position 0: sin(0)=0, cos(0)=1 alternating.
+        assert_eq!(a.row(0)[0], 0.0);
+        assert_eq!(a.row(0)[1], 1.0);
+    }
+}

@@ -1,0 +1,257 @@
+//! ResNet-mini: the ResNet-50 stand-in of the evaluation (§VI-A).
+//!
+//! Residual CNN with a conv stem, three stages of two basic blocks
+//! (16/32/64 channels, stride-2 stage transitions with 1×1 projection
+//! shortcuts), global average pooling and an FC head — 15 CONV + 1 FC
+//! quantizable layers. BatchNorm is folded into conv weights by the
+//! python export (inference-time folding), so the rust graph is pure
+//! conv/relu/add.
+
+use super::layer::{Conv2d, ExecPlan, HasQuantLayers, Linear, QLayerRef};
+use super::ops::{global_avg_pool, relu_inplace};
+use super::trace::TraceStore;
+use super::weights::WeightMap;
+use crate::dnateq::LayerKind;
+use crate::tensor::{SplitMix64, Tensor};
+use anyhow::Result;
+
+pub const IN_CHANNELS: usize = 3;
+pub const IN_HW: usize = 32;
+pub const NUM_CLASSES: usize = 10;
+/// Stage output channels.
+const STAGE_CH: [usize; 3] = [16, 32, 64];
+/// Blocks per stage.
+const BLOCKS: usize = 2;
+
+/// One basic residual block: two 3×3 convs + optional 1×1 projection.
+pub struct BasicBlock {
+    pub c1: Conv2d,
+    pub c2: Conv2d,
+    pub proj: Option<Conv2d>,
+}
+
+impl BasicBlock {
+    fn forward(&self, x: &Tensor, plan: &ExecPlan, mut trace: Option<&mut TraceStore>) -> Tensor {
+        let mut h = self.c1.forward(x, plan, trace.as_deref_mut());
+        relu_inplace(&mut h);
+        let h = self.c2.forward(&h, plan, trace.as_deref_mut());
+        let shortcut = match &self.proj {
+            Some(p) => p.forward(x, plan, trace.as_deref_mut()),
+            None => x.clone(),
+        };
+        let mut out = h.add(&shortcut);
+        relu_inplace(&mut out);
+        out
+    }
+}
+
+/// The model.
+pub struct ResNetMini {
+    pub stem: Conv2d,
+    pub blocks: Vec<BasicBlock>,
+    pub head: Linear,
+}
+
+impl ResNetMini {
+    /// Names of all conv layers in forward order (shared with python).
+    fn conv_plan() -> Vec<(String, usize, usize, usize, usize)> {
+        // (name, c_in, c_out, stride, kernel)
+        let mut v = vec![("conv0".to_string(), IN_CHANNELS, STAGE_CH[0], 1, 3)];
+        let mut c_in = STAGE_CH[0];
+        for (s, &c_out) in STAGE_CH.iter().enumerate() {
+            for b in 0..BLOCKS {
+                let stride = if s > 0 && b == 0 { 2 } else { 1 };
+                v.push((format!("s{}b{}c1", s + 1, b + 1), c_in, c_out, stride, 3));
+                v.push((format!("s{}b{}c2", s + 1, b + 1), c_out, c_out, 1, 3));
+                if c_in != c_out || stride != 1 {
+                    v.push((format!("s{}b{}d", s + 1, b + 1), c_in, c_out, stride, 1));
+                }
+                c_in = c_out;
+            }
+        }
+        v
+    }
+
+    pub fn from_weights(w: &WeightMap) -> Result<Self> {
+        let plan = Self::conv_plan();
+        let mut convs = Vec::new();
+        for (name, c_in, c_out, stride, k) in &plan {
+            let weights = w.tensor(&format!("{name}.w"), &[*c_out, c_in * k * k])?;
+            let bias = w.vec(&format!("{name}.b"), *c_out)?;
+            let pad = if *k == 3 { 1 } else { 0 };
+            convs.push(Conv2d::new(name, weights, bias, *c_in, *k, *stride, pad));
+        }
+        let mut it = convs.into_iter();
+        let stem = it.next().unwrap();
+        let mut blocks = Vec::new();
+        let mut c_in = STAGE_CH[0];
+        for (s, &c_out) in STAGE_CH.iter().enumerate() {
+            for b in 0..BLOCKS {
+                let stride = if s > 0 && b == 0 { 2 } else { 1 };
+                let c1 = it.next().unwrap();
+                let c2 = it.next().unwrap();
+                let proj = if c_in != c_out || stride != 1 { Some(it.next().unwrap()) } else { None };
+                blocks.push(BasicBlock { c1, c2, proj });
+                c_in = c_out;
+            }
+        }
+        let head = Linear::new(
+            "fc",
+            w.tensor("fc.w", &[NUM_CLASSES, STAGE_CH[2]])?,
+            w.vec("fc.b", NUM_CLASSES)?,
+        );
+        Ok(Self { stem, blocks, head })
+    }
+
+    /// Random He-initialized instance.
+    pub fn random(seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut w = WeightMap::new();
+        for (name, c_in, c_out, _stride, k) in Self::conv_plan() {
+            let fan_in = (c_in * k * k) as f32;
+            let std = (2.0 / fan_in).sqrt();
+            w.insert(
+                &format!("{name}.w"),
+                Tensor::rand_normal(&[c_out, c_in * k * k], 0.0, std, &mut rng),
+            );
+            w.insert(&format!("{name}.b"), Tensor::zeros(&[c_out]));
+        }
+        w.insert(
+            "fc.w",
+            Tensor::rand_normal(&[NUM_CLASSES, STAGE_CH[2]], 0.0, 0.2, &mut rng),
+        );
+        w.insert("fc.b", Tensor::zeros(&[NUM_CLASSES]));
+        Self::from_weights(&w).expect("random init is well-formed")
+    }
+
+    /// Forward one image `[3, 32, 32]` → logits `[10]`.
+    pub fn forward(
+        &self,
+        image: &Tensor,
+        plan: &ExecPlan,
+        mut trace: Option<&mut TraceStore>,
+    ) -> Tensor {
+        assert_eq!(image.shape(), &[IN_CHANNELS, IN_HW, IN_HW]);
+        let mut x = self.stem.forward(image, plan, trace.as_deref_mut());
+        relu_inplace(&mut x);
+        for block in &self.blocks {
+            x = block.forward(&x, plan, trace.as_deref_mut());
+        }
+        let pooled = global_avg_pool(&x);
+        let h = pooled.reshape(&[1, STAGE_CH[2]]);
+        self.head.forward(&h, plan, trace).reshape(&[NUM_CLASSES])
+    }
+
+    pub fn predict(&self, image: &Tensor, plan: &ExecPlan) -> usize {
+        self.forward(image, plan, None).argmax()
+    }
+
+    /// MAC count per layer for the accelerator workload.
+    pub fn macs_per_layer(&self) -> Vec<(String, u64)> {
+        let mut out = Vec::new();
+        let mut hw = IN_HW as u64;
+        out.push((self.stem.name.clone(), self.stem.c_out as u64 * self.stem.c_in as u64 * 9 * hw * hw));
+        for block in &self.blocks {
+            if block.c1.stride == 2 {
+                hw /= 2;
+            }
+            for conv in [&block.c1, &block.c2].into_iter().chain(block.proj.as_ref()) {
+                let taps = (conv.c_in * conv.k * conv.k) as u64;
+                out.push((conv.name.clone(), conv.c_out as u64 * taps * hw * hw));
+            }
+        }
+        out.push((
+            self.head.name.clone(),
+            (self.head.in_features() * self.head.out_features()) as u64,
+        ));
+        out
+    }
+}
+
+impl HasQuantLayers for ResNetMini {
+    fn model_name(&self) -> &str {
+        "resnet_mini"
+    }
+
+    fn quant_layers(&self) -> Vec<QLayerRef<'_>> {
+        let mut v = vec![QLayerRef {
+            name: &self.stem.name,
+            kind: LayerKind::Conv,
+            weights: &self.stem.weights,
+        }];
+        for block in &self.blocks {
+            for conv in [&block.c1, &block.c2].into_iter().chain(block.proj.as_ref()) {
+                v.push(QLayerRef { name: &conv.name, kind: LayerKind::Conv, weights: &conv.weights });
+            }
+        }
+        v.push(QLayerRef {
+            name: &self.head.name,
+            kind: LayerKind::Fc,
+            weights: &self.head.weights,
+        });
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shape() {
+        let m = ResNetMini::random(141);
+        let mut rng = SplitMix64::new(142);
+        let img = Tensor::rand_normal(&[3, 32, 32], 0.0, 1.0, &mut rng);
+        let y = m.forward(&img, &ExecPlan::fp32(), None);
+        assert_eq!(y.shape(), &[10]);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn sixteen_quant_layers() {
+        let m = ResNetMini::random(143);
+        // 1 stem + (2+2)·3 block convs + 2 projections + 1 fc = 16.
+        assert_eq!(m.quant_layers().len(), 16);
+    }
+
+    #[test]
+    fn projection_only_on_stage_transitions() {
+        let m = ResNetMini::random(144);
+        let have_proj: Vec<bool> = m.blocks.iter().map(|b| b.proj.is_some()).collect();
+        assert_eq!(have_proj, vec![false, false, true, false, true, false]);
+    }
+
+    #[test]
+    fn residual_path_contributes() {
+        // Zeroing out a block's conv weights must leave the shortcut.
+        let mut m = ResNetMini::random(145);
+        let mut rng = SplitMix64::new(146);
+        let img = Tensor::rand_normal(&[3, 32, 32], 0.0, 0.5, &mut rng);
+        let before = m.forward(&img, &ExecPlan::fp32(), None);
+        // Zero block 0 (identity shortcut): output must change but stay
+        // finite and non-zero (information flows through the residual).
+        m.blocks[0].c2.weights.map_inplace(|_| 0.0);
+        m.blocks[0].c2.bias.iter_mut().for_each(|b| *b = 0.0);
+        let after = m.forward(&img, &ExecPlan::fp32(), None);
+        assert_ne!(before, after);
+        assert!(after.data().iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn trace_covers_all_layers() {
+        let m = ResNetMini::random(147);
+        let mut rng = SplitMix64::new(148);
+        let img = Tensor::rand_normal(&[3, 32, 32], 0.0, 1.0, &mut rng);
+        let mut trace = TraceStore::new(1 << 14);
+        m.forward(&img, &ExecPlan::fp32(), Some(&mut trace));
+        assert_eq!(trace.len(), 16);
+    }
+
+    #[test]
+    fn macs_positive_and_complete() {
+        let m = ResNetMini::random(149);
+        let macs = m.macs_per_layer();
+        assert_eq!(macs.len(), 16);
+        assert!(macs.iter().all(|(_, m)| *m > 0));
+    }
+}

@@ -1,0 +1,141 @@
+//! Activation trace collection (step 1 of Fig. 3).
+//!
+//! During calibration, inference over a small representative subset of
+//! the training data records each quantizable layer's input activations.
+//! Per-layer storage is capped: once a layer's buffer is full, incoming
+//! values are subsampled with a deterministic stride so the trace stays
+//! representative of all calibration samples rather than just the first.
+
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Capped per-layer activation store.
+#[derive(Debug, Default)]
+pub struct TraceStore {
+    cap_per_layer: usize,
+    layers: HashMap<String, LayerTrace>,
+}
+
+#[derive(Debug)]
+struct LayerTrace {
+    values: Vec<f32>,
+    /// Total values offered (for subsample bookkeeping).
+    seen: u64,
+}
+
+impl TraceStore {
+    /// `cap_per_layer`: maximum retained values per layer (0 = unlimited).
+    pub fn new(cap_per_layer: usize) -> Self {
+        Self { cap_per_layer, layers: HashMap::new() }
+    }
+
+    /// Record one layer invocation's input activations.
+    pub fn record(&mut self, layer: &str, values: &[f32]) {
+        let cap = self.cap_per_layer;
+        let entry = self
+            .layers
+            .entry(layer.to_string())
+            .or_insert_with(|| LayerTrace { values: Vec::new(), seen: 0 });
+        entry.seen += values.len() as u64;
+        if cap == 0 || entry.values.len() + values.len() <= cap {
+            entry.values.extend_from_slice(values);
+            return;
+        }
+        // Buffer would overflow: reservoir-by-stride. Keep every k-th
+        // value where k grows with the overflow factor, then overwrite a
+        // rotating region so later samples keep landing in the buffer.
+        let remaining = cap.saturating_sub(entry.values.len());
+        if remaining > 0 {
+            let stride = (values.len() / remaining).max(1);
+            entry.values.extend(values.iter().step_by(stride).take(remaining));
+        } else {
+            // Replace a deterministic slice based on how much we've seen,
+            // so long traces still influence the stored sample.
+            let start = (entry.seen as usize) % cap;
+            let n = (values.len() / 16).clamp(1, cap / 8 + 1);
+            for i in 0..n {
+                let src = (i * 16) % values.len();
+                entry.values[(start + i) % cap] = values[src];
+            }
+        }
+    }
+
+    /// Number of layers traced so far.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Remove and return a layer's trace as a 1-D tensor.
+    pub fn take(&mut self, layer: &str) -> Option<Tensor> {
+        self.layers
+            .remove(layer)
+            .map(|lt| Tensor::from_vec(&[lt.values.len()], lt.values))
+    }
+
+    /// View a layer's trace.
+    pub fn get(&self, layer: &str) -> Option<Tensor> {
+        self.layers
+            .get(layer)
+            .map(|lt| Tensor::from_vec(&[lt.values.len()], lt.values.clone()))
+    }
+
+    pub fn layer_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.layers.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_until_cap() {
+        let mut t = TraceStore::new(10);
+        t.record("a", &[1.0; 6]);
+        t.record("a", &[2.0; 4]);
+        assert_eq!(t.get("a").unwrap().len(), 10);
+    }
+
+    #[test]
+    fn overflow_subsamples_but_stays_capped() {
+        let mut t = TraceStore::new(100);
+        for _ in 0..50 {
+            t.record("a", &[1.0; 64]);
+        }
+        assert_eq!(t.get("a").unwrap().len(), 100);
+    }
+
+    #[test]
+    fn later_samples_still_visible_after_cap() {
+        let mut t = TraceStore::new(64);
+        t.record("a", &vec![0.0; 64]);
+        for _ in 0..20 {
+            t.record("a", &vec![7.0; 64]);
+        }
+        let trace = t.get("a").unwrap();
+        assert!(trace.data().iter().any(|&v| v == 7.0), "no late samples retained");
+    }
+
+    #[test]
+    fn unlimited_when_cap_zero() {
+        let mut t = TraceStore::new(0);
+        t.record("a", &[1.0; 500]);
+        t.record("a", &[2.0; 500]);
+        assert_eq!(t.get("a").unwrap().len(), 1000);
+    }
+
+    #[test]
+    fn take_removes_layer() {
+        let mut t = TraceStore::new(10);
+        t.record("x", &[1.0, 2.0]);
+        assert!(t.take("x").is_some());
+        assert!(t.take("x").is_none());
+        assert!(t.is_empty());
+    }
+}

@@ -1,0 +1,443 @@
+//! Transformer-mini: the encoder–decoder Transformer of the evaluation
+//! (§VI-A), scaled to a synthetic translation task (DESIGN.md
+//! §Substitutions): vocab 32, d_model 128, 4 heads, 2+2 layers.
+//!
+//! All projection and FFN matrices (Q/K/V/O, FF1/FF2 per layer, plus the
+//! output head) are quantizable FC layers — 33 in total, the same tensor
+//! population the paper quantizes in its 96-FC-layer Transformer.
+//! Embeddings and LayerNorms stay FP32 (lookups/normalizers, not
+//! dot-product layers).
+
+use super::layer::{ExecPlan, HasQuantLayers, Linear, QLayerRef};
+use super::ops::{add_positional, embed, layernorm_rows, relu_inplace, softmax_rows};
+use super::trace::TraceStore;
+use super::weights::WeightMap;
+use crate::dnateq::LayerKind;
+use crate::tensor::{SplitMix64, Tensor};
+use anyhow::Result;
+
+pub const VOCAB: usize = 32;
+pub const D_MODEL: usize = 128;
+pub const N_HEADS: usize = 4;
+pub const D_FF: usize = 256;
+pub const N_ENC: usize = 2;
+pub const N_DEC: usize = 2;
+pub const HEAD_DIM: usize = D_MODEL / N_HEADS;
+
+/// Special tokens of the synthetic task.
+pub const PAD: usize = 0;
+pub const BOS: usize = 1;
+pub const EOS: usize = 2;
+
+/// LayerNorm parameters.
+#[derive(Clone, Debug)]
+pub struct LnParams {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+}
+
+impl LnParams {
+    fn apply(&self, x: &Tensor) -> Tensor {
+        layernorm_rows(x, &self.gamma, &self.beta, 1e-5)
+    }
+}
+
+/// Multi-head attention block (self or cross).
+pub struct MhAttention {
+    pub q: Linear,
+    pub k: Linear,
+    pub v: Linear,
+    pub o: Linear,
+}
+
+impl MhAttention {
+    /// `x_q`: `[Lq, d]`, `x_kv`: `[Lkv, d]` → `[Lq, d]`.
+    fn forward(
+        &self,
+        x_q: &Tensor,
+        x_kv: &Tensor,
+        causal: bool,
+        plan: &ExecPlan,
+        mut trace: Option<&mut TraceStore>,
+    ) -> Tensor {
+        let lq = x_q.shape()[0];
+        let lkv = x_kv.shape()[0];
+        let q = self.q.forward(x_q, plan, trace.as_deref_mut());
+        let k = self.k.forward(x_kv, plan, trace.as_deref_mut());
+        let v = self.v.forward(x_kv, plan, trace.as_deref_mut());
+
+        let scale = 1.0 / (HEAD_DIM as f32).sqrt();
+        let mut concat = vec![0.0f32; lq * D_MODEL];
+        for h in 0..N_HEADS {
+            let off = h * HEAD_DIM;
+            // scores[i, j] = q_i · k_j * scale (head slice).
+            let mut scores = vec![0.0f32; lq * lkv];
+            for i in 0..lq {
+                let qrow = &q.row(i)[off..off + HEAD_DIM];
+                for j in 0..lkv {
+                    if causal && j > i {
+                        scores[i * lkv + j] = f32::NEG_INFINITY;
+                        continue;
+                    }
+                    let krow = &k.row(j)[off..off + HEAD_DIM];
+                    scores[i * lkv + j] =
+                        super::linalg::dot(qrow, krow) * scale;
+                }
+            }
+            let probs = softmax_rows(&Tensor::from_vec(&[lq, lkv], scores));
+            for i in 0..lq {
+                let prow = probs.row(i);
+                let orow = &mut concat[i * D_MODEL + off..i * D_MODEL + off + HEAD_DIM];
+                for (j, &p) in prow.iter().enumerate() {
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v.row(j)[off..off + HEAD_DIM];
+                    for (ov, &vv) in orow.iter_mut().zip(vrow) {
+                        *ov += p * vv;
+                    }
+                }
+            }
+        }
+        self.o.forward(&Tensor::from_vec(&[lq, D_MODEL], concat), plan, trace)
+    }
+}
+
+/// Feed-forward block.
+pub struct FeedForward {
+    pub ff1: Linear,
+    pub ff2: Linear,
+}
+
+impl FeedForward {
+    fn forward(&self, x: &Tensor, plan: &ExecPlan, mut trace: Option<&mut TraceStore>) -> Tensor {
+        let mut h = self.ff1.forward(x, plan, trace.as_deref_mut());
+        relu_inplace(&mut h);
+        self.ff2.forward(&h, plan, trace)
+    }
+}
+
+/// Pre-LN encoder layer.
+pub struct EncLayer {
+    pub attn: MhAttention,
+    pub ff: FeedForward,
+    pub ln1: LnParams,
+    pub ln2: LnParams,
+}
+
+/// Pre-LN decoder layer (self-attn + cross-attn + FFN).
+pub struct DecLayer {
+    pub self_attn: MhAttention,
+    pub cross_attn: MhAttention,
+    pub ff: FeedForward,
+    pub ln1: LnParams,
+    pub ln2: LnParams,
+    pub ln3: LnParams,
+}
+
+/// The model.
+pub struct TransformerMini {
+    pub src_emb: Tensor,
+    pub tgt_emb: Tensor,
+    pub enc_layers: Vec<EncLayer>,
+    pub dec_layers: Vec<DecLayer>,
+    pub enc_ln: LnParams,
+    pub dec_ln: LnParams,
+    pub out: Linear,
+}
+
+fn mk_linear(w: &WeightMap, name: &str, out_f: usize, in_f: usize) -> Result<Linear> {
+    Ok(Linear::new(
+        name,
+        w.tensor(&format!("{name}.w"), &[out_f, in_f])?,
+        w.vec(&format!("{name}.b"), out_f)?,
+    ))
+}
+
+fn mk_ln(w: &WeightMap, name: &str) -> Result<LnParams> {
+    Ok(LnParams { gamma: w.vec(&format!("{name}.g"), D_MODEL)?, beta: w.vec(&format!("{name}.b"), D_MODEL)? })
+}
+
+fn mk_attn(w: &WeightMap, prefix: &str) -> Result<MhAttention> {
+    Ok(MhAttention {
+        q: mk_linear(w, &format!("{prefix}.q"), D_MODEL, D_MODEL)?,
+        k: mk_linear(w, &format!("{prefix}.k"), D_MODEL, D_MODEL)?,
+        v: mk_linear(w, &format!("{prefix}.v"), D_MODEL, D_MODEL)?,
+        o: mk_linear(w, &format!("{prefix}.o"), D_MODEL, D_MODEL)?,
+    })
+}
+
+fn mk_ff(w: &WeightMap, prefix: &str) -> Result<FeedForward> {
+    Ok(FeedForward {
+        ff1: mk_linear(w, &format!("{prefix}.ff1"), D_FF, D_MODEL)?,
+        ff2: mk_linear(w, &format!("{prefix}.ff2"), D_MODEL, D_FF)?,
+    })
+}
+
+impl TransformerMini {
+    pub fn from_weights(w: &WeightMap) -> Result<Self> {
+        let mut enc_layers = Vec::new();
+        for i in 0..N_ENC {
+            enc_layers.push(EncLayer {
+                attn: mk_attn(w, &format!("enc{i}"))?,
+                ff: mk_ff(w, &format!("enc{i}"))?,
+                ln1: mk_ln(w, &format!("enc{i}.ln1"))?,
+                ln2: mk_ln(w, &format!("enc{i}.ln2"))?,
+            });
+        }
+        let mut dec_layers = Vec::new();
+        for i in 0..N_DEC {
+            dec_layers.push(DecLayer {
+                self_attn: mk_attn(w, &format!("dec{i}.s"))?,
+                cross_attn: mk_attn(w, &format!("dec{i}.c"))?,
+                ff: mk_ff(w, &format!("dec{i}"))?,
+                ln1: mk_ln(w, &format!("dec{i}.ln1"))?,
+                ln2: mk_ln(w, &format!("dec{i}.ln2"))?,
+                ln3: mk_ln(w, &format!("dec{i}.ln3"))?,
+            });
+        }
+        Ok(Self {
+            src_emb: w.tensor("src_emb", &[VOCAB, D_MODEL])?,
+            tgt_emb: w.tensor("tgt_emb", &[VOCAB, D_MODEL])?,
+            enc_layers,
+            dec_layers,
+            enc_ln: mk_ln(w, "enc_ln")?,
+            dec_ln: mk_ln(w, "dec_ln")?,
+            out: mk_linear(w, "out", VOCAB, D_MODEL)?,
+        })
+    }
+
+    /// Random Xavier-ish init (tests/benches without artifacts).
+    pub fn random(seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut w = WeightMap::new();
+        let lin = |w: &mut WeightMap, name: &str, o: usize, i: usize, rng: &mut SplitMix64| {
+            let std = (1.0 / i as f32).sqrt();
+            w.insert(&format!("{name}.w"), Tensor::rand_normal(&[o, i], 0.0, std, rng));
+            w.insert(&format!("{name}.b"), Tensor::zeros(&[o]));
+        };
+        let ln = |w: &mut WeightMap, name: &str| {
+            w.insert(&format!("{name}.g"), Tensor::full(&[D_MODEL], 1.0));
+            w.insert(&format!("{name}.b"), Tensor::zeros(&[D_MODEL]));
+        };
+        w.insert("src_emb", Tensor::rand_normal(&[VOCAB, D_MODEL], 0.0, 0.1, &mut rng));
+        w.insert("tgt_emb", Tensor::rand_normal(&[VOCAB, D_MODEL], 0.0, 0.1, &mut rng));
+        for i in 0..N_ENC {
+            for p in ["q", "k", "v", "o"] {
+                lin(&mut w, &format!("enc{i}.{p}"), D_MODEL, D_MODEL, &mut rng);
+            }
+            lin(&mut w, &format!("enc{i}.ff1"), D_FF, D_MODEL, &mut rng);
+            lin(&mut w, &format!("enc{i}.ff2"), D_MODEL, D_FF, &mut rng);
+            ln(&mut w, &format!("enc{i}.ln1"));
+            ln(&mut w, &format!("enc{i}.ln2"));
+        }
+        for i in 0..N_DEC {
+            for p in ["s.q", "s.k", "s.v", "s.o", "c.q", "c.k", "c.v", "c.o"] {
+                lin(&mut w, &format!("dec{i}.{p}"), D_MODEL, D_MODEL, &mut rng);
+            }
+            lin(&mut w, &format!("dec{i}.ff1"), D_FF, D_MODEL, &mut rng);
+            lin(&mut w, &format!("dec{i}.ff2"), D_MODEL, D_FF, &mut rng);
+            ln(&mut w, &format!("dec{i}.ln1"));
+            ln(&mut w, &format!("dec{i}.ln2"));
+            ln(&mut w, &format!("dec{i}.ln3"));
+        }
+        ln(&mut w, "enc_ln");
+        ln(&mut w, "dec_ln");
+        lin(&mut w, "out", VOCAB, D_MODEL, &mut rng);
+        Self::from_weights(&w).expect("random init is well-formed")
+    }
+
+    /// Encode a source token sequence → `[L, d]`.
+    pub fn encode(
+        &self,
+        src: &[usize],
+        plan: &ExecPlan,
+        mut trace: Option<&mut TraceStore>,
+    ) -> Tensor {
+        let mut x = embed(src, &self.src_emb);
+        add_positional(&mut x);
+        for layer in &self.enc_layers {
+            let h = layer.attn.forward(
+                &layer.ln1.apply(&x),
+                &layer.ln1.apply(&x),
+                false,
+                plan,
+                trace.as_deref_mut(),
+            );
+            x = x.add(&h);
+            let h = layer.ff.forward(&layer.ln2.apply(&x), plan, trace.as_deref_mut());
+            x = x.add(&h);
+        }
+        self.enc_ln.apply(&x)
+    }
+
+    /// Decode (teacher-forced) target prefix against encoder output →
+    /// logits `[L_tgt, vocab]`.
+    pub fn decode(
+        &self,
+        tgt: &[usize],
+        enc_out: &Tensor,
+        plan: &ExecPlan,
+        mut trace: Option<&mut TraceStore>,
+    ) -> Tensor {
+        let mut x = embed(tgt, &self.tgt_emb);
+        add_positional(&mut x);
+        for layer in &self.dec_layers {
+            let normed = layer.ln1.apply(&x);
+            let h = layer.self_attn.forward(&normed, &normed, true, plan, trace.as_deref_mut());
+            x = x.add(&h);
+            let h = layer.cross_attn.forward(
+                &layer.ln2.apply(&x),
+                enc_out,
+                false,
+                plan,
+                trace.as_deref_mut(),
+            );
+            x = x.add(&h);
+            let h = layer.ff.forward(&layer.ln3.apply(&x), plan, trace.as_deref_mut());
+            x = x.add(&h);
+        }
+        self.out.forward(&self.dec_ln.apply(&x), plan, trace)
+    }
+
+    /// Greedy decode until EOS or `max_len`.
+    pub fn greedy_decode(&self, src: &[usize], max_len: usize, plan: &ExecPlan) -> Vec<usize> {
+        let enc_out = self.encode(src, plan, None);
+        let mut tgt = vec![BOS];
+        for _ in 0..max_len {
+            let logits = self.decode(&tgt, &enc_out, plan, None);
+            let last = logits.row(logits.shape()[0] - 1);
+            let next = last
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            tgt.push(next);
+            if next == EOS {
+                break;
+            }
+        }
+        tgt
+    }
+
+    /// MAC count per quantizable layer for one (src, tgt) pair of length
+    /// `l_src`/`l_tgt` — the accelerator workload generator.
+    pub fn macs_per_layer(&self, l_src: usize, l_tgt: usize) -> Vec<(String, u64)> {
+        let mut out = Vec::new();
+        for lr in self.quant_layers() {
+            let (o, i) = (lr.weights.shape()[0] as u64, lr.weights.shape()[1] as u64);
+            let rows = if lr.name.starts_with("enc") {
+                l_src
+            } else if lr.name.starts_with("dec") {
+                l_tgt
+            } else {
+                l_tgt // output head
+            } as u64;
+            out.push((lr.name.to_string(), o * i * rows));
+        }
+        out
+    }
+}
+
+impl HasQuantLayers for TransformerMini {
+    fn model_name(&self) -> &str {
+        "transformer_mini"
+    }
+
+    fn quant_layers(&self) -> Vec<QLayerRef<'_>> {
+        let mut v = Vec::new();
+        fn add<'a>(v: &mut Vec<QLayerRef<'a>>, lin: &'a Linear) {
+            v.push(QLayerRef { name: &lin.name, kind: LayerKind::Fc, weights: &lin.weights });
+        }
+        for layer in &self.enc_layers {
+            for lin in [&layer.attn.q, &layer.attn.k, &layer.attn.v, &layer.attn.o] {
+                add(&mut v, lin);
+            }
+            add(&mut v, &layer.ff.ff1);
+            add(&mut v, &layer.ff.ff2);
+        }
+        for layer in &self.dec_layers {
+            for lin in [
+                &layer.self_attn.q,
+                &layer.self_attn.k,
+                &layer.self_attn.v,
+                &layer.self_attn.o,
+                &layer.cross_attn.q,
+                &layer.cross_attn.k,
+                &layer.cross_attn.v,
+                &layer.cross_attn.o,
+            ] {
+                add(&mut v, lin);
+            }
+            add(&mut v, &layer.ff.ff1);
+            add(&mut v, &layer.ff.ff2);
+        }
+        add(&mut v, &self.out);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_shapes() {
+        let m = TransformerMini::random(151);
+        let src = vec![BOS, 5, 9, 3, EOS];
+        let enc = m.encode(&src, &ExecPlan::fp32(), None);
+        assert_eq!(enc.shape(), &[5, D_MODEL]);
+        let logits = m.decode(&[BOS, 7], &enc, &ExecPlan::fp32(), None);
+        assert_eq!(logits.shape(), &[2, VOCAB]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn thirty_three_quant_layers() {
+        let m = TransformerMini::random(152);
+        // enc: 2×6, dec: 2×10, head: 1 → 33.
+        assert_eq!(m.quant_layers().len(), 33);
+    }
+
+    #[test]
+    fn causal_mask_blocks_future() {
+        // Changing a future target token must not affect earlier logits.
+        let m = TransformerMini::random(153);
+        let src = vec![BOS, 4, 8, EOS];
+        let enc = m.encode(&src, &ExecPlan::fp32(), None);
+        let l1 = m.decode(&[BOS, 5, 6], &enc, &ExecPlan::fp32(), None);
+        let l2 = m.decode(&[BOS, 5, 20], &enc, &ExecPlan::fp32(), None);
+        for c in 0..VOCAB {
+            assert_eq!(l1.row(0)[c], l2.row(0)[c], "position 0 leaked future");
+            assert_eq!(l1.row(1)[c], l2.row(1)[c], "position 1 leaked future");
+        }
+    }
+
+    #[test]
+    fn greedy_decode_terminates() {
+        let m = TransformerMini::random(154);
+        let out = m.greedy_decode(&[BOS, 3, 4, EOS], 12, &ExecPlan::fp32());
+        assert!(out.len() <= 13);
+        assert_eq!(out[0], BOS);
+        assert!(out.iter().all(|&t| t < VOCAB));
+    }
+
+    #[test]
+    fn trace_covers_all_fc_layers() {
+        let m = TransformerMini::random(155);
+        let mut trace = TraceStore::new(1 << 12);
+        let src = vec![BOS, 3, EOS];
+        let enc = m.encode(&src, &ExecPlan::fp32(), Some(&mut trace));
+        m.decode(&[BOS, 4], &enc, &ExecPlan::fp32(), Some(&mut trace));
+        assert_eq!(trace.len(), 33);
+    }
+
+    #[test]
+    fn macs_scale_with_length() {
+        let m = TransformerMini::random(156);
+        let a: u64 = m.macs_per_layer(4, 4).iter().map(|(_, x)| x).sum();
+        let b: u64 = m.macs_per_layer(8, 8).iter().map(|(_, x)| x).sum();
+        assert_eq!(b, 2 * a);
+    }
+}

@@ -1,0 +1,147 @@
+//! Model weight storage: a name → tensor map backed by `.bt` files.
+//!
+//! The python compile path (`python/compile/aot.py`) trains the mini
+//! models and dumps every parameter as `artifacts/models/<model>/<name>.bt`
+//! plus a `manifest.json` with architecture metadata; this module loads
+//! them back for the rust engine.
+
+use crate::tensor::{load_tensor, save_tensor, Tensor};
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Name → tensor map for one model.
+#[derive(Clone, Debug, Default)]
+pub struct WeightMap {
+    map: HashMap<String, Tensor>,
+}
+
+impl WeightMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Fetch a tensor by name (errors list available keys for debugging).
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).ok_or_else(|| {
+            let mut keys: Vec<&str> = self.map.keys().map(|s| s.as_str()).collect();
+            keys.sort();
+            anyhow::anyhow!("missing weight `{name}`; available: {keys:?}")
+        })
+    }
+
+    /// Fetch + clone with an expected shape check.
+    pub fn tensor(&self, name: &str, shape: &[usize]) -> Result<Tensor> {
+        let t = self.get(name)?;
+        if t.shape() != shape {
+            bail!("weight `{name}` has shape {:?}, expected {:?}", t.shape(), shape);
+        }
+        Ok(t.clone())
+    }
+
+    /// Fetch a 1-D tensor as a plain vector (biases, norms).
+    pub fn vec(&self, name: &str, len: usize) -> Result<Vec<f32>> {
+        let t = self.get(name)?;
+        if t.len() != len {
+            bail!("weight `{name}` has {} elements, expected {len}", t.len());
+        }
+        Ok(t.data().to_vec())
+    }
+
+    /// Load every `.bt` file in `dir` (key = file stem).
+    pub fn load_dir<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref();
+        let mut map = HashMap::new();
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("reading weight dir {}", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("bt") {
+                let stem = path
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .context("non-utf8 weight filename")?
+                    .to_string();
+                map.insert(stem, load_tensor(&path)?);
+            }
+        }
+        if map.is_empty() {
+            bail!("no .bt weights found in {}", dir.display());
+        }
+        Ok(Self { map })
+    }
+
+    /// Save every tensor as `<dir>/<name>.bt`.
+    pub fn save_dir<P: AsRef<Path>>(&self, dir: P) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        for (name, t) in &self.map {
+            save_tensor(dir.join(format!("{name}.bt")), t)?;
+        }
+        Ok(())
+    }
+
+    /// Read the model manifest (`manifest.json`) next to the weights.
+    pub fn load_manifest<P: AsRef<Path>>(dir: P) -> Result<Json> {
+        let p = dir.as_ref().join("manifest.json");
+        let raw = std::fs::read_to_string(&p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        Json::parse(&raw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+    use crate::util::TempDir;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = SplitMix64::new(121);
+        let mut wm = WeightMap::new();
+        wm.insert("conv1.w", Tensor::rand_normal(&[8, 27], 0.0, 1.0, &mut rng));
+        wm.insert("conv1.b", Tensor::zeros(&[8]));
+        let dir = TempDir::new().unwrap();
+        wm.save_dir(dir.path()).unwrap();
+        let wm2 = WeightMap::load_dir(dir.path()).unwrap();
+        assert_eq!(wm2.len(), 2);
+        assert_eq!(wm2.tensor("conv1.w", &[8, 27]).unwrap(), *wm.get("conv1.w").unwrap());
+        assert_eq!(wm2.vec("conv1.b", 8).unwrap(), vec![0.0; 8]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut wm = WeightMap::new();
+        wm.insert("w", Tensor::zeros(&[2, 2]));
+        assert!(wm.tensor("w", &[4]).is_err());
+        assert!(wm.vec("w", 3).is_err());
+    }
+
+    #[test]
+    fn missing_weight_lists_keys() {
+        let mut wm = WeightMap::new();
+        wm.insert("present", Tensor::zeros(&[1]));
+        let err = wm.get("absent").unwrap_err().to_string();
+        assert!(err.contains("present"), "err: {err}");
+    }
+
+    #[test]
+    fn empty_dir_errors() {
+        let dir = TempDir::new().unwrap();
+        assert!(WeightMap::load_dir(dir.path()).is_err());
+    }
+}

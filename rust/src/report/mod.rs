@@ -1,0 +1,10 @@
+//! Regeneration of every exhibit in the paper's evaluation (§VI):
+//! Tables I–V, Figures 1/2/8/9/10/11 and the §VI-D area/overhead
+//! numbers. [`pipeline`] runs (and caches) the Fig.-3 calibration per
+//! model; [`tables`] formats each exhibit and writes CSVs under
+//! `artifacts/reports/`.
+
+pub mod pipeline;
+pub mod tables;
+
+pub use pipeline::{calibrate, calibrate_or_load, CalibOutcome, ModelBundle, MODELS};

@@ -1,0 +1,239 @@
+//! Experiment pipeline: load artifacts, run (and cache) the DNA-TEQ
+//! calibration for each model, and expose everything the table/figure
+//! emitters need.
+
+use crate::dataset::{ImageDataset, SeqDataset};
+use crate::dnateq::{
+    calibrate_model, CalibrationInput, CalibrationOptions, QuantConfig, SweepPoint,
+};
+use crate::nn::{
+    collect_image_calibration, collect_seq_calibration, eval_classifier, eval_translator,
+    eval_translator_bleu, AlexNetMini, ExecPlan, ResNetMini, TransformerMini, WeightMap,
+};
+use crate::util::Json;
+use crate::artifact_path;
+use anyhow::{Context, Result};
+
+pub const MODELS: [&str; 3] = ["alexnet_mini", "resnet_mini", "transformer_mini"];
+
+/// Everything loaded from `artifacts/` for one model.
+pub enum ModelBundle {
+    Alex { model: AlexNetMini, calib: ImageDataset, eval: ImageDataset },
+    Res { model: ResNetMini, calib: ImageDataset, eval: ImageDataset },
+    Tr { model: TransformerMini, calib: SeqDataset, eval: SeqDataset },
+}
+
+impl ModelBundle {
+    /// Load a model + its calibration/eval splits from artifacts.
+    pub fn load(name: &str) -> Result<Self> {
+        let wdir = artifact_path(&format!("models/{name}"));
+        let w = WeightMap::load_dir(&wdir)?;
+        let data = artifact_path("data");
+        Ok(match name {
+            "alexnet_mini" => ModelBundle::Alex {
+                model: AlexNetMini::from_weights(&w)?,
+                calib: ImageDataset::load(&data, "calib")?,
+                eval: ImageDataset::load(&data, "eval")?,
+            },
+            "resnet_mini" => ModelBundle::Res {
+                model: ResNetMini::from_weights(&w)?,
+                calib: ImageDataset::load(&data, "calib")?,
+                eval: ImageDataset::load(&data, "eval")?,
+            },
+            "transformer_mini" => ModelBundle::Tr {
+                model: TransformerMini::from_weights(&w)?,
+                calib: SeqDataset::load(&data, "calib")?,
+                eval: SeqDataset::load(&data, "eval")?,
+            },
+            other => anyhow::bail!("unknown model `{other}`"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelBundle::Alex { .. } => "alexnet_mini",
+            ModelBundle::Res { .. } => "resnet_mini",
+            ModelBundle::Tr { .. } => "transformer_mini",
+        }
+    }
+
+    /// The paper's accuracy metric for this model, under a plan.
+    pub fn accuracy(&self, plan: &ExecPlan, subset: usize) -> f64 {
+        match self {
+            ModelBundle::Alex { model, eval, .. } => {
+                eval_classifier(model, &eval.take(subset), plan)
+            }
+            ModelBundle::Res { model, eval, .. } => {
+                eval_classifier(model, &eval.take(subset), plan)
+            }
+            ModelBundle::Tr { model, eval, .. } => eval_translator(model, &eval.take(subset), plan),
+        }
+    }
+
+    /// Step-1 trace collection (Fig. 3).
+    pub fn calibration_input(&self) -> CalibrationInput {
+        match self {
+            ModelBundle::Alex { model, calib, .. } => collect_image_calibration(model, calib),
+            ModelBundle::Res { model, calib, .. } => collect_image_calibration(model, calib),
+            ModelBundle::Tr { model, calib, .. } => collect_seq_calibration(model, calib),
+        }
+    }
+
+    /// Build an exec plan of each scheme against this model.
+    pub fn plan_exp(&self, cfg: &QuantConfig) -> ExecPlan {
+        match self {
+            ModelBundle::Alex { model, .. } => ExecPlan::exp(model, cfg),
+            ModelBundle::Res { model, .. } => ExecPlan::exp(model, cfg),
+            ModelBundle::Tr { model, .. } => ExecPlan::exp(model, cfg),
+        }
+    }
+
+    pub fn plan_uniform_matched(&self, cfg: &QuantConfig) -> ExecPlan {
+        match self {
+            ModelBundle::Alex { model, .. } => ExecPlan::uniform_matched(model, cfg),
+            ModelBundle::Res { model, .. } => ExecPlan::uniform_matched(model, cfg),
+            ModelBundle::Tr { model, .. } => ExecPlan::uniform_matched(model, cfg),
+        }
+    }
+
+    pub fn plan_int8(&self) -> ExecPlan {
+        match self {
+            ModelBundle::Alex { model, .. } => ExecPlan::int8(model),
+            ModelBundle::Res { model, .. } => ExecPlan::int8(model),
+            ModelBundle::Tr { model, .. } => ExecPlan::int8(model),
+        }
+    }
+
+    /// BLEU for the translator (Table V), None for classifiers.
+    pub fn bleu(&self, plan: &ExecPlan, subset: usize) -> Option<f64> {
+        match self {
+            ModelBundle::Tr { model, eval, .. } => {
+                Some(eval_translator_bleu(model, &eval.take(subset), plan))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Eval-set slice used inside the Thr_w controller (full eval set is used
+/// for the final reported numbers).
+pub const SWEEP_EVAL_SUBSET: usize = 160;
+/// Full-eval subset for final reported accuracies.
+pub const FINAL_EVAL_SUBSET: usize = 512;
+
+/// Complete calibration outcome for one model (cached as JSON).
+#[derive(Clone, Debug)]
+pub struct CalibOutcome {
+    pub config: QuantConfig,
+    pub sweep: Vec<SweepPoint>,
+    pub fp32_accuracy: f64,
+    pub dnateq_accuracy: f64,
+    pub int8_accuracy: f64,
+    pub uniform_matched_accuracy: f64,
+    pub dnateq_bleu: Option<f64>,
+    pub fp32_bleu: Option<f64>,
+}
+
+/// Run the full Fig.-3 pipeline for one model.
+pub fn calibrate(bundle: &ModelBundle, opts: &CalibrationOptions) -> CalibOutcome {
+    let input = bundle.calibration_input();
+    let fp32_plan = ExecPlan::fp32();
+    let baseline_sweep = bundle.accuracy(&fp32_plan, SWEEP_EVAL_SUBSET);
+    let report = calibrate_model(&input, baseline_sweep, opts, |cfg| {
+        bundle.accuracy(&bundle.plan_exp(cfg), SWEEP_EVAL_SUBSET)
+    });
+
+    let cfg = report.config.clone();
+    let fp32_accuracy = bundle.accuracy(&fp32_plan, FINAL_EVAL_SUBSET);
+    let dnateq_accuracy = bundle.accuracy(&bundle.plan_exp(&cfg), FINAL_EVAL_SUBSET);
+    let int8_accuracy = bundle.accuracy(&bundle.plan_int8(), FINAL_EVAL_SUBSET);
+    let uniform_matched_accuracy =
+        bundle.accuracy(&bundle.plan_uniform_matched(&cfg), FINAL_EVAL_SUBSET);
+    let bleu_subset = 96;
+    let dnateq_bleu = bundle.bleu(&bundle.plan_exp(&cfg), bleu_subset);
+    let fp32_bleu = bundle.bleu(&fp32_plan, bleu_subset);
+
+    CalibOutcome {
+        config: cfg,
+        sweep: report.sweep,
+        fp32_accuracy,
+        dnateq_accuracy,
+        int8_accuracy,
+        uniform_matched_accuracy,
+        dnateq_bleu,
+        fp32_bleu,
+    }
+}
+
+impl CalibOutcome {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        let sweep: Vec<Json> = self
+            .sweep
+            .iter()
+            .map(|s| {
+                let mut p = Json::obj();
+                p.set("thr_w", s.thr_w)
+                    .set("accuracy", s.accuracy)
+                    .set("accuracy_loss", s.accuracy_loss)
+                    .set("avg_bitwidth", s.avg_bitwidth)
+                    .set("compression_ratio", s.compression_ratio);
+                p
+            })
+            .collect();
+        o.set("config", self.config.to_json())
+            .set("sweep", sweep)
+            .set("fp32_accuracy", self.fp32_accuracy)
+            .set("dnateq_accuracy", self.dnateq_accuracy)
+            .set("int8_accuracy", self.int8_accuracy)
+            .set("uniform_matched_accuracy", self.uniform_matched_accuracy);
+        if let (Some(db), Some(fb)) = (self.dnateq_bleu, self.fp32_bleu) {
+            o.set("dnateq_bleu", db).set("fp32_bleu", fb);
+        }
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let sweep = j
+            .req("sweep")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(SweepPoint {
+                    thr_w: p.req("thr_w")?.as_f64()?,
+                    accuracy: p.req("accuracy")?.as_f64()?,
+                    accuracy_loss: p.req("accuracy_loss")?.as_f64()?,
+                    avg_bitwidth: p.req("avg_bitwidth")?.as_f64()?,
+                    compression_ratio: p.req("compression_ratio")?.as_f64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            config: QuantConfig::from_json(j.req("config")?)?,
+            sweep,
+            fp32_accuracy: j.req("fp32_accuracy")?.as_f64()?,
+            dnateq_accuracy: j.req("dnateq_accuracy")?.as_f64()?,
+            int8_accuracy: j.req("int8_accuracy")?.as_f64()?,
+            uniform_matched_accuracy: j.req("uniform_matched_accuracy")?.as_f64()?,
+            dnateq_bleu: j.get("dnateq_bleu").and_then(|v| v.as_f64().ok()),
+            fp32_bleu: j.get("fp32_bleu").and_then(|v| v.as_f64().ok()),
+        })
+    }
+}
+
+/// Run or load the cached calibration for `name`.
+pub fn calibrate_or_load(name: &str, force: bool, opts: &CalibrationOptions) -> Result<CalibOutcome> {
+    let cache = artifact_path(&format!("configs/{name}.json"));
+    if !force && cache.exists() {
+        let raw = std::fs::read_to_string(&cache)?;
+        return CalibOutcome::from_json(&Json::parse(&raw)?).context("parsing cached calibration");
+    }
+    let bundle = ModelBundle::load(name)?;
+    eprintln!("[calibrate] {name}: running Fig.-3 pipeline (cached afterwards)");
+    let outcome = calibrate(&bundle, opts);
+    if let Some(parent) = cache.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&cache, outcome.to_json().encode_pretty())?;
+    Ok(outcome)
+}

@@ -1,0 +1,173 @@
+//! `.bt` binary tensor interchange.
+//!
+//! The python compile path (`python/compile/btio.py`) writes tensors in
+//! this format; the rust side reads them (weights, datasets, calibration
+//! traces) and writes them back for reports. Layout, all little-endian:
+//!
+//! ```text
+//! magic   : 4 bytes  b"BT01"
+//! dtype   : u32      0 = f32, 1 = i8, 2 = i32
+//! ndim    : u32
+//! dims    : ndim × u64
+//! payload : product(dims) × sizeof(dtype)
+//! ```
+
+use super::Tensor;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"BT01";
+
+/// Element type tag in the `.bt` header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BtDtype {
+    F32 = 0,
+    I8 = 1,
+    I32 = 2,
+}
+
+impl BtDtype {
+    fn from_u32(v: u32) -> Result<Self> {
+        Ok(match v {
+            0 => BtDtype::F32,
+            1 => BtDtype::I8,
+            2 => BtDtype::I32,
+            other => bail!("unknown bt dtype tag {other}"),
+        })
+    }
+}
+
+/// Write an f32 tensor to a writer in `.bt` format.
+pub fn write_bt<W: Write>(w: &mut W, t: &Tensor) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&(BtDtype::F32 as u32).to_le_bytes())?;
+    w.write_all(&(t.ndim() as u32).to_le_bytes())?;
+    for &d in t.shape() {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    // Bulk conversion: safe byte-wise copy of the f32 slice.
+    let mut buf = Vec::with_capacity(t.len() * 4);
+    for &v in t.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read an f32 tensor from a reader in `.bt` format. I8/I32 payloads are
+/// widened to f32 (they store exponents/labels).
+pub fn read_bt<R: Read>(r: &mut R) -> Result<Tensor> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("reading bt magic")?;
+    ensure!(&magic == MAGIC, "bad magic {:?}, want BT01", magic);
+
+    let mut u32buf = [0u8; 4];
+    r.read_exact(&mut u32buf)?;
+    let dtype = BtDtype::from_u32(u32::from_le_bytes(u32buf))?;
+    r.read_exact(&mut u32buf)?;
+    let ndim = u32::from_le_bytes(u32buf) as usize;
+    ensure!(ndim <= 8, "implausible ndim {ndim}");
+
+    let mut dims = Vec::with_capacity(ndim);
+    let mut u64buf = [0u8; 8];
+    for _ in 0..ndim {
+        r.read_exact(&mut u64buf)?;
+        dims.push(u64::from_le_bytes(u64buf) as usize);
+    }
+    let n: usize = dims.iter().product();
+    ensure!(n <= 1 << 31, "implausible element count {n}");
+
+    let data = match dtype {
+        BtDtype::F32 => {
+            let mut raw = vec![0u8; n * 4];
+            r.read_exact(&mut raw)?;
+            raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        }
+        BtDtype::I8 => {
+            let mut raw = vec![0u8; n];
+            r.read_exact(&mut raw)?;
+            raw.iter().map(|&b| b as i8 as f32).collect()
+        }
+        BtDtype::I32 => {
+            let mut raw = vec![0u8; n * 4];
+            r.read_exact(&mut raw)?;
+            raw.chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
+                .collect()
+        }
+    };
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// Load a tensor from a `.bt` file.
+pub fn load_tensor<P: AsRef<Path>>(path: P) -> Result<Tensor> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    read_bt(&mut bytes.as_slice())
+}
+
+/// Save a tensor to a `.bt` file, creating parent directories.
+pub fn save_tensor<P: AsRef<Path>>(path: P, t: &Tensor) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_bt(&mut f, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SplitMix64;
+
+    #[test]
+    fn roundtrip_f32() {
+        let mut rng = SplitMix64::new(11);
+        let t = Tensor::rand_normal(&[3, 4, 5], 0.0, 2.0, &mut rng);
+        let mut buf = Vec::new();
+        write_bt(&mut buf, &t).unwrap();
+        let t2 = read_bt(&mut buf.as_slice()).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = b"NOPE\x00\x00\x00\x00".to_vec();
+        assert!(read_bt(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn reads_i8_payload_as_f32() {
+        // Hand-build an i8 tensor file: shape [3], values [-1, 0, 7].
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"BT01");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&3u64.to_le_bytes());
+        buf.extend_from_slice(&[(-1i8) as u8, 0, 7]);
+        let t = read_bt(&mut buf.as_slice()).unwrap();
+        assert_eq!(t.data(), &[-1.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("nested/dir/t.bt");
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, -2.5, 3.25, 0.0]);
+        save_tensor(&p, &t).unwrap();
+        assert_eq!(load_tensor(&p).unwrap(), t);
+    }
+
+    #[test]
+    fn truncated_payload_errors() {
+        let t = Tensor::from_vec(&[4], vec![1., 2., 3., 4.]);
+        let mut buf = Vec::new();
+        write_bt(&mut buf, &t).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_bt(&mut buf.as_slice()).is_err());
+    }
+}

@@ -1,0 +1,377 @@
+//! Dense nd-array substrate.
+//!
+//! A deliberately small tensor library: row-major `f32` (and `i8`) arrays
+//! with the handful of operations the DNA-TEQ pipeline needs — shape
+//! bookkeeping, elementwise maps, reductions/statistics, and a
+//! little-endian binary interchange format (`.bt`) shared with the python
+//! compile path (see `python/compile/btio.py`).
+
+mod io;
+mod rng;
+mod stats;
+
+pub use io::{load_tensor, read_bt, save_tensor, write_bt, BtDtype};
+pub use rng::SplitMix64;
+pub use stats::{Histogram, TensorStats};
+
+/// Row-major dense `f32` tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Create a tensor from raw parts. Panics if `data.len()` does not
+    /// match the product of `shape`.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(
+            n,
+            data.len(),
+            "shape {:?} implies {} elements, got {}",
+            shape,
+            n,
+            data.len()
+        );
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// Tensor filled with `v`.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    /// Uniform random tensor in `[lo, hi)` from a deterministic stream.
+    pub fn rand_uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut SplitMix64) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| lo + (hi - lo) * rng.next_f32()).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// Standard-normal random tensor (Box–Muller over the deterministic
+    /// stream), optionally scaled.
+    pub fn rand_normal(shape: &[usize], mean: f32, std: f32, rng: &mut SplitMix64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut data = Vec::with_capacity(n);
+        while data.len() < n {
+            let (a, b) = rng.next_gauss_pair();
+            data.push(mean + std * a);
+            if data.len() < n {
+                data.push(mean + std * b);
+            }
+        }
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// Exponentially distributed magnitudes with random signs — the tensor
+    /// population DNA-TEQ targets (§III-A). Used by tests and benches to
+    /// synthesize realistic layer tensors without artifacts on disk.
+    pub fn rand_signed_exponential(shape: &[usize], rate: f32, rng: &mut SplitMix64) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n)
+            .map(|_| {
+                let u = rng.next_f32().max(1e-9);
+                let mag = -u.ln() / rate;
+                if rng.next_f32() < 0.5 {
+                    -mag
+                } else {
+                    mag
+                }
+            })
+            .collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape without copying. Panics if element counts differ.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {:?}", self.shape, shape);
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.ndim(), 2, "row() requires a 2-D tensor");
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// Batch element `i` of an N-D tensor (leading axis).
+    pub fn batch(&self, i: usize) -> &[f32] {
+        let stride: usize = self.shape[1..].iter().product();
+        &self.data[i * stride..(i + 1) * stride]
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
+        Self { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// In-place elementwise map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Elementwise binary op; shapes must match exactly.
+    pub fn zip(&self, other: &Self, f: impl Fn(f32, f32) -> f32) -> Self {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        let data = self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect();
+        Self { shape: self.shape.clone(), data }
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Self) -> Self {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn scale(&self, s: f32) -> Self {
+        self.map(|x| x * s)
+    }
+
+    /// Maximum absolute value (0 for empty tensors).
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Minimum absolute value over the *nonzero* elements — DNA-TEQ's
+    /// `min(t)` in Eq. 5 operates on magnitudes with zeros carved out (the
+    /// zero code point is reserved, §III-B).
+    pub fn abs_min_nonzero(&self) -> f32 {
+        self.data
+            .iter()
+            .filter(|&&x| x != 0.0)
+            .fold(f32::INFINITY, |m, &x| m.min(x.abs()))
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn mean_abs(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|x| x.abs()).sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Index of the maximum element of a 1-D slice view (argmax over the
+    /// whole buffer for 1-D tensors).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// 2-D matrix multiply (naive blocked); used only off the hot path —
+    /// the inference engine has its own GEMM in `nn::linalg`.
+    pub fn matmul(&self, other: &Self) -> Self {
+        assert_eq!(self.ndim(), 2);
+        assert_eq!(other.ndim(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dim mismatch");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// Relative mean absolute error against a reference tensor — the
+    /// paper's RMAE metric (Eq. 6).
+    pub fn rmae(&self, reference: &Self) -> f32 {
+        assert_eq!(self.shape, reference.shape, "rmae shape mismatch");
+        let denom: f32 = reference.data.iter().map(|x| x.abs()).sum();
+        if denom == 0.0 {
+            return 0.0;
+        }
+        let num: f32 = self
+            .data
+            .iter()
+            .zip(&reference.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .sum();
+        num / denom
+    }
+
+    /// Summary statistics used by the distribution analysis and reports.
+    pub fn stats(&self) -> TensorStats {
+        TensorStats::of(&self.data)
+    }
+}
+
+/// Row-major dense `i8` tensor — storage for uniformly quantized values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI8 {
+    shape: Vec<usize>,
+    data: Vec<i8>,
+}
+
+impl TensorI8 {
+    pub fn from_vec(shape: &[usize], data: Vec<i8>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[i8] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i8] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_and_shape() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1., 2., 3.]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[4], vec![1., 2., 3., 4.]).reshape(&[2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.data(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![1., 1., 1., 1.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn rmae_zero_for_identical() {
+        let a = Tensor::from_vec(&[3], vec![1., -2., 3.]);
+        assert_eq!(a.rmae(&a), 0.0);
+    }
+
+    #[test]
+    fn rmae_matches_hand_computation() {
+        let t = Tensor::from_vec(&[2], vec![1.0, -1.0]);
+        let q = Tensor::from_vec(&[2], vec![1.5, -0.5]);
+        // num = 0.5 + 0.5 = 1.0, denom = 2.0
+        assert!((q.rmae(&t) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn abs_min_nonzero_skips_zeros() {
+        let t = Tensor::from_vec(&[4], vec![0.0, -0.25, 4.0, 0.0]);
+        assert_eq!(t.abs_min_nonzero(), 0.25);
+        assert_eq!(t.abs_max(), 4.0);
+    }
+
+    #[test]
+    fn rand_signed_exponential_is_signed_and_deterministic() {
+        let mut r1 = SplitMix64::new(7);
+        let mut r2 = SplitMix64::new(7);
+        let a = Tensor::rand_signed_exponential(&[1000], 4.0, &mut r1);
+        let b = Tensor::rand_signed_exponential(&[1000], 4.0, &mut r2);
+        assert_eq!(a, b);
+        assert!(a.data().iter().any(|&x| x > 0.0));
+        assert!(a.data().iter().any(|&x| x < 0.0));
+    }
+
+    #[test]
+    fn argmax_finds_peak() {
+        let t = Tensor::from_vec(&[5], vec![0.1, 0.9, 0.3, 0.95, 0.2]);
+        assert_eq!(t.argmax(), 3);
+    }
+
+    #[test]
+    fn batch_slices_leading_axis() {
+        let t = Tensor::from_vec(&[2, 2, 2], (0..8).map(|x| x as f32).collect());
+        assert_eq!(t.batch(1), &[4., 5., 6., 7.]);
+    }
+}

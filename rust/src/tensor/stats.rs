@@ -1,0 +1,149 @@
+//! Summary statistics + histograms used by the distribution analysis
+//! (§III-A) and the report emitters.
+
+/// Single-pass summary statistics of a value slice.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TensorStats {
+    pub n: usize,
+    pub min: f32,
+    pub max: f32,
+    pub mean: f32,
+    pub std: f32,
+    /// Mean of |x| — feeds the Thr_act scaling (Eq. 7).
+    pub mean_abs: f32,
+    /// Fraction of exact zeros (the reserved zero code point, §III-B).
+    pub zero_frac: f32,
+}
+
+impl TensorStats {
+    pub fn of(xs: &[f32]) -> Self {
+        if xs.is_empty() {
+            return Self::default();
+        }
+        let n = xs.len();
+        let mut min = f32::INFINITY;
+        let mut max = f32::NEG_INFINITY;
+        let mut sum = 0.0f64;
+        let mut sum_abs = 0.0f64;
+        let mut zeros = 0usize;
+        for &x in xs {
+            min = min.min(x);
+            max = max.max(x);
+            sum += x as f64;
+            sum_abs += x.abs() as f64;
+            if x == 0.0 {
+                zeros += 1;
+            }
+        }
+        let mean = (sum / n as f64) as f32;
+        let mut var = 0.0f64;
+        for &x in xs {
+            let d = (x - mean) as f64;
+            var += d * d;
+        }
+        Self {
+            n,
+            min,
+            max,
+            mean,
+            std: (var / n as f64).sqrt() as f32,
+            mean_abs: (sum_abs / n as f64) as f32,
+            zero_frac: zeros as f32 / n as f32,
+        }
+    }
+}
+
+/// Equal-width histogram over `[lo, hi]` with density normalization —
+/// the empirical distribution the RSS fits are computed against.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    /// Build a histogram with `bins` equal-width buckets. Values outside
+    /// `[lo, hi]` clamp to the edge buckets (outliers stay visible).
+    pub fn build(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo, "degenerate histogram range");
+        let mut counts = vec![0u64; bins];
+        let scale = bins as f32 / (hi - lo);
+        for &x in xs {
+            let mut b = ((x - lo) * scale) as isize;
+            if b < 0 {
+                b = 0;
+            }
+            if b >= bins as isize {
+                b = bins as isize - 1;
+            }
+            counts[b as usize] += 1;
+        }
+        Self { lo, hi, counts, total: xs.len() as u64 }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Bin centers.
+    pub fn centers(&self) -> Vec<f32> {
+        let w = self.width();
+        (0..self.bins()).map(|i| self.lo + (i as f32 + 0.5) * w).collect()
+    }
+
+    pub fn width(&self) -> f32 {
+        (self.hi - self.lo) / self.bins() as f32
+    }
+
+    /// Probability-density estimate per bin (integrates to ~1).
+    pub fn density(&self) -> Vec<f32> {
+        let norm = 1.0 / (self.total.max(1) as f32 * self.width());
+        self.counts.iter().map(|&c| c as f32 * norm).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_known_values() {
+        let s = TensorStats::of(&[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 1.5).abs() < 1e-6);
+        assert!((s.mean_abs - 1.5).abs() < 1e-6);
+        assert!((s.zero_frac - 0.25).abs() < 1e-6);
+        // population std of [0,1,2,3] = sqrt(1.25)
+        assert!((s.std - 1.25f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stats_empty_is_default() {
+        let s = TensorStats::of(&[]);
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn histogram_counts_and_density() {
+        let xs = [0.1f32, 0.1, 0.9, 2.5, -1.0];
+        let h = Histogram::build(&xs, 0.0, 1.0, 2);
+        // -1.0 clamps to bin 0; 2.5 clamps to bin 1.
+        assert_eq!(h.counts, vec![3, 2]);
+        let d = h.density();
+        // total mass = sum(d_i * width) = 1
+        let mass: f32 = d.iter().map(|&x| x * h.width()).sum();
+        assert!((mass - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_centers_are_midpoints() {
+        let h = Histogram::build(&[0.0, 1.0], 0.0, 1.0, 4);
+        let c = h.centers();
+        assert!((c[0] - 0.125).abs() < 1e-6);
+        assert!((c[3] - 0.875).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,135 @@
+//! Micro-benchmark harness (criterion stand-in).
+//!
+//! Warm-up, calibrated iteration count targeting a fixed measurement
+//! window, and robust statistics (median + MAD) over per-batch timings.
+//! Used by every `rust/benches/*` target and by `repro report` when it
+//! regenerates the paper's timing tables.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Median wall time per iteration.
+    pub median: Duration,
+    /// Mean wall time per iteration.
+    pub mean: Duration,
+    /// Median absolute deviation (robust spread).
+    pub mad: Duration,
+    /// Total iterations measured.
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+
+    pub fn per_iter_us(&self) -> f64 {
+        self.median.as_secs_f64() * 1e6
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>12.4} ms/iter  (±{:.4} ms MAD, {} iters)",
+            self.name,
+            self.per_iter_ms(),
+            self.mad.as_secs_f64() * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Benchmark `f`, targeting ~`target_ms` of measurement after a short
+/// warm-up. The closure should perform one logical iteration.
+pub fn bench(name: &str, target_ms: u64, mut f: impl FnMut()) -> BenchResult {
+    // Warm-up & cost estimate: run until 10% of target or 3 iterations.
+    let warm_budget = Duration::from_millis((target_ms / 10).max(5));
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_start.elapsed() < warm_budget || warm_iters < 3 {
+        f();
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+    let est_per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+
+    // Choose a batch size so one batch is ~1/30 of the window, then run
+    // batches until the window closes (≥5 batches for stats).
+    let target = Duration::from_millis(target_ms);
+    let batch =
+        ((target.as_secs_f64() / 30.0 / est_per_iter.max(1e-9)).ceil() as u64).clamp(1, 1 << 24);
+
+    let mut samples: Vec<f64> = Vec::new();
+    let mut total_iters = 0u64;
+    let start = Instant::now();
+    while start.elapsed() < target || samples.len() < 5 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64() / batch as f64;
+        samples.push(dt);
+        total_iters += batch;
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+
+    BenchResult {
+        name: name.to_string(),
+        median: Duration::from_secs_f64(median),
+        mean: Duration::from_secs_f64(mean),
+        mad: Duration::from_secs_f64(mad),
+        iters: total_iters,
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_known_sleep() {
+        let r = bench("sleep1ms", 60, || std::thread::sleep(Duration::from_millis(1)));
+        let ms = r.per_iter_ms();
+        assert!((0.9..5.0).contains(&ms), "measured {ms} ms");
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn fast_closures_get_batched() {
+        let mut acc = 0u64;
+        let r = bench("add", 30, || {
+            acc = acc.wrapping_add(1);
+            black_box(acc);
+        });
+        assert!(r.iters > 1000, "expected large iteration count, got {}", r.iters);
+        assert!(r.median < Duration::from_micros(10));
+    }
+
+    #[test]
+    fn summary_contains_name() {
+        let r = bench("mycase", 20, || {
+            black_box(3u32.pow(7));
+        });
+        assert!(r.summary().contains("mycase"));
+    }
+}

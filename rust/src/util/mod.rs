@@ -1,0 +1,17 @@
+//! Small self-contained substrates.
+//!
+//! The build is fully offline against a minimal vendored crate set, so the
+//! facilities a production crate would normally pull in (a JSON codec, a
+//! data-parallel map, a micro-benchmark harness, temp-dir helpers, a
+//! property-testing loop) are implemented here from scratch.
+
+pub mod bench;
+pub mod json;
+pub mod parallel;
+pub mod prop;
+pub mod tmp;
+
+pub use bench::{bench, BenchResult};
+pub use json::Json;
+pub use parallel::parallel_map;
+pub use tmp::TempDir;

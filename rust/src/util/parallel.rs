@@ -1,0 +1,78 @@
+//! Data-parallel map over std threads (rayon stand-in).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Apply `f` to every item of `items` across up to `available_parallelism`
+/// worker threads, preserving order. `f` must be `Sync` (called from many
+/// threads) and the items are handed out by an atomic work-stealing index,
+/// so uneven per-item cost balances well.
+pub fn parallel_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(n);
+    if workers <= 1 {
+        return items.iter().map(&f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let out: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *out[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    out.into_iter().map(|m| m.into_inner().unwrap().expect("worker filled every slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = parallel_map(&items, |&x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u32> = vec![];
+        assert!(parallel_map(&items, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn single_item() {
+        assert_eq!(parallel_map(&[7], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        // Items with wildly different cost still land in the right slots.
+        let items: Vec<usize> = (0..64).collect();
+        let out = parallel_map(&items, |&x| {
+            if x % 7 == 0 {
+                // Busy work.
+                let mut acc = 0u64;
+                for i in 0..200_000u64 {
+                    acc = acc.wrapping_add(i ^ x as u64);
+                }
+                std::hint::black_box(acc);
+            }
+            x
+        });
+        assert_eq!(out, items);
+    }
+}

