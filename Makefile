@@ -1,0 +1,32 @@
+# DNA-TEQ reproduction — build / test / bench entry points.
+#
+# Tier-1 gate: `make verify` (== cargo build --release && cargo test -q).
+
+CARGO ?= cargo
+
+.PHONY: all build test verify bench lint clean pytest
+
+all: build
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+verify: build test
+
+bench:
+	$(CARGO) bench --no-run
+	$(CARGO) bench --bench table3_simd_fc
+	$(CARGO) bench --bench e2e_serving
+
+lint:
+	$(CARGO) fmt --check
+	$(CARGO) clippy --all-targets -- -D warnings
+
+pytest:
+	python -m pytest python/tests -q
+
+clean:
+	$(CARGO) clean

@@ -1,0 +1,7 @@
+"""Make the L2/L1 `compile` package importable when pytest is invoked
+from the repo root (CI runs `python -m pytest python/tests -q`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

@@ -1,38 +1,120 @@
-//! End-to-end serving bench: coordinator + rust engine, fp32 vs DNA-TEQ
-//! backends (needs `make artifacts`; skips politely otherwise).
+//! End-to-end serving bench: coordinator + batched engines.
+//!
+//! The headline comparison is the FC-dominated counting backend served
+//! with batcher `max_batch ∈ {1, 8, 32}`: at `max_batch = 1` every
+//! request streams the full weight store (batch-1 looping); larger
+//! batches run the batched counting GEMM, so the throughput ratio is the
+//! batching speedup end-to-end (queue + batcher + worker included). The
+//! AlexNet engine backend is also driven (trained weights when
+//! `make artifacts` has run, random weights otherwise). Emits
+//! `reports/bench_e2e_serving.json` alongside the text summary.
 //!
 //! `cargo bench --bench e2e_serving`
 
 use dnateq::artifact_path;
-use dnateq::coordinator::{AlexNetBackend, Coordinator, CoordinatorConfig, Payload};
+use dnateq::coordinator::{
+    AlexNetBackend, Backend, BatcherConfig, Coordinator, CoordinatorConfig, CountingFcBackend,
+    Payload,
+};
 use dnateq::dataset::ImageDataset;
+use dnateq::dnateq::ExpQuantParams;
+use dnateq::expdot::CountingFc;
 use dnateq::nn::{AlexNetMini, WeightMap};
+use dnateq::tensor::{SplitMix64, Tensor};
+use dnateq::util::bench::{write_json, BenchResult};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Drive `n` requests through a fresh coordinator; returns per-request
+/// wall time as a `BenchResult` so the run lands in the JSON report.
+fn drive(
+    label: &str,
+    backend: Arc<dyn Backend>,
+    max_batch: usize,
+    data: &ImageDataset,
+    n: usize,
+) -> BenchResult {
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+        workers: 2,
+        queue_depth: 512,
+    };
+    let c = Coordinator::start(backend, cfg);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        rxs.push(c.submit(Payload::Image(data.image(i % data.len()))).unwrap());
+    }
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let per = t0.elapsed() / n as u32;
+    let snap = c.shutdown();
+    println!("{label:<28} {}", snap.summary());
+    BenchResult { name: label.to_string(), median: per, mean: per, mad: Duration::ZERO, iters: n as u64 }
+}
 
 fn main() {
-    let Ok(w) = WeightMap::load_dir(artifact_path("models/alexnet_mini")) else {
-        eprintln!("skipping: artifacts not built (`make artifacts`)");
-        return;
-    };
-    let data = ImageDataset::load(artifact_path("data"), "eval").expect("eval data");
-    for (label, n_requests) in [("warm", 32usize), ("measured", 192)] {
-        let c = Coordinator::start(
-            Arc::new(AlexNetBackend::fp32(
-                AlexNetMini::from_weights(&w).unwrap(),
-                "fp32",
-            )),
-            CoordinatorConfig::default(),
+    let data = ImageDataset::load(artifact_path("data"), "eval")
+        .unwrap_or_else(|_| ImageDataset::synthetic(64, 0xDA7A));
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // FC-dominated counting backend: [3072 → 1024] exponential-domain FC.
+    let mut rng = SplitMix64::new(0xE2E);
+    let inf = 3 * 32 * 32;
+    let w = Tensor::rand_signed_exponential(&[1024, inf], 3.0, &mut rng);
+    let x_cal = Tensor::rand_signed_exponential(&[1, inf], 1.0, &mut rng);
+    let wp = ExpQuantParams::init_for_tensor(&w, 4);
+    let mut ap = ExpQuantParams { base: wp.base, alpha: 1.0, beta: 0.0, n_bits: 4 };
+    ap.refit_scale_offset(&x_cal);
+    let counting = Arc::new(CountingFcBackend { fc: CountingFc::new(&w, wp, ap, None) });
+
+    println!("counting-fc backend (3072→1024, 4-bit), 96 requests:");
+    for max_batch in [1usize, 8, 32] {
+        // Warm one small run, then measure.
+        drive("  (warmup)", counting.clone(), max_batch, &data, 16);
+        results.push(drive(
+            &format!("counting-fc max_batch={max_batch}"),
+            counting.clone(),
+            max_batch,
+            &data,
+            96,
+        ));
+    }
+    if let (Some(b1), Some(b32)) = (
+        results.iter().find(|r| r.name.ends_with("max_batch=1")),
+        results.iter().find(|r| r.name.ends_with("max_batch=32")),
+    ) {
+        println!(
+            "batching speedup (max_batch 32 vs 1): {:.2}×\n",
+            b1.median.as_secs_f64() / b32.median.as_secs_f64().max(1e-12)
         );
-        let mut rxs = Vec::new();
-        for i in 0..n_requests {
-            rxs.push(c.submit(Payload::Image(data.image(i % data.len()))).unwrap());
+    }
+
+    // CNN engine backend: trained weights when available.
+    let model = match WeightMap::load_dir(artifact_path("models/alexnet_mini")) {
+        Ok(wm) => AlexNetMini::from_weights(&wm).expect("artifact weights well-formed"),
+        Err(_) => {
+            eprintln!("artifacts not built (`make artifacts`); using random weights");
+            AlexNetMini::random(0x41E)
         }
-        for rx in rxs {
-            rx.recv().unwrap();
-        }
-        let snap = c.shutdown();
-        if label == "measured" {
-            println!("e2e serving (engine-fp32): {}", snap.summary());
-        }
+    };
+    let engine = Arc::new(AlexNetBackend::fp32(model, "fp32"));
+    println!("alexnet engine backend, 96 requests:");
+    for max_batch in [1usize, 32] {
+        drive("  (warmup)", engine.clone(), max_batch, &data, 16);
+        results.push(drive(
+            &format!("engine-fp32 max_batch={max_batch}"),
+            engine.clone(),
+            max_batch,
+            &data,
+            96,
+        ));
+    }
+
+    let path = artifact_path("reports/bench_e2e_serving.json");
+    match write_json(&path, &results) {
+        Ok(()) => println!("JSON → {}", path.display()),
+        Err(e) => eprintln!("JSON write failed: {e:#}"),
     }
 }

@@ -1,32 +1,65 @@
 //! Table III: FC execution time, INT8 baseline vs DNA-TEQ counting
-//! engine at 3/4 bits, sizes 1024/2048/4096.
+//! engine at 3/4 bits, sizes 1024/2048/4096 — now with batch ∈ {1, 8, 32}
+//! columns. Batch-1 rows run the GEMV loop; batched rows run the batched
+//! engines (`forward_batch`), so the speedup from amortizing the weight
+//! stream and quantization pass across the batch is directly visible.
+//! Emits `reports/bench_table3_simd_fc.json` alongside the text summary.
 //!
 //! `cargo bench --bench table3_simd_fc`
 
+use dnateq::artifact_path;
 use dnateq::dnateq::ExpQuantParams;
 use dnateq::expdot::{CountingFc, Int8Fc};
 use dnateq::tensor::{SplitMix64, Tensor};
-use dnateq::util::bench::{bench, black_box};
+use dnateq::util::bench::{bench, black_box, write_json, BenchResult};
+
+const BATCHES: [usize; 3] = [1, 8, 32];
 
 fn main() {
     let mut rng = SplitMix64::new(0xF00D);
-    println!("Table III bench — per-forward latency (batch 1)\n");
+    let mut results: Vec<BenchResult> = Vec::new();
+    println!("Table III bench — latency per forward call (whole batch), batch ∈ {BATCHES:?}\n");
     for n in [1024usize, 2048, 4096] {
         let w = Tensor::rand_signed_exponential(&[n, n], 4.0, &mut rng);
-        let x = Tensor::rand_signed_exponential(&[1, n], 1.0, &mut rng);
+        let x_cal = Tensor::rand_signed_exponential(&[1, n], 1.0, &mut rng);
         let int8 = Int8Fc::new(&w, None);
-        println!("{}", bench(&format!("FC({n},{n}) int8"), 900, || {
-            black_box(int8.forward(&x));
-        }).summary());
-        for bits in [3u8, 4] {
-            let wp = ExpQuantParams::init_for_tensor(&w, bits);
-            let mut ap = ExpQuantParams { base: wp.base, alpha: 1.0, beta: 0.0, n_bits: bits };
-            ap.refit_scale_offset(&x);
-            let fc = CountingFc::new(&w, wp, ap, None);
-            println!("{}", bench(&format!("FC({n},{n}) dnateq {bits}-bit"), 900, || {
-                black_box(fc.forward(&x));
-            }).summary());
+        let counting: Vec<(u8, CountingFc)> = [3u8, 4]
+            .into_iter()
+            .map(|bits| {
+                let wp = ExpQuantParams::init_for_tensor(&w, bits);
+                let mut ap = ExpQuantParams { base: wp.base, alpha: 1.0, beta: 0.0, n_bits: bits };
+                ap.refit_scale_offset(&x_cal);
+                (bits, CountingFc::new(&w, wp, ap, None))
+            })
+            .collect();
+        for batch in BATCHES {
+            let x = Tensor::rand_signed_exponential(&[batch, n], 1.0, &mut rng);
+            let r = bench(&format!("FC({n},{n}) int8 b={batch}"), 600, || {
+                if batch == 1 {
+                    black_box(int8.forward(&x));
+                } else {
+                    black_box(int8.forward_batch(&x));
+                }
+            });
+            println!("{}", r.summary());
+            results.push(r);
+            for (bits, fc) in &counting {
+                let r = bench(&format!("FC({n},{n}) dnateq {bits}-bit b={batch}"), 600, || {
+                    if batch == 1 {
+                        black_box(fc.forward(&x));
+                    } else {
+                        black_box(fc.forward_batch(&x));
+                    }
+                });
+                println!("{}", r.summary());
+                results.push(r);
+            }
         }
         println!();
+    }
+    let path = artifact_path("reports/bench_table3_simd_fc.json");
+    match write_json(&path, &results) {
+        Ok(()) => println!("JSON → {}", path.display()),
+        Err(e) => eprintln!("JSON write failed: {e:#}"),
     }
 }

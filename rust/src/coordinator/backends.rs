@@ -1,13 +1,40 @@
 //! Concrete inference backends for the serving coordinator.
+//!
+//! `Backend::infer` receives the batch the dynamic batcher formed; every
+//! backend here forwards the *whole* batch through a batched engine
+//! (batch-wide GEMMs / counting GEMMs) instead of looping per payload,
+//! so the batcher is a real throughput lever rather than a grouping
+//! formality.
 
 use super::request::{Output, Payload};
 use super::server::Backend;
 use crate::dnateq::QuantConfig;
 use crate::expdot::CountingFc;
 use crate::nn::eval::ImageModel;
+use crate::nn::ops::argmax_slice;
 use crate::nn::{AlexNetMini, ExecPlan, ResNetMini, TransformerMini};
 use crate::runtime::Executable;
 use crate::tensor::Tensor;
+
+/// Gather the image payloads of a mixed batch into one flat data vector
+/// (`idx.len() * flat_len` elements) plus the positions they came from,
+/// so non-image payloads keep their sentinel output. The caller shapes
+/// the data for its engine (`[n, 3, 32, 32]` for CNNs, `[n, in]` for
+/// the counting FC).
+fn gather_images(batch: &[Payload], flat_len: usize) -> (Vec<usize>, Vec<f32>) {
+    let idx: Vec<usize> = batch
+        .iter()
+        .enumerate()
+        .filter_map(|(i, p)| matches!(p, Payload::Image(_)).then_some(i))
+        .collect();
+    let mut data = Vec::with_capacity(idx.len() * flat_len);
+    for &i in &idx {
+        if let Payload::Image(img) = &batch[i] {
+            data.extend_from_slice(img.data());
+        }
+    }
+    (idx, data)
+}
 
 /// Classifier backend over the rust f32/fake-quant engine.
 pub struct ClassifierBackend<M: ImageModel + 'static> {
@@ -29,13 +56,16 @@ impl<M: ImageModel + 'static> ClassifierBackend<M> {
 
 impl<M: ImageModel + 'static> Backend for ClassifierBackend<M> {
     fn infer(&self, batch: &[Payload]) -> Vec<Output> {
-        batch
-            .iter()
-            .map(|p| match p {
-                Payload::Image(img) => Output::ClassId(self.model.predict(img, &self.plan)),
-                Payload::Seq(_) => Output::ClassId(usize::MAX), // wrong modality
-            })
-            .collect()
+        let (idx, data) = gather_images(batch, 3 * 32 * 32);
+        let mut outputs = vec![Output::ClassId(usize::MAX); batch.len()]; // wrong modality
+        if !idx.is_empty() {
+            let images = Tensor::from_vec(&[idx.len(), 3, 32, 32], data);
+            let preds = self.model.predict_batch(&images, &self.plan);
+            for (&i, p) in idx.iter().zip(preds) {
+                outputs[i] = Output::ClassId(p);
+            }
+        }
+        outputs
     }
 
     fn name(&self) -> &str {
@@ -56,15 +86,25 @@ pub struct TranslatorBackend {
 
 impl Backend for TranslatorBackend {
     fn infer(&self, batch: &[Payload]) -> Vec<Output> {
-        batch
+        let idx: Vec<usize> = batch
             .iter()
-            .map(|p| match p {
-                Payload::Seq(src) => {
-                    Output::Tokens(self.model.greedy_decode(src, self.max_len, &self.plan))
-                }
-                Payload::Image(_) => Output::Tokens(vec![]),
+            .enumerate()
+            .filter_map(|(i, p)| matches!(p, Payload::Seq(_)).then_some(i))
+            .collect();
+        let srcs: Vec<Vec<usize>> = idx
+            .iter()
+            .map(|&i| match &batch[i] {
+                Payload::Seq(s) => s.clone(),
+                Payload::Image(_) => unreachable!("filtered to Seq"),
             })
-            .collect()
+            .collect();
+        let mut outputs = vec![Output::Tokens(vec![]); batch.len()]; // wrong modality
+        for (&i, toks) in
+            idx.iter().zip(self.model.greedy_decode_batch(&srcs, self.max_len, &self.plan))
+        {
+            outputs[i] = Output::Tokens(toks);
+        }
+        outputs
     }
 
     fn name(&self) -> &str {
@@ -145,17 +185,19 @@ pub struct CountingFcBackend {
 
 impl Backend for CountingFcBackend {
     fn infer(&self, batch: &[Payload]) -> Vec<Output> {
-        batch
-            .iter()
-            .map(|p| match p {
-                Payload::Image(img) => {
-                    let flat = Tensor::from_vec(&[1, img.len()], img.data().to_vec());
-                    let out = self.fc.forward(&flat);
-                    Output::ClassId(out.argmax())
-                }
-                Payload::Seq(_) => Output::ClassId(usize::MAX),
-            })
-            .collect()
+        // Stack every image payload into one [n, in] matrix and run a
+        // single batched counting GEMM — the §IV kernel amortizes its
+        // weight stream and quantization pass across the whole batch.
+        let (idx, data) = gather_images(batch, self.fc.in_features);
+        let mut outputs = vec![Output::ClassId(usize::MAX); batch.len()];
+        if !idx.is_empty() {
+            let flat = Tensor::from_vec(&[idx.len(), self.fc.in_features], data);
+            let out = self.fc.forward_batch(&flat);
+            for (k, &i) in idx.iter().enumerate() {
+                outputs[i] = Output::ClassId(argmax_slice(out.row(k)));
+            }
+        }
+        outputs
     }
 
     fn name(&self) -> &str {
@@ -200,6 +242,50 @@ mod tests {
             other => panic!("unexpected {other:?}"),
         }
         c.shutdown();
+    }
+
+    #[test]
+    fn batched_infer_preserves_positions_in_mixed_batches() {
+        let model = AlexNetMini::random(206);
+        let data = ImageDataset::synthetic(3, 207);
+        let backend = AlexNetBackend::fp32(model, "mixed");
+        let batch = vec![
+            Payload::Image(data.image(0)),
+            Payload::Seq(vec![1, 2, 3]),
+            Payload::Image(data.image(1)),
+            Payload::Image(data.image(2)),
+        ];
+        let out = backend.infer(&batch);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[1], Output::ClassId(usize::MAX));
+        // Batched predictions must equal per-image predictions, in place.
+        for (slot, img_idx) in [(0usize, 0usize), (2, 1), (3, 2)] {
+            let want = backend.model.predict(&data.image(img_idx), &backend.plan);
+            assert_eq!(out[slot], Output::ClassId(want), "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn counting_backend_batches_whole_payload_set() {
+        use crate::dnateq::ExpQuantParams;
+        use crate::tensor::SplitMix64;
+        let mut rng = SplitMix64::new(208);
+        let inf = 3 * 32 * 32;
+        let w = Tensor::rand_signed_exponential(&[10, inf], 2.0, &mut rng);
+        let x = Tensor::rand_signed_exponential(&[1, inf], 1.0, &mut rng);
+        let wp = ExpQuantParams::init_for_tensor(&w, 4);
+        let mut ap = ExpQuantParams { base: wp.base, alpha: 1.0, beta: 0.0, n_bits: 4 };
+        ap.refit_scale_offset(&x);
+        let backend = CountingFcBackend { fc: CountingFc::new(&w, wp, ap, None) };
+        let data = ImageDataset::synthetic(4, 209);
+        let batch: Vec<Payload> = (0..4).map(|i| Payload::Image(data.image(i))).collect();
+        let out = backend.infer(&batch);
+        for (i, o) in out.iter().enumerate() {
+            let img = data.image(i);
+            let flat = Tensor::from_vec(&[1, inf], img.data().to_vec());
+            let want = backend.fc.forward(&flat).argmax();
+            assert_eq!(*o, Output::ClassId(want), "payload {i}");
+        }
     }
 
     #[test]

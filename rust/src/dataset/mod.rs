@@ -78,6 +78,17 @@ impl ImageDataset {
         Self { images: Tensor::from_vec(&[n, 3, 32, 32], data), labels }
     }
 
+    /// Images `[lo, hi)` as one `[hi-lo, 3, 32, 32]` batch tensor — the
+    /// unit the batched evaluation/serving paths forward in one GEMM.
+    pub fn batch_tensor(&self, lo: usize, hi: usize) -> Tensor {
+        assert!(lo <= hi && hi <= self.len(), "batch range {lo}..{hi} out of bounds");
+        let stride = 3 * 32 * 32;
+        Tensor::from_vec(
+            &[hi - lo, 3, 32, 32],
+            self.images.data()[lo * stride..hi * stride].to_vec(),
+        )
+    }
+
     /// First `n` samples as a new dataset (calibration subset).
     pub fn take(&self, n: usize) -> Self {
         let n = n.min(self.len());
@@ -211,6 +222,17 @@ mod tests {
             let payload = &s[..s.len() - 1];
             assert_eq!(&t[1..t.len() - 1], translate(payload).as_slice());
         }
+    }
+
+    #[test]
+    fn batch_tensor_slices_images() {
+        let d = ImageDataset::synthetic(6, 165);
+        let b = d.batch_tensor(2, 5);
+        assert_eq!(b.shape(), &[3, 3, 32, 32]);
+        for (k, i) in (2..5).enumerate() {
+            assert_eq!(b.batch(k), d.image(i).data());
+        }
+        assert_eq!(d.batch_tensor(3, 3).shape(), &[0, 3, 32, 32]);
     }
 
     #[test]

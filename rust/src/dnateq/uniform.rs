@@ -23,9 +23,16 @@ impl UniformParams {
 
     /// Calibrate Δ from the tensor's max magnitude (full-scale symmetric).
     pub fn calibrate(t: &Tensor, n_bits: u8) -> Self {
+        Self::calibrate_slice(t.data(), n_bits)
+    }
+
+    /// Slice variant of [`UniformParams::calibrate`] — used by the batched
+    /// INT8 engine to calibrate each batch row in place without
+    /// materializing per-row tensors.
+    pub fn calibrate_slice(data: &[f32], n_bits: u8) -> Self {
         assert!((2..=8).contains(&n_bits), "uniform bitwidth {n_bits} out of range");
         let q_max = ((1i32 << (n_bits - 1)) - 1) as f64;
-        let max = t.abs_max() as f64;
+        let max = data.iter().fold(0.0f32, |m, &x| m.max(x.abs())) as f64;
         Self { delta: if max > 0.0 { max / q_max } else { 1.0 }, n_bits }
     }
 
@@ -114,6 +121,15 @@ mod tests {
         assert_eq!(q.shape(), t.shape());
         let d = p.dequantize(&q);
         assert!(d.rmae(&t) < 0.01);
+    }
+
+    #[test]
+    fn calibrate_slice_matches_tensor_calibrate() {
+        let mut rng = SplitMix64::new(53);
+        let t = Tensor::rand_uniform(&[257], -2.0, 2.0, &mut rng);
+        for n in [4u8, 8] {
+            assert_eq!(UniformParams::calibrate(&t, n), UniformParams::calibrate_slice(t.data(), n));
+        }
     }
 
     #[test]

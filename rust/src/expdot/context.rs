@@ -74,6 +74,15 @@ impl ExpDotContext {
         (2 * self.r_max + 1) as usize
     }
 
+    /// Bytes of one live counter set (pair + weight + activation tables,
+    /// each with one trailing trash slot, i32 entries). The batched
+    /// kernel sizes its (neuron × batch) tile so all live sets fit the
+    /// L1 budget — the same pressure §IV discusses for the SIMD design.
+    #[inline]
+    pub fn counter_set_bytes(&self) -> usize {
+        4 * ((self.pair_table_len() + 1) + 2 * (self.single_table_len() + 1))
+    }
+
     /// Index into the pair table for an exponent sum `a + w`.
     #[inline]
     pub fn pair_index(&self, code_sum: i32) -> usize {
@@ -137,6 +146,14 @@ mod tests {
             assert!(ctx.pair_table_len() <= 1 << (n + 1), "n={n}");
             assert!(ctx.single_table_len() <= 1 << n, "n={n}");
         }
+    }
+
+    #[test]
+    fn counter_set_bytes_matches_table_sizes() {
+        let p = params(4, 1.2, 1.0, 0.0);
+        let ctx = ExpDotContext::new(p, p);
+        let want = 4 * ((ctx.pair_table_len() + 1) + 2 * (ctx.single_table_len() + 1));
+        assert_eq!(ctx.counter_set_bytes(), want);
     }
 
     #[test]

@@ -8,9 +8,10 @@
 //! nibble-packed weights for 3-bit layers.
 
 use super::context::ExpDotContext;
-use super::pack::{nibble_lut, pack_codes, PackedCodes};
+use super::pack::{nibble_lut, pack_codes, shift_codes, PackedCodes};
 use crate::dnateq::{ExpQuantParams, QuantizedTensor, ZERO_CODE_SENTINEL};
 use crate::tensor::Tensor;
+use crate::util::parallel::parallel_row_blocks;
 
 /// Reference exponential dot product over two quantized vectors: fills
 /// the four count tables pair-by-pair, then reconstructs. Semantically
@@ -62,6 +63,20 @@ pub struct CountingFc {
 /// all live counters within L1 (§IV discusses exactly this pressure).
 const NEURON_BLOCK: usize = 8;
 
+/// Batch columns processed per weight pass in the batched kernel: each
+/// loaded weight code updates `BATCH_TILE` counter sets before the next
+/// weight load, amortizing the weight stream across the batch.
+const BATCH_TILE: usize = 4;
+
+/// L1 budget (bytes) for the live counter block of the batched kernel;
+/// the neuron tile shrinks at high bitwidths so
+/// `neuron_tile × BATCH_TILE` counter sets stay resident.
+const L1_COUNTER_BUDGET: usize = 32 * 1024;
+
+/// Minimum MACs per parallel work item before `forward_batch` fans the
+/// output-row loop out over `util::parallel::parallel_map`.
+const PAR_MIN_MACS: usize = 1 << 21;
+
 impl CountingFc {
     /// Quantize `weights` (`[out, in]`) with `w_params` and prepare the
     /// counting kernel. `a_params` is used to quantize activations at
@@ -105,8 +120,11 @@ impl CountingFc {
         }
     }
 
-    /// Forward one batch (`[batch, in]` → `[batch, out]`). Activations
-    /// are exponentially quantized here (runtime pre-processing stage).
+    /// Forward `[batch, in]` → `[batch, out]` one row at a time — the
+    /// batch-1 GEMV path (each row streams the full weight store). Kept
+    /// as the reference/baseline; the serving hot path is
+    /// [`CountingFc::forward_batch`], which amortizes the weight stream
+    /// across batch columns.
     pub fn forward(&self, x: &Tensor) -> Tensor {
         assert_eq!(x.ndim(), 2);
         assert_eq!(x.shape()[1], self.in_features, "input feature mismatch");
@@ -121,15 +139,171 @@ impl CountingFc {
         Tensor::from_vec(&[batch, self.out_features], out)
     }
 
+    /// Batched counting GEMM (`[batch, in]` → `[batch, out]`): the §IV
+    /// counting kernel register-blocked over output rows *and* batch
+    /// columns. Activations are quantized and shifted **once** for the
+    /// whole batch; every weight code loaded from the store then updates
+    /// up to [`BATCH_TILE`] counter sets before the next weight load, so
+    /// the weight stream — the batch-1 bottleneck — is amortized across
+    /// the batch. The live `neuron_tile × BATCH_TILE` counter block is
+    /// sized to stay within [`L1_COUNTER_BUDGET`], and large layers fan
+    /// the output-row loop out over [`parallel_row_blocks`].
+    ///
+    /// Bit-identical to stacking batch-1 [`CountingFc::forward`] calls:
+    /// quantization is element-wise with fixed parameters, counter
+    /// updates are order-free i32 adds, and the per-(row, neuron)
+    /// reconstruction is unchanged.
+    pub fn forward_batch(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.ndim(), 2);
+        assert_eq!(x.shape()[1], self.in_features, "input feature mismatch");
+        let batch = x.shape()[0];
+        if batch == 0 {
+            return Tensor::from_vec(&[0, self.out_features], Vec::new());
+        }
+        // One quantization + shift pass per batch (runtime Quantizer).
+        let qa = self.ctx.a_params.quantize(x);
+        let a_plus = shift_codes(&qa.codes, self.ctx.r_max);
+
+        let macs = batch * self.out_features * self.in_features;
+        let out = parallel_row_blocks(self.out_features, batch, macs, PAR_MIN_MACS, |j0, j1| {
+            self.forward_rows_batched(&a_plus, &qa.signs, batch, j0, j1)
+        });
+        Tensor::from_vec(&[batch, self.out_features], out)
+    }
+
+    /// Batched kernel for one contiguous output-row range `[j0, j1)` over
+    /// the whole batch; returns a `[batch, j1-j0]` row-major block.
+    fn forward_rows_batched(
+        &self,
+        a_plus: &[u8],
+        a_signs: &[i8],
+        batch: usize,
+        j0: usize,
+        j1: usize,
+    ) -> Vec<f32> {
+        let inf = self.in_features;
+        let plen = self.ctx.pair_table_len();
+        let slen = self.ctx.single_table_len();
+        // Adaptive neuron tile: neuron_tile × BATCH_TILE counter sets
+        // (with trash slots) must fit the L1 budget — high bitwidths
+        // shrink the tile instead of spilling.
+        let neuron_tile = (L1_COUNTER_BUDGET / (BATCH_TILE * self.ctx.counter_set_bytes()))
+            .clamp(1, NEURON_BLOCK);
+        let sets = neuron_tile * BATCH_TILE;
+        let mut pair = vec![0i32; sets * (plen + 1)];
+        let mut wcnt = vec![0i32; sets * (slen + 1)];
+        let mut acnt = vec![0i32; sets * (slen + 1)];
+
+        let width = j1 - j0;
+        let mut out = vec![0.0f32; batch * width];
+        let mut b0 = 0usize;
+        while b0 < batch {
+            let bt = (batch - b0).min(BATCH_TILE);
+            let mut t0 = j0;
+            while t0 < j1 {
+                let tn = (t0 + neuron_tile).min(j1);
+                let jt = tn - t0;
+                let live = jt * bt;
+                pair[..live * (plen + 1)].fill(0);
+                wcnt[..live * (slen + 1)].fill(0);
+                acnt[..live * (slen + 1)].fill(0);
+
+                match &self.store {
+                    WeightStore::Bytes { plus, signs } => {
+                        for (jj, j) in (t0..tn).enumerate() {
+                            let wrow = &plus[j * inf..(j + 1) * inf];
+                            let srow = &signs[j * inf..(j + 1) * inf];
+                            for i in 0..inf {
+                                let wp = unsafe { *wrow.get_unchecked(i) } as usize;
+                                if wp == 0xFF {
+                                    continue;
+                                }
+                                let ws = unsafe { *srow.get_unchecked(i) } as i32;
+                                for bb in 0..bt {
+                                    let ai = (b0 + bb) * inf + i;
+                                    let ap = unsafe { *a_plus.get_unchecked(ai) } as usize;
+                                    if ap == 0xFF {
+                                        continue;
+                                    }
+                                    let s = (unsafe { *a_signs.get_unchecked(ai) } as i32) * ws;
+                                    let set = jj * bt + bb;
+                                    unsafe {
+                                        *pair.get_unchecked_mut(set * (plen + 1) + ap + wp) += s;
+                                        *wcnt.get_unchecked_mut(set * (slen + 1) + wp) += s;
+                                        *acnt.get_unchecked_mut(set * (slen + 1) + ap) += s;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    WeightStore::Packed(packed) => {
+                        let lut = nibble_lut(self.ctx.r_max);
+                        for (jj, j) in (t0..tn).enumerate() {
+                            let row_off = j * inf;
+                            debug_assert!(
+                                row_off % 2 == 0,
+                                "in_features must keep rows byte-aligned"
+                            );
+                            let row_bytes = &packed.bytes[row_off / 2..(row_off + inf).div_ceil(2)];
+                            for i in 0..inf {
+                                let byte = unsafe { *row_bytes.get_unchecked(i / 2) };
+                                let nib = (byte >> ((i & 1) * 4)) & 0xF;
+                                let (wp, wsign) = unsafe { *lut.get_unchecked(nib as usize) };
+                                if wsign == 0 {
+                                    continue;
+                                }
+                                let wp = wp as usize;
+                                for bb in 0..bt {
+                                    let ai = (b0 + bb) * inf + i;
+                                    let ap = unsafe { *a_plus.get_unchecked(ai) } as usize;
+                                    if ap == 0xFF {
+                                        continue;
+                                    }
+                                    let s = (unsafe { *a_signs.get_unchecked(ai) } as i32)
+                                        * (wsign as i32);
+                                    let set = jj * bt + bb;
+                                    unsafe {
+                                        *pair.get_unchecked_mut(set * (plen + 1) + ap + wp) += s;
+                                        *wcnt.get_unchecked_mut(set * (slen + 1) + wp) += s;
+                                        *acnt.get_unchecked_mut(set * (slen + 1) + ap) += s;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+
+                // Dequantizer stage per (neuron, batch column) of the tile.
+                for jj in 0..jt {
+                    let j = t0 + jj;
+                    let bias = self.bias.as_ref().map_or(0.0, |b| b[j]);
+                    for bb in 0..bt {
+                        let set = jj * bt + bb;
+                        let pbase = set * (plen + 1);
+                        let sbase = set * (slen + 1);
+                        let sign_count: i32 = pair[pbase..pbase + plen].iter().sum();
+                        let v = self.ctx.reconstruct(
+                            &pair[pbase..pbase + plen],
+                            &wcnt[sbase..sbase + slen],
+                            &acnt[sbase..sbase + slen],
+                            sign_count,
+                        );
+                        out[(b0 + bb) * width + (j - j0)] = v + bias;
+                    }
+                }
+                t0 = tn;
+            }
+            b0 += bt;
+        }
+        out
+    }
+
     /// One input vector against all output neurons.
     fn forward_one(&self, a_codes: &[i8], a_signs: &[i8], out: &mut [f32]) {
         let r_max = self.ctx.r_max;
         // Pre-shift activation codes once: `a + R_max` (0xFF = zero), the
         // same trick the Input Shift-Reg plays in hardware (§V-B).
-        let a_plus: Vec<u8> = a_codes
-            .iter()
-            .map(|&c| if c == ZERO_CODE_SENTINEL { 0xFF } else { (c as i32 + r_max) as u8 })
-            .collect();
+        let a_plus = shift_codes(a_codes, r_max);
 
         let plen = self.ctx.pair_table_len();
         let slen = self.ctx.single_table_len();
@@ -323,6 +497,93 @@ mod tests {
         let (wp5, ap5) = shared_params(&w, &x, 5);
         let fc5 = CountingFc::new(&w, wp5, ap5, None);
         assert!(fc5.weight_bytes() > fc3.weight_bytes());
+    }
+
+    /// Stack batch-1 forwards into a `[batch, out]` reference.
+    fn stacked_forward(fc: &CountingFc, x: &Tensor) -> Vec<f32> {
+        let (batch, inf) = (x.shape()[0], x.shape()[1]);
+        let mut out = Vec::with_capacity(batch * fc.out_features);
+        for b in 0..batch {
+            let row = Tensor::from_vec(&[1, inf], x.row(b).to_vec());
+            out.extend_from_slice(fc.forward(&row).data());
+        }
+        out
+    }
+
+    #[test]
+    fn forward_batch_bit_identical_to_stacked_forward() {
+        use crate::util::prop::{for_all, PropConfig};
+        for_all(
+            PropConfig { cases: 20, seed: 0xBA7C1 },
+            |rng, size| {
+                let inf = 2 * (4 + rng.next_below(16 * size.max(1))); // even, packed-safe
+                let outf = 1 + rng.next_below(24);
+                let batch = 1 + rng.next_below(9);
+                let n = 3 + (rng.next_below(5) as u8); // 3..=7
+                let mut w = Tensor::rand_signed_exponential(&[outf, inf], 2.0, rng);
+                let mut x = Tensor::rand_signed_exponential(&[batch, inf], 0.9, rng);
+                // Sprinkle exact zeros on both sides.
+                for i in (0..w.len()).step_by(5) {
+                    w.data_mut()[i] = 0.0;
+                }
+                for i in (0..x.len()).step_by(7) {
+                    x.data_mut()[i] = 0.0;
+                }
+                (w, x, n)
+            },
+            |(w, x, n)| {
+                let (wp, ap) = shared_params(w, x, *n);
+                let bias: Vec<f32> = (0..w.shape()[0]).map(|j| j as f32 * 0.25 - 1.0).collect();
+                let fc = CountingFc::new(w, wp, ap, Some(bias));
+                let got = fc.forward_batch(x);
+                let want = stacked_forward(&fc, x);
+                for (i, (&g, &r)) in got.data().iter().zip(&want).enumerate() {
+                    if g.to_bits() != r.to_bits() {
+                        return Err(format!("elem {i}: {g} vs {r} (bits differ)"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn forward_batch_matches_reference_dot_within_bound() {
+        // The blocked batched kernel against the per-pair Eq.-8 oracle
+        // (§IV error bound: short-float reconstruction noise only).
+        let mut rng = SplitMix64::new(85);
+        for n in [3u8, 4] {
+            let (outf, inf, batch) = (11, 128, 6);
+            let w = Tensor::rand_signed_exponential(&[outf, inf], 2.0, &mut rng);
+            let x = Tensor::rand_signed_exponential(&[batch, inf], 0.9, &mut rng);
+            let (wp, ap) = shared_params(&w, &x, n);
+            let fc = CountingFc::new(&w, wp, ap, None);
+            let got = fc.forward_batch(&x);
+            let ctx = ExpDotContext::new(ap, wp);
+            for b in 0..batch {
+                let qa = ap.quantize(&Tensor::from_vec(&[inf], x.row(b).to_vec()));
+                for j in 0..outf {
+                    let qw = wp.quantize(&Tensor::from_vec(&[inf], w.row(j).to_vec()));
+                    let want = exp_dot_reference(&ctx, &qa, &qw);
+                    let g = got.data()[b * outf + j];
+                    let tol = want.abs().max(0.5) * 1e-3;
+                    assert!((g - want).abs() < tol, "n={n} b={b} j={j}: {g} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_handles_empty_and_single_batches() {
+        let mut rng = SplitMix64::new(86);
+        let w = Tensor::rand_signed_exponential(&[5, 32], 2.0, &mut rng);
+        let x1 = Tensor::rand_signed_exponential(&[1, 32], 1.0, &mut rng);
+        let (wp, ap) = shared_params(&w, &x1, 4);
+        let fc = CountingFc::new(&w, wp, ap, None);
+        let empty = fc.forward_batch(&Tensor::zeros(&[0, 32]));
+        assert_eq!(empty.shape(), &[0, 5]);
+        let single = fc.forward_batch(&x1);
+        assert_eq!(single.data(), fc.forward(&x1).data());
     }
 
     #[test]

@@ -7,6 +7,11 @@
 
 use crate::dnateq::UniformParams;
 use crate::tensor::Tensor;
+use crate::util::parallel::parallel_row_blocks;
+
+/// Minimum MACs per parallel work item before `forward_batch` fans the
+/// output-row loop out over `util::parallel::parallel_map`.
+const PAR_MIN_MACS: usize = 1 << 21;
 
 /// INT8 FC layer: the Table III / accelerator-baseline reference point.
 pub struct Int8Fc {
@@ -59,6 +64,68 @@ impl Int8Fc {
             }
         }
         Tensor::from_vec(&[batch, self.out_features], out)
+    }
+
+    /// Batched INT8 GEMM (`[batch, in]` → `[batch, out]`) — the baseline
+    /// counterpart of [`crate::expdot::CountingFc::forward_batch`] so
+    /// Table III stays apples-to-apples at every batch size.
+    ///
+    /// Each batch row is calibrated and quantized **independently** (a
+    /// served batch is a bag of unrelated requests), which also makes the
+    /// result bit-identical to stacking batch-1 [`Int8Fc::forward`]
+    /// calls: `gemv_i8` is exact i32 arithmetic on identical inputs. The
+    /// kernel streams every weight row once per batch (batch-1 looping
+    /// re-streams the whole weight matrix per request) and fans the
+    /// output-row loop out over [`parallel_row_blocks`] for large layers.
+    pub fn forward_batch(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.ndim(), 2);
+        assert_eq!(x.shape()[1], self.in_features, "input feature mismatch");
+        let batch = x.shape()[0];
+        let inf = self.in_features;
+        if batch == 0 {
+            return Tensor::from_vec(&[0, self.out_features], Vec::new());
+        }
+        // Per-row dynamic quantization — one pass over the batch.
+        let mut a_q = vec![0i8; batch * inf];
+        let mut scales = vec![0.0f32; batch];
+        for b in 0..batch {
+            let row = x.row(b);
+            let p = UniformParams::calibrate_slice(row, 8);
+            for (dst, &src) in a_q[b * inf..(b + 1) * inf].iter_mut().zip(row) {
+                *dst = p.encode(src);
+            }
+            scales[b] = (p.delta * self.w_params.delta) as f32;
+        }
+
+        let macs = batch * self.out_features * inf;
+        let out = parallel_row_blocks(self.out_features, batch, macs, PAR_MIN_MACS, |j0, j1| {
+            self.gemm_rows(&a_q, &scales, batch, j0, j1)
+        });
+        Tensor::from_vec(&[batch, self.out_features], out)
+    }
+
+    /// Kernel for output rows `[j0, j1)`: each weight row is loaded once
+    /// and reused across every batch column. Returns `[batch, j1-j0]`.
+    fn gemm_rows(
+        &self,
+        a_q: &[i8],
+        scales: &[f32],
+        batch: usize,
+        j0: usize,
+        j1: usize,
+    ) -> Vec<f32> {
+        let inf = self.in_features;
+        let width = j1 - j0;
+        let mut out = vec![0.0f32; batch * width];
+        for (jj, j) in (j0..j1).enumerate() {
+            let wrow = &self.w_q[j * inf..(j + 1) * inf];
+            let bias = self.bias.as_ref().map_or(0.0, |bb| bb[j]);
+            for b in 0..batch {
+                let arow = &a_q[b * inf..(b + 1) * inf];
+                out[b * width + jj] = gemv_i8(arow, wrow) as f32 * scales[b] + bias;
+            }
+        }
+        out
     }
 }
 
@@ -123,6 +190,48 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn forward_batch_bit_identical_to_stacked_forward() {
+        use crate::util::prop::{for_all, PropConfig};
+        for_all(
+            PropConfig { cases: 20, seed: 0x18A7C },
+            |rng, size| {
+                let inf = 3 + rng.next_below(32 * size.max(1));
+                let outf = 1 + rng.next_below(24);
+                let batch = 1 + rng.next_below(9);
+                let w = Tensor::rand_normal(&[outf, inf], 0.0, 0.2, rng);
+                let x = Tensor::rand_uniform(&[batch, inf], -1.5, 1.5, rng);
+                (w, x)
+            },
+            |(w, x)| {
+                let bias: Vec<f32> = (0..w.shape()[0]).map(|j| 0.5 - j as f32 * 0.125).collect();
+                let fc = Int8Fc::new(w, Some(bias));
+                let got = fc.forward_batch(x);
+                let (batch, inf) = (x.shape()[0], x.shape()[1]);
+                for b in 0..batch {
+                    let row = Tensor::from_vec(&[1, inf], x.row(b).to_vec());
+                    let want = fc.forward(&row);
+                    for (j, (&g, &r)) in
+                        got.row(b).iter().zip(want.data()).enumerate()
+                    {
+                        if g.to_bits() != r.to_bits() {
+                            return Err(format!("b={b} j={j}: {g} vs {r} (bits differ)"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn forward_batch_handles_empty_batch() {
+        let w = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let fc = Int8Fc::new(&w, None);
+        let y = fc.forward_batch(&Tensor::zeros(&[0, 2]));
+        assert_eq!(y.shape(), &[0, 2]);
     }
 
     #[test]

@@ -27,4 +27,4 @@ pub mod pack;
 pub use context::ExpDotContext;
 pub use counting::{exp_dot_reference, CountingFc};
 pub use int8::Int8Fc;
-pub use pack::{pack_codes, unpack_codes, PackedCodes};
+pub use pack::{pack_codes, shift_codes, unpack_codes, PackedCodes};

@@ -70,6 +70,17 @@ pub fn unpack_codes(p: &PackedCodes, r_max: i32) -> (Vec<i8>, Vec<i8>) {
     (codes, signs)
 }
 
+/// Pre-shift exponent codes to table offsets: `code + R_max` with `0xFF`
+/// marking exact zeros — the Input Shift-Reg trick (§V-B). Shared by the
+/// batch-1 and batched counting kernels; the batched path calls it once
+/// per batch so quantized activations are shifted a single time.
+pub fn shift_codes(codes: &[i8], r_max: i32) -> Vec<u8> {
+    codes
+        .iter()
+        .map(|&c| if c == ZERO_CODE_SENTINEL { 0xFF } else { (c as i32 + r_max) as u8 })
+        .collect()
+}
+
 /// Decode LUT for the counting kernel: maps a nibble to
 /// `(code + R_max, sign)` with `(0xFF, 0)` for zero — so the kernel's
 /// inner loop is a table load + add + signed increment.
@@ -131,6 +142,20 @@ mod tests {
         let q = quantized(4096, 73);
         let packed = pack_codes(&q);
         assert_eq!(packed.bytes.len() * 2, 4096);
+    }
+
+    #[test]
+    fn shift_codes_marks_zeros_and_offsets_rest() {
+        let q = quantized(257, 75);
+        let r_max = q.params.r_max();
+        let shifted = shift_codes(&q.codes, r_max);
+        for (i, &c) in q.codes.iter().enumerate() {
+            if c == ZERO_CODE_SENTINEL {
+                assert_eq!(shifted[i], 0xFF);
+            } else {
+                assert_eq!(shifted[i] as i32, c as i32 + r_max);
+            }
+        }
     }
 
     #[test]

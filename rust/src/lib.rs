@@ -26,11 +26,24 @@
 //! | [`dataset`] | §VI-A | synthetic workload readers/generators |
 //! | [`nn`] | §VI-A | f32 inference engine + mini model zoo |
 //! | [`dnateq`] | §III | the quantization methodology (the contribution) |
-//! | [`expdot`] | §III-C, §IV | exponential dot-product engines (SW impl.) |
+//! | [`expdot`] | §III-C, §IV | **batched** exponential counting-GEMM engines + INT8 baseline |
 //! | [`accel`] | §V, §VI-C/D | 3D-stacked accelerator simulator + energy |
-//! | [`runtime`] | — | PJRT loading/execution of AOT artifacts |
-//! | [`coordinator`] | — | serving: router, batcher, workers, metrics |
+//! | [`runtime`] | — | PJRT loading/execution of AOT artifacts (feature `pjrt`) |
+//! | [`coordinator`] | — | serving: router, dynamic batcher, workers, batched backends, metrics |
 //! | [`report`] | §VI | table/figure emitters for every paper exhibit |
+//!
+//! ## Build / test / bench
+//!
+//! ```bash
+//! cargo build --release && cargo test -q   # tier-1 gate (make verify)
+//! cargo bench --bench table3_simd_fc       # FC latency, batch ∈ {1, 8, 32}
+//! cargo bench --bench e2e_serving          # serving throughput vs max_batch
+//! ```
+//!
+//! The `expdot` engines are batched: [`expdot::CountingFc::forward_batch`]
+//! quantizes activations once per batch and register-blocks over output
+//! rows *and* batch columns (bit-identical to stacked batch-1 forwards);
+//! the serving backends forward whole batches through it.
 
 pub mod accel;
 pub mod coordinator;

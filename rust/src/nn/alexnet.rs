@@ -7,7 +7,7 @@
 //! python training side.
 
 use super::layer::{Conv2d, ExecPlan, HasQuantLayers, Linear, QLayerRef};
-use super::ops::{maxpool2x2, relu_inplace};
+use super::ops::{maxpool2x2, maxpool2x2_batch, relu_inplace};
 use super::trace::TraceStore;
 use super::weights::WeightMap;
 use crate::dnateq::LayerKind;
@@ -111,6 +111,46 @@ impl AlexNetMini {
         self.forward(image, plan, None).argmax()
     }
 
+    /// Forward a batch of images `[n, 3, 32, 32]` → logits `[n, 10]`:
+    /// every conv lowers onto one batch-wide GEMM
+    /// ([`Conv2d::forward_batch`]) and the FC stack runs with `n` as the
+    /// GEMM batch axis ([`super::layer::Linear::forward_batch`]).
+    /// Activation quantization is applied per image at every layer, so
+    /// results are bit-identical to image-at-a-time
+    /// [`AlexNetMini::forward`] under **every** plan, including
+    /// dynamically calibrated Uniform.
+    pub fn forward_batch(
+        &self,
+        images: &Tensor,
+        plan: &ExecPlan,
+        mut trace: Option<&mut TraceStore>,
+    ) -> Tensor {
+        assert_eq!(images.ndim(), 4, "bad batch shape");
+        assert_eq!(&images.shape()[1..], &[IN_CHANNELS, IN_HW, IN_HW], "bad input shape");
+        let n = images.shape()[0];
+        if n == 0 {
+            return Tensor::from_vec(&[0, NUM_CLASSES], Vec::new());
+        }
+        let mut x = images.clone();
+        for (i, conv) in self.convs.iter().enumerate() {
+            x = conv.forward_batch(&x, plan, trace.as_deref_mut());
+            relu_inplace(&mut x);
+            // Pools after conv1, conv2, conv5 (32→16→8→…→4).
+            if i == 0 || i == 1 || i == 4 {
+                x = maxpool2x2_batch(&x);
+            }
+        }
+        let flat = x.len() / n;
+        let mut h = x.reshape(&[n, flat]);
+        for (i, fc) in self.fcs.iter().enumerate() {
+            h = fc.forward_batch(&h, plan, trace.as_deref_mut());
+            if i + 1 < self.fcs.len() {
+                relu_inplace(&mut h);
+            }
+        }
+        h
+    }
+
     /// Multiply-accumulate count per forward pass (drives the accelerator
     /// simulation workload, §VI-C).
     pub fn macs_per_layer(&self) -> Vec<(String, u64)> {
@@ -187,6 +227,35 @@ mod tests {
         m.forward(&img, &ExecPlan::fp32(), Some(&mut trace));
         assert_eq!(trace.len(), 8);
         assert_eq!(trace.layer_names()[0], "conv1");
+    }
+
+    #[test]
+    fn forward_batch_matches_per_image() {
+        let m = AlexNetMini::random(140);
+        let mut rng = SplitMix64::new(141);
+        let batch = Tensor::rand_normal(&[4, 3, 32, 32], 0.0, 1.0, &mut rng);
+        // int8 exercises dynamically calibrated Uniform activation
+        // quantization: per-image calibration must make batched ==
+        // per-image bit-for-bit even with an outlier-heavy co-batch.
+        for plan in [ExecPlan::fp32(), ExecPlan::int8(&m)] {
+            let logits = m.forward_batch(&batch, &plan, None);
+            assert_eq!(logits.shape(), &[4, 10]);
+            for i in 0..4 {
+                let img = Tensor::from_vec(&[3, 32, 32], batch.batch(i).to_vec());
+                let want = m.forward(&img, &plan, None);
+                assert_eq!(logits.row(i), want.data(), "image {i}");
+            }
+        }
+        use crate::nn::eval::ImageModel;
+        let fp32 = ExecPlan::fp32();
+        assert_eq!(
+            m.predict_batch(&batch, &fp32),
+            (0..4)
+                .map(|i| m.predict(&Tensor::from_vec(&[3, 32, 32], batch.batch(i).to_vec()), &fp32))
+                .collect::<Vec<_>>()
+        );
+        let empty = m.forward_batch(&Tensor::zeros(&[0, 3, 32, 32]), &fp32, None);
+        assert_eq!(empty.shape(), &[0, 10]);
     }
 
     #[test]

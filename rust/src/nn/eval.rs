@@ -10,10 +10,11 @@ use super::layer::{ExecPlan, HasQuantLayers};
 use super::resnet::ResNetMini;
 use super::trace::TraceStore;
 use super::transformer::TransformerMini;
+use super::ops::argmax_slice;
 use crate::dataset::{ImageDataset, SeqDataset};
 use crate::dnateq::{CalibrationInput, LayerTensors};
 use crate::tensor::Tensor;
-use crate::util::parallel_map;
+use crate::util::parallel::{chunk_ranges, parallel_map};
 
 /// Unified image-classifier interface over the two CNN minis.
 pub trait ImageModel: HasQuantLayers + Send + Sync {
@@ -24,8 +25,18 @@ pub trait ImageModel: HasQuantLayers + Send + Sync {
         trace: Option<&mut TraceStore>,
     ) -> Tensor;
 
+    /// Batched logits `[n, 3, 32, 32]` → `[n, classes]`. Implementations
+    /// lower the whole batch onto batch-wide GEMMs.
+    fn logits_batch(&self, images: &Tensor, plan: &ExecPlan) -> Tensor;
+
     fn predict(&self, image: &Tensor, plan: &ExecPlan) -> usize {
         self.logits(image, plan, None).argmax()
+    }
+
+    /// Predicted classes for a batch `[n, 3, 32, 32]`.
+    fn predict_batch(&self, images: &Tensor, plan: &ExecPlan) -> Vec<usize> {
+        let logits = self.logits_batch(images, plan);
+        (0..logits.shape()[0]).map(|r| argmax_slice(logits.row(r))).collect()
     }
 }
 
@@ -33,22 +44,41 @@ impl ImageModel for AlexNetMini {
     fn logits(&self, image: &Tensor, plan: &ExecPlan, trace: Option<&mut TraceStore>) -> Tensor {
         self.forward(image, plan, trace)
     }
+
+    fn logits_batch(&self, images: &Tensor, plan: &ExecPlan) -> Tensor {
+        self.forward_batch(images, plan, None)
+    }
 }
 
 impl ImageModel for ResNetMini {
     fn logits(&self, image: &Tensor, plan: &ExecPlan, trace: Option<&mut TraceStore>) -> Tensor {
         self.forward(image, plan, trace)
     }
+
+    fn logits_batch(&self, images: &Tensor, plan: &ExecPlan) -> Tensor {
+        self.forward_batch(images, plan, None)
+    }
 }
 
-/// Top-1 accuracy of a classifier over a dataset (parallel over samples).
+/// Upper bound on the chunk size used by dataset-level evaluation:
+/// large enough to amortize per-batch overhead, small enough that
+/// chunks spread across cores. (`chunk_ranges` equalizes the pieces, so
+/// actual chunks may be smaller — e.g. 40 samples split 20 + 20.)
+pub const EVAL_BATCH: usize = 32;
+
+/// Top-1 accuracy of a classifier over a dataset. The dataset is
+/// evaluated in at-most-[`EVAL_BATCH`]-sized chunks (each one
+/// GEMM-batched forward), spread across worker threads. Chunking does
+/// not affect the numbers: the batched model paths quantize per image,
+/// so any chunk size reproduces per-image evaluation exactly.
 pub fn eval_classifier<M: ImageModel>(model: &M, data: &ImageDataset, plan: &ExecPlan) -> f64 {
     if data.is_empty() {
         return 0.0;
     }
-    let idx: Vec<usize> = (0..data.len()).collect();
-    let hits = parallel_map(&idx, |&i| {
-        usize::from(model.predict(&data.image(i), plan) == data.labels[i])
+    let ranges = chunk_ranges(data.len(), data.len().div_ceil(EVAL_BATCH));
+    let hits = parallel_map(&ranges, |&(lo, hi)| {
+        let preds = model.predict_batch(&data.batch_tensor(lo, hi), plan);
+        preds.iter().zip(&data.labels[lo..hi]).filter(|(p, l)| p == l).count()
     });
     hits.iter().sum::<usize>() as f64 / data.len() as f64
 }
@@ -199,6 +229,20 @@ mod tests {
         let d = ImageDataset::synthetic(16, 172);
         let acc = eval_classifier(&m, &d, &ExecPlan::fp32());
         assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn batched_eval_matches_per_image_eval() {
+        // 40 samples → two equalized chunks (20 + 20) under EVAL_BATCH.
+        let m = AlexNetMini::random(179);
+        let d = ImageDataset::synthetic(40, 180);
+        let plan = ExecPlan::fp32();
+        let batched = eval_classifier(&m, &d, &plan);
+        let serial = (0..d.len())
+            .filter(|&i| m.predict(&d.image(i), &plan) == d.labels[i])
+            .count() as f64
+            / d.len() as f64;
+        assert_eq!(batched, serial);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! bit-true counting engine in [`crate::expdot`] is validated against
 //! this separately and used on the serving path.
 
-use super::linalg::{gemm, gemm_bt, im2col};
+use super::linalg::{gemm, gemm_bt, gemm_bt_par, gemm_par, im2col, im2col_batch};
 use super::trace::TraceStore;
 use crate::dnateq::{ExpQuantParams, LayerKind, QuantConfig, UniformParams};
 use crate::tensor::Tensor;
@@ -39,6 +39,33 @@ impl ActQuant {
             ActQuant::None => None,
             ActQuant::Exp(p) => Some(p.roundtrip(x)),
             ActQuant::Uniform(n) => Some(UniformParams::calibrate(x, *n).roundtrip(x)),
+        }
+    }
+}
+
+/// Apply activation fake-quantization independently to every
+/// leading-axis slice of `x` (each slice is one request/image of shape
+/// `slice_shape`). Dynamically calibrated quantizers ([`ActQuant::Uniform`])
+/// then see exactly the tensor they would in the batch-1 path, so batched
+/// execution stays bit-identical to per-sample execution and one
+/// request's range never rescales a co-batched request. Fixed-parameter
+/// exponential quantization is element-wise, so it takes the copy-free
+/// whole-batch path — already bit-identical per slice.
+fn quantize_per_slice(act: &ActQuant, x: &Tensor, slice_shape: &[usize]) -> Option<Tensor> {
+    match act {
+        ActQuant::None => None,
+        ActQuant::Exp(_) => act.apply(x),
+        ActQuant::Uniform(_) => {
+            let n = x.shape()[0];
+            let mut data = Vec::with_capacity(x.len());
+            for i in 0..n {
+                let slice = Tensor::from_vec(slice_shape, x.batch(i).to_vec());
+                match act.apply(&slice) {
+                    Some(q) => data.extend_from_slice(q.data()),
+                    None => data.extend_from_slice(slice.data()),
+                }
+            }
+            Some(Tensor::from_vec(x.shape(), data))
         }
     }
 }
@@ -198,6 +225,57 @@ impl Conv2d {
         }
         out.reshape(&[self.c_out, oh, ow])
     }
+
+    /// Forward a whole batch `[n, c_in, h, w]` → `[n, c_out, oh, ow]`
+    /// through ONE im2col + GEMM instead of a GEMM per image.
+    ///
+    /// Activation fake-quantization is applied **per image** so every
+    /// plan — including dynamically calibrated [`ActQuant::Uniform`] —
+    /// produces bit-identical values to the image-at-a-time
+    /// [`Conv2d::forward`]; batching only regroups the GEMM.
+    pub fn forward_batch(
+        &self,
+        x: &Tensor,
+        plan: &ExecPlan,
+        trace: Option<&mut TraceStore>,
+    ) -> Tensor {
+        assert_eq!(x.ndim(), 4);
+        assert_eq!(x.shape()[1], self.c_in, "{}: channel mismatch", self.name);
+        let n = x.shape()[0];
+        let (h, w) = (x.shape()[2], x.shape()[3]);
+        let exec = plan.get(&self.name);
+        if let Some(t) = trace {
+            // Pre-quantization input, as in the batch-1 path.
+            t.record(&self.name, x.data());
+        }
+
+        let quantized = exec.and_then(|e| quantize_per_slice(&e.act, x, &[self.c_in, h, w]));
+        let input = quantized.as_ref().unwrap_or(x);
+
+        let (patches, oh, ow) =
+            im2col_batch(input.data(), n, self.c_in, h, w, self.k, self.k, self.stride, self.pad);
+        let weights = exec
+            .and_then(|e| e.weights_override.as_ref())
+            .unwrap_or(&self.weights);
+        // One GEMM for the whole batch: [c_out, taps] × [taps, n·oh·ow].
+        let flat = gemm_par(weights, &patches);
+
+        // Scatter image-major columns into [n, c_out, oh, ow] + bias.
+        let img_cols = oh * ow;
+        let fdata = flat.data();
+        let mut out = vec![0.0f32; n * self.c_out * img_cols];
+        for oc in 0..self.c_out {
+            let b = self.bias[oc];
+            for img in 0..n {
+                let src = &fdata[oc * n * img_cols + img * img_cols..][..img_cols];
+                let dst = &mut out[(img * self.c_out + oc) * img_cols..][..img_cols];
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d = s + b;
+                }
+            }
+        }
+        Tensor::from_vec(&[n, self.c_out, oh, ow], out)
+    }
 }
 
 /// Fully-connected layer, weights `[out, in]`.
@@ -223,7 +301,13 @@ impl Linear {
         self.weights.shape()[0]
     }
 
-    /// Forward `[rows, in]` → `[rows, out]`.
+    /// Forward `[rows, in]` → `[rows, out]`. The rows of one call share
+    /// a single activation-calibration tensor (dynamic
+    /// [`ActQuant::Uniform`] calibrates over the whole input) — correct
+    /// when the rows belong to one sample, e.g. the token positions of a
+    /// sequence. For rows that are *independent requests*, use
+    /// [`Linear::forward_batch`]. Large products fan out over worker
+    /// threads ([`gemm_bt_par`], bit-identical to the serial path).
     pub fn forward(
         &self,
         x: &Tensor,
@@ -241,7 +325,40 @@ impl Linear {
         let weights = exec
             .and_then(|e| e.weights_override.as_ref())
             .unwrap_or(&self.weights);
-        let mut out = gemm_bt(input, weights);
+        let mut out = gemm_bt_par(input, weights);
+        let (rows, cols) = (out.shape()[0], out.shape()[1]);
+        let data = out.data_mut();
+        for r in 0..rows {
+            for c in 0..cols {
+                data[r * cols + c] += self.bias[c];
+            }
+        }
+        out
+    }
+
+    /// Forward a batch of **independent** rows `[n, in]` → `[n, out]`:
+    /// activation fake-quantization is applied per row, so every plan —
+    /// including dynamically calibrated [`ActQuant::Uniform`] — produces
+    /// bit-identical values to `n` separate `[1, in]` forwards, while
+    /// the GEMM still runs once over the whole batch.
+    pub fn forward_batch(
+        &self,
+        x: &Tensor,
+        plan: &ExecPlan,
+        trace: Option<&mut TraceStore>,
+    ) -> Tensor {
+        assert_eq!(x.ndim(), 2);
+        assert_eq!(x.shape()[1], self.in_features(), "{}: feature mismatch", self.name);
+        let exec = plan.get(&self.name);
+        let xq = exec.and_then(|e| quantize_per_slice(&e.act, x, &[1, self.in_features()]));
+        let input = xq.as_ref().unwrap_or(x);
+        if let Some(t) = trace {
+            t.record(&self.name, x.data());
+        }
+        let weights = exec
+            .and_then(|e| e.weights_override.as_ref())
+            .unwrap_or(&self.weights);
+        let mut out = gemm_bt_par(input, weights);
         let (rows, cols) = (out.shape()[0], out.shape()[1]);
         let data = out.data_mut();
         for r in 0..rows {
@@ -340,6 +457,41 @@ mod tests {
         let y0 = conv.forward(&Tensor::zeros(&[3, 5, 5]), &ExecPlan::fp32(), None);
         assert!(y0.data()[..25].iter().all(|&v| v == 1.0));
         assert!(y0.data()[25..].iter().all(|&v| v == -1.0));
+    }
+
+    #[test]
+    fn conv_forward_batch_bit_matches_per_image() {
+        struct OneConv {
+            conv: Conv2d,
+        }
+        impl HasQuantLayers for OneConv {
+            fn model_name(&self) -> &str {
+                "oneconv"
+            }
+            fn quant_layers(&self) -> Vec<QLayerRef<'_>> {
+                vec![QLayerRef {
+                    name: &self.conv.name,
+                    kind: LayerKind::Conv,
+                    weights: &self.conv.weights,
+                }]
+            }
+        }
+        let mut rng = SplitMix64::new(119);
+        let w = Tensor::rand_normal(&[4, 3 * 9], 0.0, 0.5, &mut rng);
+        let m = OneConv { conv: Conv2d::new("c", w, vec![0.5, -0.5, 0.0, 1.0], 3, 3, 2, 1) };
+        let batch = Tensor::rand_normal(&[3, 3, 7, 5], 0.0, 1.0, &mut rng);
+        // Uniform act-quant calibrates dynamically per input: the batched
+        // path must still match image-at-a-time bit-for-bit.
+        for plan in [ExecPlan::fp32(), ExecPlan::int8(&m)] {
+            let got = m.conv.forward_batch(&batch, &plan, None);
+            assert_eq!(got.shape()[0], 3);
+            for i in 0..3 {
+                let img = Tensor::from_vec(&[3, 7, 5], batch.batch(i).to_vec());
+                let want = m.conv.forward(&img, &plan, None);
+                assert_eq!(got.batch(i), want.data(), "image {i}");
+                assert_eq!(&got.shape()[1..], want.shape());
+            }
+        }
     }
 
     #[test]

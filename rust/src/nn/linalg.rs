@@ -5,6 +5,11 @@
 //! onto it.
 
 use crate::tensor::Tensor;
+use crate::util::parallel::{chunk_ranges, parallel_map, suggested_pieces};
+
+/// Minimum FLOPs per parallel work item before the `_par` GEMM variants
+/// fan out over `util::parallel::parallel_map`.
+const PAR_MIN_FLOPS: usize = 1 << 21;
 
 /// `C[m,n] = A[m,k] · B[k,n]` — blocked i-k-j loop with 4-wide unrolled
 /// accumulation over `j`; the compiler vectorizes the inner row AXPY.
@@ -63,6 +68,32 @@ fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// [`gemm`] fanned out over `A`'s rows with `parallel_map` when the
+/// product is large enough to amortize thread spawn; row-splitting keeps
+/// every output element's accumulation order — and therefore the result
+/// bits — identical to the serial path.
+pub fn gemm_par(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "gemm inner dimension mismatch: {k} vs {k2}");
+    let ranges = chunk_ranges(m, suggested_pieces(m * k * n, PAR_MIN_FLOPS));
+    if ranges.len() <= 1 {
+        return gemm(a, b);
+    }
+    let blocks = parallel_map(&ranges, |&(r0, r1)| {
+        let mut c = vec![0.0f32; (r1 - r0) * n];
+        gemm_into(&a.data()[r0 * k..r1 * k], b.data(), &mut c, r1 - r0, k, n);
+        c
+    });
+    let mut c = Vec::with_capacity(m * n);
+    for block in blocks {
+        c.extend_from_slice(&block);
+    }
+    Tensor::from_vec(&[m, n], c)
+}
+
 /// `C = A · Bᵀ` for `B[n,k]` — the natural layout for FC layers whose
 /// weights are stored `[out, in]`.
 pub fn gemm_bt(a: &Tensor, b_t: &Tensor) -> Tensor {
@@ -78,6 +109,37 @@ pub fn gemm_bt(a: &Tensor, b_t: &Tensor) -> Tensor {
         for (j, cv) in crow.iter_mut().enumerate() {
             *cv = dot(arow, b_t.row(j));
         }
+    }
+    Tensor::from_vec(&[m, n], c)
+}
+
+/// [`gemm_bt`] fanned out over `A`'s rows (the batch axis of an FC
+/// layer) when the product is large; per-element dot order is unchanged,
+/// so results are bit-identical to the serial path.
+pub fn gemm_bt_par(a: &Tensor, b_t: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b_t.ndim(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, k2) = (b_t.shape()[0], b_t.shape()[1]);
+    assert_eq!(k, k2, "gemm_bt inner dimension mismatch");
+    let ranges = chunk_ranges(m, suggested_pieces(m * k * n, PAR_MIN_FLOPS));
+    if ranges.len() <= 1 {
+        return gemm_bt(a, b_t);
+    }
+    let blocks = parallel_map(&ranges, |&(r0, r1)| {
+        let mut block = vec![0.0f32; (r1 - r0) * n];
+        for (ri, i) in (r0..r1).enumerate() {
+            let arow = a.row(i);
+            let crow = &mut block[ri * n..(ri + 1) * n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                *cv = dot(arow, b_t.row(j));
+            }
+        }
+        block
+    });
+    let mut c = Vec::with_capacity(m * n);
+    for block in blocks {
+        c.extend_from_slice(&block);
     }
     Tensor::from_vec(&[m, n], c)
 }
@@ -147,6 +209,59 @@ pub fn im2col(
     (Tensor::from_vec(&[rows, cols], out), oh, ow)
 }
 
+/// Batched im2col: flat NCHW batch `[n, c_in, h, w]` → one
+/// `[kh·kw·c_in, n·oh·ow]` patch matrix with columns grouped image-major
+/// (`col = img·oh·ow + pos`), so an entire batch of convolutions lowers
+/// onto a single GEMM instead of one GEMM per image.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_batch(
+    input: &[f32],
+    n: usize,
+    c_in: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> (Tensor, usize, usize) {
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let rows = c_in * kh * kw;
+    let img_cols = oh * ow;
+    let cols = n * img_cols;
+    let img_stride = c_in * h * w;
+    debug_assert_eq!(input.len(), n * img_stride);
+    let mut out = vec![0.0f32; rows * cols];
+    for img in 0..n {
+        let data = &input[img * img_stride..(img + 1) * img_stride];
+        for c in 0..c_in {
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    let r = (c * kh + ky) * kw + kx;
+                    let orow = &mut out[r * cols + img * img_cols..r * cols + (img + 1) * img_cols];
+                    for oy in 0..oh {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue; // zero padding already in place
+                        }
+                        let in_row =
+                            &data[(c * h + iy as usize) * w..(c * h + iy as usize + 1) * w];
+                        for ox in 0..ow {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            orow[oy * ow + ox] = in_row[ix as usize];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (Tensor::from_vec(&[rows, cols], out), oh, ow)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,6 +295,40 @@ mod tests {
         let got = gemm_bt(&a, &bt);
         for (x, y) in got.data().iter().zip(want.data()) {
             assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn parallel_gemms_bit_match_serial() {
+        let mut rng = SplitMix64::new(104);
+        // Big enough to cross the parallel threshold (m·k·n > 2^21).
+        let a = Tensor::rand_normal(&[96, 160], 0.0, 1.0, &mut rng);
+        let b = Tensor::rand_normal(&[160, 192], 0.0, 1.0, &mut rng);
+        let bt = Tensor::rand_normal(&[192, 160], 0.0, 1.0, &mut rng);
+        assert_eq!(gemm_par(&a, &b).data(), gemm(&a, &b).data());
+        assert_eq!(gemm_bt_par(&a, &bt).data(), gemm_bt(&a, &bt).data());
+        // Tiny products stay on (and match) the serial path.
+        let sa = Tensor::rand_normal(&[3, 4], 0.0, 1.0, &mut rng);
+        let sb = Tensor::rand_normal(&[4, 5], 0.0, 1.0, &mut rng);
+        assert_eq!(gemm_par(&sa, &sb).data(), gemm(&sa, &sb).data());
+    }
+
+    #[test]
+    fn im2col_batch_stacks_per_image_patches() {
+        let mut rng = SplitMix64::new(105);
+        let (n, c, h, w, k, stride, pad) = (3, 2, 5, 4, 3, 1, 1);
+        let batch = Tensor::rand_normal(&[n, c, h, w], 0.0, 1.0, &mut rng);
+        let (m, oh, ow) = im2col_batch(batch.data(), n, c, h, w, k, k, stride, pad);
+        assert_eq!(m.shape(), &[c * k * k, n * oh * ow]);
+        let img_cols = oh * ow;
+        for img in 0..n {
+            let (single, soh, sow) = im2col(batch.batch(img), c, h, w, k, k, stride, pad);
+            assert_eq!((soh, sow), (oh, ow));
+            for r in 0..c * k * k {
+                let got = &m.data()[r * n * img_cols + img * img_cols..][..img_cols];
+                let want = &single.data()[r * img_cols..(r + 1) * img_cols];
+                assert_eq!(got, want, "img {img} row {r}");
+            }
         }
     }
 

@@ -89,6 +89,36 @@ pub fn maxpool2x2(t: &Tensor) -> Tensor {
     Tensor::from_vec(&[c, oh, ow], out)
 }
 
+/// Batched 2×2 max pooling: `[n, c, h, w]` → `[n, c, h/2, w/2]`.
+/// Pools directly over the batch buffer (no per-image copies — this
+/// sits on the batched CNN hot path); same window math as
+/// [`maxpool2x2`], so results are bit-identical per image.
+pub fn maxpool2x2_batch(t: &Tensor) -> Tensor {
+    assert_eq!(t.ndim(), 4);
+    let (n, c, h, w) = (t.shape()[0], t.shape()[1], t.shape()[2], t.shape()[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; n * c * oh * ow];
+    let data = t.data();
+    for i in 0..n {
+        let img = &data[i * c * h * w..(i + 1) * c * h * w];
+        let dst = &mut out[i * c * oh * ow..(i + 1) * c * oh * ow];
+        for ch in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            m = m.max(img[(ch * h + oy * 2 + dy) * w + ox * 2 + dx]);
+                        }
+                    }
+                    dst[(ch * oh + oy) * ow + ox] = m;
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[n, c, oh, ow], out)
+}
+
 /// Global average pooling: `[c, h, w]` → `[c]`.
 pub fn global_avg_pool(t: &Tensor) -> Tensor {
     assert_eq!(t.ndim(), 3);
@@ -98,6 +128,35 @@ pub fn global_avg_pool(t: &Tensor) -> Tensor {
         .map(|ch| t.data()[ch * h * w..(ch + 1) * h * w].iter().sum::<f32>() / hw)
         .collect();
     Tensor::from_vec(&[c], out)
+}
+
+/// Batched global average pooling: `[n, c, h, w]` → `[n, c]`.
+pub fn global_avg_pool_batch(t: &Tensor) -> Tensor {
+    assert_eq!(t.ndim(), 4);
+    let (n, c, h, w) = (t.shape()[0], t.shape()[1], t.shape()[2], t.shape()[3]);
+    let hw = (h * w) as f32;
+    let mut out = Vec::with_capacity(n * c);
+    for i in 0..n {
+        let img = t.batch(i);
+        for ch in 0..c {
+            out.push(img[ch * h * w..(ch + 1) * h * w].iter().sum::<f32>() / hw);
+        }
+    }
+    Tensor::from_vec(&[n, c], out)
+}
+
+/// Index of the maximum element of a slice (row-wise argmax helper for
+/// batched logits).
+pub fn argmax_slice(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
 }
 
 /// Embedding lookup: token ids → `[len, d_model]`.
@@ -174,6 +233,28 @@ mod tests {
         let t = Tensor::from_vec(&[2, 1, 2], vec![1.0, 3.0, 10.0, 20.0]);
         let g = global_avg_pool(&t);
         assert_eq!(g.data(), &[2.0, 15.0]);
+    }
+
+    #[test]
+    fn batched_pools_match_per_image() {
+        use crate::tensor::SplitMix64;
+        let mut rng = SplitMix64::new(61);
+        let batch = Tensor::rand_normal(&[3, 2, 4, 6], 0.0, 1.0, &mut rng);
+        let mp = maxpool2x2_batch(&batch);
+        assert_eq!(mp.shape(), &[3, 2, 2, 3]);
+        let gap = global_avg_pool_batch(&batch);
+        assert_eq!(gap.shape(), &[3, 2]);
+        for i in 0..3 {
+            let img = Tensor::from_vec(&[2, 4, 6], batch.batch(i).to_vec());
+            assert_eq!(mp.batch(i), maxpool2x2(&img).data());
+            assert_eq!(gap.batch(i), global_avg_pool(&img).data());
+        }
+    }
+
+    #[test]
+    fn argmax_slice_finds_peak() {
+        assert_eq!(argmax_slice(&[0.1, 0.9, 0.3, 0.95, 0.2]), 3);
+        assert_eq!(argmax_slice(&[1.0]), 0);
     }
 
     #[test]

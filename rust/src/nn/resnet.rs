@@ -8,7 +8,7 @@
 //! conv/relu/add.
 
 use super::layer::{Conv2d, ExecPlan, HasQuantLayers, Linear, QLayerRef};
-use super::ops::{global_avg_pool, relu_inplace};
+use super::ops::{global_avg_pool, global_avg_pool_batch, relu_inplace};
 use super::trace::TraceStore;
 use super::weights::WeightMap;
 use crate::dnateq::LayerKind;
@@ -37,6 +37,26 @@ impl BasicBlock {
         let h = self.c2.forward(&h, plan, trace.as_deref_mut());
         let shortcut = match &self.proj {
             Some(p) => p.forward(x, plan, trace.as_deref_mut()),
+            None => x.clone(),
+        };
+        let mut out = h.add(&shortcut);
+        relu_inplace(&mut out);
+        out
+    }
+
+    /// Batched block forward: `[n, c, h, w]` in and out, convs lowered
+    /// onto batch-wide GEMMs.
+    fn forward_batch(
+        &self,
+        x: &Tensor,
+        plan: &ExecPlan,
+        mut trace: Option<&mut TraceStore>,
+    ) -> Tensor {
+        let mut h = self.c1.forward_batch(x, plan, trace.as_deref_mut());
+        relu_inplace(&mut h);
+        let h = self.c2.forward_batch(&h, plan, trace.as_deref_mut());
+        let shortcut = match &self.proj {
+            Some(p) => p.forward_batch(x, plan, trace.as_deref_mut()),
             None => x.clone(),
         };
         let mut out = h.add(&shortcut);
@@ -146,6 +166,31 @@ impl ResNetMini {
         self.forward(image, plan, None).argmax()
     }
 
+    /// Forward a batch `[n, 3, 32, 32]` → logits `[n, 10]` with every
+    /// conv lowered onto one batch-wide GEMM and per-image activation
+    /// quantization throughout — bit-identical to image-at-a-time
+    /// [`ResNetMini::forward`] under every plan.
+    pub fn forward_batch(
+        &self,
+        images: &Tensor,
+        plan: &ExecPlan,
+        mut trace: Option<&mut TraceStore>,
+    ) -> Tensor {
+        assert_eq!(images.ndim(), 4, "bad batch shape");
+        assert_eq!(&images.shape()[1..], &[IN_CHANNELS, IN_HW, IN_HW], "bad input shape");
+        let n = images.shape()[0];
+        if n == 0 {
+            return Tensor::from_vec(&[0, NUM_CLASSES], Vec::new());
+        }
+        let mut x = self.stem.forward_batch(images, plan, trace.as_deref_mut());
+        relu_inplace(&mut x);
+        for block in &self.blocks {
+            x = block.forward_batch(&x, plan, trace.as_deref_mut());
+        }
+        let pooled = global_avg_pool_batch(&x);
+        self.head.forward_batch(&pooled, plan, trace)
+    }
+
     /// MAC count per layer for the accelerator workload.
     pub fn macs_per_layer(&self) -> Vec<(String, u64)> {
         let mut out = Vec::new();
@@ -212,6 +257,21 @@ mod tests {
         let m = ResNetMini::random(143);
         // 1 stem + (2+2)·3 block convs + 2 projections + 1 fc = 16.
         assert_eq!(m.quant_layers().len(), 16);
+    }
+
+    #[test]
+    fn forward_batch_matches_per_image() {
+        let m = ResNetMini::random(150);
+        let mut rng = SplitMix64::new(151);
+        let batch = Tensor::rand_normal(&[3, 3, 32, 32], 0.0, 1.0, &mut rng);
+        let plan = ExecPlan::fp32();
+        let logits = m.forward_batch(&batch, &plan, None);
+        assert_eq!(logits.shape(), &[3, 10]);
+        for i in 0..3 {
+            let img = Tensor::from_vec(&[3, 32, 32], batch.batch(i).to_vec());
+            let want = m.forward(&img, &plan, None);
+            assert_eq!(logits.row(i), want.data(), "image {i}");
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@ use super::trace::TraceStore;
 use super::weights::WeightMap;
 use crate::dnateq::LayerKind;
 use crate::tensor::{SplitMix64, Tensor};
+use crate::util::parallel_map;
 use anyhow::Result;
 
 pub const VOCAB: usize = 32;
@@ -321,6 +322,19 @@ impl TransformerMini {
         tgt
     }
 
+    /// Greedy-decode a batch of source sequences, data-parallel over the
+    /// sequences — the serving batcher's unit of work for the translator
+    /// backend (autoregressive decodes have independent lengths, so the
+    /// parallelism axis is the batch, not the GEMM).
+    pub fn greedy_decode_batch(
+        &self,
+        srcs: &[Vec<usize>],
+        max_len: usize,
+        plan: &ExecPlan,
+    ) -> Vec<Vec<usize>> {
+        parallel_map(srcs, |src| self.greedy_decode(src, max_len, plan))
+    }
+
     /// MAC count per quantizable layer for one (src, tgt) pair of length
     /// `l_src`/`l_tgt` — the accelerator workload generator.
     pub fn macs_per_layer(&self, l_src: usize, l_tgt: usize) -> Vec<(String, u64)> {
@@ -421,6 +435,21 @@ mod tests {
         assert!(out.len() <= 13);
         assert_eq!(out[0], BOS);
         assert!(out.iter().all(|&t| t < VOCAB));
+    }
+
+    #[test]
+    fn greedy_decode_batch_matches_sequential() {
+        let m = TransformerMini::random(157);
+        let plan = ExecPlan::fp32();
+        let srcs = vec![
+            vec![BOS, 3, 4, EOS],
+            vec![BOS, 9, 8, 7, EOS],
+            vec![BOS, 5, EOS],
+        ];
+        let batched = m.greedy_decode_batch(&srcs, 10, &plan);
+        for (src, got) in srcs.iter().zip(&batched) {
+            assert_eq!(got, &m.greedy_decode(src, 10, &plan));
+        }
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! Real PJRT runtime (`--features pjrt`; requires a vendored `xla` crate).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. Text (not
+//! serialized protos) is the interchange format — jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids.
+
+use super::ArgValue;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+impl ArgValue {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            ArgValue::F32(shape, data) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            ArgValue::I32(shape, data) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// A PJRT client (CPU) that compiles model executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path.file_stem().and_then(|s| s.to_str()).unwrap_or("model").to_string(),
+        })
+    }
+}
+
+/// A compiled model artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with the given arguments; returns the tuple elements as
+    /// f32 tensors (all our artifacts are lowered with
+    /// `return_tuple=True`).
+    pub fn run(&self, args: &[ArgValue]) -> Result<Vec<Tensor>> {
+        let literals = args.iter().map(|a| a.to_literal()).collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit
+                    .array_shape()
+                    .map_err(|e| anyhow::anyhow!("{e:?}"))?
+                    .dims()
+                    .iter()
+                    .map(|&d| d as usize)
+                    .collect::<Vec<_>>();
+                // Outputs may be f32 or i32; widen i32 to f32 tensors.
+                let data: Vec<f32> = match lit.to_vec::<f32>() {
+                    Ok(v) => v,
+                    Err(_) => lit
+                        .to_vec::<i32>()
+                        .map_err(|e| anyhow::anyhow!("{e:?}"))?
+                        .into_iter()
+                        .map(|x| x as f32)
+                        .collect(),
+                };
+                Ok(Tensor::from_vec(&shape, data))
+            })
+            .collect()
+    }
+
+    /// Convenience: single f32 input, single output.
+    pub fn run1(&self, input: &Tensor) -> Result<Tensor> {
+        let mut out = self.run(&[ArgValue::from_tensor(input)])?;
+        anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
+        Ok(out.remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Executable round-trips against real artifacts live in
+    // rust/tests/integration.rs; these tests are artifact-free.
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(rt.device_count() >= 1);
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn loading_missing_file_errors() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.load_hlo("/nonexistent/model.hlo.txt").is_err());
+    }
+}

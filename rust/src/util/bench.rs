@@ -3,8 +3,12 @@
 //! Warm-up, calibrated iteration count targeting a fixed measurement
 //! window, and robust statistics (median + MAD) over per-batch timings.
 //! Used by every `rust/benches/*` target and by `repro report` when it
-//! regenerates the paper's timing tables.
+//! regenerates the paper's timing tables. Results serialize to JSON
+//! ([`BenchResult::to_json`] / [`write_json`]) so BENCH output is
+//! machine-readable alongside the text summaries.
 
+use super::json::Json;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark case.
@@ -40,6 +44,28 @@ impl BenchResult {
             self.iters
         )
     }
+
+    /// Machine-readable form (times in milliseconds per iteration).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str())
+            .set("median_ms", self.per_iter_ms())
+            .set("mean_ms", self.mean.as_secs_f64() * 1e3)
+            .set("mad_ms", self.mad.as_secs_f64() * 1e3)
+            .set("iters", self.iters);
+        o
+    }
+}
+
+/// Write a bench run as a pretty-printed JSON array (creating parent
+/// directories) — the machine-readable companion of the text summaries.
+pub fn write_json<P: AsRef<Path>>(path: P, results: &[BenchResult]) -> anyhow::Result<()> {
+    let arr = Json::Arr(results.iter().map(|r| r.to_json()).collect());
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path.as_ref(), arr.encode_pretty())?;
+    Ok(())
 }
 
 /// Benchmark `f`, targeting ~`target_ms` of measurement after a short
@@ -131,5 +157,27 @@ mod tests {
             black_box(3u32.pow(7));
         });
         assert!(r.summary().contains("mycase"));
+    }
+
+    #[test]
+    fn json_roundtrip_and_file_emission() {
+        use crate::util::TempDir;
+        let r = BenchResult {
+            name: "fc1024 b=8".into(),
+            median: Duration::from_micros(1500),
+            mean: Duration::from_micros(1600),
+            mad: Duration::from_micros(20),
+            iters: 42,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "fc1024 b=8");
+        assert!((j.get("median_ms").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-9);
+        assert_eq!(j.get("iters").unwrap().as_usize().unwrap(), 42);
+
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("reports/bench.json");
+        write_json(&path, &[r]).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 1);
     }
 }

@@ -11,7 +11,7 @@ pub mod parallel;
 pub mod prop;
 pub mod tmp;
 
-pub use bench::{bench, BenchResult};
+pub use bench::{bench, write_json, BenchResult};
 pub use json::Json;
-pub use parallel::parallel_map;
+pub use parallel::{chunk_ranges, parallel_map, parallel_row_blocks, suggested_pieces};
 pub use tmp::TempDir;

@@ -1,19 +1,32 @@
 //! Data-parallel map over std threads (rayon stand-in).
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+thread_local! {
+    /// Set while the current thread is a `parallel_map` worker: nested
+    /// calls (e.g. a parallel GEMM inside a parallel dataset-eval chunk)
+    /// run serially instead of multiplying thread counts.
+    static IN_PARALLEL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
 
 /// Apply `f` to every item of `items` across up to `available_parallelism`
 /// worker threads, preserving order. `f` must be `Sync` (called from many
 /// threads) and the items are handed out by an atomic work-stealing index,
-/// so uneven per-item cost balances well.
+/// so uneven per-item cost balances well. Calls from inside another
+/// `parallel_map` worker degrade to a serial map (the outer call already
+/// owns the cores). Calls from independent threads (e.g. two coordinator
+/// workers) each spawn up to a core's worth of workers — mild, bounded
+/// oversubscription (`callers × cores`) that the OS time-slices; per-call
+/// scoped threads join before return, so it never accumulates.
 pub fn parallel_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
     let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(n);
-    if workers <= 1 {
+    if workers <= 1 || IN_PARALLEL_WORKER.with(|flag| flag.get()) {
         return items.iter().map(&f).collect();
     }
 
@@ -22,18 +35,69 @@ pub fn parallel_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -
 
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                IN_PARALLEL_WORKER.with(|flag| flag.set(true));
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(&items[i]);
+                    *out[i].lock().unwrap() = Some(r);
                 }
-                let r = f(&items[i]);
-                *out[i].lock().unwrap() = Some(r);
             });
         }
     });
 
     out.into_iter().map(|m| m.into_inner().unwrap().expect("worker filled every slot")).collect()
+}
+
+/// Split `0..n` into at most `pieces` contiguous, non-empty ranges —
+/// the work items handed to [`parallel_map`] by the batched GEMM paths.
+pub fn chunk_ranges(n: usize, pieces: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let pieces = pieces.clamp(1, n);
+    let per = n.div_ceil(pieces);
+    (0..pieces)
+        .map(|k| (k * per, ((k + 1) * per).min(n)))
+        .filter(|&(lo, hi)| lo < hi)
+        .collect()
+}
+
+/// Run `kernel` over contiguous ranges of `0..rows` — in parallel when
+/// `total_work` supports at least `min_work` units per piece — and
+/// gather the per-range `[batch, width]` row-major blocks into one
+/// `[batch, rows]` buffer. The shared fan-out/gather scaffolding of the
+/// batched GEMM engines; `kernel(j0, j1)` must return a `[batch, j1-j0]`
+/// block.
+pub fn parallel_row_blocks(
+    rows: usize,
+    batch: usize,
+    total_work: usize,
+    min_work: usize,
+    kernel: impl Fn(usize, usize) -> Vec<f32> + Sync,
+) -> Vec<f32> {
+    let ranges = chunk_ranges(rows, suggested_pieces(total_work, min_work));
+    let blocks = parallel_map(&ranges, |&(j0, j1)| kernel(j0, j1));
+    let mut out = vec![0.0f32; batch * rows];
+    for (&(j0, j1), block) in ranges.iter().zip(&blocks) {
+        let width = j1 - j0;
+        for b in 0..batch {
+            out[b * rows + j0..b * rows + j1].copy_from_slice(&block[b * width..(b + 1) * width]);
+        }
+    }
+    out
+}
+
+/// How many parallel pieces a workload of `total_work` units supports:
+/// keeps at least `min_work` units per piece (1 == stay serial, avoiding
+/// thread-spawn overhead on small layers) and caps at 2× the available
+/// cores so the atomic work-stealing index can still balance.
+pub fn suggested_pieces(total_work: usize, min_work: usize) -> usize {
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    (total_work / min_work.max(1)).clamp(1, workers * 2)
 }
 
 #[cfg(test)]
@@ -56,6 +120,62 @@ mod tests {
     #[test]
     fn single_item() {
         assert_eq!(parallel_map(&[7], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn nested_parallel_map_degrades_to_serial_and_stays_correct() {
+        let outer: Vec<usize> = (0..8).collect();
+        let got = parallel_map(&outer, |&x| {
+            let inner: Vec<usize> = (0..50).collect();
+            parallel_map(&inner, |&y| x * 100 + y).iter().sum::<usize>()
+        });
+        let want: Vec<usize> = (0..8).map(|x| (0..50).map(|y| x * 100 + y).sum()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly_once() {
+        for (n, pieces) in [(10usize, 3usize), (1, 8), (64, 64), (7, 2), (100, 1)] {
+            let ranges = chunk_ranges(n, pieces);
+            assert!(ranges.len() <= pieces);
+            let mut seen = 0usize;
+            let mut prev_hi = 0usize;
+            for &(lo, hi) in &ranges {
+                assert_eq!(lo, prev_hi, "ranges must be contiguous");
+                assert!(lo < hi);
+                seen += hi - lo;
+                prev_hi = hi;
+            }
+            assert_eq!(seen, n, "n={n} pieces={pieces}");
+        }
+        assert!(chunk_ranges(0, 4).is_empty());
+    }
+
+    #[test]
+    fn parallel_row_blocks_gathers_strided_output() {
+        // kernel writes value row*1000 + col so the gather is checkable.
+        let (rows, batch) = (7, 3);
+        let out = parallel_row_blocks(rows, batch, usize::MAX / 4, 1, |j0, j1| {
+            let width = j1 - j0;
+            let mut block = vec![0.0f32; batch * width];
+            for b in 0..batch {
+                for (jj, j) in (j0..j1).enumerate() {
+                    block[b * width + jj] = (b * 1000 + j) as f32;
+                }
+            }
+            block
+        });
+        for b in 0..batch {
+            for j in 0..rows {
+                assert_eq!(out[b * rows + j], (b * 1000 + j) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn suggested_pieces_serial_for_small_work() {
+        assert_eq!(suggested_pieces(100, 1_000_000), 1);
+        assert!(suggested_pieces(usize::MAX / 2, 1) >= 1);
     }
 
     #[test]

@@ -1,0 +1,85 @@
+//! Batched-engine integration: serving through the coordinator with the
+//! batched backends must reproduce batch-1 results request-for-request,
+//! and the batched engines must stay bit-true to stacked batch-1
+//! forwards at shapes large enough to engage the parallel row fan-out.
+
+use dnateq::coordinator::{
+    AlexNetBackend, BatcherConfig, Coordinator, CoordinatorConfig, Output, Payload,
+};
+use dnateq::dataset::ImageDataset;
+use dnateq::dnateq::ExpQuantParams;
+use dnateq::expdot::{CountingFc, Int8Fc};
+use dnateq::nn::{AlexNetMini, ExecPlan};
+use dnateq::tensor::{SplitMix64, Tensor};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn batched_serving_matches_per_image_predictions() {
+    let model = AlexNetMini::random(401);
+    let data = ImageDataset::synthetic(24, 402);
+    let plan = ExecPlan::fp32();
+    let want: Vec<usize> =
+        (0..data.len()).map(|i| model.predict(&data.image(i), &plan)).collect();
+    let c = Coordinator::start(
+        Arc::new(AlexNetBackend::fp32(model, "fp32")),
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(4) },
+            workers: 2,
+            queue_depth: 64,
+        },
+    );
+    let rxs: Vec<_> =
+        (0..data.len()).map(|i| c.submit(Payload::Image(data.image(i))).unwrap()).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        assert_eq!(rx.recv().unwrap().output, Output::ClassId(want[i]), "request {i}");
+    }
+    let snap = c.shutdown();
+    assert_eq!(snap.completed, 24);
+}
+
+#[test]
+fn batched_engines_bit_match_stacked_forwards_at_parallel_scale() {
+    // 256×512×33 MACs crosses the engines' parallel fan-out threshold;
+    // the odd batch size exercises the tail batch tile.
+    let mut rng = SplitMix64::new(403);
+    let (outf, inf, batch) = (256, 512, 33);
+    let w = Tensor::rand_signed_exponential(&[outf, inf], 3.0, &mut rng);
+    let x = Tensor::rand_signed_exponential(&[batch, inf], 1.0, &mut rng);
+
+    let wp = ExpQuantParams::init_for_tensor(&w, 4);
+    let mut ap = ExpQuantParams { base: wp.base, alpha: 1.0, beta: 0.0, n_bits: 4 };
+    ap.refit_scale_offset(&x);
+    let counting = CountingFc::new(&w, wp, ap, None);
+    let got_counting = counting.forward_batch(&x);
+    let int8 = Int8Fc::new(&w, None);
+    let got_int8 = int8.forward_batch(&x);
+    assert_eq!(got_counting.shape(), &[batch, outf]);
+    assert_eq!(got_int8.shape(), &[batch, outf]);
+    for b in 0..batch {
+        let row = Tensor::from_vec(&[1, inf], x.row(b).to_vec());
+        assert_eq!(got_counting.row(b), counting.forward(&row).data(), "counting row {b}");
+        assert_eq!(got_int8.row(b), int8.forward(&row).data(), "int8 row {b}");
+    }
+}
+
+#[test]
+fn batched_resnet_serving_stays_consistent() {
+    use dnateq::coordinator::ResNetBackend;
+    use dnateq::nn::ResNetMini;
+    let model = ResNetMini::random(404);
+    let data = ImageDataset::synthetic(6, 405);
+    let plan = ExecPlan::fp32();
+    let want: Vec<usize> =
+        (0..data.len()).map(|i| model.predict(&data.image(i), &plan)).collect();
+    let c = Coordinator::start(
+        Arc::new(ResNetBackend::fp32(model, "resnet-fp32")),
+        CoordinatorConfig::default(),
+    );
+    let rxs: Vec<_> =
+        (0..data.len()).map(|i| c.submit(Payload::Image(data.image(i))).unwrap()).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        assert_eq!(rx.recv().unwrap().output, Output::ClassId(want[i]), "request {i}");
+    }
+    c.shutdown();
+}
