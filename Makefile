@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: all build test verify bench lint clean pytest
+.PHONY: all build test verify bench bench-gate lint clean pytest
 
 all: build
 
@@ -20,6 +20,11 @@ bench:
 	$(CARGO) bench --no-run
 	$(CARGO) bench --bench table3_simd_fc
 	$(CARGO) bench --bench e2e_serving
+
+# CI bench-regression gate (same invocation the bench-smoke job runs).
+bench-gate:
+	$(CARGO) run --release --bin bench_gate -- \
+		--out artifacts/reports/BENCH_ci.json --baseline ci/bench_baseline.json
 
 lint:
 	$(CARGO) fmt --check

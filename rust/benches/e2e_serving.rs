@@ -14,7 +14,7 @@
 use dnateq::artifact_path;
 use dnateq::coordinator::{
     AlexNetBackend, Backend, BatcherConfig, Coordinator, CoordinatorConfig, CountingFcBackend,
-    Payload,
+    ModelRegistry, Payload,
 };
 use dnateq::dataset::ImageDataset;
 use dnateq::dnateq::ExpQuantParams;
@@ -40,18 +40,60 @@ fn drive(
         queue_depth: 512,
     };
     let c = Coordinator::start(backend, cfg);
+    let payloads: Vec<Payload> =
+        (0..data.len().min(n)).map(|i| Payload::Image(data.image(i))).collect();
+    let per = c.drive(&payloads, n).expect("serving drive");
+    let snap = c.shutdown();
+    println!("{label:<28} {}", snap.summary());
+    BenchResult {
+        name: label.to_string(),
+        median: per,
+        mean: per,
+        mad: Duration::ZERO,
+        iters: n as u64,
+    }
+}
+
+/// Multi-model mixed-traffic sweep: the registry serves the engine model
+/// and the counting-FC model side by side; requests interleave
+/// round-robin so both batchers fill under concurrent load.
+fn drive_registry(
+    engine: Arc<AlexNetBackend>,
+    counting: Arc<CountingFcBackend>,
+    max_batch: usize,
+    data: &ImageDataset,
+    n: usize,
+) -> BenchResult {
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+        workers: 2,
+        queue_depth: 512,
+    };
+    let registry = ModelRegistry::new();
+    registry.register_swappable("alexnet_mini", engine, cfg).unwrap();
+    registry.register("counting_fc", counting, cfg).unwrap();
+    let models = ["alexnet_mini", "counting_fc"];
     let t0 = Instant::now();
     let mut rxs = Vec::with_capacity(n);
     for i in 0..n {
-        rxs.push(c.submit(Payload::Image(data.image(i % data.len()))).unwrap());
+        let model = models[i % models.len()];
+        rxs.push(registry.submit(model, Payload::Image(data.image(i % data.len()))).unwrap());
     }
     for rx in rxs {
         rx.recv().unwrap();
     }
     let per = t0.elapsed() / n as u32;
-    let snap = c.shutdown();
-    println!("{label:<28} {}", snap.summary());
-    BenchResult { name: label.to_string(), median: per, mean: per, mad: Duration::ZERO, iters: n as u64 }
+    let snaps = registry.shutdown();
+    for (model, snap) in &snaps {
+        println!("  registry/{model:<20} {}", snap.summary());
+    }
+    BenchResult {
+        name: format!("registry mixed max_batch={max_batch}"),
+        median: per,
+        mean: per,
+        mad: Duration::ZERO,
+        iters: n as u64,
+    }
 }
 
 fn main() {
@@ -110,6 +152,14 @@ fn main() {
             &data,
             96,
         ));
+    }
+
+    // Multi-model registry: engine + counting models under interleaved
+    // mixed traffic (the `serve --models` path, measured end to end).
+    println!("registry mixed traffic (alexnet_mini + counting_fc), 96 requests:");
+    for max_batch in [1usize, 8, 32] {
+        drive_registry(engine.clone(), counting.clone(), max_batch, &data, 16); // warm-up
+        results.push(drive_registry(engine.clone(), counting.clone(), max_batch, &data, 96));
     }
 
     let path = artifact_path("reports/bench_e2e_serving.json");

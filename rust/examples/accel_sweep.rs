@@ -22,7 +22,8 @@ fn main() {
     ] {
         for bits in 3..=7u8 {
             let cmp = Comparison::run(&cfg, &em, &shapes, &uniform_bits(&shapes, bits));
-            println!("{:<14} {:>5} {:>9.2} {:>9.2}", name, bits, cmp.speedup(), cmp.energy_savings());
+            let (speedup, savings) = (cmp.speedup(), cmp.energy_savings());
+            println!("{name:<14} {bits:>5} {speedup:>9.2} {savings:>9.2}");
         }
         println!();
     }

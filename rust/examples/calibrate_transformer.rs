@@ -35,7 +35,12 @@ fn main() -> Result<()> {
     for src in &data.src {
         let hyp = model.greedy_decode(src, src.len() + 4, &plan);
         let payload = &src[..src.len() - 1];
-        println!("src {:?}\n  → quantized decode {:?}\n  → reference        {:?}", payload, &hyp[1..], translate(payload));
+        println!(
+            "src {:?}\n  → quantized decode {:?}\n  → reference        {:?}",
+            payload,
+            &hyp[1..],
+            translate(payload)
+        );
     }
     Ok(())
 }

@@ -185,7 +185,9 @@ pub fn simulate_network(
     let layers = shapes
         .iter()
         .zip(bits)
-        .map(|(s, &n)| simulate_layer(cfg, em, scheme, s, if scheme == Scheme::Int8 { 8 } else { n }))
+        .map(|(s, &n)| {
+            simulate_layer(cfg, em, scheme, s, if scheme == Scheme::Int8 { 8 } else { n })
+        })
         .collect();
     NetworkSim { scheme, layers }
 }

@@ -1,0 +1,229 @@
+//! `bench_gate` — CI bench-regression gate for the batched serving path.
+//!
+//! Runs the fixed-shape counting-FC sweep (batcher `max_batch` ∈
+//! {1, 8, 32}, FC 3072→256, 64 requests) end-to-end through the
+//! coordinator, emits the machine-readable result JSON, and compares
+//! against a committed baseline: the gate **fails when throughput
+//! regresses by more than `--tolerance`** (default 15%) on any case, or
+//! when the batch-32-vs-1 speedup — the PR-1 batched hot path — drops
+//! below `--min-speedup`.
+//!
+//! ```bash
+//! cargo run --release --bin bench_gate -- \
+//!     --out artifacts/reports/BENCH_ci.json --baseline ci/bench_baseline.json
+//! # refresh the baseline on the reference machine:
+//! cargo run --release --bin bench_gate -- --baseline ci/bench_baseline.json --update-baseline
+//! ```
+
+use dnateq::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, CountingFcBackend, Payload,
+};
+use dnateq::dataset::ImageDataset;
+use dnateq::dnateq::ExpQuantParams;
+use dnateq::expdot::CountingFc;
+use dnateq::tensor::{SplitMix64, Tensor};
+use dnateq::util::bench::{write_json, BenchResult};
+use dnateq::util::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+const IN_FEATURES: usize = 3 * 32 * 32;
+const OUT_FEATURES: usize = 256;
+const REQUESTS: usize = 64;
+const SWEEP: [usize; 3] = [1, 8, 32];
+
+struct Opts {
+    out: Option<String>,
+    baseline: Option<String>,
+    update_baseline: bool,
+    tolerance: f64,
+    min_speedup: f64,
+}
+
+fn parse_opts() -> Opts {
+    let mut o = Opts {
+        out: None,
+        baseline: None,
+        update_baseline: false,
+        tolerance: 0.15,
+        min_speedup: 0.8,
+    };
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let value = |i: usize| {
+            args.get(i + 1).cloned().unwrap_or_else(|| {
+                eprintln!("flag {} needs a value", args[i]);
+                std::process::exit(2);
+            })
+        };
+        match args[i].as_str() {
+            "--out" => {
+                o.out = Some(value(i));
+                i += 2;
+            }
+            "--baseline" => {
+                o.baseline = Some(value(i));
+                i += 2;
+            }
+            "--update-baseline" => {
+                o.update_baseline = true;
+                i += 1;
+            }
+            "--tolerance" => {
+                o.tolerance = value(i).parse().expect("--tolerance is a fraction, e.g. 0.15");
+                i += 2;
+            }
+            "--min-speedup" => {
+                o.min_speedup = value(i).parse().expect("--min-speedup is a ratio, e.g. 0.8");
+                i += 2;
+            }
+            other => {
+                eprintln!("unknown flag `{other}`");
+                std::process::exit(2);
+            }
+        }
+    }
+    o
+}
+
+/// Drive `n` requests through a fresh coordinator at one batcher
+/// setting; per-request wall time becomes the case median. The
+/// measurement itself is [`Coordinator::drive`] — the same harness the
+/// serving benches use, so the gate guards exactly what they report.
+fn drive(
+    backend: Arc<CountingFcBackend>,
+    max_batch: usize,
+    data: &ImageDataset,
+    n: usize,
+) -> Duration {
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
+        workers: 2,
+        queue_depth: 256,
+    };
+    let c = Coordinator::start(backend, cfg);
+    let payloads: Vec<Payload> =
+        (0..data.len().min(n)).map(|i| Payload::Image(data.image(i))).collect();
+    let per = c.drive(&payloads, n).expect("bench drive");
+    c.shutdown();
+    per
+}
+
+fn run_sweep() -> Vec<BenchResult> {
+    let mut rng = SplitMix64::new(0xC1_BE7C);
+    let w = Tensor::rand_signed_exponential(&[OUT_FEATURES, IN_FEATURES], 3.0, &mut rng);
+    let x_cal = Tensor::rand_signed_exponential(&[1, IN_FEATURES], 1.0, &mut rng);
+    let wp = ExpQuantParams::init_for_tensor(&w, 4);
+    let mut ap = ExpQuantParams { base: wp.base, alpha: 1.0, beta: 0.0, n_bits: 4 };
+    ap.refit_scale_offset(&x_cal);
+    let backend = Arc::new(CountingFcBackend { fc: CountingFc::new(&w, wp, ap, None) });
+    let data = ImageDataset::synthetic(32, 0xC1DA7A);
+
+    let mut results = Vec::new();
+    for max_batch in SWEEP {
+        drive(Arc::clone(&backend), max_batch, &data, 16); // warm-up
+        // Three timed repetitions; keep the fastest (least-noise) run.
+        let best = (0..3)
+            .map(|_| drive(Arc::clone(&backend), max_batch, &data, REQUESTS))
+            .min()
+            .unwrap();
+        let r = BenchResult {
+            name: format!("ci-fc {IN_FEATURES}x{OUT_FEATURES} max_batch={max_batch}"),
+            median: best,
+            mean: best,
+            mad: Duration::ZERO,
+            iters: REQUESTS as u64,
+        };
+        println!("{}", r.summary());
+        results.push(r);
+    }
+    results
+}
+
+fn median_of<'a>(results: &'a [BenchResult], suffix: &str) -> Option<&'a BenchResult> {
+    results.iter().find(|r| r.name.ends_with(suffix))
+}
+
+fn load_baseline(path: &str) -> Vec<(String, f64)> {
+    let j = match Json::read_file(path) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("cannot read baseline {path}: {e}");
+            std::process::exit(1);
+        }
+    };
+    j.as_arr()
+        .expect("baseline is a JSON array")
+        .iter()
+        .map(|case| {
+            let name = case.req("name").unwrap().as_str().unwrap().to_string();
+            let median = case.req("median_ms").unwrap().as_f64().unwrap();
+            (name, median)
+        })
+        .collect()
+}
+
+fn main() {
+    let opts = parse_opts();
+    let results = run_sweep();
+
+    // Machine-independent guard: the batched hot path must actually beat
+    // (or at minimum match, within tolerance) unbatched serving.
+    let b1 = median_of(&results, "max_batch=1").unwrap().median.as_secs_f64();
+    let b32 = median_of(&results, "max_batch=32").unwrap().median.as_secs_f64();
+    let speedup = b1 / b32.max(1e-12);
+    let floor = opts.min_speedup;
+    println!("batching speedup (max_batch 32 vs 1): {speedup:.2}x (floor {floor:.2}x)");
+
+    if let Some(out) = &opts.out {
+        write_json(out, &results).expect("writing bench JSON");
+        println!("JSON -> {out}");
+    }
+
+    let mut failures = Vec::new();
+    if speedup < opts.min_speedup {
+        failures.push(format!(
+            "batched serving speedup {speedup:.2}x fell below the {:.2}x floor",
+            opts.min_speedup
+        ));
+    }
+
+    if let Some(baseline_path) = &opts.baseline {
+        if opts.update_baseline {
+            write_json(baseline_path, &results).expect("writing baseline JSON");
+            println!("baseline refreshed -> {baseline_path}");
+        } else {
+            for (name, base_ms) in load_baseline(baseline_path) {
+                let Some(cur) = results.iter().find(|r| r.name == name) else {
+                    failures.push(format!("baseline case `{name}` missing from this run"));
+                    continue;
+                };
+                let cur_ms = cur.per_iter_ms();
+                // Throughput ∝ 1/median: a >tolerance throughput drop
+                // means cur_ms > base_ms / (1 - tolerance).
+                let limit_ms = base_ms / (1.0 - opts.tolerance);
+                let verdict = if cur_ms > limit_ms { "REGRESSED" } else { "ok" };
+                println!(
+                    "{name:<40} {cur_ms:>9.3} ms vs baseline {base_ms:>9.3} ms (limit {limit_ms:>9.3}) {verdict}"
+                );
+                if cur_ms > limit_ms {
+                    failures.push(format!(
+                        "`{name}`: {cur_ms:.3} ms/req vs baseline {base_ms:.3} ms/req \
+                         (> {:.0}% throughput regression)",
+                        opts.tolerance * 100.0
+                    ));
+                }
+            }
+        }
+    }
+
+    if !failures.is_empty() {
+        eprintln!("bench gate FAILED:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+    println!("bench gate passed");
+}

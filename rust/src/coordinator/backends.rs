@@ -6,6 +6,7 @@
 //! so the batcher is a real throughput lever rather than a grouping
 //! formality.
 
+use super::registry::SwappableBackend;
 use super::request::{Output, Payload};
 use super::server::Backend;
 use crate::dnateq::QuantConfig;
@@ -15,6 +16,7 @@ use crate::nn::ops::argmax_slice;
 use crate::nn::{AlexNetMini, ExecPlan, ResNetMini, TransformerMini};
 use crate::runtime::Executable;
 use crate::tensor::Tensor;
+use std::sync::{Arc, RwLock};
 
 /// Gather the image payloads of a mixed batch into one flat data vector
 /// (`idx.len() * flat_len` elements) plus the positions they came from,
@@ -37,30 +39,55 @@ fn gather_images(batch: &[Payload], flat_len: usize) -> (Vec<usize>, Vec<f32>) {
 }
 
 /// Classifier backend over the rust f32/fake-quant engine.
+///
+/// The execution plan sits behind an `RwLock<Arc<_>>` so the registry
+/// can hot-swap a recalibrated plan while requests are in flight: each
+/// batch clones the current `Arc` once on entry, so a whole batch always
+/// runs under one consistent plan and in-flight batches finish on the
+/// plan they started with.
 pub struct ClassifierBackend<M: ImageModel + 'static> {
     pub model: M,
-    pub plan: ExecPlan,
+    /// Plan + its label behind ONE lock so a swap publishes both
+    /// atomically (a reader can never see a label from a different plan).
+    plan: RwLock<PlanSlot>,
     pub label: String,
+}
+
+struct PlanSlot {
+    plan: Arc<ExecPlan>,
+    label: String,
 }
 
 impl<M: ImageModel + 'static> ClassifierBackend<M> {
     pub fn fp32(model: M, label: &str) -> Self {
-        Self { model, plan: ExecPlan::fp32(), label: label.to_string() }
+        let slot = PlanSlot { plan: Arc::new(ExecPlan::fp32()), label: "fp32".to_string() };
+        Self { model, plan: RwLock::new(slot), label: label.to_string() }
     }
 
     pub fn quantized(model: M, cfg: &QuantConfig, label: &str) -> Self {
-        let plan = ExecPlan::exp(&model, cfg);
-        Self { model, plan, label: label.to_string() }
+        let slot =
+            PlanSlot { plan: Arc::new(ExecPlan::exp(&model, cfg)), label: plan_label_of(cfg) };
+        Self { model, plan: RwLock::new(slot), label: label.to_string() }
     }
+
+    /// The plan the next batch will run under.
+    pub fn current_plan(&self) -> Arc<ExecPlan> {
+        Arc::clone(&self.plan.read().unwrap().plan)
+    }
+}
+
+fn plan_label_of(cfg: &QuantConfig) -> String {
+    format!("dnateq thr_w={:.2}% ({})", cfg.thr_w * 100.0, cfg.checksum_hex())
 }
 
 impl<M: ImageModel + 'static> Backend for ClassifierBackend<M> {
     fn infer(&self, batch: &[Payload]) -> Vec<Output> {
+        let plan = self.current_plan();
         let (idx, data) = gather_images(batch, 3 * 32 * 32);
         let mut outputs = vec![Output::ClassId(usize::MAX); batch.len()]; // wrong modality
         if !idx.is_empty() {
             let images = Tensor::from_vec(&[idx.len(), 3, 32, 32], data);
-            let preds = self.model.predict_batch(&images, &self.plan);
+            let preds = self.model.predict_batch(&images, &plan);
             for (&i, p) in idx.iter().zip(preds) {
                 outputs[i] = Output::ClassId(p);
             }
@@ -70,6 +97,24 @@ impl<M: ImageModel + 'static> Backend for ClassifierBackend<M> {
 
     fn name(&self) -> &str {
         &self.label
+    }
+}
+
+impl<M: ImageModel + 'static> SwappableBackend for ClassifierBackend<M> {
+    fn swap_plan(&self, cfg: &QuantConfig) -> anyhow::Result<()> {
+        cfg.validate()?;
+        // Build the new plan outside the lock (it round-trips every
+        // weight tensor), then publish plan + label in one store.
+        let slot = PlanSlot {
+            plan: Arc::new(ExecPlan::exp(&self.model, cfg)),
+            label: plan_label_of(cfg),
+        };
+        *self.plan.write().unwrap() = slot;
+        Ok(())
+    }
+
+    fn plan_label(&self) -> String {
+        self.plan.read().unwrap().label.clone()
     }
 }
 
@@ -259,8 +304,9 @@ mod tests {
         assert_eq!(out.len(), 4);
         assert_eq!(out[1], Output::ClassId(usize::MAX));
         // Batched predictions must equal per-image predictions, in place.
+        let plan = backend.current_plan();
         for (slot, img_idx) in [(0usize, 0usize), (2, 1), (3, 2)] {
-            let want = backend.model.predict(&data.image(img_idx), &backend.plan);
+            let want = backend.model.predict(&data.image(img_idx), &plan);
             assert_eq!(out[slot], Output::ClassId(want), "slot {slot}");
         }
     }
@@ -286,6 +332,24 @@ mod tests {
             let want = backend.fc.forward(&flat).argmax();
             assert_eq!(*o, Output::ClassId(want), "payload {i}");
         }
+    }
+
+    #[test]
+    fn classifier_plan_hot_swap_switches_served_plan() {
+        use crate::dnateq::{config_for_threshold, SearchOptions};
+        use crate::nn::collect_image_calibration;
+        let model = AlexNetMini::random(210);
+        let data = ImageDataset::synthetic(4, 211);
+        let backend = AlexNetBackend::fp32(model, "swap");
+        assert_eq!(backend.plan_label(), "fp32");
+        let input = collect_image_calibration(&backend.model, &data.take(2));
+        let cfg = config_for_threshold(&input, 0.08, &SearchOptions::default());
+        backend.swap_plan(&cfg).unwrap();
+        assert!(backend.plan_label().starts_with("dnateq"), "{}", backend.plan_label());
+        // Predictions after the swap match the quantized plan exactly.
+        let out = backend.infer(&[Payload::Image(data.image(0))]);
+        let want = backend.model.predict(&data.image(0), &backend.current_plan());
+        assert_eq!(out[0], Output::ClassId(want));
     }
 
     #[test]

@@ -77,16 +77,20 @@ mod tests {
 
     fn mk_request(id: u64) -> (Request, mpsc::Receiver<super::super::request::Response>) {
         let (tx, rx) = mpsc::sync_channel(1);
-        (
-            Request { id, payload: Payload::Seq(vec![1, 2]), submitted: Instant::now(), respond_to: tx },
-            rx,
-        )
+        let req = Request {
+            id,
+            payload: Payload::Seq(vec![1, 2]),
+            submitted: Instant::now(),
+            respond_to: tx,
+        };
+        (req, rx)
     }
 
     #[test]
     fn batches_respect_max_batch() {
         let (tx, rx) = mpsc::channel();
-        let b = Batcher::new(rx, BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(50) });
+        let b =
+            Batcher::new(rx, BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(50) });
         let mut keep = Vec::new();
         for i in 0..7 {
             let (r, rx) = mk_request(i);

@@ -11,6 +11,8 @@ pub struct Metrics {
     completed: AtomicU64,
     batches: AtomicU64,
     batch_items: AtomicU64,
+    /// Plan hot-swaps applied to the backend behind this sink.
+    swaps: AtomicU64,
     /// End-to-end latencies (seconds).
     e2e: Mutex<Vec<f64>>,
     /// Queue-wait latencies (seconds).
@@ -24,6 +26,7 @@ impl Default for Metrics {
             completed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batch_items: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
             e2e: Mutex::new(Vec::new()),
             queue: Mutex::new(Vec::new()),
         }
@@ -46,6 +49,11 @@ impl Metrics {
         self.queue.lock().unwrap().push(queue_s);
     }
 
+    /// Count one plan hot-swap (recorded by the model registry).
+    pub fn record_swap(&self) {
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let e2e = self.e2e.lock().unwrap().clone();
         let queue = self.queue.lock().unwrap().clone();
@@ -55,6 +63,7 @@ impl Metrics {
             completed,
             throughput_rps: completed as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
             avg_batch: self.batch_items.load(Ordering::Relaxed) as f64 / batches as f64,
+            swaps: self.swaps.load(Ordering::Relaxed),
             e2e: Percentiles::of(e2e),
             queue: Percentiles::of(queue),
         }
@@ -94,14 +103,17 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     pub throughput_rps: f64,
     pub avg_batch: f64,
+    /// Plan hot-swaps applied while serving.
+    pub swaps: u64,
     pub e2e: Percentiles,
     pub queue: Percentiles,
 }
 
 impl MetricsSnapshot {
     pub fn summary(&self) -> String {
+        let swaps = if self.swaps > 0 { format!(", {} swaps", self.swaps) } else { String::new() };
         format!(
-            "{} req, {:.1} req/s, avg batch {:.2}, e2e p50/p95/p99 = {:.2}/{:.2}/{:.2} ms",
+            "{} req, {:.1} req/s, avg batch {:.2}{swaps}, e2e p50/p95/p99 = {:.2}/{:.2}/{:.2} ms",
             self.completed,
             self.throughput_rps,
             self.avg_batch,
@@ -146,5 +158,16 @@ mod tests {
         assert!((s.avg_batch - 3.0).abs() < 1e-9);
         assert!((s.e2e.p50 - 0.010).abs() < 1e-9);
         assert!(s.summary().contains("6 req"));
+        assert!(!s.summary().contains("swaps"));
+    }
+
+    #[test]
+    fn swaps_are_counted_and_surfaced() {
+        let m = Metrics::new();
+        m.record_swap();
+        m.record_swap();
+        let s = m.snapshot();
+        assert_eq!(s.swaps, 2);
+        assert!(s.summary().contains("2 swaps"), "{}", s.summary());
     }
 }

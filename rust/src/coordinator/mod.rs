@@ -2,10 +2,16 @@
 //! pool over a pluggable inference [`server::Backend`] (rust engine,
 //! exponential counting engine, or a PJRT-compiled AOT artifact), with
 //! per-request latency metrics and bounded-queue backpressure.
+//!
+//! The [`registry::ModelRegistry`] layers multi-model serving on top:
+//! N named models, each with its own batcher/worker pool and metrics,
+//! routed by model name, with atomic quantization-plan hot-swap for
+//! backends that support it.
 
 pub mod backends;
 pub mod batcher;
 pub mod metrics;
+pub mod registry;
 pub mod request;
 pub mod server;
 
@@ -15,5 +21,6 @@ pub use backends::{
 };
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::{Metrics, MetricsSnapshot, Percentiles};
+pub use registry::{ModelRegistry, SwappableBackend};
 pub use request::{Output, Payload, Request, Response};
 pub use server::{Backend, Coordinator, CoordinatorConfig, EchoBackend};

@@ -1,0 +1,246 @@
+//! Multi-model serving registry.
+//!
+//! Owns N named models, each with its own coordinator (submission queue
+//! → dynamic batcher → worker pool → backend) and its own metrics
+//! stream. Requests are routed by model name; because every model keeps
+//! a private FIFO queue, interleaved multi-model traffic preserves
+//! per-model submission order end to end.
+//!
+//! Backends registered through [`ModelRegistry::register_swappable`]
+//! additionally support **atomic plan hot-swap**: the registry hands the
+//! new [`QuantConfig`] to the backend, which publishes the rebuilt plan
+//! with a single `Arc` store. In-flight requests are neither dropped nor
+//! reordered — a batch that already started keeps the plan it began
+//! with, and the next batch picks up the new one.
+
+use super::metrics::MetricsSnapshot;
+use super::request::{Payload, Response};
+use super::server::{Backend, Coordinator, CoordinatorConfig};
+use crate::dnateq::QuantConfig;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, RwLock};
+
+/// A backend whose quantization plan can be replaced while serving.
+pub trait SwappableBackend: Backend {
+    /// Atomically install the plan derived from `cfg`. Must not block
+    /// inference for longer than a pointer swap.
+    fn swap_plan(&self, cfg: &QuantConfig) -> Result<()>;
+
+    /// Short description of the plan currently being served.
+    fn plan_label(&self) -> String;
+}
+
+struct ModelEntry {
+    coordinator: Coordinator,
+    swap: Option<Arc<dyn SwappableBackend>>,
+    backend_name: String,
+}
+
+/// Registry of named serving models.
+#[derive(Default)]
+pub struct ModelRegistry {
+    entries: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a fixed-plan backend under `name` and start its
+    /// coordinator. Errors if the name is taken.
+    pub fn register(
+        &self,
+        name: &str,
+        backend: Arc<dyn Backend>,
+        cfg: CoordinatorConfig,
+    ) -> Result<()> {
+        let backend_name = backend.name().to_string();
+        let coordinator = Coordinator::start(backend, cfg);
+        self.insert(name, coordinator, None, backend_name)
+    }
+
+    /// Register a hot-swappable backend under `name`. The registry keeps
+    /// a handle for [`Self::swap_plan`] alongside the coordinator.
+    pub fn register_swappable(
+        &self,
+        name: &str,
+        backend: Arc<dyn SwappableBackend>,
+        cfg: CoordinatorConfig,
+    ) -> Result<()> {
+        let backend_name = backend.name().to_string();
+        let coordinator = Coordinator::start(Arc::clone(&backend), cfg);
+        self.insert(name, coordinator, Some(backend), backend_name)
+    }
+
+    fn insert(
+        &self,
+        name: &str,
+        coordinator: Coordinator,
+        swap: Option<Arc<dyn SwappableBackend>>,
+        backend_name: String,
+    ) -> Result<()> {
+        let mut entries = self.entries.write().unwrap();
+        if entries.contains_key(name) {
+            bail!("model `{name}` is already registered");
+        }
+        entries.insert(name.to_string(), Arc::new(ModelEntry { coordinator, swap, backend_name }));
+        Ok(())
+    }
+
+    fn entry(&self, model: &str) -> Result<Arc<ModelEntry>> {
+        let entries = self.entries.read().unwrap();
+        match entries.get(model) {
+            Some(e) => Ok(Arc::clone(e)),
+            None => {
+                let known: Vec<String> = entries.keys().cloned().collect();
+                bail!("unknown model `{model}`; registered: {known:?}")
+            }
+        }
+    }
+
+    /// Registered model names, sorted.
+    pub fn models(&self) -> Vec<String> {
+        self.entries.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Name the backend under `model` reports for itself.
+    pub fn backend_name(&self, model: &str) -> Result<String> {
+        Ok(self.entry(model)?.backend_name.clone())
+    }
+
+    /// Plan label of a swappable model (errors for fixed backends).
+    pub fn plan_label(&self, model: &str) -> Result<String> {
+        let entry = self.entry(model)?;
+        match &entry.swap {
+            Some(b) => Ok(b.plan_label()),
+            None => bail!("model `{model}` has a fixed plan"),
+        }
+    }
+
+    /// Route a payload to `model`; returns its response channel.
+    pub fn submit(&self, model: &str, payload: Payload) -> Result<Receiver<Response>> {
+        self.entry(model)?.coordinator.submit(payload)
+    }
+
+    /// Route a payload to `model` and block for the response.
+    pub fn submit_wait(&self, model: &str, payload: Payload) -> Result<Response> {
+        self.entry(model)?.coordinator.submit_wait(payload)
+    }
+
+    /// Hot-swap the quantization plan of a running model.
+    pub fn swap_plan(&self, model: &str, cfg: &QuantConfig) -> Result<()> {
+        let entry = self.entry(model)?;
+        match &entry.swap {
+            Some(b) => {
+                b.swap_plan(cfg)?;
+                entry.coordinator.metrics_handle().record_swap();
+                Ok(())
+            }
+            None => bail!(
+                "model `{model}` (backend `{}`) does not support plan hot-swap",
+                entry.backend_name
+            ),
+        }
+    }
+
+    /// Live metrics of one model.
+    pub fn metrics(&self, model: &str) -> Result<MetricsSnapshot> {
+        Ok(self.entry(model)?.coordinator.metrics())
+    }
+
+    /// Live metrics of every model.
+    pub fn metrics_all(&self) -> BTreeMap<String, MetricsSnapshot> {
+        let entries = self.entries.read().unwrap();
+        entries.iter().map(|(k, e)| (k.clone(), e.coordinator.metrics())).collect()
+    }
+
+    /// Drain and stop every model's workers, returning final metrics.
+    pub fn shutdown(self) -> BTreeMap<String, MetricsSnapshot> {
+        let entries = std::mem::take(&mut *self.entries.write().unwrap());
+        let mut out = BTreeMap::new();
+        for (name, arc) in entries {
+            // `shutdown(self)` takes the registry by value, so no &self
+            // method (the only place entry Arcs are cloned, and they
+            // never outlive the call) can still be running — the map
+            // holds the last reference.
+            let entry = Arc::try_unwrap(arc).ok().expect("no live entry references at shutdown");
+            out.insert(name, entry.coordinator.shutdown());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::server::EchoBackend;
+    use super::*;
+    use crate::coordinator::request::Output;
+
+    fn reg_with_echo(names: &[&str]) -> ModelRegistry {
+        let reg = ModelRegistry::new();
+        for n in names {
+            reg.register(n, Arc::new(EchoBackend { delay_us: 0 }), CoordinatorConfig::default())
+                .unwrap();
+        }
+        reg
+    }
+
+    #[test]
+    fn routes_by_model_name() {
+        let reg = reg_with_echo(&["a", "b"]);
+        assert_eq!(reg.models(), vec!["a".to_string(), "b".to_string()]);
+        let ra = reg.submit_wait("a", Payload::Seq(vec![1])).unwrap();
+        let rb = reg.submit_wait("b", Payload::Seq(vec![2])).unwrap();
+        assert_eq!(ra.output, Output::Tokens(vec![1]));
+        assert_eq!(rb.output, Output::Tokens(vec![2]));
+        let snaps = reg.shutdown();
+        assert_eq!(snaps["a"].completed, 1);
+        assert_eq!(snaps["b"].completed, 1);
+    }
+
+    #[test]
+    fn unknown_model_lists_registered_names() {
+        let reg = reg_with_echo(&["alexnet"]);
+        let err = reg.submit_wait("resnet", Payload::Seq(vec![1])).unwrap_err().to_string();
+        assert!(err.contains("alexnet"), "err: {err}");
+        reg.shutdown();
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let reg = reg_with_echo(&["m"]);
+        let dup = reg.register(
+            "m",
+            Arc::new(EchoBackend { delay_us: 0 }),
+            CoordinatorConfig::default(),
+        );
+        assert!(dup.is_err());
+        reg.shutdown();
+    }
+
+    #[test]
+    fn fixed_backend_refuses_swap() {
+        let reg = reg_with_echo(&["m"]);
+        let cfg = QuantConfig { model: "m".into(), thr_w: 0.04, layers: vec![] };
+        let err = reg.swap_plan("m", &cfg).unwrap_err().to_string();
+        assert!(err.contains("hot-swap"), "err: {err}");
+        assert!(reg.plan_label("m").is_err());
+        reg.shutdown();
+    }
+
+    #[test]
+    fn per_model_metrics_are_isolated() {
+        let reg = reg_with_echo(&["a", "b"]);
+        for _ in 0..5 {
+            reg.submit_wait("a", Payload::Seq(vec![9])).unwrap();
+        }
+        let all = reg.metrics_all();
+        assert_eq!(all["a"].completed, 5);
+        assert_eq!(all["b"].completed, 0);
+        assert_eq!(reg.metrics("a").unwrap().completed, 5);
+        reg.shutdown();
+    }
+}

@@ -105,8 +105,35 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow::anyhow!("worker dropped response"))
     }
 
+    /// Submit `n` requests cycling through `payloads`, then block until
+    /// every response arrives; returns mean wall time per request. The
+    /// shared measurement core of the serving benches and the CI bench
+    /// gate (one implementation so the gate measures exactly what the
+    /// bench reports).
+    pub fn drive(&self, payloads: &[Payload], n: usize) -> Result<std::time::Duration> {
+        if payloads.is_empty() || n == 0 {
+            anyhow::bail!("drive needs at least one payload and one request");
+        }
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(n);
+        for i in 0..n {
+            rxs.push(self.submit(payloads[i % payloads.len()].clone())?);
+        }
+        for rx in rxs {
+            rx.recv().map_err(|_| anyhow::anyhow!("worker dropped response"))?;
+        }
+        Ok(t0.elapsed() / n as u32)
+    }
+
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// Shared handle to the live metrics sink, so owners layered above
+    /// the coordinator (the model registry) can record their own events
+    /// — e.g. plan hot-swaps — into the same per-model stream.
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
     }
 
     /// Drain and stop all workers, returning final metrics.
@@ -150,7 +177,8 @@ mod tests {
 
     #[test]
     fn serves_and_echoes() {
-        let c = Coordinator::start(Arc::new(EchoBackend { delay_us: 0 }), CoordinatorConfig::default());
+        let c =
+            Coordinator::start(Arc::new(EchoBackend { delay_us: 0 }), CoordinatorConfig::default());
         let resp = c.submit_wait(Payload::Seq(vec![4, 5, 6])).unwrap();
         assert_eq!(resp.output, Output::Tokens(vec![4, 5, 6]));
         let snap = c.shutdown();
@@ -162,7 +190,10 @@ mod tests {
         let c = Arc::new(Coordinator::start(
             Arc::new(EchoBackend { delay_us: 50 }),
             CoordinatorConfig {
-                batcher: BatcherConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait: std::time::Duration::from_millis(1),
+                },
                 workers: 3,
                 queue_depth: 64,
             },
@@ -188,8 +219,21 @@ mod tests {
     }
 
     #[test]
+    fn drive_cycles_payloads_and_answers_all() {
+        let c =
+            Coordinator::start(Arc::new(EchoBackend { delay_us: 0 }), CoordinatorConfig::default());
+        let payloads = vec![Payload::Seq(vec![1]), Payload::Seq(vec![2])];
+        let per = c.drive(&payloads, 10).unwrap();
+        assert!(per > std::time::Duration::ZERO);
+        assert!(c.drive(&[], 4).is_err());
+        let snap = c.shutdown();
+        assert_eq!(snap.completed, 10);
+    }
+
+    #[test]
     fn shutdown_rejects_new_requests() {
-        let c = Coordinator::start(Arc::new(EchoBackend { delay_us: 0 }), CoordinatorConfig::default());
+        let c =
+            Coordinator::start(Arc::new(EchoBackend { delay_us: 0 }), CoordinatorConfig::default());
         let snap = c.shutdown();
         assert_eq!(snap.completed, 0);
     }
@@ -200,7 +244,10 @@ mod tests {
         let c = Arc::new(Coordinator::start(
             Arc::new(EchoBackend { delay_us: 2000 }),
             CoordinatorConfig {
-                batcher: BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(4) },
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_wait: std::time::Duration::from_millis(4),
+                },
                 workers: 1,
                 queue_depth: 256,
             },

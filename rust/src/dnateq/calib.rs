@@ -66,37 +66,37 @@ pub fn config_for_threshold(
     opts: &SearchOptions,
 ) -> QuantConfig {
     let layers: Vec<LayerQuant> = parallel_map(&input.layers, |lt| {
-            // First-layer special case: 10× tighter (§VI-E).
-            let layer_thr_w = if lt.is_first { thr_w / 10.0 } else { thr_w };
-            let thr_act = activation_threshold(
-                layer_thr_w,
-                lt.acts.mean_abs() as f64,
-                lt.weights.mean_abs() as f64,
-            );
-            let res = search_layer(&lt.weights, &lt.acts, layer_thr_w, thr_act, opts);
-            LayerQuant {
-                name: lt.name.clone(),
-                kind: lt.kind,
-                n_bits: res.n_bits,
-                base: res.base,
-                weights: TensorQuant {
-                    alpha: res.w_params.alpha,
-                    beta: res.w_params.beta,
-                    rmae: res.rmae_w,
-                    elems: lt.weights.len(),
-                },
-                acts: TensorQuant {
-                    alpha: res.a_params.alpha,
-                    beta: res.a_params.beta,
-                    rmae: res.rmae_a,
-                    elems: lt.acts.len(),
-                },
-                seeded_by_weights: res.seeded_by_weights,
-                rss_w: res.rss_w,
-                rss_a: res.rss_a,
-                converged: res.converged,
-            }
-        });
+        // First-layer special case: 10× tighter (§VI-E).
+        let layer_thr_w = if lt.is_first { thr_w / 10.0 } else { thr_w };
+        let thr_act = activation_threshold(
+            layer_thr_w,
+            lt.acts.mean_abs() as f64,
+            lt.weights.mean_abs() as f64,
+        );
+        let res = search_layer(&lt.weights, &lt.acts, layer_thr_w, thr_act, opts);
+        LayerQuant {
+            name: lt.name.clone(),
+            kind: lt.kind,
+            n_bits: res.n_bits,
+            base: res.base,
+            weights: TensorQuant {
+                alpha: res.w_params.alpha,
+                beta: res.w_params.beta,
+                rmae: res.rmae_w,
+                elems: lt.weights.len(),
+            },
+            acts: TensorQuant {
+                alpha: res.a_params.alpha,
+                beta: res.a_params.beta,
+                rmae: res.rmae_a,
+                elems: lt.acts.len(),
+            },
+            seeded_by_weights: res.seeded_by_weights,
+            rss_w: res.rss_w,
+            rss_a: res.rss_a,
+            converged: res.converged,
+        }
+    });
     QuantConfig { model: input.model.clone(), thr_w, layers }
 }
 
@@ -233,8 +233,7 @@ mod tests {
     fn sweep_bitwidth_monotone_nonincreasing() {
         let input = mk_input(3, 64);
         let eval = |_: &QuantConfig| 1.0; // never lose accuracy
-        let mut opts = CalibrationOptions::default();
-        opts.thr_max = 0.10;
+        let opts = CalibrationOptions { thr_max: 0.10, ..Default::default() };
         let report = calibrate_model(&input, 1.0, &opts, eval);
         let bits: Vec<f64> = report.sweep.iter().map(|s| s.avg_bitwidth).collect();
         for w in bits.windows(2) {

@@ -4,11 +4,23 @@
 //! runtime consumes — it fully determines how every CONV/FC layer of a
 //! model quantizes its weights and activations. Serialized as JSON via
 //! the crate's own codec ([`crate::util::json`]).
+//!
+//! On disk a plan is a **versioned artifact**: the config body is wrapped
+//! in an envelope carrying a `schema_version` and an FNV-1a-64 content
+//! `checksum` over the canonical (compact, sorted-key) encoding of the
+//! body. Because the JSON codec prints every finite `f64` in its shortest
+//! round-trip form, save → load → re-encode reproduces the identical byte
+//! stream, so the checksum doubles as a bit-exactness proof for every
+//! α/β/base in the plan.
 
 use super::quant::ExpQuantParams;
-use crate::util::Json;
+use crate::util::{fnv1a64, Json};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
+
+/// Version of the on-disk plan-artifact schema. Bump when the envelope or
+/// body layout changes; loaders reject artifacts from a newer schema.
+pub const PLAN_SCHEMA_VERSION: u64 = 1;
 
 /// Layer operator kind (the paper quantizes CONV and FC layers).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -213,20 +225,87 @@ impl QuantConfig {
         })
     }
 
+    /// Reject configs that cannot be served: degenerate quantizer
+    /// parameters or a non-finite threshold. Runs on every artifact
+    /// save/load so corruption is caught at the boundary.
+    pub fn validate(&self) -> Result<()> {
+        if !self.thr_w.is_finite() || self.thr_w <= 0.0 {
+            bail!("thr_w {} must be finite and positive", self.thr_w);
+        }
+        for l in &self.layers {
+            l.w_params()
+                .validate()
+                .with_context(|| format!("layer `{}` weight params", l.name))?;
+            l.a_params()
+                .validate()
+                .with_context(|| format!("layer `{}` activation params", l.name))?;
+        }
+        Ok(())
+    }
+
+    /// Content checksum: FNV-1a 64 over the canonical compact encoding of
+    /// the config body. Identical plans hash identically regardless of
+    /// pretty-printing, field ordering in hand-edited files, or the
+    /// machine that wrote them.
+    pub fn checksum(&self) -> u64 {
+        fnv1a64(self.to_json().encode().as_bytes())
+    }
+
+    /// Hex form of [`Self::checksum`] as stored in the artifact envelope.
+    pub fn checksum_hex(&self) -> String {
+        format!("{:016x}", self.checksum())
+    }
+
+    /// Wrap the config body in the versioned artifact envelope.
+    pub fn to_artifact_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("schema_version", PLAN_SCHEMA_VERSION)
+            .set("checksum", self.checksum_hex())
+            .set("plan", self.to_json());
+        o
+    }
+
+    /// Parse a versioned artifact envelope, verifying schema version and
+    /// content checksum. Bare (legacy, pre-envelope) config bodies are
+    /// still accepted so caches written before the schema existed load.
+    pub fn from_artifact_json(j: &Json) -> Result<Self> {
+        let cfg = match j.get("schema_version") {
+            Some(v) => {
+                let version = v.as_usize()? as u64;
+                if version > PLAN_SCHEMA_VERSION {
+                    bail!(
+                        "plan artifact has schema version {version}, newer than supported {}",
+                        PLAN_SCHEMA_VERSION
+                    );
+                }
+                let cfg = Self::from_json(j.req("plan")?)?;
+                let want = j.req("checksum")?.as_str()?.to_string();
+                let got = cfg.checksum_hex();
+                if want != got {
+                    bail!("plan checksum mismatch: artifact says {want}, content hashes to {got}");
+                }
+                cfg
+            }
+            None => Self::from_json(j).context("parsing legacy (unversioned) QuantConfig")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Write the versioned artifact (envelope + body) to `path`.
     pub fn save_json<P: AsRef<Path>>(&self, path: P) -> Result<()> {
         let path = path.as_ref();
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        std::fs::write(path, self.to_json().encode_pretty())
+        self.validate().with_context(|| format!("refusing to write {}", path.display()))?;
+        self.to_artifact_json()
+            .write_file(path)
             .with_context(|| format!("writing {}", path.display()))
     }
 
+    /// Load a plan artifact (versioned envelope or legacy bare body).
     pub fn load_json<P: AsRef<Path>>(path: P) -> Result<Self> {
         let path = path.as_ref();
-        let raw = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        Self::from_json(&Json::parse(&raw)?).context("parsing QuantConfig JSON")
+        Self::from_artifact_json(&Json::read_file(path)?)
+            .with_context(|| format!("loading plan artifact {}", path.display()))
     }
 }
 
@@ -311,5 +390,70 @@ mod tests {
         let p = dir.path().join("bad.json");
         std::fs::write(&p, "{\"model\": 1}").unwrap();
         assert!(QuantConfig::load_json(&p).is_err());
+    }
+
+    #[test]
+    fn artifact_roundtrip_is_checksum_exact() {
+        // Awkward f64s (shortest-repr stress cases) must survive the
+        // envelope round-trip bit-for-bit, proven by the checksum.
+        let mut cfg = QuantConfig {
+            model: "m".into(),
+            thr_w: 0.1 + 0.2 - 0.2,
+            layers: vec![mk_layer("a", 5, 1000)],
+        };
+        cfg.layers[0].weights.alpha = 1.0 / 3.0;
+        cfg.layers[0].weights.beta = -1e-17;
+        cfg.layers[0].base = f64::from_bits(1.0f64.to_bits() + 1);
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("plan.json");
+        cfg.save_json(&p).unwrap();
+        let cfg2 = QuantConfig::load_json(&p).unwrap();
+        assert_eq!(cfg2.checksum(), cfg.checksum());
+        assert_eq!(cfg2.layers[0].weights.alpha.to_bits(), cfg.layers[0].weights.alpha.to_bits());
+        assert_eq!(cfg2.layers[0].weights.beta.to_bits(), cfg.layers[0].weights.beta.to_bits());
+    }
+
+    #[test]
+    fn tampered_artifact_is_rejected() {
+        let cfg = QuantConfig {
+            model: "m".into(),
+            thr_w: 0.04,
+            layers: vec![mk_layer("a", 5, 100)],
+        };
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("plan.json");
+        cfg.save_json(&p).unwrap();
+        // Flip a parameter in the stored body without fixing the checksum.
+        let doctored =
+            std::fs::read_to_string(&p).unwrap().replace("\"n_bits\": 5", "\"n_bits\": 6");
+        assert_ne!(doctored, std::fs::read_to_string(&p).unwrap());
+        std::fs::write(&p, doctored).unwrap();
+        let err = QuantConfig::load_json(&p).unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("checksum mismatch"), "err: {chain}");
+    }
+
+    #[test]
+    fn newer_schema_is_rejected() {
+        let cfg = QuantConfig {
+            model: "m".into(),
+            thr_w: 0.04,
+            layers: vec![mk_layer("a", 5, 100)],
+        };
+        let mut env = cfg.to_artifact_json();
+        env.set("schema_version", PLAN_SCHEMA_VERSION + 1);
+        assert!(QuantConfig::from_artifact_json(&env).is_err());
+    }
+
+    #[test]
+    fn degenerate_plan_refused_at_save() {
+        let mut cfg = QuantConfig {
+            model: "m".into(),
+            thr_w: 0.04,
+            layers: vec![mk_layer("a", 5, 100)],
+        };
+        cfg.layers[0].base = f64::NAN;
+        let dir = crate::util::TempDir::new().unwrap();
+        assert!(cfg.save_json(dir.path().join("bad.json")).is_err());
     }
 }

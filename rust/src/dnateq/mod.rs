@@ -12,9 +12,12 @@
 //! 4. [`uniform`] — the linear INT-n baseline DNA-TEQ is compared against
 //!    (Tables IV & V).
 //! 5. [`calib`] — end-to-end calibration of a model: traces → [`config`].
+//! 6. [`plans`] — versioned, checksummed on-disk store for the resulting
+//!    plan artifacts (`artifacts/plans/<model>/<version>.json`).
 
 pub mod calib;
 pub mod config;
+pub mod plans;
 pub mod quant;
 pub mod rss;
 pub mod search;
@@ -24,7 +27,8 @@ pub use calib::{
     calibrate_model, config_for_threshold, CalibrationInput, CalibrationOptions,
     CalibrationReport, LayerTensors, SweepPoint,
 };
-pub use config::{LayerKind, LayerQuant, QuantConfig, TensorQuant};
+pub use config::{LayerKind, LayerQuant, PLAN_SCHEMA_VERSION, QuantConfig, TensorQuant};
+pub use plans::{diff_plans, render_plan, store_index_json, PlanStore, PlanSummary};
 pub use quant::{ExpQuantParams, QuantizedTensor, ZERO_CODE_SENTINEL};
 pub use rss::{fit_distributions, DistKind, FitReport};
 pub use search::{search_base, search_layer, LayerSearchResult, SearchOptions};

@@ -1,0 +1,351 @@
+//! Versioned on-disk store for calibration plans.
+//!
+//! Layout: `<root>/<model>/<version>.json`, where `<root>` defaults to
+//! `artifacts/plans` and `<version>` is a monotonically increasing
+//! integer starting at 1. Every file is a checksummed artifact envelope
+//! ([`QuantConfig::save_json`]); re-saving a plan whose content checksum
+//! matches the latest stored version is a no-op (calibration reruns do
+//! not mint new versions).
+
+use super::config::QuantConfig;
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Handle to a plan-artifact directory tree.
+#[derive(Clone, Debug)]
+pub struct PlanStore {
+    root: PathBuf,
+}
+
+/// Summary of one stored plan version (what `repro plans list` prints).
+#[derive(Clone, Debug)]
+pub struct PlanSummary {
+    pub model: String,
+    pub version: u32,
+    pub checksum: String,
+    pub thr_w: f64,
+    pub layers: usize,
+    pub avg_bitwidth: f64,
+}
+
+impl PlanStore {
+    /// Store rooted at an explicit directory (tests, tooling).
+    pub fn new<P: AsRef<Path>>(root: P) -> Self {
+        Self { root: root.as_ref().to_path_buf() }
+    }
+
+    /// The canonical store under the artifacts directory.
+    pub fn open_default() -> Self {
+        Self::new(crate::artifact_path("plans"))
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Path of one plan artifact (whether or not it exists yet).
+    pub fn path(&self, model: &str, version: u32) -> PathBuf {
+        self.root.join(model).join(format!("{version}.json"))
+    }
+
+    /// Model names that have at least one stored version, sorted.
+    pub fn models(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(&self.root) {
+            Ok(e) => e,
+            Err(_) => return Ok(out), // no store yet — empty listing
+        };
+        for entry in entries {
+            let entry = entry?;
+            if !entry.path().is_dir() {
+                continue;
+            }
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if !self.versions(&name)?.is_empty() {
+                out.push(name);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Stored versions for `model`, ascending. Empty when none exist.
+    pub fn versions(&self, model: &str) -> Result<Vec<u32>> {
+        let dir = self.root.join(model);
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(_) => return Ok(out),
+        };
+        for entry in entries {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            if let Some(v) = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .and_then(|s| s.parse::<u32>().ok())
+            {
+                out.push(v);
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// Load one version, verifying schema + checksum.
+    pub fn load(&self, model: &str, version: u32) -> Result<QuantConfig> {
+        let cfg = QuantConfig::load_json(self.path(model, version))?;
+        if cfg.model != model {
+            bail!(
+                "plan {}/{version} is for model `{}`, not `{model}` — misfiled artifact",
+                model,
+                cfg.model
+            );
+        }
+        Ok(cfg)
+    }
+
+    /// Latest stored version of `model`, if any.
+    pub fn latest(&self, model: &str) -> Result<Option<(u32, QuantConfig)>> {
+        match self.versions(model)?.last() {
+            Some(&v) => Ok(Some((v, self.load(model, v)?))),
+            None => Ok(None),
+        }
+    }
+
+    /// Persist `cfg` as the next version of its model. Idempotent: when
+    /// the latest stored version has the same content checksum, no new
+    /// file is written and the existing version number is returned.
+    pub fn save_next(&self, cfg: &QuantConfig) -> Result<u32> {
+        if let Some((v, latest)) = self.latest(&cfg.model)? {
+            if latest.checksum() == cfg.checksum() {
+                return Ok(v);
+            }
+        }
+        let next = self.versions(&cfg.model)?.last().copied().unwrap_or(0) + 1;
+        cfg.save_json(self.path(&cfg.model, next))
+            .with_context(|| format!("storing plan {}/{next}", cfg.model))?;
+        Ok(next)
+    }
+
+    /// Summaries of every stored plan (model-major, version-minor order).
+    pub fn list(&self) -> Result<Vec<PlanSummary>> {
+        let mut out = Vec::new();
+        for model in self.models()? {
+            for v in self.versions(&model)? {
+                let cfg = self.load(&model, v)?;
+                out.push(PlanSummary {
+                    model: model.clone(),
+                    version: v,
+                    checksum: cfg.checksum_hex(),
+                    thr_w: cfg.thr_w,
+                    layers: cfg.layers.len(),
+                    avg_bitwidth: cfg.avg_bitwidth(),
+                });
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Human-readable difference between two plans, one line per change.
+/// Empty when the plans are content-identical.
+pub fn diff_plans(a: &QuantConfig, b: &QuantConfig) -> Vec<String> {
+    let mut out = Vec::new();
+    if a.checksum() == b.checksum() {
+        return out;
+    }
+    if a.model != b.model {
+        out.push(format!("model: {} → {}", a.model, b.model));
+    }
+    if a.thr_w != b.thr_w {
+        out.push(format!("thr_w: {:.4} → {:.4}", a.thr_w, b.thr_w));
+    }
+    let fmt_layer = |l: &super::config::LayerQuant| {
+        format!(
+            "{} bits, base {:.4}, w(α {:.4}, β {:.4}), a(α {:.4}, β {:.4})",
+            l.n_bits, l.base, l.weights.alpha, l.weights.beta, l.acts.alpha, l.acts.beta
+        )
+    };
+    for la in &a.layers {
+        match b.layer(&la.name) {
+            None => out.push(format!("- {} (only in first plan)", la.name)),
+            Some(lb) => {
+                let da = fmt_layer(la);
+                let db = fmt_layer(lb);
+                if da != db {
+                    out.push(format!("~ {}: {da}  →  {db}", la.name));
+                }
+            }
+        }
+    }
+    for lb in &b.layers {
+        if a.layer(&lb.name).is_none() {
+            out.push(format!("+ {} (only in second plan)", lb.name));
+        }
+    }
+    if out.is_empty() {
+        // Content differs (checksums diverge) but not in any field the
+        // summary formats — report at full precision.
+        out.push(format!("checksum: {} → {}", a.checksum_hex(), b.checksum_hex()));
+    }
+    out
+}
+
+/// Render one stored plan as the `repro plans show` table.
+pub fn render_plan(cfg: &QuantConfig, version: u32) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "plan {}/{version}  (schema v{}, checksum {})",
+        cfg.model,
+        super::config::PLAN_SCHEMA_VERSION,
+        cfg.checksum_hex()
+    );
+    let _ = writeln!(
+        s,
+        "thr_w {:.2}% | {} layers | avg bits {:.2} | compression {:.1}%",
+        cfg.thr_w * 100.0,
+        cfg.layers.len(),
+        cfg.avg_bitwidth(),
+        cfg.compression_ratio() * 100.0
+    );
+    let _ = writeln!(
+        s,
+        "{:<14} {:>5} {:>5} {:>9} {:>11} {:>11} {:>9} {:>6}",
+        "layer", "kind", "bits", "base", "rmae(w)", "rmae(act)", "seed", "conv"
+    );
+    for l in &cfg.layers {
+        let _ = writeln!(
+            s,
+            "{:<14} {:>5} {:>5} {:>9.4} {:>11.5} {:>11.5} {:>9} {:>6}",
+            l.name,
+            l.kind.name(),
+            l.n_bits,
+            l.base,
+            l.weights.rmae,
+            l.acts.rmae,
+            if l.seeded_by_weights { "W" } else { "A" },
+            if l.converged { "yes" } else { "no" }
+        );
+    }
+    s
+}
+
+/// Expose the store contents as JSON (used by tooling and tests).
+pub fn store_index_json(store: &PlanStore) -> Result<Json> {
+    let mut arr = Vec::new();
+    for s in store.list()? {
+        let mut o = Json::obj();
+        o.set("model", s.model.as_str())
+            .set("version", s.version as u64)
+            .set("checksum", s.checksum.as_str())
+            .set("thr_w", s.thr_w)
+            .set("layers", s.layers)
+            .set("avg_bitwidth", s.avg_bitwidth);
+        arr.push(o);
+    }
+    Ok(Json::Arr(arr))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::config::{LayerKind, LayerQuant, TensorQuant};
+    use super::*;
+    use crate::util::TempDir;
+
+    fn mk_cfg(model: &str, thr_w: f64, bits: u8) -> QuantConfig {
+        QuantConfig {
+            model: model.into(),
+            thr_w,
+            layers: vec![LayerQuant {
+                name: "fc0".into(),
+                kind: LayerKind::Fc,
+                n_bits: bits,
+                base: 1.31,
+                weights: TensorQuant { alpha: 0.7, beta: 0.01, rmae: 0.02, elems: 128 },
+                acts: TensorQuant { alpha: 1.4, beta: 0.02, rmae: 0.03, elems: 64 },
+                seeded_by_weights: true,
+                rss_w: 0.4,
+                rss_a: 0.9,
+                converged: true,
+            }],
+        }
+    }
+
+    #[test]
+    fn versions_increment_and_reload() {
+        let dir = TempDir::new().unwrap();
+        let store = PlanStore::new(dir.path());
+        assert!(store.models().unwrap().is_empty());
+        assert_eq!(store.save_next(&mk_cfg("m", 0.04, 4)).unwrap(), 1);
+        assert_eq!(store.save_next(&mk_cfg("m", 0.08, 3)).unwrap(), 2);
+        assert_eq!(store.versions("m").unwrap(), vec![1, 2]);
+        let (v, cfg) = store.latest("m").unwrap().unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(cfg.layers[0].n_bits, 3);
+        assert_eq!(store.load("m", 1).unwrap().layers[0].n_bits, 4);
+    }
+
+    #[test]
+    fn identical_content_does_not_mint_a_version() {
+        let dir = TempDir::new().unwrap();
+        let store = PlanStore::new(dir.path());
+        assert_eq!(store.save_next(&mk_cfg("m", 0.04, 4)).unwrap(), 1);
+        assert_eq!(store.save_next(&mk_cfg("m", 0.04, 4)).unwrap(), 1);
+        assert_eq!(store.versions("m").unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn list_covers_all_models() {
+        let dir = TempDir::new().unwrap();
+        let store = PlanStore::new(dir.path());
+        store.save_next(&mk_cfg("alex", 0.04, 4)).unwrap();
+        store.save_next(&mk_cfg("res", 0.05, 5)).unwrap();
+        store.save_next(&mk_cfg("res", 0.06, 3)).unwrap();
+        let listing = store.list().unwrap();
+        assert_eq!(listing.len(), 3);
+        assert_eq!(listing[0].model, "alex");
+        assert_eq!(listing[2].version, 2);
+        assert_eq!(store.models().unwrap(), vec!["alex".to_string(), "res".to_string()]);
+        let idx = store_index_json(&store).unwrap();
+        assert_eq!(idx.as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn misfiled_artifact_is_rejected() {
+        let dir = TempDir::new().unwrap();
+        let store = PlanStore::new(dir.path());
+        // Write a plan for model `other` under directory `m`.
+        mk_cfg("other", 0.04, 4).save_json(store.path("m", 1)).unwrap();
+        assert!(store.load("m", 1).is_err());
+    }
+
+    #[test]
+    fn diff_reports_changes_and_is_empty_for_identical() {
+        let a = mk_cfg("m", 0.04, 4);
+        assert!(diff_plans(&a, &a.clone()).is_empty());
+        let b = mk_cfg("m", 0.08, 3);
+        let d = diff_plans(&a, &b);
+        assert!(d.iter().any(|l| l.contains("thr_w")), "{d:?}");
+        assert!(d.iter().any(|l| l.starts_with("~ fc0")), "{d:?}");
+        let mut c = mk_cfg("m", 0.04, 4);
+        c.layers[0].name = "fc1".into();
+        let d2 = diff_plans(&a, &c);
+        assert!(d2.iter().any(|l| l.starts_with("- fc0")), "{d2:?}");
+        assert!(d2.iter().any(|l| l.starts_with("+ fc1")), "{d2:?}");
+    }
+
+    #[test]
+    fn render_plan_mentions_every_layer() {
+        let cfg = mk_cfg("m", 0.04, 4);
+        let s = render_plan(&cfg, 3);
+        assert!(s.contains("m/3"));
+        assert!(s.contains("fc0"));
+        assert!(s.contains(&cfg.checksum_hex()));
+    }
+}

@@ -176,6 +176,24 @@ impl ExpQuantParams {
     pub fn bits_per_element(&self) -> f64 {
         self.n_bits as f64
     }
+
+    /// Reject parameter sets that cannot have come from a well-formed
+    /// calibration: non-finite scale/offset, a degenerate base, or a
+    /// bitwidth outside the representable code range. Plan-artifact
+    /// loading runs this so corrupted or hand-edited JSON fails with a
+    /// clear error instead of NaNs at inference time.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !(1..=7).contains(&self.n_bits) {
+            anyhow::bail!("n_bits {} outside supported range 1..=7", self.n_bits);
+        }
+        if !self.base.is_finite() || self.base <= 1.0 {
+            anyhow::bail!("exponential base {} must be finite and > 1", self.base);
+        }
+        if !self.alpha.is_finite() || !self.beta.is_finite() {
+            anyhow::bail!("non-finite scale/offset (alpha {}, beta {})", self.alpha, self.beta);
+        }
+        Ok(())
+    }
 }
 
 /// Floor for the exponential base: `b ≤ 1` makes the level set
@@ -326,7 +344,8 @@ mod tests {
         let t = expo_tensor(512, 6);
         let p = ExpQuantParams::init_for_tensor(&t, 5);
         let mut prev_code = i32::MIN;
-        let mut mags: Vec<f64> = t.data().iter().map(|x| x.abs() as f64).filter(|&m| m > 0.0).collect();
+        let mut mags: Vec<f64> =
+            t.data().iter().map(|x| x.abs() as f64).filter(|&m| m > 0.0).collect();
         mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
         for m in mags {
             let c = p.encode_magnitude(m);
@@ -341,6 +360,18 @@ mod tests {
         let p = ExpQuantParams::init_for_tensor(&t, 3);
         let q = p.quantize(&t);
         assert_eq!(q.storage_bits(), 100 * 4);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_params() {
+        let ok = ExpQuantParams { base: 1.3, alpha: 1.0, beta: 0.0, n_bits: 4 };
+        assert!(ok.validate().is_ok());
+        assert!(ExpQuantParams { n_bits: 0, ..ok }.validate().is_err());
+        assert!(ExpQuantParams { n_bits: 8, ..ok }.validate().is_err());
+        assert!(ExpQuantParams { base: 1.0, ..ok }.validate().is_err());
+        assert!(ExpQuantParams { base: f64::NAN, ..ok }.validate().is_err());
+        assert!(ExpQuantParams { alpha: f64::INFINITY, ..ok }.validate().is_err());
+        assert!(ExpQuantParams { beta: f64::NAN, ..ok }.validate().is_err());
     }
 
     #[test]

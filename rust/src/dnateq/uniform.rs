@@ -128,7 +128,8 @@ mod tests {
         let mut rng = SplitMix64::new(53);
         let t = Tensor::rand_uniform(&[257], -2.0, 2.0, &mut rng);
         for n in [4u8, 8] {
-            assert_eq!(UniformParams::calibrate(&t, n), UniformParams::calibrate_slice(t.data(), n));
+            let from_slice = UniformParams::calibrate_slice(t.data(), n);
+            assert_eq!(UniformParams::calibrate(&t, n), from_slice);
         }
     }
 

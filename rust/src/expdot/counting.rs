@@ -134,7 +134,8 @@ impl CountingFc {
         for b in 0..batch {
             let a_codes = &qa.codes[b * self.in_features..(b + 1) * self.in_features];
             let a_signs = &qa.signs[b * self.in_features..(b + 1) * self.in_features];
-            self.forward_one(a_codes, a_signs, &mut out[b * self.out_features..(b + 1) * self.out_features]);
+            let out_row = &mut out[b * self.out_features..(b + 1) * self.out_features];
+            self.forward_one(a_codes, a_signs, out_row);
         }
         Tensor::from_vec(&[batch, self.out_features], out)
     }
@@ -360,7 +361,8 @@ impl CountingFc {
                         let wc = &mut wcnt[jj * (slen + 1)..(jj + 1) * (slen + 1)];
                         let ac = &mut acnt[jj * (slen + 1)..(jj + 1) * (slen + 1)];
                         debug_assert!(row_off % 2 == 0, "in_features must keep rows byte-aligned");
-                        let row_bytes = &packed.bytes[row_off / 2..(row_off + self.in_features).div_ceil(2)];
+                        let row_end = (row_off + self.in_features).div_ceil(2);
+                        let row_bytes = &packed.bytes[row_off / 2..row_end];
                         for i in 0..self.in_features {
                             let ap = a_plus[i] as usize;
                             let byte = unsafe { *row_bytes.get_unchecked(i / 2) };

@@ -183,7 +183,8 @@ mod tests {
                     .sum();
                 let got_v = got.data()[b * outf + j] as f64;
                 // INT8 error budget: ~1% of the accumulated magnitude.
-                let mag: f64 = x.row(b).iter().zip(w.row(j)).map(|(&a, &ww)| (a * ww).abs() as f64).sum();
+                let mag: f64 =
+                    x.row(b).iter().zip(w.row(j)).map(|(&a, &ww)| (a * ww).abs() as f64).sum();
                 assert!(
                     (got_v - want).abs() < mag * 0.02 + 1e-3,
                     "b={b} j={j}: {got_v} vs {want}"

@@ -1,21 +1,31 @@
 //! `repro` — DNA-TEQ reproduction CLI (L3 leader entrypoint).
 //!
 //! Subcommands:
-//!   calibrate [--model M] [--force]   run the Fig.-3 pipeline (cached)
-//!   report    [--all|--table N|--figure N|--area] regenerate exhibits
-//!   simulate                          accelerator comparison (Figs. 8/9)
-//!   serve     [--model M] [--requests N] [--backend engine|pjrt|quantized]
-//!   infer     [--model M] [--index I] one PJRT inference from artifacts
+//!   calibrate [--model M] [--force]      run the Fig.-3 pipeline (cached)
+//!   report    [--all|--table N|--figure N|--area]   regenerate exhibits
+//!   simulate                             accelerator comparison (Figs. 8/9)
+//!   serve     [--models a,b,c] [--requests N] [--backend KIND]
+//!   plans     list | show <model> [--version V] | diff <model> <v1> <v2>
+//!   swap      <model> [--thr-w T] [--requests N]   hot-swap demo under load
+//!   infer     [--model M] [--index I]    one PJRT inference from artifacts
 
 use anyhow::{bail, Context, Result};
 use dnateq::coordinator::{
-    AlexNetBackend, Coordinator, CoordinatorConfig, Payload, PjrtClassifierBackend,
+    AlexNetBackend, CoordinatorConfig, ModelRegistry, Output, Payload, PjrtClassifierBackend,
+    ResNetBackend, SwappableBackend, TranslatorBackend,
 };
-use dnateq::dataset::ImageDataset;
-use dnateq::dnateq::CalibrationOptions;
+use dnateq::dataset::{ImageDataset, SeqDataset};
+use dnateq::dnateq::{
+    config_for_threshold, diff_plans, render_plan, CalibrationOptions, PlanStore, QuantConfig,
+    SearchOptions,
+};
+use dnateq::nn::{
+    collect_image_calibration, eval::ImageModel, AlexNetMini, ExecPlan, ResNetMini,
+    TransformerMini, WeightMap,
+};
 use dnateq::report::{calibrate_or_load, tables, CalibOutcome, MODELS};
 use dnateq::runtime::Runtime;
-use dnateq::{artifact_path, nn::AlexNetMini, nn::WeightMap};
+use dnateq::{artifact_path, tensor::Tensor};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -26,9 +36,14 @@ fn main() {
     }
 }
 
-/// Tiny flag parser: `--key value` and bare flags.
+/// Flags that never take a value (so `--force alexnet_mini` keeps
+/// `alexnet_mini` as a positional instead of swallowing it).
+const BOOL_FLAGS: &[&str] = &["force", "quick", "all", "area"];
+
+/// Tiny argument parser: `<cmd> [positionals] [--key value | --flag]`.
 struct Args {
     cmd: String,
+    positionals: Vec<String>,
     flags: BTreeMap<String, String>,
 }
 
@@ -36,20 +51,27 @@ impl Args {
     fn parse() -> Self {
         let mut it = std::env::args().skip(1);
         let cmd = it.next().unwrap_or_else(|| "help".into());
-        let mut flags = BTreeMap::new();
         let rest: Vec<String> = it.collect();
+        let mut positionals = Vec::new();
+        let mut flags = BTreeMap::new();
         let mut i = 0;
         while i < rest.len() {
-            let k = rest[i].trim_start_matches('-').to_string();
-            if i + 1 < rest.len() && !rest[i + 1].starts_with('-') {
-                flags.insert(k, rest[i + 1].clone());
-                i += 2;
+            if rest[i].starts_with('-') {
+                let k = rest[i].trim_start_matches('-').to_string();
+                let takes_value = !BOOL_FLAGS.contains(&k.as_str());
+                if takes_value && i + 1 < rest.len() && !rest[i + 1].starts_with('-') {
+                    flags.insert(k, rest[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(k, "true".into());
+                    i += 1;
+                }
             } else {
-                flags.insert(k, "true".into());
+                positionals.push(rest[i].clone());
                 i += 1;
             }
         }
-        Self { cmd, flags }
+        Self { cmd, positionals, flags }
     }
 
     fn get(&self, k: &str) -> Option<&str> {
@@ -59,6 +81,51 @@ impl Args {
     fn has(&self, k: &str) -> bool {
         self.flags.contains_key(k)
     }
+
+    fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared validation (consistent across every subcommand).
+// ---------------------------------------------------------------------
+
+/// Resolve a user-supplied model name (short alias or canonical) to the
+/// canonical `*_mini` name, or fail listing what exists.
+fn canonical_model(name: &str) -> Result<&'static str> {
+    match name {
+        "alexnet" | "alexnet_mini" => Ok("alexnet_mini"),
+        "resnet" | "resnet_mini" => Ok("resnet_mini"),
+        "transformer" | "transformer_mini" => Ok("transformer_mini"),
+        other => {
+            let trained = WeightMap::list_models(artifact_path("models"));
+            bail!(
+                "unknown model `{other}`; known: {MODELS:?} (aliases: alexnet, resnet, \
+                 transformer); trained weights present for: {trained:?}"
+            )
+        }
+    }
+}
+
+/// Serving backend kinds and the feature gate for `pjrt`.
+fn validate_backend(kind: &str) -> Result<()> {
+    let available: &[&str] = if cfg!(feature = "pjrt") {
+        &["engine", "quantized", "pjrt"]
+    } else {
+        &["engine", "quantized"]
+    };
+    if kind == "pjrt" && !cfg!(feature = "pjrt") {
+        bail!(
+            "backend `pjrt` is unavailable: this binary was built without the `pjrt` feature \
+             (rebuild with `--features pjrt` and a vendored xla crate); available backends: \
+             engine, quantized"
+        );
+    }
+    if !available.contains(&kind) {
+        bail!("unknown backend `{kind}`; available backends: {}", available.join(", "));
+    }
+    Ok(())
 }
 
 fn calib_options(quick: bool) -> CalibrationOptions {
@@ -77,6 +144,392 @@ fn all_outcomes(force: bool, quick: bool) -> Result<BTreeMap<String, CalibOutcom
         .collect()
 }
 
+/// The DNA-TEQ plan for `model`: the latest stored plan artifact when
+/// one exists, otherwise a fresh (quick) calibration — which itself
+/// stores its plan, so the second call hits the store.
+fn plan_for(model: &str) -> Result<QuantConfig> {
+    let store = PlanStore::open_default();
+    if let Some((v, cfg)) = store.latest(model)? {
+        eprintln!("[plan] {model}: serving stored plan v{v} (checksum {})", cfg.checksum_hex());
+        return Ok(cfg);
+    }
+    Ok(calibrate_or_load(model, false, &calib_options(true))?.config)
+}
+
+// ---------------------------------------------------------------------
+// serve — multi-model registry serving.
+// ---------------------------------------------------------------------
+
+/// What a model's clients send and how responses are scored.
+enum Traffic {
+    Image(ImageDataset),
+    Seq(SeqDataset),
+}
+
+fn image_traffic() -> Traffic {
+    let data = ImageDataset::load(artifact_path("data"), "eval").unwrap_or_else(|_| {
+        eprintln!("[serve] artifacts missing (`make artifacts`); using synthetic images");
+        ImageDataset::synthetic(64, 0xDA7A)
+    });
+    Traffic::Image(data)
+}
+
+fn seq_traffic() -> Traffic {
+    let data = SeqDataset::load(artifact_path("data"), "eval").unwrap_or_else(|_| {
+        eprintln!("[serve] artifacts missing (`make artifacts`); using synthetic sequences");
+        SeqDataset::synthetic(64, 0x5E9)
+    });
+    Traffic::Seq(data)
+}
+
+/// Trained weights when present, reproducible random weights otherwise.
+fn alexnet_model() -> AlexNetMini {
+    match WeightMap::load_dir(artifact_path("models/alexnet_mini")) {
+        Ok(w) => AlexNetMini::from_weights(&w).expect("artifact weights well-formed"),
+        Err(_) => {
+            eprintln!("[serve] alexnet_mini weights missing; using random weights");
+            AlexNetMini::random(0x41E)
+        }
+    }
+}
+
+fn resnet_model() -> ResNetMini {
+    match WeightMap::load_dir(artifact_path("models/resnet_mini")) {
+        Ok(w) => ResNetMini::from_weights(&w).expect("artifact weights well-formed"),
+        Err(_) => {
+            eprintln!("[serve] resnet_mini weights missing; using random weights");
+            ResNetMini::random(0x4E5)
+        }
+    }
+}
+
+fn transformer_model() -> TransformerMini {
+    match WeightMap::load_dir(artifact_path("models/transformer_mini")) {
+        Ok(w) => TransformerMini::from_weights(&w).expect("artifact weights well-formed"),
+        Err(_) => {
+            eprintln!("[serve] transformer_mini weights missing; using random weights");
+            TransformerMini::random(0x7F2)
+        }
+    }
+}
+
+fn classifier_backend<M: ImageModel + 'static>(
+    model: M,
+    name: &str,
+    kind: &str,
+) -> Result<Arc<dyn SwappableBackend>> {
+    Ok(match kind {
+        "quantized" => {
+            let cfg = plan_for(name)?;
+            Arc::new(dnateq::coordinator::ClassifierBackend::quantized(
+                model,
+                &cfg,
+                &format!("{name}-dnateq"),
+            ))
+        }
+        _ => Arc::new(dnateq::coordinator::ClassifierBackend::fp32(
+            model,
+            &format!("{name}-fp32"),
+        )),
+    })
+}
+
+/// Register `model` (canonical name) with the right backend + traffic.
+fn register_model(
+    registry: &ModelRegistry,
+    model: &str,
+    kind: &str,
+    cfg: CoordinatorConfig,
+) -> Result<Traffic> {
+    match model {
+        "alexnet_mini" => {
+            if kind == "pjrt" {
+                registry.register(
+                    model,
+                    Arc::new(PjrtClassifierBackend::spawn(artifact_path(
+                        "alexnet_fp32.hlo.txt",
+                    ))?),
+                    cfg,
+                )?;
+            } else {
+                registry.register_swappable(
+                    model,
+                    classifier_backend(alexnet_model(), model, kind)?,
+                    cfg,
+                )?;
+            }
+            Ok(image_traffic())
+        }
+        "resnet_mini" => {
+            if kind == "pjrt" {
+                bail!("backend `pjrt` only serves alexnet_mini (one AOT artifact is compiled)");
+            }
+            registry.register_swappable(
+                model,
+                classifier_backend(resnet_model(), model, kind)?,
+                cfg,
+            )?;
+            Ok(image_traffic())
+        }
+        "transformer_mini" => {
+            if kind == "pjrt" {
+                bail!("backend `pjrt` only serves alexnet_mini (one AOT artifact is compiled)");
+            }
+            let model_impl = transformer_model();
+            let plan = if kind == "quantized" {
+                ExecPlan::exp(&model_impl, &plan_for(model)?)
+            } else {
+                ExecPlan::fp32()
+            };
+            registry.register(
+                model,
+                Arc::new(TranslatorBackend { model: model_impl, plan, max_len: 16 }),
+                cfg,
+            )?;
+            Ok(seq_traffic())
+        }
+        other => bail!("no backend wiring for model `{other}`"),
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let n: usize = args.get("requests").unwrap_or("64").parse()?;
+    let kind = args.get("backend").unwrap_or("engine");
+    validate_backend(kind)?;
+    let spec = match (args.get("models"), args.get("model")) {
+        (Some(_), Some(_)) => bail!("pass either --models or --model, not both"),
+        (Some(list), None) => list.to_string(),
+        (None, Some(one)) => one.to_string(),
+        (None, None) => "alexnet_mini".to_string(),
+    };
+    let mut models = Vec::new();
+    for name in spec.split(',').filter(|s| !s.is_empty()) {
+        let canon = canonical_model(name.trim())?;
+        if !models.contains(&canon) {
+            models.push(canon);
+        }
+    }
+    if models.is_empty() {
+        bail!("no models requested");
+    }
+
+    let registry = ModelRegistry::new();
+    let mut traffic = BTreeMap::new();
+    for m in &models {
+        let t = register_model(&registry, m, kind, CoordinatorConfig::default())?;
+        traffic.insert(m.to_string(), t);
+    }
+    println!("serving {} model(s) [{}] with backend `{kind}`", models.len(), models.join(", "));
+
+    // Interleave traffic round-robin across models so every batcher sees
+    // concurrent mixed load.
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        let model = models[i % models.len()];
+        let (payload, label) = match &traffic[model] {
+            Traffic::Image(d) => {
+                let idx = (i / models.len()) % d.len();
+                (Payload::Image(d.image(idx)), Some(d.labels[idx]))
+            }
+            Traffic::Seq(d) => {
+                let idx = (i / models.len()) % d.len();
+                (Payload::Seq(d.src[idx].clone()), None)
+            }
+        };
+        pending.push((model, label, registry.submit(model, payload)?));
+    }
+
+    let mut hits: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
+    for (model, label, rx) in pending {
+        let resp = rx.recv().context("response channel closed")?;
+        let entry = hits.entry(model).or_default();
+        entry.1 += 1;
+        match (label, &resp.output) {
+            (Some(want), Output::ClassId(got)) if *got == want => entry.0 += 1,
+            (None, Output::Tokens(toks)) if !toks.is_empty() => entry.0 += 1,
+            _ => {}
+        }
+    }
+
+    let snaps = registry.shutdown();
+    for (model, snap) in &snaps {
+        let (ok, total) = hits.get(model.as_str()).copied().unwrap_or((0, 0));
+        let metric = if matches!(traffic[model.as_str()], Traffic::Image(_)) {
+            format!("accuracy {:.4}", ok as f64 / total.max(1) as f64)
+        } else {
+            format!("{ok}/{total} decoded")
+        };
+        println!("{model:<18} {metric} | {}", snap.summary());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// plans — artifact store inspection.
+// ---------------------------------------------------------------------
+
+fn plans(args: &Args) -> Result<()> {
+    let store = PlanStore::open_default();
+    match args.positional(0) {
+        Some("list") | None => {
+            let listing = store.list()?;
+            if listing.is_empty() {
+                let root = store.root().display();
+                println!("no plans stored under {root} (run `repro calibrate`)");
+                return Ok(());
+            }
+            println!(
+                "{:<18} {:>4} {:>18} {:>8} {:>7} {:>9}",
+                "model", "ver", "checksum", "thr_w", "layers", "avg bits"
+            );
+            for s in listing {
+                println!(
+                    "{:<18} {:>4} {:>18} {:>7.2}% {:>7} {:>9.2}",
+                    s.model,
+                    s.version,
+                    s.checksum,
+                    s.thr_w * 100.0,
+                    s.layers,
+                    s.avg_bitwidth
+                );
+            }
+        }
+        Some("show") => {
+            let model = canonical_model(
+                args.positional(1).or(args.get("model")).context("plans show <model>")?,
+            )?;
+            let (version, cfg) = match args.get("version") {
+                Some(v) => {
+                    let v: u32 = v.parse().context("--version must be an integer")?;
+                    (v, store.load(model, v)?)
+                }
+                None => store
+                    .latest(model)?
+                    .with_context(|| format!("no stored plans for `{model}`"))?,
+            };
+            print!("{}", render_plan(&cfg, version));
+        }
+        Some("diff") => {
+            let usage = "plans diff <model> <v1> <v2>";
+            let model = canonical_model(args.positional(1).context(usage)?)?;
+            let v1: u32 = args.positional(2).context(usage)?.parse()?;
+            let v2: u32 = args.positional(3).context(usage)?.parse()?;
+            let a = store.load(model, v1)?;
+            let b = store.load(model, v2)?;
+            let lines = diff_plans(&a, &b);
+            if lines.is_empty() {
+                println!("{model}: v{v1} and v{v2} are content-identical");
+            } else {
+                println!("{model}: v{v1} → v{v2} ({} change(s))", lines.len());
+                for l in lines {
+                    println!("  {l}");
+                }
+            }
+        }
+        Some(other) => bail!("unknown plans action `{other}`; use list, show or diff"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// swap — live plan hot-swap demonstration.
+// ---------------------------------------------------------------------
+
+/// Build the quantized backend for the hot-swap demo: serves the latest
+/// stored plan (or a fresh 4% calibration) and prepares the replacement
+/// plan at threshold `thr`.
+fn build_swap_backend(
+    model: &str,
+    calib: &ImageDataset,
+    thr: f64,
+) -> (Arc<dyn SwappableBackend>, QuantConfig, QuantConfig) {
+    fn plans_for<M: ImageModel>(
+        m: &M,
+        model: &str,
+        calib: &ImageDataset,
+        thr: f64,
+    ) -> (QuantConfig, QuantConfig) {
+        let input = collect_image_calibration(m, &calib.take(4));
+        let old = plan_for(model)
+            .unwrap_or_else(|_| config_for_threshold(&input, 0.04, &SearchOptions::default()));
+        let new = config_for_threshold(&input, thr, &SearchOptions::default());
+        (old, new)
+    }
+    if model == "alexnet_mini" {
+        let m = alexnet_model();
+        let (old, new) = plans_for(&m, model, calib, thr);
+        (Arc::new(AlexNetBackend::quantized(m, &old, "alexnet-dnateq")), old, new)
+    } else {
+        let m = resnet_model();
+        let (old, new) = plans_for(&m, model, calib, thr);
+        (Arc::new(ResNetBackend::quantized(m, &old, "resnet-dnateq")), old, new)
+    }
+}
+
+fn swap(args: &Args) -> Result<()> {
+    let model = canonical_model(
+        args.positional(0).or(args.get("model")).context("swap <model> [--thr-w T]")?,
+    )?;
+    if model == "transformer_mini" {
+        bail!("plan hot-swap is wired for the image classifiers (alexnet_mini, resnet_mini)");
+    }
+    let mut thr: f64 = args.get("thr-w").unwrap_or("0.08").trim_end_matches('%').parse()?;
+    if thr >= 1.0 {
+        thr /= 100.0; // `--thr-w 8` means 8%
+    }
+    let n: usize = args.get("requests").unwrap_or("96").parse()?;
+
+    // Calibration inputs: trained weights + real calib split when the
+    // artifacts exist, reproducible synthetic everywhere otherwise.
+    let calib = ImageDataset::load(artifact_path("data"), "calib")
+        .unwrap_or_else(|_| ImageDataset::synthetic(8, 0xCA11B));
+    let eval = ImageDataset::load(artifact_path("data"), "eval")
+        .unwrap_or_else(|_| ImageDataset::synthetic(32, 0xE7A1));
+
+    let (backend, old_cfg, new_cfg) = build_swap_backend(model, &calib, thr);
+
+    let version = PlanStore::open_default().save_next(&new_cfg)?;
+    println!(
+        "{model}: stored recalibrated plan v{version} (thr_w {:.2}%, checksum {})",
+        new_cfg.thr_w * 100.0,
+        new_cfg.checksum_hex()
+    );
+
+    let registry = ModelRegistry::new();
+    registry.register_swappable(model, backend, CoordinatorConfig::default())?;
+    println!("serving plan: {}", registry.plan_label(model)?);
+
+    // Submit the first half, swap mid-stream, submit the rest — nothing
+    // may be dropped or reordered.
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n / 2 {
+        pending.push(registry.submit(model, Payload::Image(eval.image(i % eval.len())))?);
+    }
+    registry.swap_plan(model, &new_cfg)?;
+    println!("swapped to:   {}", registry.plan_label(model)?);
+    for i in n / 2..n {
+        pending.push(registry.submit(model, Payload::Image(eval.image(i % eval.len())))?);
+    }
+    let mut answered = 0usize;
+    for rx in pending {
+        let resp = rx.recv().context("response dropped during hot-swap")?;
+        if matches!(resp.output, Output::ClassId(k) if k != usize::MAX) {
+            answered += 1;
+        }
+    }
+
+    let snaps = registry.shutdown();
+    println!("{model}: {answered}/{n} answered | {}", snaps[model].summary());
+    let changes = diff_plans(&old_cfg, &new_cfg);
+    println!("plan delta ({} change(s)):", changes.len());
+    for l in changes.iter().take(12) {
+        println!("  {l}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+
 fn run() -> Result<()> {
     let args = Args::parse();
     match args.cmd.as_str() {
@@ -84,13 +537,14 @@ fn run() -> Result<()> {
             let force = args.has("force");
             let quick = args.has("quick");
             let models: Vec<&str> = match args.get("model") {
-                Some(m) => vec![m],
+                Some(m) => vec![canonical_model(m)?],
                 None => MODELS.to_vec(),
             };
             for m in models {
                 let o = calibrate_or_load(m, force, &calib_options(quick))?;
                 println!(
-                    "{m}: thr_w {:.2}% | avg bits {:.2} | compression {:.1}% | fp32 {:.4} → dnateq {:.4}",
+                    "{m}: thr_w {:.2}% | avg bits {:.2} | compression {:.1}% | fp32 {:.4} → \
+                     dnateq {:.4}",
                     o.config.thr_w * 100.0,
                     o.config.avg_bitwidth(),
                     o.config.compression_ratio() * 100.0,
@@ -102,9 +556,7 @@ fn run() -> Result<()> {
         "report" => {
             let quick = args.has("quick");
             let outcomes = all_outcomes(args.has("force"), quick)?;
-            let want = |k: &str, v: &str| {
-                args.has("all") || args.get(k) == Some(v)
-            };
+            let want = |k: &str, v: &str| args.has("all") || args.get(k) == Some(v);
             let mut printed = false;
             if want("table", "1") {
                 println!("{}", tables::table_rss(&outcomes, true)?);
@@ -160,58 +612,21 @@ fn run() -> Result<()> {
             println!("{}", tables::figures_8_9(&outcomes)?);
             println!("{}", tables::figure10()?);
         }
-        "serve" => {
-            let n: usize = args.get("requests").unwrap_or("64").parse()?;
-            let backend_kind = args.get("backend").unwrap_or("engine");
-            let data = ImageDataset::load(artifact_path("data"), "eval")?;
-            let cfg = CoordinatorConfig::default();
-            let coordinator = match backend_kind {
-                "pjrt" => Coordinator::start(
-                    Arc::new(PjrtClassifierBackend::spawn(artifact_path("alexnet_fp32.hlo.txt"))?),
-                    cfg,
-                ),
-                "quantized" => {
-                    let w = WeightMap::load_dir(artifact_path("models/alexnet_mini"))?;
-                    let model = AlexNetMini::from_weights(&w)?;
-                    let o = calibrate_or_load("alexnet_mini", false, &calib_options(true))?;
-                    Coordinator::start(
-                        Arc::new(AlexNetBackend::quantized(model, &o.config, "alexnet-dnateq")),
-                        cfg,
-                    )
-                }
-                _ => {
-                    let w = WeightMap::load_dir(artifact_path("models/alexnet_mini"))?;
-                    Coordinator::start(
-                        Arc::new(AlexNetBackend::fp32(AlexNetMini::from_weights(&w)?, "alexnet-fp32")),
-                        cfg,
-                    )
-                }
-            };
-            let mut hits = 0usize;
-            let mut rxs = Vec::new();
-            for i in 0..n {
-                rxs.push((i % data.len(), coordinator.submit(Payload::Image(data.image(i % data.len())))?));
-            }
-            for (idx, rx) in rxs {
-                let resp = rx.recv().context("response channel closed")?;
-                if let dnateq::coordinator::Output::ClassId(k) = resp.output {
-                    if k == data.labels[idx] {
-                        hits += 1;
-                    }
-                }
-            }
-            let snap = coordinator.shutdown();
-            println!("backend={backend_kind} accuracy={:.4}", hits as f64 / n as f64);
-            println!("{}", snap.summary());
-        }
+        "serve" => serve(&args)?,
+        "plans" => plans(&args)?,
+        "swap" => swap(&args)?,
         "infer" => {
-            let model = args.get("model").unwrap_or("alexnet");
+            let model = match args.get("model").unwrap_or("alexnet") {
+                "alexnet" | "alexnet_mini" => "alexnet",
+                "resnet" | "resnet_mini" => "resnet",
+                other => bail!("unknown model `{other}` for infer; known: alexnet, resnet"),
+            };
             let index: usize = args.get("index").unwrap_or("0").parse()?;
             let rt = Runtime::cpu()?;
             let exe = rt.load_hlo(artifact_path(&format!("{model}_fp32.hlo.txt")))?;
             let data = ImageDataset::load(artifact_path("data"), "eval")?;
             let img = data.image(index);
-            let input = dnateq::tensor::Tensor::from_vec(&[1, 3, 32, 32], img.data().to_vec());
+            let input = Tensor::from_vec(&[1, 3, 32, 32], img.data().to_vec());
             let logits = exe.run1(&input)?;
             println!(
                 "platform={} model={model} sample={index} predicted={} label={}",
@@ -220,14 +635,16 @@ fn run() -> Result<()> {
                 data.labels[index]
             );
         }
-        "help" | _ => {
+        _ => {
             println!(
                 "repro — DNA-TEQ reproduction\n\
-                 usage: repro <calibrate|report|simulate|serve|infer> [flags]\n  \
+                 usage: repro <calibrate|report|simulate|serve|plans|swap|infer> [flags]\n  \
                  calibrate [--model M] [--force] [--quick]\n  \
                  report    --all | --table N | --figure N | --area [--quick]\n  \
                  simulate  [--quick]\n  \
-                 serve     [--backend engine|pjrt|quantized] [--requests N]\n  \
+                 serve     [--models a,b,c] [--backend engine|quantized|pjrt] [--requests N]\n  \
+                 plans     list | show <model> [--version V] | diff <model> <v1> <v2>\n  \
+                 swap      <model> [--thr-w T] [--requests N]\n  \
                  infer     [--model alexnet|resnet] [--index I]"
             );
         }

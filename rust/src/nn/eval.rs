@@ -99,9 +99,9 @@ pub fn eval_translator(model: &TransformerMini, data: &SeqDataset, plan: &ExecPl
         let logits = model.decode(&tgt[..tgt.len() - 1], &enc, plan, None);
         let mut hit = 0usize;
         for (pos, &gold) in tgt[1..].iter().enumerate() {
-            if logits.row(pos).iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
-                == gold
-            {
+            let row = logits.row(pos);
+            let pred = row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap());
+            if pred.unwrap().0 == gold {
                 hit += 1;
             }
         }
@@ -181,7 +181,10 @@ pub const TRACE_CAP: usize = 1 << 16;
 
 /// Collect a [`CalibrationInput`] for a CNN by tracing FP32 inference
 /// over the calibration subset (step 1 of Fig. 3).
-pub fn collect_image_calibration<M: ImageModel>(model: &M, calib: &ImageDataset) -> CalibrationInput {
+pub fn collect_image_calibration<M: ImageModel>(
+    model: &M,
+    calib: &ImageDataset,
+) -> CalibrationInput {
     let mut trace = TraceStore::new(TRACE_CAP);
     let plan = ExecPlan::fp32();
     for i in 0..calib.len() {

@@ -110,7 +110,8 @@ impl ResNetMini {
                 let stride = if s > 0 && b == 0 { 2 } else { 1 };
                 let c1 = it.next().unwrap();
                 let c2 = it.next().unwrap();
-                let proj = if c_in != c_out || stride != 1 { Some(it.next().unwrap()) } else { None };
+                let proj =
+                    if c_in != c_out || stride != 1 { Some(it.next().unwrap()) } else { None };
                 blocks.push(BasicBlock { c1, c2, proj });
                 c_in = c_out;
             }
@@ -195,7 +196,8 @@ impl ResNetMini {
     pub fn macs_per_layer(&self) -> Vec<(String, u64)> {
         let mut out = Vec::new();
         let mut hw = IN_HW as u64;
-        out.push((self.stem.name.clone(), self.stem.c_out as u64 * self.stem.c_in as u64 * 9 * hw * hw));
+        let stem_macs = self.stem.c_out as u64 * self.stem.c_in as u64 * 9 * hw * hw;
+        out.push((self.stem.name.clone(), stem_macs));
         for block in &self.blocks {
             if block.c1.stride == 2 {
                 hw /= 2;
@@ -226,7 +228,8 @@ impl HasQuantLayers for ResNetMini {
         }];
         for block in &self.blocks {
             for conv in [&block.c1, &block.c2].into_iter().chain(block.proj.as_ref()) {
-                v.push(QLayerRef { name: &conv.name, kind: LayerKind::Conv, weights: &conv.weights });
+                let weights = &conv.weights;
+                v.push(QLayerRef { name: &conv.name, kind: LayerKind::Conv, weights });
             }
         }
         v.push(QLayerRef {

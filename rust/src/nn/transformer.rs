@@ -156,7 +156,9 @@ fn mk_linear(w: &WeightMap, name: &str, out_f: usize, in_f: usize) -> Result<Lin
 }
 
 fn mk_ln(w: &WeightMap, name: &str) -> Result<LnParams> {
-    Ok(LnParams { gamma: w.vec(&format!("{name}.g"), D_MODEL)?, beta: w.vec(&format!("{name}.b"), D_MODEL)? })
+    let gamma = w.vec(&format!("{name}.g"), D_MODEL)?;
+    let beta = w.vec(&format!("{name}.b"), D_MODEL)?;
+    Ok(LnParams { gamma, beta })
 }
 
 fn mk_attn(w: &WeightMap, prefix: &str) -> Result<MhAttention> {

@@ -101,6 +101,37 @@ impl WeightMap {
             .with_context(|| format!("reading {}", p.display()))?;
         Json::parse(&raw)
     }
+
+    /// Model names available under a weights root (`artifacts/models`):
+    /// every subdirectory containing at least one `.bt` tensor. Sorted;
+    /// empty (not an error) when the root does not exist, so callers can
+    /// distinguish "no artifacts yet" from a bad model name.
+    pub fn list_models<P: AsRef<Path>>(root: P) -> Vec<String> {
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(root.as_ref()) {
+            Ok(e) => e,
+            Err(_) => return out,
+        };
+        for entry in entries.flatten() {
+            let dir = entry.path();
+            if !dir.is_dir() {
+                continue;
+            }
+            let has_weights = std::fs::read_dir(&dir)
+                .map(|mut it| {
+                    it.any(|f| {
+                        f.map(|f| f.path().extension().and_then(|e| e.to_str()) == Some("bt"))
+                            .unwrap_or(false)
+                    })
+                })
+                .unwrap_or(false);
+            if has_weights {
+                out.push(entry.file_name().to_string_lossy().into_owned());
+            }
+        }
+        out.sort();
+        out
+    }
 }
 
 #[cfg(test)]
@@ -143,5 +174,20 @@ mod tests {
     fn empty_dir_errors() {
         let dir = TempDir::new().unwrap();
         assert!(WeightMap::load_dir(dir.path()).is_err());
+    }
+
+    #[test]
+    fn list_models_finds_weight_dirs() {
+        let root = TempDir::new().unwrap();
+        let mut wm = WeightMap::new();
+        wm.insert("w", Tensor::zeros(&[2]));
+        wm.save_dir(root.path().join("beta_model")).unwrap();
+        wm.save_dir(root.path().join("alpha_model")).unwrap();
+        std::fs::create_dir_all(root.path().join("empty_model")).unwrap();
+        assert_eq!(
+            WeightMap::list_models(root.path()),
+            vec!["alpha_model".to_string(), "beta_model".to_string()]
+        );
+        assert!(WeightMap::list_models(root.path().join("missing")).is_empty());
     }
 }

@@ -4,7 +4,7 @@
 
 use crate::dataset::{ImageDataset, SeqDataset};
 use crate::dnateq::{
-    calibrate_model, CalibrationInput, CalibrationOptions, QuantConfig, SweepPoint,
+    calibrate_model, CalibrationInput, CalibrationOptions, PlanStore, QuantConfig, SweepPoint,
 };
 use crate::nn::{
     collect_image_calibration, collect_seq_calibration, eval_classifier, eval_translator,
@@ -222,18 +222,43 @@ impl CalibOutcome {
 }
 
 /// Run or load the cached calibration for `name`.
-pub fn calibrate_or_load(name: &str, force: bool, opts: &CalibrationOptions) -> Result<CalibOutcome> {
+///
+/// Either way, the accepted [`QuantConfig`] is mirrored into the
+/// versioned plan store (`artifacts/plans/<model>/<version>.json`) so
+/// the serving registry and the `plans` CLI always see every calibrated
+/// plan. Mirroring is idempotent: a plan whose content checksum matches
+/// the latest stored version does not mint a new one.
+pub fn calibrate_or_load(
+    name: &str,
+    force: bool,
+    opts: &CalibrationOptions,
+) -> Result<CalibOutcome> {
     let cache = artifact_path(&format!("configs/{name}.json"));
     if !force && cache.exists() {
-        let raw = std::fs::read_to_string(&cache)?;
-        return CalibOutcome::from_json(&Json::parse(&raw)?).context("parsing cached calibration");
+        let outcome = CalibOutcome::from_json(&Json::read_file(&cache)?)
+            .context("parsing cached calibration")?;
+        // Bootstrap-only mirror: seed the plan store if this model has no
+        // stored versions yet (pre-store caches). Never write on a cache
+        // hit otherwise — the store's latest version is authoritative
+        // (e.g. after a `swap`), and a load must stay read-only.
+        let store = PlanStore::open_default();
+        if store.versions(name).map(|v| v.is_empty()).unwrap_or(false) {
+            if let Err(e) = store.save_next(&outcome.config) {
+                eprintln!("[calibrate] {name}: plan-store mirror skipped: {e:#}");
+            }
+        }
+        return Ok(outcome);
     }
     let bundle = ModelBundle::load(name)?;
     eprintln!("[calibrate] {name}: running Fig.-3 pipeline (cached afterwards)");
     let outcome = calibrate(&bundle, opts);
-    if let Some(parent) = cache.parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    std::fs::write(&cache, outcome.to_json().encode_pretty())?;
+    outcome.to_json().write_file(&cache)?;
+    let store = PlanStore::open_default();
+    let version = store.save_next(&outcome.config)?;
+    eprintln!(
+        "[calibrate] {name}: plan stored as {} (checksum {})",
+        store.path(name, version).display(),
+        outcome.config.checksum_hex()
+    );
     Ok(outcome)
 }

@@ -39,7 +39,11 @@ pub fn table_rss(outcomes: &BTreeMap<String, CalibOutcome>, acts: bool) -> Resul
     let which = if acts { "activations" } else { "weights" };
     let idx = if acts { "I" } else { "II" };
     let mut s = format!("Table {idx}: Mean RSS of {which} for different distributions\n");
-    let _ = writeln!(s, "{:<18} {:>10} {:>12} {:>10} {:>10}", "DNN", "Normal", "Exponential", "Pareto", "Uniform");
+    let _ = writeln!(
+        s,
+        "{:<18} {:>10} {:>12} {:>10} {:>10}",
+        "DNN", "Normal", "Exponential", "Pareto", "Uniform"
+    );
     let mut rows = Vec::new();
     for name in MODELS {
         let bundle = ModelBundle::load(name)?;
@@ -54,12 +58,17 @@ pub fn table_rss(outcomes: &BTreeMap<String, CalibOutcome>, acts: bool) -> Resul
         }
         let n = input.layers.len() as f64;
         let m: Vec<f64> = sums.iter().map(|x| x / n).collect();
-        let _ = writeln!(s, "{:<18} {:>10.3} {:>12.3} {:>10.3} {:>10.3}", name, m[0], m[1], m[2], m[3]);
+        let _ =
+            writeln!(s, "{:<18} {:>10.3} {:>12.3} {:>10.3} {:>10.3}", name, m[0], m[1], m[2], m[3]);
         rows.push(format!("{name},{},{},{},{}", m[0], m[1], m[2], m[3]));
         // Sanity echo: exponential should win (paper's core observation).
         let _ = outcomes; // bitwidths not needed here
     }
-    save_csv(&format!("table{}_rss_{which}", if acts { 1 } else { 2 }), "model,normal,exponential,pareto,uniform", &rows)?;
+    save_csv(
+        &format!("table{}_rss_{which}", if acts { 1 } else { 2 }),
+        "model,normal,exponential,pareto,uniform",
+        &rows,
+    )?;
     Ok(s)
 }
 
@@ -89,7 +98,8 @@ pub fn figure_fit(acts: bool) -> Result<String> {
         let csv = format!("fig{fig}_{model}_{}", layer.name.replace('.', "_"));
         save_csv(&csv, "bin_center,empirical_density,exponential_fit", &rows)?;
         let rss = rep.rss_of(DistKind::Exponential);
-        let _ = writeln!(out, "  {model}/{}: exp-fit RSS = {rss:.4}  → reports/{csv}.csv", layer.name);
+        let _ =
+            writeln!(out, "  {model}/{}: exp-fit RSS = {rss:.4}  → reports/{csv}.csv", layer.name);
     }
     Ok(out)
 }
@@ -98,8 +108,13 @@ pub fn figure_fit(acts: bool) -> Result<String> {
 pub fn table3(quick: bool) -> Result<String> {
     let sizes = [1024usize, 2048, 4096];
     let target_ms = if quick { 120 } else { 600 };
-    let mut s = String::from("Table III: FC execution time (ms), INT8 SIMD-baseline vs DNA-TEQ counting\n");
-    let _ = writeln!(s, "{:<22} {:>14} {:>14} {:>14}", "Scheme", "FC(1024,1024)", "FC(2048,2048)", "FC(4096,4096)");
+    let mut s =
+        String::from("Table III: FC execution time (ms), INT8 SIMD-baseline vs DNA-TEQ counting\n");
+    let _ = writeln!(
+        s,
+        "{:<22} {:>14} {:>14} {:>14}",
+        "Scheme", "FC(1024,1024)", "FC(2048,2048)", "FC(4096,4096)"
+    );
     let mut rng = SplitMix64::new(0xF00D);
     let mut int8_ms = Vec::new();
     let mut dna3_ms = Vec::new();
@@ -123,9 +138,12 @@ pub fn table3(quick: bool) -> Result<String> {
             acc.push(r.per_iter_ms());
         }
     }
-    let _ = writeln!(s, "{:<22} {:>14.3} {:>14.3} {:>14.3}", "Uniform INT8", int8_ms[0], int8_ms[1], int8_ms[2]);
-    let _ = writeln!(s, "{:<22} {:>14.3} {:>14.3} {:>14.3}", "DNA-TEQ 3-bit", dna3_ms[0], dna3_ms[1], dna3_ms[2]);
-    let _ = writeln!(s, "{:<22} {:>14.3} {:>14.3} {:>14.3}", "DNA-TEQ 4-bit", dna4_ms[0], dna4_ms[1], dna4_ms[2]);
+    let ws = |s: &mut String, scheme: &str, ms: &[f64]| {
+        let _ = writeln!(s, "{:<22} {:>14.3} {:>14.3} {:>14.3}", scheme, ms[0], ms[1], ms[2]);
+    };
+    ws(&mut s, "Uniform INT8", &int8_ms);
+    ws(&mut s, "DNA-TEQ 3-bit", &dna3_ms);
+    ws(&mut s, "DNA-TEQ 4-bit", &dna4_ms);
     let rows = vec![
         format!("int8,{},{},{}", int8_ms[0], int8_ms[1], int8_ms[2]),
         format!("dnateq3,{},{},{}", dna3_ms[0], dna3_ms[1], dna3_ms[2]),
@@ -139,7 +157,8 @@ pub fn table3(quick: bool) -> Result<String> {
 /// DNA-TEQ.
 pub fn table4(outcomes: &BTreeMap<String, CalibOutcome>) -> Result<String> {
     let mut s = String::from("Table IV: error/loss comparison between quantization schemes\n");
-    let _ = writeln!(s, "{:<14} {:>22} {:>22}", "DNN", "Uniform (RMAE/loss)", "DNA-TEQ (RMAE/loss)");
+    let _ =
+        writeln!(s, "{:<14} {:>22} {:>22}", "DNN", "Uniform (RMAE/loss)", "DNA-TEQ (RMAE/loss)");
     let mut rows = Vec::new();
     for name in MODELS {
         let o = &outcomes[name];
@@ -164,7 +183,8 @@ pub fn table4(outcomes: &BTreeMap<String, CalibOutcome>) -> Result<String> {
         );
         rows.push(format!("{name},{uni_rmae},{uni_loss},{dna_rmae},{dna_loss}"));
     }
-    save_csv("table4_error_loss", "model,uniform_rmae,uniform_loss,dnateq_rmae,dnateq_loss", &rows)?;
+    let header4 = "model,uniform_rmae,uniform_loss,dnateq_rmae,dnateq_loss";
+    save_csv("table4_error_loss", header4, &rows)?;
     Ok(s)
 }
 
@@ -198,16 +218,26 @@ pub fn table5(outcomes: &BTreeMap<String, CalibOutcome>) -> Result<String> {
                 format!("{:.4}", o.dnateq_accuracy),
             )
         };
-        let _ = writeln!(s, "{:<18} {:>11}/{:>7} {:>12} {:>10.2} {:>14.2}", name, fp, i8v, dna, bits, comp);
+        let _ = writeln!(
+            s,
+            "{:<18} {:>11}/{:>7} {:>12} {:>10.2} {:>14.2}",
+            name, fp, i8v, dna, bits, comp
+        );
         rows.push(format!(
             "{name},{},{},{},{bits},{comp}",
             o.fp32_accuracy, o.int8_accuracy, o.dnateq_accuracy
         ));
     }
     let avg_bits: f64 =
-        MODELS.iter().map(|m| outcomes[*m].config.avg_bitwidth()).sum::<f64>() / MODELS.len() as f64;
-    let _ = writeln!(s, "  average bitwidth across DNNs: {avg_bits:.2} (compression {:.1}% vs INT8)", (1.0 - avg_bits / 8.0) * 100.0);
-    save_csv("table5_accuracy_compression", "model,fp32,int8,dnateq,avg_bits,compression_pct", &rows)?;
+        MODELS.iter().map(|m| outcomes[*m].config.avg_bitwidth()).sum::<f64>()
+            / MODELS.len() as f64;
+    let _ = writeln!(
+        s,
+        "  average bitwidth across DNNs: {avg_bits:.2} (compression {:.1}% vs INT8)",
+        (1.0 - avg_bits / 8.0) * 100.0
+    );
+    let header5 = "model,fp32,int8,dnateq,avg_bits,compression_pct";
+    save_csv("table5_accuracy_compression", header5, &rows)?;
     Ok(s)
 }
 
@@ -226,8 +256,10 @@ fn sim_workload(name: &str, cfg: &QuantConfig) -> (Vec<crate::accel::LayerShape>
 pub fn figures_8_9(outcomes: &BTreeMap<String, CalibOutcome>) -> Result<String> {
     let cfg = AccelConfig::default();
     let em = EnergyModel::default();
-    let mut s = String::from("Figures 8 & 9: DNA-TEQ accelerator vs INT8 baseline (full-size workloads)\n");
-    let _ = writeln!(s, "{:<18} {:>10} {:>16} {:>12}", "DNN", "Speedup", "Energy savings", "avg bits");
+    let mut s =
+        String::from("Figures 8 & 9: DNA-TEQ accelerator vs INT8 baseline (full-size workloads)\n");
+    let _ =
+        writeln!(s, "{:<18} {:>10} {:>16} {:>12}", "DNN", "Speedup", "Energy savings", "avg bits");
     let mut speedups = Vec::new();
     let mut savings = Vec::new();
     let mut rows = Vec::new();
@@ -242,7 +274,8 @@ pub fn figures_8_9(outcomes: &BTreeMap<String, CalibOutcome>) -> Result<String> 
         speedups.push(sp);
         savings.push(en);
     }
-    let _ = writeln!(s, "{:<18} {:>10.2} {:>16.2}", "geomean", geomean(&speedups), geomean(&savings));
+    let _ =
+        writeln!(s, "{:<18} {:>10.2} {:>16.2}", "geomean", geomean(&speedups), geomean(&savings));
     rows.push(format!("geomean,{},{},", geomean(&speedups), geomean(&savings)));
     save_csv("fig8_9_accelerator", "model,speedup,energy_savings,avg_bits", &rows)?;
     Ok(s)
@@ -266,7 +299,8 @@ pub fn figure10() -> Result<String> {
 
 /// Fig. 11: Thr_w sensitivity sweep (accuracy loss + avg bitwidth).
 pub fn figure11(outcomes: &BTreeMap<String, CalibOutcome>) -> Result<String> {
-    let mut s = String::from("Figure 11: accuracy loss vs error threshold (avg bitwidth annotated)\n");
+    let mut s =
+        String::from("Figure 11: accuracy loss vs error threshold (avg bitwidth annotated)\n");
     let mut rows = Vec::new();
     for name in MODELS {
         let o = &outcomes[name];

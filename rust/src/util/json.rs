@@ -110,7 +110,9 @@ impl Json {
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(v) => {
                 if v.is_finite() {
-                    if *v == v.trunc() && v.abs() < 1e15 {
+                    // `-0.0` must take the float path ("-0") so the parse
+                    // round-trip is bit-exact (plan checksums rely on it).
+                    if *v == v.trunc() && v.abs() < 1e15 && !(*v == 0.0 && v.is_sign_negative()) {
                         let _ = write!(out, "{}", *v as i64);
                     } else {
                         let _ = write!(out, "{v}");
@@ -170,6 +172,26 @@ impl Json {
             bail!("trailing data at byte {pos}");
         }
         Ok(val)
+    }
+
+    // ---- file helpers --------------------------------------------------
+
+    /// Parse a JSON document from a file (with path context on errors).
+    pub fn read_file<P: AsRef<std::path::Path>>(path: P) -> Result<Json> {
+        let path = path.as_ref();
+        let raw = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&raw).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+    }
+
+    /// Pretty-print this value to a file, creating parent directories.
+    pub fn write_file<P: AsRef<std::path::Path>>(&self, path: P) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.encode_pretty())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
     }
 }
 
@@ -450,6 +472,38 @@ mod tests {
     fn integers_encode_without_decimal_point() {
         assert_eq!(Json::Num(42.0).encode(), "42");
         assert_eq!(Json::Num(0.5).encode(), "0.5");
+    }
+
+    #[test]
+    fn f64_roundtrip_is_bit_exact() {
+        for v in [
+            0.1f64 + 0.2,
+            -0.0,
+            0.0,
+            f64::MIN_POSITIVE,
+            1.0 / 3.0,
+            -1e-300,
+            9.007199254740991e15,
+        ] {
+            let enc = Json::Num(v).encode();
+            match Json::parse(&enc).unwrap() {
+                Json::Num(got) => {
+                    assert_eq!(got.to_bits(), v.to_bits(), "value {v} encoded as {enc}")
+                }
+                other => panic!("parsed {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn file_helpers_roundtrip() {
+        let mut o = Json::obj();
+        o.set("k", 1.25f64);
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("sub/doc.json");
+        o.write_file(&p).unwrap();
+        assert_eq!(Json::read_file(&p).unwrap(), o);
+        assert!(Json::read_file(dir.path().join("missing.json")).is_err());
     }
 
     #[test]

@@ -15,3 +15,26 @@ pub use bench::{bench, write_json, BenchResult};
 pub use json::Json;
 pub use parallel::{chunk_ranges, parallel_map, parallel_row_blocks, suggested_pieces};
 pub use tmp::TempDir;
+
+/// FNV-1a 64-bit hash — the content checksum of plan artifacts
+/// ([`crate::dnateq::QuantConfig`]). Stable across platforms and rust
+/// versions (pure arithmetic, no dependency on `Hasher` internals).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Reference values for the canonical FNV-1a 64 test strings.
+        assert_eq!(super::fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(super::fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(super::fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

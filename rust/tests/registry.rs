@@ -1,0 +1,311 @@
+//! Integration + property tests for the plan-artifact store and the
+//! multi-model serving registry (PR: versioned plans + hot-swap).
+//!
+//! Properties pinned here:
+//! * plan artifacts round-trip **bit-exactly** (checksum-verified, every
+//!   f64 compared by bit pattern);
+//! * registry routing preserves per-model request order under
+//!   interleaved multi-model traffic;
+//! * plan hot-swap under concurrent load never drops, corrupts, or
+//!   reorders a response.
+
+use dnateq::coordinator::{
+    AlexNetBackend, Backend, BatcherConfig, CoordinatorConfig, ModelRegistry, Output, Payload,
+};
+use dnateq::dataset::ImageDataset;
+use dnateq::dnateq::{
+    config_for_threshold, LayerKind, LayerQuant, PlanStore, QuantConfig, SearchOptions,
+    TensorQuant,
+};
+use dnateq::nn::{collect_image_calibration, AlexNetMini};
+use dnateq::tensor::SplitMix64;
+use dnateq::util::prop::{for_all, PropConfig};
+use dnateq::util::TempDir;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// Plan-artifact round-trip.
+// ---------------------------------------------------------------------
+
+/// A finite f64 drawn from raw bit patterns (exercises subnormals,
+/// shortest-repr edge cases, and negative zero — not just "nice" values).
+fn finite_f64(rng: &mut SplitMix64) -> f64 {
+    loop {
+        let v = f64::from_bits(rng.next_u64());
+        if v.is_finite() {
+            return v;
+        }
+    }
+}
+
+fn random_config(rng: &mut SplitMix64, size: usize) -> QuantConfig {
+    let n_layers = 1 + rng.next_below(size.max(1));
+    let layers = (0..n_layers)
+        .map(|i| LayerQuant {
+            name: format!("layer{i}"),
+            kind: if rng.next_below(2) == 0 { LayerKind::Conv } else { LayerKind::Fc },
+            n_bits: 1 + rng.next_below(7) as u8,
+            base: 1.0 + rng.next_f64().abs() * 4.0 + 1e-9,
+            weights: TensorQuant {
+                alpha: finite_f64(rng),
+                beta: if rng.next_below(8) == 0 { -0.0 } else { finite_f64(rng) },
+                rmae: rng.next_f64(),
+                elems: rng.next_below(1 << 20),
+            },
+            acts: TensorQuant {
+                alpha: finite_f64(rng),
+                beta: finite_f64(rng),
+                rmae: rng.next_f64(),
+                elems: rng.next_below(1 << 20),
+            },
+            seeded_by_weights: rng.next_below(2) == 0,
+            rss_w: finite_f64(rng),
+            rss_a: finite_f64(rng),
+            converged: rng.next_below(2) == 0,
+        })
+        .collect();
+    QuantConfig {
+        model: format!("prop_model_{}", rng.next_below(4)),
+        thr_w: rng.next_f64() + 1e-9,
+        layers,
+    }
+}
+
+fn assert_bit_exact(a: &QuantConfig, b: &QuantConfig) -> Result<(), String> {
+    if a.checksum() != b.checksum() {
+        return Err(format!("checksum {} != {}", a.checksum_hex(), b.checksum_hex()));
+    }
+    if a.thr_w.to_bits() != b.thr_w.to_bits() || a.model != b.model {
+        return Err("header mismatch".into());
+    }
+    for (la, lb) in a.layers.iter().zip(&b.layers) {
+        let pairs = [
+            (la.base, lb.base),
+            (la.weights.alpha, lb.weights.alpha),
+            (la.weights.beta, lb.weights.beta),
+            (la.weights.rmae, lb.weights.rmae),
+            (la.acts.alpha, lb.acts.alpha),
+            (la.acts.beta, lb.acts.beta),
+            (la.acts.rmae, lb.acts.rmae),
+            (la.rss_w, lb.rss_w),
+            (la.rss_a, lb.rss_a),
+        ];
+        for (x, y) in pairs {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("layer `{}`: {x:?} != {y:?} (bits differ)", la.name));
+            }
+        }
+        if la.n_bits != lb.n_bits || la.kind != lb.kind || la.name != lb.name {
+            return Err(format!("layer `{}` metadata mismatch", la.name));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn property_plan_artifact_roundtrip_is_bit_exact() {
+    let dir = TempDir::new().unwrap();
+    let store = PlanStore::new(dir.path());
+    let mut case = 0u32;
+    for_all(
+        PropConfig { cases: 48, seed: 0x9_1A45 },
+        random_config,
+        |cfg| {
+            case += 1;
+            // Through the raw artifact path…
+            let p = dir.path().join(format!("raw/{case}.json"));
+            cfg.save_json(&p).map_err(|e| e.to_string())?;
+            let back = QuantConfig::load_json(&p).map_err(|e| format!("{e:#}"))?;
+            assert_bit_exact(cfg, &back)?;
+            // …and through the versioned store.
+            let v = store.save_next(cfg).map_err(|e| e.to_string())?;
+            let stored = store.load(&cfg.model, v).map_err(|e| format!("{e:#}"))?;
+            assert_bit_exact(cfg, &stored)
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Registry routing order under mixed-model traffic.
+// ---------------------------------------------------------------------
+
+/// Echoes sequence payloads and records the order in which payloads hit
+/// the backend. With one worker per model, backend order == per-model
+/// submission order iff the queue + batcher preserve FIFO.
+struct RecordingBackend {
+    tag: usize,
+    log: Arc<Mutex<Vec<(usize, usize)>>>,
+    delay_us: u64,
+}
+
+impl Backend for RecordingBackend {
+    fn infer(&self, batch: &[Payload]) -> Vec<Output> {
+        if self.delay_us > 0 {
+            std::thread::sleep(Duration::from_micros(self.delay_us));
+        }
+        batch
+            .iter()
+            .map(|p| match p {
+                Payload::Seq(s) => {
+                    self.log.lock().unwrap().push((self.tag, s[0]));
+                    Output::Tokens(s.clone())
+                }
+                Payload::Image(_) => Output::ClassId(0),
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &str {
+        "recording"
+    }
+}
+
+#[test]
+fn property_routing_preserves_per_model_order_under_mixed_batches() {
+    for_all(
+        PropConfig { cases: 16, seed: 0x0DE2 },
+        |rng: &mut SplitMix64, size| {
+            let n_models = 1 + rng.next_below(3);
+            let n_requests = 4 + rng.next_below(16 * size.max(1));
+            let max_batch = 1 + rng.next_below(8);
+            (n_models, n_requests, max_batch)
+        },
+        |&(n_models, n_requests, max_batch)| {
+            let log = Arc::new(Mutex::new(Vec::new()));
+            let registry = ModelRegistry::new();
+            let names: Vec<String> = (0..n_models).map(|m| format!("model{m}")).collect();
+            for (tag, name) in names.iter().enumerate() {
+                let backend = RecordingBackend { tag, log: Arc::clone(&log), delay_us: 80 };
+                let cfg = CoordinatorConfig {
+                    batcher: BatcherConfig { max_batch, max_wait: Duration::from_micros(300) },
+                    workers: 1,
+                    queue_depth: 256,
+                };
+                registry.register(name, Arc::new(backend), cfg).map_err(|e| e.to_string())?;
+            }
+            // Interleave round-robin: request i goes to model i % n with
+            // per-model sequence number i / n.
+            let mut rxs = Vec::new();
+            for i in 0..n_requests {
+                let model = &names[i % n_models];
+                let seq = i / n_models;
+                let rx =
+                    registry.submit(model, Payload::Seq(vec![seq])).map_err(|e| e.to_string())?;
+                rxs.push((seq, rx));
+            }
+            for (seq, rx) in rxs {
+                let resp = rx.recv().map_err(|e| e.to_string())?;
+                if resp.output != Output::Tokens(vec![seq]) {
+                    return Err(format!("response mismatch: wanted {seq}, got {:?}", resp.output));
+                }
+            }
+            registry.shutdown();
+            // Per-model arrival order at the backend must be 0, 1, 2, …
+            let log = log.lock().unwrap();
+            for tag in 0..n_models {
+                let seen: Vec<usize> =
+                    log.iter().filter(|(t, _)| *t == tag).map(|(_, s)| *s).collect();
+                let want: Vec<usize> = (0..seen.len()).collect();
+                if seen != want {
+                    return Err(format!("model{tag} order broken: {seen:?}"));
+                }
+            }
+            let total: usize = log.len();
+            if total != n_requests {
+                return Err(format!("conservation broken: {total} != {n_requests}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Hot-swap under concurrent load.
+// ---------------------------------------------------------------------
+
+#[test]
+fn hot_swap_under_concurrent_load_never_drops_a_response() {
+    let model = AlexNetMini::random(501);
+    let data = ImageDataset::synthetic(8, 502);
+    let input = collect_image_calibration(&model, &data.take(2));
+    let cfg_a = config_for_threshold(&input, 0.05, &SearchOptions::default());
+    let cfg_b = config_for_threshold(&input, 0.10, &SearchOptions::default());
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry
+        .register_swappable(
+            "alexnet_mini",
+            Arc::new(AlexNetBackend::fp32(model, "alexnet")),
+            CoordinatorConfig {
+                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(500) },
+                workers: 2,
+                queue_depth: 128,
+            },
+        )
+        .unwrap();
+
+    let clients = 3usize;
+    let per_client = 16usize;
+    let mut handles = Vec::new();
+    for t in 0..clients {
+        let reg = Arc::clone(&registry);
+        let data = data.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut answered = 0usize;
+            for i in 0..per_client {
+                let resp = reg
+                    .submit_wait("alexnet_mini", Payload::Image(data.image((t + i) % data.len())))
+                    .expect("submit during swap");
+                match resp.output {
+                    Output::ClassId(k) if k < 10 => answered += 1,
+                    other => panic!("bad output under swap: {other:?}"),
+                }
+            }
+            answered
+        }));
+    }
+
+    // Swap plans continuously while the clients hammer the registry.
+    let swaps = 6;
+    for s in 0..swaps {
+        let cfg = if s % 2 == 0 { &cfg_a } else { &cfg_b };
+        registry.swap_plan("alexnet_mini", cfg).unwrap();
+        assert!(registry.plan_label("alexnet_mini").unwrap().starts_with("dnateq"));
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let answered: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(answered, clients * per_client, "responses dropped during hot-swap");
+
+    let registry = Arc::try_unwrap(registry).ok().expect("sole owner");
+    let snaps = registry.shutdown();
+    let snap = &snaps["alexnet_mini"];
+    assert_eq!(snap.completed as usize, clients * per_client);
+    assert_eq!(snap.swaps, swaps as u64);
+}
+
+// ---------------------------------------------------------------------
+// Store-to-serving end-to-end: calibrate → store → load → serve → swap.
+// ---------------------------------------------------------------------
+
+#[test]
+fn stored_plan_serves_identically_to_in_memory_plan() {
+    let model = AlexNetMini::random(503);
+    let data = ImageDataset::synthetic(6, 504);
+    let input = collect_image_calibration(&model, &data.take(2));
+    let cfg = config_for_threshold(&input, 0.08, &SearchOptions::default());
+
+    let dir = TempDir::new().unwrap();
+    let store = PlanStore::new(dir.path());
+    let v = store.save_next(&cfg).unwrap();
+    let stored = store.load(&cfg.model, v).unwrap();
+    assert_eq!(stored.checksum(), cfg.checksum());
+
+    // Serving through the reloaded plan must predict exactly like the
+    // in-memory plan it was stored from.
+    let direct = AlexNetBackend::quantized(AlexNetMini::random(503), &cfg, "direct");
+    let reloaded = AlexNetBackend::quantized(AlexNetMini::random(503), &stored, "reloaded");
+    let batch: Vec<Payload> = (0..data.len()).map(|i| Payload::Image(data.image(i))).collect();
+    assert_eq!(direct.infer(&batch), reloaded.infer(&batch));
+}
