@@ -1,4 +1,5 @@
-//! End-to-end serving bench: coordinator + batched engines.
+//! End-to-end serving bench: coordinator + batched engines, driven
+//! through the typed `InferenceClient` API.
 //!
 //! The headline comparison is the FC-dominated counting backend served
 //! with batcher `max_batch ∈ {1, 8, 32}`: at `max_batch = 1` every
@@ -13,7 +14,7 @@
 
 use dnateq::artifact_path;
 use dnateq::coordinator::{
-    AlexNetBackend, Backend, BatcherConfig, Coordinator, CoordinatorConfig, CountingFcBackend,
+    AlexNetBackend, BatcherConfig, Coordinator, CoordinatorConfig, CountingFcBackend, Engine,
     ModelRegistry, Payload,
 };
 use dnateq::dataset::ImageDataset;
@@ -29,7 +30,7 @@ use std::time::{Duration, Instant};
 /// wall time as a `BenchResult` so the run lands in the JSON report.
 fn drive(
     label: &str,
-    backend: Arc<dyn Backend>,
+    engine: Arc<dyn Engine>,
     max_batch: usize,
     data: &ImageDataset,
     n: usize,
@@ -38,12 +39,14 @@ fn drive(
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
         workers: 2,
         queue_depth: 512,
+        ..CoordinatorConfig::default()
     };
-    let c = Coordinator::start(backend, cfg);
+    let c = Coordinator::start(engine, cfg);
     let payloads: Vec<Payload> =
         (0..data.len().min(n)).map(|i| Payload::Image(data.image(i))).collect();
     let per = c.drive(&payloads, n).expect("serving drive");
-    let snap = c.shutdown();
+    let snap = c.shutdown_and_drain();
+    assert_eq!(snap.failed_total(), 0, "healthy bench traffic must not fail");
     println!("{label:<28} {}", snap.summary());
     BenchResult {
         name: label.to_string(),
@@ -55,8 +58,9 @@ fn drive(
 }
 
 /// Multi-model mixed-traffic sweep: the registry serves the engine model
-/// and the counting-FC model side by side; requests interleave
-/// round-robin so both batchers fill under concurrent load.
+/// and the counting-FC model side by side through per-model typed
+/// clients; requests interleave round-robin so both batchers fill under
+/// concurrent load.
 fn drive_registry(
     engine: Arc<AlexNetBackend>,
     counting: Arc<CountingFcBackend>,
@@ -68,22 +72,24 @@ fn drive_registry(
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
         workers: 2,
         queue_depth: 512,
+        ..CoordinatorConfig::default()
     };
     let registry = ModelRegistry::new();
     registry.register_swappable("alexnet_mini", engine, cfg).unwrap();
     registry.register("counting_fc", counting, cfg).unwrap();
-    let models = ["alexnet_mini", "counting_fc"];
+    let clients =
+        [registry.client("alexnet_mini").unwrap(), registry.client("counting_fc").unwrap()];
     let t0 = Instant::now();
-    let mut rxs = Vec::with_capacity(n);
+    let mut tickets = Vec::with_capacity(n);
     for i in 0..n {
-        let model = models[i % models.len()];
-        rxs.push(registry.submit(model, Payload::Image(data.image(i % data.len()))).unwrap());
+        let client = &clients[i % clients.len()];
+        tickets.push(client.submit(Payload::Image(data.image(i % data.len()))).unwrap());
     }
-    for rx in rxs {
-        rx.recv().unwrap();
+    for t in tickets {
+        t.wait().unwrap();
     }
     let per = t0.elapsed() / n as u32;
-    let snaps = registry.shutdown();
+    let snaps = registry.shutdown_and_drain();
     for (model, snap) in &snaps {
         println!("  registry/{model:<20} {}", snap.summary());
     }

@@ -1,42 +1,44 @@
 //! End-to-end serving driver (the EXPERIMENTS.md §E2E workload).
 //!
 //! Loads the trained AlexNet-mini, serves batched classification
-//! requests through the coordinator with THREE backends — the rust f32
-//! engine, the DNA-TEQ fake-quantized engine, and the PJRT-compiled AOT
-//! artifact — and reports accuracy + latency/throughput for each.
+//! requests through the coordinator's typed `InferenceClient` with
+//! THREE engines — the rust f32 engine, the DNA-TEQ fake-quantized
+//! engine, and the PJRT-compiled AOT artifact — and reports accuracy +
+//! latency/throughput for each.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_classifier
 //! ```
 
 use anyhow::Result;
+use dnateq::artifact_path;
 use dnateq::coordinator::{
-    AlexNetBackend, Backend, Coordinator, CoordinatorConfig, Output, Payload,
+    AlexNetBackend, Coordinator, CoordinatorConfig, Engine, Output, Payload,
     PjrtClassifierBackend,
 };
 use dnateq::dataset::ImageDataset;
 use dnateq::dnateq::CalibrationOptions;
 use dnateq::nn::{AlexNetMini, WeightMap};
 use dnateq::report::calibrate_or_load;
-use dnateq::artifact_path;
 use std::sync::Arc;
 
-fn drive(name: &str, backend: Arc<dyn Backend>, data: &ImageDataset, n: usize) -> Result<()> {
-    let c = Coordinator::start(backend, CoordinatorConfig::default());
-    let mut rxs = Vec::new();
+fn drive(name: &str, engine: Arc<dyn Engine>, data: &ImageDataset, n: usize) -> Result<()> {
+    let c = Coordinator::start(engine, CoordinatorConfig::default());
+    let client = c.client();
+    let mut tickets = Vec::new();
     for i in 0..n {
         let idx = i % data.len();
-        rxs.push((idx, c.submit(Payload::Image(data.image(idx)))?));
+        tickets.push((idx, client.submit(Payload::Image(data.image(idx)))?));
     }
     let mut hits = 0usize;
-    for (idx, rx) in rxs {
-        if let Output::ClassId(k) = rx.recv()?.output {
+    for (idx, ticket) in tickets {
+        if let Output::ClassId(k) = ticket.wait()?.output {
             if k == data.labels[idx] {
                 hits += 1;
             }
         }
     }
-    let snap = c.shutdown();
+    let snap = c.shutdown_and_drain();
     println!("{name:<18} accuracy {:.4} | {}", hits as f64 / n as f64, snap.summary());
     Ok(())
 }

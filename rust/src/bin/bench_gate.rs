@@ -2,11 +2,17 @@
 //!
 //! Runs the fixed-shape counting-FC sweep (batcher `max_batch` ∈
 //! {1, 8, 32}, FC 3072→256, 64 requests) end-to-end through the
-//! coordinator, emits the machine-readable result JSON, and compares
-//! against a committed baseline: the gate **fails when throughput
-//! regresses by more than `--tolerance`** (default 15%) on any case, or
-//! when the batch-32-vs-1 speedup — the PR-1 batched hot path — drops
-//! below `--min-speedup`.
+//! coordinator via the typed `InferenceClient` API, emits the
+//! machine-readable result JSON (timings **and** the serving failure
+//! counters), and compares against a committed baseline. The gate
+//! **fails** when:
+//! * throughput regresses by more than `--tolerance` (default 15%) on
+//!   any case;
+//! * the batch-32-vs-1 speedup — the PR-1 batched hot path — drops
+//!   below `--min-speedup`;
+//! * **any request fails during the sweep**: engine failures, shed,
+//!   rejected, cancelled, expired, or dropped-receiver sends must all
+//!   be zero under this healthy fixed-shape load.
 //!
 //! ```bash
 //! cargo run --release --bin bench_gate -- \
@@ -16,13 +22,14 @@
 //! ```
 
 use dnateq::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, CountingFcBackend, Payload,
+    AdmissionPolicy, BatcherConfig, Coordinator, CoordinatorConfig, CountingFcBackend,
+    MetricsSnapshot, Payload,
 };
 use dnateq::dataset::ImageDataset;
 use dnateq::dnateq::ExpQuantParams;
 use dnateq::expdot::CountingFc;
 use dnateq::tensor::{SplitMix64, Tensor};
-use dnateq::util::bench::{write_json, BenchResult};
+use dnateq::util::bench::BenchResult;
 use dnateq::util::Json;
 use std::sync::Arc;
 use std::time::Duration;
@@ -87,6 +94,44 @@ fn parse_opts() -> Opts {
     o
 }
 
+/// Serving failure counters accumulated over every coordinator the
+/// sweep starts (warm-ups included): under this healthy fixed-shape
+/// load, every one of them must stay zero. Names and order come from
+/// [`MetricsSnapshot::failure_counters`], so new counters flow through
+/// the gate automatically.
+#[derive(Default)]
+struct FailureCounters {
+    totals: std::collections::BTreeMap<&'static str, u64>,
+}
+
+impl FailureCounters {
+    fn absorb(&mut self, snap: &MetricsSnapshot) {
+        for (name, value) in snap.failure_counters() {
+            *self.totals.entry(name).or_default() += value;
+        }
+    }
+
+    fn total(&self) -> u64 {
+        self.totals.values().sum()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        for (&name, &value) in &self.totals {
+            o.set(name, value);
+        }
+        o
+    }
+
+    fn describe(&self) -> String {
+        self.totals
+            .iter()
+            .map(|(name, value)| format!("{value} {name}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
 /// Drive `n` requests through a fresh coordinator at one batcher
 /// setting; per-request wall time becomes the case median. The
 /// measurement itself is [`Coordinator::drive`] — the same harness the
@@ -96,21 +141,23 @@ fn drive(
     max_batch: usize,
     data: &ImageDataset,
     n: usize,
+    counters: &mut FailureCounters,
 ) -> Duration {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
         workers: 2,
         queue_depth: 256,
+        admission: AdmissionPolicy::Block,
     };
     let c = Coordinator::start(backend, cfg);
     let payloads: Vec<Payload> =
         (0..data.len().min(n)).map(|i| Payload::Image(data.image(i))).collect();
     let per = c.drive(&payloads, n).expect("bench drive");
-    c.shutdown();
+    counters.absorb(&c.shutdown_and_drain());
     per
 }
 
-fn run_sweep() -> Vec<BenchResult> {
+fn run_sweep(counters: &mut FailureCounters) -> Vec<BenchResult> {
     let mut rng = SplitMix64::new(0xC1_BE7C);
     let w = Tensor::rand_signed_exponential(&[OUT_FEATURES, IN_FEATURES], 3.0, &mut rng);
     let x_cal = Tensor::rand_signed_exponential(&[1, IN_FEATURES], 1.0, &mut rng);
@@ -122,10 +169,10 @@ fn run_sweep() -> Vec<BenchResult> {
 
     let mut results = Vec::new();
     for max_batch in SWEEP {
-        drive(Arc::clone(&backend), max_batch, &data, 16); // warm-up
+        drive(Arc::clone(&backend), max_batch, &data, 16, counters); // warm-up
         // Three timed repetitions; keep the fastest (least-noise) run.
         let best = (0..3)
-            .map(|_| drive(Arc::clone(&backend), max_batch, &data, REQUESTS))
+            .map(|_| drive(Arc::clone(&backend), max_batch, &data, REQUESTS, counters))
             .min()
             .unwrap();
         let r = BenchResult {
@@ -145,6 +192,26 @@ fn median_of<'a>(results: &'a [BenchResult], suffix: &str) -> Option<&'a BenchRe
     results.iter().find(|r| r.name.ends_with(suffix))
 }
 
+/// Encode a run as the gate's report JSON: timing cases + the failure
+/// counters the gate asserts on.
+fn report_json(results: &[BenchResult], counters: &FailureCounters) -> Json {
+    let mut o = Json::obj();
+    o.set("cases", Json::Arr(results.iter().map(|r| r.to_json()).collect()))
+        .set("counters", counters.to_json());
+    o
+}
+
+fn write_report(path: &str, j: &Json) {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    j.write_file(path).expect("writing bench JSON");
+}
+
+/// Load baseline cases as `(name, median_ms)`. Accepts both the
+/// current `{cases: [...], counters: {...}}` shape and the legacy bare
+/// array, so a stale baseline fails with a regression message rather
+/// than a parse panic.
 fn load_baseline(path: &str) -> Vec<(String, f64)> {
     let j = match Json::read_file(path) {
         Ok(j) => j,
@@ -153,8 +220,10 @@ fn load_baseline(path: &str) -> Vec<(String, f64)> {
             std::process::exit(1);
         }
     };
-    j.as_arr()
-        .expect("baseline is a JSON array")
+    let cases = j.get("cases").unwrap_or(&j);
+    cases
+        .as_arr()
+        .expect("baseline cases is a JSON array")
         .iter()
         .map(|case| {
             let name = case.req("name").unwrap().as_str().unwrap().to_string();
@@ -166,7 +235,8 @@ fn load_baseline(path: &str) -> Vec<(String, f64)> {
 
 fn main() {
     let opts = parse_opts();
-    let results = run_sweep();
+    let mut counters = FailureCounters::default();
+    let results = run_sweep(&mut counters);
 
     // Machine-independent guard: the batched hot path must actually beat
     // (or at minimum match, within tolerance) unbatched serving.
@@ -175,9 +245,10 @@ fn main() {
     let speedup = b1 / b32.max(1e-12);
     let floor = opts.min_speedup;
     println!("batching speedup (max_batch 32 vs 1): {speedup:.2}x (floor {floor:.2}x)");
+    println!("failure counters: {}", counters.describe());
 
     if let Some(out) = &opts.out {
-        write_json(out, &results).expect("writing bench JSON");
+        write_report(out, &report_json(&results, &counters));
         println!("JSON -> {out}");
     }
 
@@ -188,10 +259,16 @@ fn main() {
             opts.min_speedup
         ));
     }
+    if counters.total() > 0 {
+        failures.push(format!(
+            "serving errors during the sweep: {} (all must be zero)",
+            counters.describe()
+        ));
+    }
 
     if let Some(baseline_path) = &opts.baseline {
         if opts.update_baseline {
-            write_json(baseline_path, &results).expect("writing baseline JSON");
+            write_report(baseline_path, &report_json(&results, &counters));
             println!("baseline refreshed -> {baseline_path}");
         } else {
             for (name, base_ms) in load_baseline(baseline_path) {

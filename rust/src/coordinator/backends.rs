@@ -1,18 +1,22 @@
-//! Concrete inference backends for the serving coordinator.
+//! Concrete inference engines for the serving coordinator.
 //!
-//! `Backend::infer` receives the batch the dynamic batcher formed; every
-//! backend here forwards the *whole* batch through a batched engine
-//! (batch-wide GEMMs / counting GEMMs) instead of looping per payload,
-//! so the batcher is a real throughput lever rather than a grouping
-//! formality.
+//! `Engine::infer_batch` receives the batch the dynamic batcher formed;
+//! every engine here forwards the *whole* batch through a batched
+//! engine (batch-wide GEMMs / counting GEMMs) instead of looping per
+//! payload, so the batcher is a real throughput lever rather than a
+//! grouping formality. Results are per-item: a payload the engine
+//! cannot process fails as `InferError::Unsupported` (the submission
+//! gate normally catches these first), and execution faults fail as
+//! `InferError::Failed` — no sentinel outputs, no panics mid-batch.
 
-use super::registry::SwappableBackend;
-use super::request::{Output, Payload};
-use super::server::Backend;
+use super::engine::{Capabilities, Engine};
+use super::registry::SwappableEngine;
+use super::request::{InferError, Output, Payload};
 use crate::dnateq::QuantConfig;
 use crate::expdot::CountingFc;
 use crate::nn::eval::ImageModel;
 use crate::nn::ops::argmax_slice;
+use crate::nn::transformer::VOCAB;
 use crate::nn::{AlexNetMini, ExecPlan, ResNetMini, TransformerMini};
 use crate::runtime::Executable;
 use crate::tensor::Tensor;
@@ -20,7 +24,7 @@ use std::sync::{Arc, RwLock};
 
 /// Gather the image payloads of a mixed batch into one flat data vector
 /// (`idx.len() * flat_len` elements) plus the positions they came from,
-/// so non-image payloads keep their sentinel output. The caller shapes
+/// so non-image payloads keep their per-item error. The caller shapes
 /// the data for its engine (`[n, 3, 32, 32]` for CNNs, `[n, in]` for
 /// the counting FC).
 fn gather_images(batch: &[Payload], flat_len: usize) -> (Vec<usize>, Vec<f32>) {
@@ -38,7 +42,21 @@ fn gather_images(batch: &[Payload], flat_len: usize) -> (Vec<usize>, Vec<f32>) {
     (idx, data)
 }
 
-/// Classifier backend over the rust f32/fake-quant engine.
+/// Seed every slot with an `Unsupported` error; engines overwrite the
+/// positions they actually served.
+fn unsupported_slots(batch: &[Payload], expects: &str) -> Vec<Result<Output, InferError>> {
+    batch
+        .iter()
+        .map(|p| {
+            Err(InferError::unsupported(format!(
+                "engine expects {expects}, got a {} payload",
+                p.kind()
+            )))
+        })
+        .collect()
+}
+
+/// Classifier engine over the rust f32/fake-quant engine.
 ///
 /// The execution plan sits behind an `RwLock<Arc<_>>` so the registry
 /// can hot-swap a recalibrated plan while requests are in flight: each
@@ -80,19 +98,23 @@ fn plan_label_of(cfg: &QuantConfig) -> String {
     format!("dnateq thr_w={:.2}% ({})", cfg.thr_w * 100.0, cfg.checksum_hex())
 }
 
-impl<M: ImageModel + 'static> Backend for ClassifierBackend<M> {
-    fn infer(&self, batch: &[Payload]) -> Vec<Output> {
+impl<M: ImageModel + 'static> Engine for ClassifierBackend<M> {
+    fn infer_batch(&self, batch: &[Payload]) -> Vec<Result<Output, InferError>> {
         let plan = self.current_plan();
         let (idx, data) = gather_images(batch, 3 * 32 * 32);
-        let mut outputs = vec![Output::ClassId(usize::MAX); batch.len()]; // wrong modality
+        let mut results = unsupported_slots(batch, "[3, 32, 32] images");
         if !idx.is_empty() {
             let images = Tensor::from_vec(&[idx.len(), 3, 32, 32], data);
             let preds = self.model.predict_batch(&images, &plan);
             for (&i, p) in idx.iter().zip(preds) {
-                outputs[i] = Output::ClassId(p);
+                results[i] = Ok(Output::ClassId(p));
             }
         }
-        outputs
+        results
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::images_only()
     }
 
     fn name(&self) -> &str {
@@ -100,7 +122,7 @@ impl<M: ImageModel + 'static> Backend for ClassifierBackend<M> {
     }
 }
 
-impl<M: ImageModel + 'static> SwappableBackend for ClassifierBackend<M> {
+impl<M: ImageModel + 'static> SwappableEngine for ClassifierBackend<M> {
     fn swap_plan(&self, cfg: &QuantConfig) -> anyhow::Result<()> {
         cfg.validate()?;
         // Build the new plan outside the lock (it round-trips every
@@ -118,19 +140,19 @@ impl<M: ImageModel + 'static> SwappableBackend for ClassifierBackend<M> {
     }
 }
 
-/// Type aliases for the two CNN backends.
+/// Type aliases for the two CNN engines.
 pub type AlexNetBackend = ClassifierBackend<AlexNetMini>;
 pub type ResNetBackend = ClassifierBackend<ResNetMini>;
 
-/// Translator backend: greedy decode via the rust engine.
+/// Translator engine: greedy decode via the rust engine.
 pub struct TranslatorBackend {
     pub model: TransformerMini,
     pub plan: ExecPlan,
     pub max_len: usize,
 }
 
-impl Backend for TranslatorBackend {
-    fn infer(&self, batch: &[Payload]) -> Vec<Output> {
+impl Engine for TranslatorBackend {
+    fn infer_batch(&self, batch: &[Payload]) -> Vec<Result<Output, InferError>> {
         let idx: Vec<usize> = batch
             .iter()
             .enumerate()
@@ -143,13 +165,17 @@ impl Backend for TranslatorBackend {
                 Payload::Image(_) => unreachable!("filtered to Seq"),
             })
             .collect();
-        let mut outputs = vec![Output::Tokens(vec![]); batch.len()]; // wrong modality
+        let mut results = unsupported_slots(batch, "token sequences");
         for (&i, toks) in
             idx.iter().zip(self.model.greedy_decode_batch(&srcs, self.max_len, &self.plan))
         {
-            outputs[i] = Output::Tokens(toks);
+            results[i] = Ok(Output::Tokens(toks));
         }
-        outputs
+        results
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::seqs_only(VOCAB)
     }
 
     fn name(&self) -> &str {
@@ -157,14 +183,18 @@ impl Backend for TranslatorBackend {
     }
 }
 
-/// PJRT backend: runs the AOT-compiled FP32 classifier artifact.
+/// PJRT engine: runs the AOT-compiled FP32 classifier artifact.
 ///
 /// PJRT handles are `!Send` (raw pointers + `Rc` inside the xla crate),
-/// so the executable lives on a dedicated owner thread; the backend
-/// forwards images over a channel and waits for logits. No python
-/// anywhere on this path — the HLO was compiled at `make artifacts`.
+/// so the executable lives on a dedicated owner thread; the engine
+/// forwards images over a channel and waits for the classification (or
+/// the typed execution error). No python anywhere on this path — the
+/// HLO was compiled at `make artifacts`.
 pub struct PjrtClassifierBackend {
-    tx: std::sync::Mutex<std::sync::mpsc::Sender<(Tensor, std::sync::mpsc::SyncSender<usize>)>>,
+    #[allow(clippy::type_complexity)]
+    tx: std::sync::Mutex<
+        std::sync::mpsc::Sender<(Tensor, std::sync::mpsc::SyncSender<Result<usize, String>>)>,
+    >,
     _owner: std::thread::JoinHandle<()>,
 }
 
@@ -172,8 +202,10 @@ impl PjrtClassifierBackend {
     /// Spawn the owner thread: create the CPU client, load + compile the
     /// artifact, then serve inference requests until the channel closes.
     pub fn spawn(artifact: std::path::PathBuf) -> anyhow::Result<Self> {
-        let (tx, rx) =
-            std::sync::mpsc::channel::<(Tensor, std::sync::mpsc::SyncSender<usize>)>();
+        let (tx, rx) = std::sync::mpsc::channel::<(
+            Tensor,
+            std::sync::mpsc::SyncSender<Result<usize, String>>,
+        )>();
         let (ready_tx, ready_rx) = std::sync::mpsc::sync_channel::<anyhow::Result<()>>(1);
         let owner = std::thread::spawn(move || {
             let exe: Executable = match crate::runtime::Runtime::cpu()
@@ -190,7 +222,8 @@ impl PjrtClassifierBackend {
             };
             while let Ok((img, reply)) = rx.recv() {
                 let input = Tensor::from_vec(&[1, 3, 32, 32], img.data().to_vec());
-                let class = exe.run1(&input).map(|l| l.argmax()).unwrap_or(usize::MAX);
+                let class =
+                    exe.run1(&input).map(|l| l.argmax()).map_err(|e| format!("{e:#}"));
                 let _ = reply.send(class);
             }
         });
@@ -199,8 +232,8 @@ impl PjrtClassifierBackend {
     }
 }
 
-impl Backend for PjrtClassifierBackend {
-    fn infer(&self, batch: &[Payload]) -> Vec<Output> {
+impl Engine for PjrtClassifierBackend {
+    fn infer_batch(&self, batch: &[Payload]) -> Vec<Result<Output, InferError>> {
         batch
             .iter()
             .map(|p| match p {
@@ -208,13 +241,23 @@ impl Backend for PjrtClassifierBackend {
                     let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
                     let sent = self.tx.lock().unwrap().send((img.clone(), rtx)).is_ok();
                     if !sent {
-                        return Output::ClassId(usize::MAX);
+                        return Err(InferError::failed("pjrt owner thread is gone"));
                     }
-                    Output::ClassId(rrx.recv().unwrap_or(usize::MAX))
+                    match rrx.recv() {
+                        Ok(Ok(class)) => Ok(Output::ClassId(class)),
+                        Ok(Err(why)) => Err(InferError::failed(why)),
+                        Err(_) => Err(InferError::failed("pjrt owner dropped the reply")),
+                    }
                 }
-                Payload::Seq(_) => Output::ClassId(usize::MAX),
+                Payload::Seq(_) => {
+                    Err(InferError::unsupported("pjrt classifier expects images"))
+                }
             })
             .collect()
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::images_only()
     }
 
     fn name(&self) -> &str {
@@ -228,21 +271,44 @@ pub struct CountingFcBackend {
     pub fc: CountingFc,
 }
 
-impl Backend for CountingFcBackend {
-    fn infer(&self, batch: &[Payload]) -> Vec<Output> {
+impl Engine for CountingFcBackend {
+    fn infer_batch(&self, batch: &[Payload]) -> Vec<Result<Output, InferError>> {
         // Stack every image payload into one [n, in] matrix and run a
         // single batched counting GEMM — the §IV kernel amortizes its
         // weight stream and quantization pass across the whole batch.
-        let (idx, data) = gather_images(batch, self.fc.in_features);
-        let mut outputs = vec![Output::ClassId(usize::MAX); batch.len()];
+        // The FC head consumes a flat feature vector, so beyond the
+        // submission-gate shape check the image's element count must
+        // match `in_features` (declared capabilities can only promise
+        // the [3, 32, 32] shape).
+        let mut results = unsupported_slots(batch, "[3, 32, 32] images");
+        let mut idx = Vec::new();
+        let mut data = Vec::new();
+        for (i, p) in batch.iter().enumerate() {
+            if let Payload::Image(img) = p {
+                if img.data().len() == self.fc.in_features {
+                    idx.push(i);
+                    data.extend_from_slice(img.data());
+                } else {
+                    results[i] = Err(InferError::unsupported(format!(
+                        "counting FC expects {} features, image has {}",
+                        self.fc.in_features,
+                        img.data().len()
+                    )));
+                }
+            }
+        }
         if !idx.is_empty() {
             let flat = Tensor::from_vec(&[idx.len(), self.fc.in_features], data);
             let out = self.fc.forward_batch(&flat);
             for (k, &i) in idx.iter().enumerate() {
-                outputs[i] = Output::ClassId(argmax_slice(out.row(k)));
+                results[i] = Ok(Output::ClassId(argmax_slice(out.row(k))));
             }
         }
-        outputs
+        results
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::images_only()
     }
 
     fn name(&self) -> &str {
@@ -253,6 +319,7 @@ impl Backend for CountingFcBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::ServeError;
     use crate::coordinator::server::{Coordinator, CoordinatorConfig};
     use crate::dataset::{ImageDataset, SeqDataset};
     use std::sync::Arc;
@@ -269,7 +336,7 @@ mod tests {
                 other => panic!("unexpected {other:?}"),
             }
         }
-        assert_eq!(c.shutdown().completed, 4);
+        assert_eq!(c.shutdown_and_drain().completed, 4);
     }
 
     #[test]
@@ -286,7 +353,7 @@ mod tests {
             Output::Tokens(toks) => assert!(!toks.is_empty()),
             other => panic!("unexpected {other:?}"),
         }
-        c.shutdown();
+        c.shutdown_and_drain();
     }
 
     #[test]
@@ -300,14 +367,14 @@ mod tests {
             Payload::Image(data.image(1)),
             Payload::Image(data.image(2)),
         ];
-        let out = backend.infer(&batch);
+        let out = backend.infer_batch(&batch);
         assert_eq!(out.len(), 4);
-        assert_eq!(out[1], Output::ClassId(usize::MAX));
+        assert!(matches!(out[1], Err(InferError::Unsupported(_))), "{:?}", out[1]);
         // Batched predictions must equal per-image predictions, in place.
         let plan = backend.current_plan();
         for (slot, img_idx) in [(0usize, 0usize), (2, 1), (3, 2)] {
             let want = backend.model.predict(&data.image(img_idx), &plan);
-            assert_eq!(out[slot], Output::ClassId(want), "slot {slot}");
+            assert_eq!(out[slot], Ok(Output::ClassId(want)), "slot {slot}");
         }
     }
 
@@ -325,12 +392,12 @@ mod tests {
         let backend = CountingFcBackend { fc: CountingFc::new(&w, wp, ap, None) };
         let data = ImageDataset::synthetic(4, 209);
         let batch: Vec<Payload> = (0..4).map(|i| Payload::Image(data.image(i))).collect();
-        let out = backend.infer(&batch);
+        let out = backend.infer_batch(&batch);
         for (i, o) in out.iter().enumerate() {
             let img = data.image(i);
             let flat = Tensor::from_vec(&[1, inf], img.data().to_vec());
             let want = backend.fc.forward(&flat).argmax();
-            assert_eq!(*o, Output::ClassId(want), "payload {i}");
+            assert_eq!(*o, Ok(Output::ClassId(want)), "payload {i}");
         }
     }
 
@@ -347,17 +414,19 @@ mod tests {
         backend.swap_plan(&cfg).unwrap();
         assert!(backend.plan_label().starts_with("dnateq"), "{}", backend.plan_label());
         // Predictions after the swap match the quantized plan exactly.
-        let out = backend.infer(&[Payload::Image(data.image(0))]);
+        let out = backend.infer_batch(&[Payload::Image(data.image(0))]);
         let want = backend.model.predict(&data.image(0), &backend.current_plan());
-        assert_eq!(out[0], Output::ClassId(want));
+        assert_eq!(out[0], Ok(Output::ClassId(want)));
     }
 
     #[test]
-    fn wrong_modality_yields_sentinel() {
+    fn wrong_modality_is_rejected_at_submission() {
         let backend = Arc::new(AlexNetBackend::fp32(AlexNetMini::random(205), "x"));
         let c = Coordinator::start(backend, CoordinatorConfig::default());
-        let resp = c.submit_wait(Payload::Seq(vec![1, 2])).unwrap();
-        assert_eq!(resp.output, Output::ClassId(usize::MAX));
-        c.shutdown();
+        let err = c.submit(Payload::Seq(vec![1, 2])).unwrap_err();
+        assert!(matches!(err, ServeError::WrongPayload(_)), "{err:?}");
+        let snap = c.shutdown_and_drain();
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.completed, 0);
     }
 }

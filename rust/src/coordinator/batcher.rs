@@ -1,16 +1,27 @@
-//! Dynamic batcher: group queued requests up to `max_batch`, waiting at
-//! most `max_wait` for stragglers once the first request of a batch
-//! arrives (the standard serving trade-off between latency and batch
-//! efficiency).
+//! Submission queue + dynamic batcher.
+//!
+//! The queue holds one FIFO lane per [`Priority`] class behind a mutex +
+//! condvars; admission under a full queue is explicit policy
+//! ([`AdmissionPolicy`]): block the submitter, reject with
+//! `ServeError::QueueFull`, or shed the oldest lowest-priority queued
+//! request to admit the newcomer. The batcher drains lanes
+//! highest-priority-first (strict FIFO within a lane), groups up to
+//! `max_batch` requests, waits at most `max_wait` for stragglers — and
+//! drops cancelled or deadline-expired requests **at batch-formation
+//! time**, resolving their tickets with the matching typed error before
+//! the batch ever reaches an engine.
 //!
 //! Invariants (property-tested below):
-//! * conservation — every submitted request appears in exactly one batch;
-//! * FIFO — batch concatenation preserves submission order;
+//! * conservation — every admitted request is either batched exactly
+//!   once or resolved with a typed error;
+//! * FIFO — within one priority class, batch concatenation preserves
+//!   submission order;
 //! * bound — every batch has `1..=max_batch` requests.
 
-use super::request::Request;
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
-use std::sync::Mutex;
+use super::metrics::Metrics;
+use super::request::{Priority, Request, ServeError};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Batch-forming policy.
@@ -26,78 +37,294 @@ impl Default for BatcherConfig {
     }
 }
 
-/// Pulls requests off the shared queue and forms batches. Multiple
-/// workers may share one `Batcher` (the receiver is mutex-guarded; each
-/// batch is formed under the lock so interleaving cannot split FIFO
-/// order *within* a batch).
-pub struct Batcher {
-    rx: Mutex<Receiver<Request>>,
+/// What happens to a submission when the queue is full.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Backpressure: block the submitter until space frees up.
+    #[default]
+    Block,
+    /// Fail fast: the submission returns `ServeError::QueueFull`.
+    Reject,
+    /// Admit the newcomer by shedding the oldest queued request of the
+    /// lowest priority class at or below the newcomer's priority (its
+    /// ticket resolves to `QueueFull`). If everything queued outranks
+    /// the newcomer, the newcomer is rejected instead.
+    ShedOldest,
+}
+
+struct QueueState {
+    lanes: [VecDeque<Request>; Priority::LANES],
+    len: usize,
+    closed: bool,
+}
+
+impl QueueState {
+    fn pop_front(&mut self) -> Option<Request> {
+        for lane in self.lanes.iter_mut() {
+            if let Some(r) = lane.pop_front() {
+                self.len -= 1;
+                return Some(r);
+            }
+        }
+        None
+    }
+}
+
+pub(crate) enum PopResult {
+    Item(Request),
+    TimedOut,
+    Closed,
+}
+
+/// Bounded multi-priority submission queue shared by every client
+/// handle and worker of one coordinator.
+pub(crate) struct SubmissionQueue {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    depth: usize,
+    policy: AdmissionPolicy,
+}
+
+impl SubmissionQueue {
+    pub fn new(depth: usize, policy: AdmissionPolicy) -> Self {
+        assert!(depth >= 1, "queue depth must be >= 1");
+        Self {
+            state: Mutex::new(QueueState {
+                lanes: std::array::from_fn(|_| VecDeque::new()),
+                len: 0,
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            depth,
+            policy,
+        }
+    }
+
+    /// Admit `req` under the queue's policy. On `ShedOldest`, the shed
+    /// victim's ticket is resolved (and counted) before this returns.
+    pub fn push(&self, req: Request, metrics: &Metrics) -> Result<(), ServeError> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(ServeError::ShuttingDown);
+            }
+            if st.len < self.depth {
+                st.len += 1;
+                st.lanes[req.priority.lane()].push_back(req);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            match self.policy {
+                AdmissionPolicy::Block => {
+                    // Backpressure is bounded by the request's own
+                    // deadline: blocking the submitter past it would
+                    // only enqueue a request already doomed to expire.
+                    match req.deadline.until() {
+                        None => st = self.not_full.wait(st).unwrap(),
+                        Some(d) => {
+                            let now = Instant::now();
+                            if now >= d {
+                                return Err(ServeError::DeadlineExceeded);
+                            }
+                            st = self.not_full.wait_timeout(st, d - now).unwrap().0;
+                        }
+                    }
+                }
+                AdmissionPolicy::Reject => return Err(ServeError::QueueFull),
+                AdmissionPolicy::ShedOldest => {
+                    // Never evict higher-priority work for a lower-
+                    // priority newcomer: scan lanes from lowest priority
+                    // down to the newcomer's own class.
+                    let victim = (req.priority.lane()..Priority::LANES)
+                        .rev()
+                        .find_map(|lane| st.lanes[lane].pop_front());
+                    match victim {
+                        Some(v) => {
+                            st.len -= 1;
+                            metrics.record_shed();
+                            if !v.resolve(Err(ServeError::QueueFull)) {
+                                metrics.record_dropped_send();
+                            }
+                            // Loop re-checks: there is room now.
+                        }
+                        None => return Err(ServeError::QueueFull),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Block until a request is available; `None` once the queue is
+    /// closed **and** drained (worker shutdown signal).
+    fn pop(&self) -> Option<Request> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = st.pop_front() {
+                self.not_full.notify_one();
+                return Some(r);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Like [`Self::pop`] but gives up after `timeout`.
+    fn pop_timeout(&self, timeout: Duration) -> PopResult {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = st.pop_front() {
+                self.not_full.notify_one();
+                return PopResult::Item(r);
+            }
+            if st.closed {
+                return PopResult::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopResult::TimedOut;
+            }
+            let (guard, res) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            if res.timed_out() && st.len == 0 {
+                return if st.closed { PopResult::Closed } else { PopResult::TimedOut };
+            }
+        }
+    }
+
+    /// Close the queue: new pushes fail with `ShuttingDown`; queued
+    /// requests remain to be drained by the workers.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.state.lock().unwrap().len
+    }
+}
+
+/// Forms batches from the shared queue. Multiple workers share one
+/// `Batcher`; each call pulls an exclusive set of requests (the queue is
+/// the synchronization point), and cancelled/expired requests are
+/// resolved here — at batch formation — instead of running inference.
+pub(crate) struct Batcher {
+    queue: Arc<SubmissionQueue>,
+    metrics: Arc<Metrics>,
     cfg: BatcherConfig,
 }
 
 impl Batcher {
-    pub fn new(rx: Receiver<Request>, cfg: BatcherConfig) -> Self {
+    pub fn new(queue: Arc<SubmissionQueue>, metrics: Arc<Metrics>, cfg: BatcherConfig) -> Self {
         assert!(cfg.max_batch >= 1);
-        Self { rx: Mutex::new(rx), cfg }
+        Self { queue, metrics, cfg }
+    }
+
+    /// Drop requests that must not reach an engine: cancelled or
+    /// deadline-expired ones get their typed error here and now.
+    fn still_live(&self, req: Request) -> Option<Request> {
+        let verdict = if req.is_cancelled() {
+            self.metrics.record_cancelled();
+            Some(ServeError::Cancelled)
+        } else if req.deadline.expired() {
+            self.metrics.record_expired();
+            Some(ServeError::DeadlineExceeded)
+        } else {
+            None
+        };
+        match verdict {
+            Some(err) => {
+                if !req.resolve(Err(err)) {
+                    self.metrics.record_dropped_send();
+                }
+                None
+            }
+            None => Some(req),
+        }
     }
 
     /// Block for the next batch. Returns `None` once the queue is closed
-    /// and drained (worker shutdown signal).
+    /// and fully drained (worker shutdown signal).
     pub fn next_batch(&self) -> Option<Vec<Request>> {
-        let rx = self.rx.lock().unwrap();
-        // Block for the first request.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return None,
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + self.cfg.max_wait;
-        while batch.len() < self.cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
+        loop {
+            let first = self.queue.pop()?;
+            let Some(first) = self.still_live(first) else { continue };
+            let mut batch = vec![first];
+            let deadline = Instant::now() + self.cfg.max_wait;
+            while batch.len() < self.cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match self.queue.pop_timeout(deadline - now) {
+                    PopResult::Item(r) => {
+                        if let Some(r) = self.still_live(r) {
+                            batch.push(r);
+                        }
+                    }
+                    PopResult::TimedOut | PopResult::Closed => break,
+                }
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
+            return Some(batch);
         }
-        Some(batch)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::{Payload, Request};
+    use crate::coordinator::request::{Deadline, Payload, Response};
     use crate::tensor::SplitMix64;
+    use std::sync::atomic::AtomicBool;
     use std::sync::mpsc;
     use std::time::Instant;
 
-    fn mk_request(id: u64) -> (Request, mpsc::Receiver<super::super::request::Response>) {
+    type ResultRx = mpsc::Receiver<Result<Response, ServeError>>;
+
+    fn mk_request(id: u64, priority: Priority) -> (Request, ResultRx) {
         let (tx, rx) = mpsc::sync_channel(1);
         let req = Request {
             id,
             payload: Payload::Seq(vec![1, 2]),
             submitted: Instant::now(),
+            deadline: Deadline::NONE,
+            priority,
+            cancelled: Arc::new(AtomicBool::new(false)),
             respond_to: tx,
         };
         (req, rx)
     }
 
+    fn batcher(
+        depth: usize,
+        policy: AdmissionPolicy,
+        cfg: BatcherConfig,
+    ) -> (Batcher, Arc<SubmissionQueue>, Arc<Metrics>) {
+        let q = Arc::new(SubmissionQueue::new(depth, policy));
+        let m = Arc::new(Metrics::new());
+        (Batcher::new(Arc::clone(&q), Arc::clone(&m), cfg), q, m)
+    }
+
     #[test]
     fn batches_respect_max_batch() {
-        let (tx, rx) = mpsc::channel();
-        let b =
-            Batcher::new(rx, BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(50) });
+        let (b, q, m) = batcher(
+            64,
+            AdmissionPolicy::Block,
+            BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(50) },
+        );
         let mut keep = Vec::new();
         for i in 0..7 {
-            let (r, rx) = mk_request(i);
+            let (r, rx) = mk_request(i, Priority::Normal);
             keep.push(rx);
-            tx.send(r).unwrap();
+            q.push(r, &m).unwrap();
         }
-        drop(tx);
+        q.close();
         let mut sizes = Vec::new();
         while let Some(batch) = b.next_batch() {
             assert!(!batch.is_empty() && batch.len() <= 3);
@@ -109,25 +336,110 @@ mod tests {
 
     #[test]
     fn closed_empty_queue_returns_none() {
-        let (tx, rx) = mpsc::channel::<Request>();
-        drop(tx);
-        let b = Batcher::new(rx, BatcherConfig::default());
+        let (b, q, _m) = batcher(8, AdmissionPolicy::Block, BatcherConfig::default());
+        q.close();
         assert!(b.next_batch().is_none());
     }
 
     #[test]
+    fn push_after_close_is_shutting_down() {
+        let (_b, q, m) = batcher(8, AdmissionPolicy::Block, BatcherConfig::default());
+        q.close();
+        let (r, _rx) = mk_request(0, Priority::Normal);
+        assert_eq!(q.push(r, &m).unwrap_err(), ServeError::ShuttingDown);
+    }
+
+    #[test]
     fn max_wait_flushes_partial_batches() {
-        let (tx, rx) = mpsc::channel();
-        let b = Batcher::new(
-            rx,
+        let (b, q, m) = batcher(
+            64,
+            AdmissionPolicy::Block,
             BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(5) },
         );
-        let (r, _keep) = mk_request(0);
-        tx.send(r).unwrap();
+        let (r, _keep) = mk_request(0, Priority::Normal);
+        q.push(r, &m).unwrap();
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn high_priority_overtakes_queued_normal_traffic() {
+        let (b, q, m) = batcher(
+            64,
+            AdmissionPolicy::Block,
+            BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(100) },
+        );
+        let mut keep = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = mk_request(i, Priority::Normal);
+            keep.push(rx);
+            q.push(r, &m).unwrap();
+        }
+        let (hi, rx) = mk_request(99, Priority::High);
+        keep.push(rx);
+        q.push(hi, &m).unwrap();
+        let order: Vec<u64> = (0..4).map(|_| b.next_batch().unwrap()[0].id).collect();
+        assert_eq!(order, vec![99, 0, 1, 2]);
+    }
+
+    #[test]
+    fn reject_policy_fails_fast_when_full() {
+        let (_b, q, m) = batcher(2, AdmissionPolicy::Reject, BatcherConfig::default());
+        let mut keep = Vec::new();
+        for i in 0..2 {
+            let (r, rx) = mk_request(i, Priority::Normal);
+            keep.push(rx);
+            q.push(r, &m).unwrap();
+        }
+        let (r, _rx) = mk_request(2, Priority::Normal);
+        assert_eq!(q.push(r, &m).unwrap_err(), ServeError::QueueFull);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn shed_oldest_evicts_lowest_priority_first() {
+        let (_b, q, m) = batcher(2, AdmissionPolicy::ShedOldest, BatcherConfig::default());
+        let (r0, rx0) = mk_request(0, Priority::Low);
+        let (r1, rx1) = mk_request(1, Priority::Normal);
+        q.push(r0, &m).unwrap();
+        q.push(r1, &m).unwrap();
+        // Normal newcomer sheds the Low request, not the Normal one.
+        let (r2, _rx2) = mk_request(2, Priority::Normal);
+        q.push(r2, &m).unwrap();
+        assert_eq!(rx0.recv().unwrap(), Err(ServeError::QueueFull));
+        assert!(rx1.try_recv().is_err(), "normal request must survive");
+        assert_eq!(m.snapshot().shed, 1);
+        // A Low newcomer cannot evict the queued Normal traffic.
+        let (r3, _rx3) = mk_request(3, Priority::Low);
+        assert_eq!(q.push(r3, &m).unwrap_err(), ServeError::QueueFull);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn cancelled_and_expired_are_dropped_at_batch_formation() {
+        let (b, q, m) = batcher(
+            16,
+            AdmissionPolicy::Block,
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+        );
+        let (live, live_rx) = mk_request(0, Priority::Normal);
+        let (cancelled, cancelled_rx) = mk_request(1, Priority::Normal);
+        cancelled.cancelled.store(true, std::sync::atomic::Ordering::Release);
+        let (mut expired, expired_rx) = mk_request(2, Priority::Normal);
+        expired.deadline = Deadline::at(Instant::now() - Duration::from_millis(1));
+        q.push(live, &m).unwrap();
+        q.push(cancelled, &m).unwrap();
+        q.push(expired, &m).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 0);
+        assert_eq!(cancelled_rx.recv().unwrap(), Err(ServeError::Cancelled));
+        assert_eq!(expired_rx.recv().unwrap(), Err(ServeError::DeadlineExceeded));
+        assert!(live_rx.try_recv().is_err(), "live request still pending");
+        let snap = m.snapshot();
+        assert_eq!((snap.cancelled, snap.expired), (1, 1));
     }
 
     #[test]
@@ -142,21 +454,18 @@ mod tests {
                 (n, max_batch)
             },
             |&(n, max_batch)| {
-                let (tx, rx) = mpsc::channel();
-                let b = Batcher::new(
-                    rx,
-                    BatcherConfig {
-                        max_batch,
-                        max_wait: Duration::from_micros(200),
-                    },
+                let (b, q, m) = batcher(
+                    n.max(1),
+                    AdmissionPolicy::Block,
+                    BatcherConfig { max_batch, max_wait: Duration::from_micros(200) },
                 );
                 let mut keep = Vec::new();
                 for i in 0..n {
-                    let (r, rx2) = mk_request(i as u64);
+                    let (r, rx2) = mk_request(i as u64, Priority::Normal);
                     keep.push(rx2);
-                    tx.send(r).map_err(|e| e.to_string())?;
+                    q.push(r, &m).map_err(|e| e.to_string())?;
                 }
-                drop(tx);
+                q.close();
                 let mut seen = Vec::new();
                 while let Some(batch) = b.next_batch() {
                     if batch.is_empty() || batch.len() > max_batch {

@@ -1,0 +1,169 @@
+//! The typed serving front door: [`InferenceClient`] + [`Ticket`].
+//!
+//! A client is a cheap, cloneable handle onto one coordinator's
+//! submission queue. `submit` validates the payload against the
+//! engine's declared [`super::Capabilities`] (so a malformed image or
+//! out-of-vocab sequence is rejected with `WrongPayload` *before* it
+//! can reach a batch), applies the admission policy, and returns a
+//! [`Ticket`] — the one handle a caller needs to `wait()`,
+//! `wait_timeout()`, or `cancel()` the request. Every failure mode is a
+//! typed [`ServeError`]; nothing is silently dropped.
+
+use super::batcher::SubmissionQueue;
+use super::engine::Capabilities;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::request::{Payload, Request, Response, ServeError, SubmitOptions};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// State shared by the coordinator and every client handle.
+pub(crate) struct ClientCore {
+    pub queue: Arc<SubmissionQueue>,
+    pub metrics: Arc<Metrics>,
+    pub caps: Capabilities,
+    pub next_id: AtomicU64,
+    pub engine_name: String,
+}
+
+/// Handle for submitting inference requests to one running coordinator.
+/// Cloning is cheap (an `Arc` bump); clones share the queue, id space,
+/// and metrics. The handle stays valid across `shutdown_and_drain` —
+/// submissions then fail with [`ServeError::ShuttingDown`].
+#[derive(Clone)]
+pub struct InferenceClient {
+    core: Arc<ClientCore>,
+}
+
+impl InferenceClient {
+    pub(crate) fn new(core: Arc<ClientCore>) -> Self {
+        Self { core }
+    }
+
+    /// Name of the engine this client feeds.
+    pub fn engine_name(&self) -> &str {
+        &self.core.engine_name
+    }
+
+    /// The engine's declared capabilities (what [`Self::submit`] will
+    /// admit).
+    pub fn capabilities(&self) -> Capabilities {
+        self.core.caps
+    }
+
+    /// Submit with default options (no deadline, normal priority).
+    pub fn submit(&self, payload: Payload) -> Result<Ticket, ServeError> {
+        self.submit_with(payload, SubmitOptions::default())
+    }
+
+    /// Submit with an explicit deadline/priority. Fails synchronously
+    /// with a typed error when the payload is invalid for this engine
+    /// (`WrongPayload`), the deadline already expired
+    /// (`DeadlineExceeded`), the queue refused admission (`QueueFull`),
+    /// or the coordinator is draining (`ShuttingDown`).
+    pub fn submit_with(
+        &self,
+        payload: Payload,
+        opts: SubmitOptions,
+    ) -> Result<Ticket, ServeError> {
+        if let Err(e) = self.core.caps.admit(&payload) {
+            self.core.metrics.record_rejected();
+            return Err(e);
+        }
+        if opts.deadline.expired() {
+            self.core.metrics.record_expired();
+            return Err(ServeError::DeadlineExceeded);
+        }
+        let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let id = self.core.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            id,
+            payload,
+            submitted: Instant::now(),
+            deadline: opts.deadline,
+            priority: opts.priority,
+            cancelled: Arc::clone(&cancelled),
+            respond_to: rtx,
+        };
+        match self.core.queue.push(req, &self.core.metrics) {
+            Ok(()) => Ok(Ticket { id, cancelled, rx: rrx }),
+            Err(e) => {
+                match e {
+                    ServeError::QueueFull => self.core.metrics.record_rejected(),
+                    // Blocked admission timed out at the request's own
+                    // deadline.
+                    ServeError::DeadlineExceeded => self.core.metrics.record_expired(),
+                    // ShuttingDown is a lifecycle outcome, not an
+                    // admission failure — not counted as rejected.
+                    _ => {}
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit and block for the result (no deadline, normal priority).
+    pub fn infer(&self, payload: Payload) -> Result<Response, ServeError> {
+        self.submit(payload)?.wait()
+    }
+
+    /// Live metrics of the coordinator behind this client.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.core.metrics.snapshot()
+    }
+}
+
+/// Handle to one in-flight request. The result is delivered exactly
+/// once: `wait` consumes the ticket; `wait_timeout` returns `None`
+/// while the request is still pending so the caller can keep waiting —
+/// or [`Ticket::cancel`] it.
+#[derive(Debug)]
+pub struct Ticket {
+    id: u64,
+    cancelled: Arc<AtomicBool>,
+    rx: Receiver<Result<Response, ServeError>>,
+}
+
+impl Ticket {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Request cancellation (idempotent, never blocks). Cooperative: a
+    /// request still queued is dropped at batch formation and resolves
+    /// to [`ServeError::Cancelled`]; one already inside an engine
+    /// completes normally.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Release);
+    }
+
+    /// Block until the request resolves.
+    pub fn wait(self) -> Result<Response, ServeError> {
+        match self.rx.recv() {
+            Ok(result) => result,
+            // Workers gone without resolving the ticket: hard shutdown.
+            Err(_) => Err(ServeError::ShuttingDown),
+        }
+    }
+
+    /// Wait up to `timeout`; `None` means still pending (the ticket
+    /// remains valid — wait again or cancel).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<Response, ServeError>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(result) => Some(result),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => Some(Err(ServeError::ShuttingDown)),
+        }
+    }
+
+    /// Non-blocking poll; `None` means still pending.
+    pub fn try_wait(&self) -> Option<Result<Response, ServeError>> {
+        match self.rx.try_recv() {
+            Ok(result) => Some(result),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Err(ServeError::ShuttingDown)),
+        }
+    }
+}

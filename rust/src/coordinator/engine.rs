@@ -1,0 +1,224 @@
+//! The fallible inference engine contract.
+//!
+//! [`Engine`] replaces the old infallible `Backend`: `infer_batch`
+//! returns one `Result` **per item**, so a single bad payload or a
+//! per-item engine fault fails that request with a typed error instead
+//! of poisoning the batch (or panicking mid-batch), and
+//! [`Engine::capabilities`] declares up front what payloads the engine
+//! accepts so the client can reject mismatches at submission.
+//!
+//! [`InfallibleEngine`] + [`Infallible`] are the migration adapter:
+//! anything written against the legacy infallible shape
+//! (`&[Payload] -> Vec<Output>`) keeps compiling and serves through
+//! the blanket `Engine` impl on the [`Infallible`] wrapper, which
+//! wraps every output in `Ok`.
+
+use super::request::{InferError, Output, Payload, ServeError};
+
+/// What an engine accepts, declared once at registration so payloads
+/// are validated at submission instead of panicking mid-batch.
+#[derive(Clone, Copy, Debug)]
+pub struct Capabilities {
+    /// Accepts `Payload::Image` (shape `[3, 32, 32]`).
+    pub images: bool,
+    /// Accepts `Payload::Seq` (non-empty token sequences).
+    pub seqs: bool,
+    /// Exclusive upper bound on sequence token ids (`None` = any id).
+    pub vocab: Option<usize>,
+    /// Largest batch one `infer_batch` call can take (`None` = any);
+    /// the coordinator clamps its batcher to this.
+    pub max_batch: Option<usize>,
+}
+
+/// The image shape every classifier engine expects.
+pub const IMAGE_SHAPE: [usize; 3] = [3, 32, 32];
+
+impl Capabilities {
+    /// Accepts every payload kind (echo/test engines).
+    pub fn all() -> Self {
+        Self { images: true, seqs: true, vocab: None, max_batch: None }
+    }
+
+    /// Image classifier: `[3, 32, 32]` images only.
+    pub fn images_only() -> Self {
+        Self { images: true, seqs: false, vocab: None, max_batch: None }
+    }
+
+    /// Sequence model with token ids in `[0, vocab)`.
+    pub fn seqs_only(vocab: usize) -> Self {
+        Self { images: false, seqs: true, vocab: Some(vocab), max_batch: None }
+    }
+
+    pub fn with_max_batch(mut self, n: usize) -> Self {
+        self.max_batch = Some(n);
+        self
+    }
+
+    /// Validate one payload against these capabilities — the submission
+    /// gate behind [`ServeError::WrongPayload`].
+    pub fn admit(&self, payload: &Payload) -> Result<(), ServeError> {
+        match payload {
+            Payload::Image(img) => {
+                if !self.images {
+                    return Err(ServeError::WrongPayload(
+                        "engine does not accept image payloads".into(),
+                    ));
+                }
+                if img.shape() != &IMAGE_SHAPE[..] {
+                    return Err(ServeError::WrongPayload(format!(
+                        "image must have shape {IMAGE_SHAPE:?}, got {:?}",
+                        img.shape()
+                    )));
+                }
+            }
+            Payload::Seq(toks) => {
+                if !self.seqs {
+                    return Err(ServeError::WrongPayload(
+                        "engine does not accept sequence payloads".into(),
+                    ));
+                }
+                if toks.is_empty() {
+                    return Err(ServeError::WrongPayload(
+                        "token sequence must be non-empty".into(),
+                    ));
+                }
+                if let Some(vocab) = self.vocab {
+                    if let Some(&bad) = toks.iter().find(|&&t| t >= vocab) {
+                        return Err(ServeError::WrongPayload(format!(
+                            "token id {bad} outside vocab 0..{vocab}"
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Inference engine: maps a batch of payloads to **per-item results**
+/// (1:1, in order). Must be cheap to share across worker threads.
+pub trait Engine: Send + Sync + 'static {
+    /// Run one batch; `results[i]` answers `batch[i]`. Returning a
+    /// different length is a contract violation the coordinator turns
+    /// into `EngineFailure` for every request of the batch.
+    fn infer_batch(&self, batch: &[Payload]) -> Vec<Result<Output, InferError>>;
+
+    /// What this engine accepts; checked at submission.
+    fn capabilities(&self) -> Capabilities;
+
+    fn name(&self) -> &str {
+        "engine"
+    }
+}
+
+/// Legacy infallible engine shape, kept as a migration adapter: a type
+/// that can only produce outputs (never per-item errors) implements
+/// this and serves by wrapping itself in [`Infallible`].
+pub trait InfallibleEngine: Send + Sync + 'static {
+    fn infer(&self, batch: &[Payload]) -> Vec<Output>;
+
+    fn accepts(&self) -> Capabilities {
+        Capabilities::all()
+    }
+
+    fn name(&self) -> &str {
+        "engine"
+    }
+}
+
+/// Blanket adapter from the legacy infallible shape to [`Engine`]:
+/// `Infallible(legacy_backend)` serves through any coordinator, with
+/// every output wrapped in `Ok`. (A wrapper rather than a direct
+/// blanket impl so concrete engines can still implement [`Engine`]
+/// themselves without coherence conflicts.)
+pub struct Infallible<B>(pub B);
+
+impl<B: InfallibleEngine> Engine for Infallible<B> {
+    fn infer_batch(&self, batch: &[Payload]) -> Vec<Result<Output, InferError>> {
+        self.0.infer(batch).into_iter().map(Ok).collect()
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.0.accepts()
+    }
+
+    fn name(&self) -> &str {
+        self.0.name()
+    }
+}
+
+/// Trivial engine used by tests: echoes sequence payloads, classifies
+/// images as 0 after a configurable busy-delay.
+pub struct EchoEngine {
+    pub delay_us: u64,
+}
+
+impl Engine for EchoEngine {
+    fn infer_batch(&self, batch: &[Payload]) -> Vec<Result<Output, InferError>> {
+        if self.delay_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(self.delay_us));
+        }
+        batch
+            .iter()
+            .map(|p| match p {
+                Payload::Seq(s) => Ok(Output::Tokens(s.clone())),
+                Payload::Image(_) => Ok(Output::ClassId(0)),
+            })
+            .collect()
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::all()
+    }
+
+    fn name(&self) -> &str {
+        "echo"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn capabilities_reject_wrong_kind_and_shape() {
+        let caps = Capabilities::images_only();
+        assert!(caps.admit(&Payload::Image(Tensor::zeros(&[3, 32, 32]))).is_ok());
+        let bad_shape = caps.admit(&Payload::Image(Tensor::zeros(&[1, 32, 32])));
+        assert!(matches!(bad_shape, Err(ServeError::WrongPayload(_))), "{bad_shape:?}");
+        let seq = caps.admit(&Payload::Seq(vec![1, 2]));
+        assert!(matches!(seq, Err(ServeError::WrongPayload(_))));
+    }
+
+    #[test]
+    fn capabilities_validate_sequences() {
+        let caps = Capabilities::seqs_only(32);
+        assert!(caps.admit(&Payload::Seq(vec![0, 31])).is_ok());
+        let empty = caps.admit(&Payload::Seq(vec![]));
+        assert!(matches!(empty, Err(ServeError::WrongPayload(ref w)) if w.contains("non-empty")));
+        let oov = caps.admit(&Payload::Seq(vec![3, 32]));
+        assert!(matches!(oov, Err(ServeError::WrongPayload(ref w)) if w.contains("32")));
+        let img = caps.admit(&Payload::Image(Tensor::zeros(&[3, 32, 32])));
+        assert!(matches!(img, Err(ServeError::WrongPayload(_))));
+    }
+
+    #[test]
+    fn blanket_adapter_wraps_every_output_in_ok() {
+        struct Legacy;
+        impl InfallibleEngine for Legacy {
+            fn infer(&self, batch: &[Payload]) -> Vec<Output> {
+                batch.iter().map(|_| Output::ClassId(7)).collect()
+            }
+            fn name(&self) -> &str {
+                "legacy"
+            }
+        }
+        let adapted = Infallible(Legacy);
+        let results = adapted.infer_batch(&[Payload::Seq(vec![7])]);
+        assert_eq!(results, vec![Ok(Output::ClassId(7))]);
+        assert_eq!(Engine::name(&adapted), "legacy");
+        let caps = adapted.capabilities();
+        assert!(caps.images && caps.seqs);
+    }
+}

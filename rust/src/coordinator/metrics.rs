@@ -1,4 +1,10 @@
 //! Serving metrics: counters + latency distribution.
+//!
+//! Beyond throughput/latency, every way a request can fail to produce a
+//! normal response is counted — cancelled, deadline-expired, rejected at
+//! admission, shed from a full queue, failed inside the engine — plus
+//! `dropped_sends` for responses whose ticket was abandoned (receiver
+//! gone), so nothing disappears silently.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -13,6 +19,20 @@ pub struct Metrics {
     batch_items: AtomicU64,
     /// Plan hot-swaps applied to the backend behind this sink.
     swaps: AtomicU64,
+    /// Tickets cancelled before their request reached an engine.
+    cancelled: AtomicU64,
+    /// Requests dropped because their deadline expired (at submit or at
+    /// batch formation).
+    expired: AtomicU64,
+    /// Submissions refused at admission (queue full under `Reject`, or
+    /// wrong payload).
+    rejected: AtomicU64,
+    /// Admitted requests later evicted by `ShedOldest`.
+    shed: AtomicU64,
+    /// Per-item engine failures (including batch-contract violations).
+    engine_failures: AtomicU64,
+    /// Results that could not be delivered: the ticket was dropped.
+    dropped_sends: AtomicU64,
     /// End-to-end latencies (seconds).
     e2e: Mutex<Vec<f64>>,
     /// Queue-wait latencies (seconds).
@@ -27,6 +47,12 @@ impl Default for Metrics {
             batches: AtomicU64::new(0),
             batch_items: AtomicU64::new(0),
             swaps: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            engine_failures: AtomicU64::new(0),
+            dropped_sends: AtomicU64::new(0),
             e2e: Mutex::new(Vec::new()),
             queue: Mutex::new(Vec::new()),
         }
@@ -54,6 +80,30 @@ impl Metrics {
         self.swaps.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_engine_failures(&self, n: u64) {
+        self.engine_failures.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn record_dropped_send(&self) {
+        self.dropped_sends.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let e2e = self.e2e.lock().unwrap().clone();
         let queue = self.queue.lock().unwrap().clone();
@@ -64,6 +114,12 @@ impl Metrics {
             throughput_rps: completed as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
             avg_batch: self.batch_items.load(Ordering::Relaxed) as f64 / batches as f64,
             swaps: self.swaps.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            engine_failures: self.engine_failures.load(Ordering::Relaxed),
+            dropped_sends: self.dropped_sends.load(Ordering::Relaxed),
             e2e: Percentiles::of(e2e),
             queue: Percentiles::of(queue),
         }
@@ -105,15 +161,59 @@ pub struct MetricsSnapshot {
     pub avg_batch: f64,
     /// Plan hot-swaps applied while serving.
     pub swaps: u64,
+    pub cancelled: u64,
+    pub expired: u64,
+    pub rejected: u64,
+    pub shed: u64,
+    pub engine_failures: u64,
+    pub dropped_sends: u64,
     pub e2e: Percentiles,
     pub queue: Percentiles,
 }
 
 impl MetricsSnapshot {
+    /// Every failure counter as `(name, value)` pairs, in display
+    /// order — the one list shared by consumers that aggregate or
+    /// serialize them (e.g. the bench gate).
+    pub fn failure_counters(&self) -> [(&'static str, u64); 6] {
+        [
+            ("cancelled", self.cancelled),
+            ("expired", self.expired),
+            ("rejected", self.rejected),
+            ("shed", self.shed),
+            ("engine_failures", self.engine_failures),
+            ("dropped_sends", self.dropped_sends),
+        ]
+    }
+
+    /// Requests that ended in any typed failure.
+    pub fn failed_total(&self) -> u64 {
+        self.cancelled + self.expired + self.rejected + self.shed + self.engine_failures
+    }
+
     pub fn summary(&self) -> String {
         let swaps = if self.swaps > 0 { format!(", {} swaps", self.swaps) } else { String::new() };
+        let failures = if self.failed_total() > 0 || self.dropped_sends > 0 {
+            format!(
+                ", failed: {} cancelled / {} expired / {} rejected / {} shed / {} engine\
+                 {}",
+                self.cancelled,
+                self.expired,
+                self.rejected,
+                self.shed,
+                self.engine_failures,
+                if self.dropped_sends > 0 {
+                    format!(" ({} dropped sends)", self.dropped_sends)
+                } else {
+                    String::new()
+                },
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "{} req, {:.1} req/s, avg batch {:.2}{swaps}, e2e p50/p95/p99 = {:.2}/{:.2}/{:.2} ms",
+            "{} req, {:.1} req/s, avg batch {:.2}{swaps}, e2e p50/p95/p99 = \
+             {:.2}/{:.2}/{:.2} ms{failures}",
             self.completed,
             self.throughput_rps,
             self.avg_batch,
@@ -159,6 +259,8 @@ mod tests {
         assert!((s.e2e.p50 - 0.010).abs() < 1e-9);
         assert!(s.summary().contains("6 req"));
         assert!(!s.summary().contains("swaps"));
+        assert!(!s.summary().contains("failed"));
+        assert_eq!(s.failed_total(), 0);
     }
 
     #[test]
@@ -169,5 +271,28 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.swaps, 2);
         assert!(s.summary().contains("2 swaps"), "{}", s.summary());
+    }
+
+    #[test]
+    fn failure_counters_are_counted_and_surfaced() {
+        let m = Metrics::new();
+        m.record_cancelled();
+        m.record_expired();
+        m.record_expired();
+        m.record_rejected();
+        m.record_shed();
+        m.record_engine_failures(3);
+        m.record_dropped_send();
+        let s = m.snapshot();
+        assert_eq!(
+            (s.cancelled, s.expired, s.rejected, s.shed, s.engine_failures, s.dropped_sends),
+            (1, 2, 1, 1, 3, 1)
+        );
+        assert_eq!(s.failed_total(), 8);
+        let text = s.summary();
+        assert!(text.contains("1 cancelled"), "{text}");
+        assert!(text.contains("2 expired"), "{text}");
+        assert!(text.contains("3 engine"), "{text}");
+        assert!(text.contains("1 dropped sends"), "{text}");
     }
 }

@@ -1,15 +1,48 @@
-//! Serving coordinator (L3): submission queue → dynamic batcher → worker
-//! pool over a pluggable inference [`server::Backend`] (rust engine,
-//! exponential counting engine, or a PJRT-compiled AOT artifact), with
-//! per-request latency metrics and bounded-queue backpressure.
+//! Serving coordinator (L3): a typed, fallible serving API.
+//!
+//! The front door is [`InferenceClient`]: `submit` validates the
+//! payload against the engine's declared [`Capabilities`], applies the
+//! queue's [`AdmissionPolicy`], and returns a [`Ticket`] supporting
+//! `wait()`, `wait_timeout()`, and `cancel()`, with a per-request
+//! [`Deadline`] and [`Priority`]. Behind it: priority submission queue
+//! → dynamic batcher (cancelled and deadline-expired requests are
+//! dropped **at batch formation**, never run) → worker pool over a
+//! pluggable fallible [`Engine`] (rust engine, exponential counting
+//! engine, or a PJRT-compiled AOT artifact), with per-request latency
+//! metrics and typed failure counters.
+//!
+//! **Error taxonomy** ([`ServeError`]): every way a request can fail is
+//! a typed, observable outcome —
+//! * `QueueFull` — refused at admission (`Reject`) or shed from a full
+//!   queue (`ShedOldest`);
+//! * `Cancelled` — the ticket was cancelled before inference;
+//! * `DeadlineExceeded` — the deadline expired at submit or in queue;
+//! * `WrongPayload` — payload failed validation against the engine's
+//!   capabilities (kind, image shape, empty/out-of-vocab sequence);
+//! * `EngineFailure` — the engine failed that item, or broke its batch
+//!   contract (wrong result count fails the whole batch, in release
+//!   builds too);
+//! * `ShuttingDown` — submission after `shutdown_and_drain` began.
+//!
+//! **Admission policies** ([`AdmissionPolicy`]): a full queue either
+//! blocks the submitter (`Block`, backpressure), fails fast
+//! (`Reject`), or sheds the oldest lowest-priority queued request to
+//! admit the newcomer (`ShedOldest`). All drops are counted in
+//! [`Metrics`] (cancelled / expired / rejected / shed / engine
+//! failures / dropped sends).
 //!
 //! The [`registry::ModelRegistry`] layers multi-model serving on top:
 //! N named models, each with its own batcher/worker pool and metrics,
-//! routed by model name, with atomic quantization-plan hot-swap for
-//! backends that support it.
+//! routed by model name through the **same client type**, with atomic
+//! quantization-plan hot-swap for engines that support it. Both the
+//! coordinator and the registry drain gracefully via
+//! `shutdown_and_drain()` — every outstanding ticket resolves before it
+//! returns.
 
 pub mod backends;
 pub mod batcher;
+pub mod client;
+pub mod engine;
 pub mod metrics;
 pub mod registry;
 pub mod request;
@@ -19,8 +52,12 @@ pub use backends::{
     AlexNetBackend, ClassifierBackend, CountingFcBackend, PjrtClassifierBackend, ResNetBackend,
     TranslatorBackend,
 };
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{AdmissionPolicy, BatcherConfig};
+pub use client::{InferenceClient, Ticket};
+pub use engine::{Capabilities, EchoEngine, Engine, Infallible, InfallibleEngine};
 pub use metrics::{Metrics, MetricsSnapshot, Percentiles};
-pub use registry::{ModelRegistry, SwappableBackend};
-pub use request::{Output, Payload, Request, Response};
-pub use server::{Backend, Coordinator, CoordinatorConfig, EchoBackend};
+pub use registry::{ModelRegistry, SwappableEngine};
+pub use request::{
+    Deadline, InferError, Output, Payload, Priority, Response, ServeError, SubmitOptions,
+};
+pub use server::{Coordinator, CoordinatorConfig};

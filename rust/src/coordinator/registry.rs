@@ -1,29 +1,35 @@
 //! Multi-model serving registry.
 //!
-//! Owns N named models, each with its own coordinator (submission queue
-//! → dynamic batcher → worker pool → backend) and its own metrics
-//! stream. Requests are routed by model name; because every model keeps
-//! a private FIFO queue, interleaved multi-model traffic preserves
-//! per-model submission order end to end.
+//! Owns N named models, each with its own coordinator (typed client →
+//! priority submission queue → dynamic batcher → worker pool → engine)
+//! and its own metrics stream. Callers obtain the same
+//! [`InferenceClient`] type the single-model path uses
+//! ([`ModelRegistry::client`]), so tickets, deadlines, priorities,
+//! cancellation, and the typed [`super::ServeError`] taxonomy behave
+//! identically whether one model or many are being served; because
+//! every model keeps a private FIFO queue, interleaved multi-model
+//! traffic preserves per-model submission order end to end.
 //!
-//! Backends registered through [`ModelRegistry::register_swappable`]
+//! Engines registered through [`ModelRegistry::register_swappable`]
 //! additionally support **atomic plan hot-swap**: the registry hands the
-//! new [`QuantConfig`] to the backend, which publishes the rebuilt plan
+//! new [`QuantConfig`] to the engine, which publishes the rebuilt plan
 //! with a single `Arc` store. In-flight requests are neither dropped nor
 //! reordered — a batch that already started keeps the plan it began
 //! with, and the next batch picks up the new one.
 
+use super::client::InferenceClient;
+use super::engine::Engine;
 use super::metrics::MetricsSnapshot;
 use super::request::{Payload, Response};
-use super::server::{Backend, Coordinator, CoordinatorConfig};
+use super::server::{Coordinator, CoordinatorConfig};
+use super::Ticket;
 use crate::dnateq::QuantConfig;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
-use std::sync::mpsc::Receiver;
 use std::sync::{Arc, RwLock};
 
-/// A backend whose quantization plan can be replaced while serving.
-pub trait SwappableBackend: Backend {
+/// An engine whose quantization plan can be replaced while serving.
+pub trait SwappableEngine: Engine {
     /// Atomically install the plan derived from `cfg`. Must not block
     /// inference for longer than a pointer swap.
     fn swap_plan(&self, cfg: &QuantConfig) -> Result<()>;
@@ -34,8 +40,8 @@ pub trait SwappableBackend: Backend {
 
 struct ModelEntry {
     coordinator: Coordinator,
-    swap: Option<Arc<dyn SwappableBackend>>,
-    backend_name: String,
+    swap: Option<Arc<dyn SwappableEngine>>,
+    engine_name: String,
 }
 
 /// Registry of named serving models.
@@ -49,44 +55,44 @@ impl ModelRegistry {
         Self::default()
     }
 
-    /// Register a fixed-plan backend under `name` and start its
+    /// Register a fixed-plan engine under `name` and start its
     /// coordinator. Errors if the name is taken.
     pub fn register(
         &self,
         name: &str,
-        backend: Arc<dyn Backend>,
+        engine: Arc<dyn Engine>,
         cfg: CoordinatorConfig,
     ) -> Result<()> {
-        let backend_name = backend.name().to_string();
-        let coordinator = Coordinator::start(backend, cfg);
-        self.insert(name, coordinator, None, backend_name)
+        let engine_name = engine.name().to_string();
+        let coordinator = Coordinator::start(engine, cfg);
+        self.insert(name, coordinator, None, engine_name)
     }
 
-    /// Register a hot-swappable backend under `name`. The registry keeps
+    /// Register a hot-swappable engine under `name`. The registry keeps
     /// a handle for [`Self::swap_plan`] alongside the coordinator.
     pub fn register_swappable(
         &self,
         name: &str,
-        backend: Arc<dyn SwappableBackend>,
+        engine: Arc<dyn SwappableEngine>,
         cfg: CoordinatorConfig,
     ) -> Result<()> {
-        let backend_name = backend.name().to_string();
-        let coordinator = Coordinator::start(Arc::clone(&backend), cfg);
-        self.insert(name, coordinator, Some(backend), backend_name)
+        let engine_name = engine.name().to_string();
+        let coordinator = Coordinator::start(Arc::clone(&engine), cfg);
+        self.insert(name, coordinator, Some(engine), engine_name)
     }
 
     fn insert(
         &self,
         name: &str,
         coordinator: Coordinator,
-        swap: Option<Arc<dyn SwappableBackend>>,
-        backend_name: String,
+        swap: Option<Arc<dyn SwappableEngine>>,
+        engine_name: String,
     ) -> Result<()> {
         let mut entries = self.entries.write().unwrap();
         if entries.contains_key(name) {
             bail!("model `{name}` is already registered");
         }
-        entries.insert(name.to_string(), Arc::new(ModelEntry { coordinator, swap, backend_name }));
+        entries.insert(name.to_string(), Arc::new(ModelEntry { coordinator, swap, engine_name }));
         Ok(())
     }
 
@@ -106,12 +112,12 @@ impl ModelRegistry {
         self.entries.read().unwrap().keys().cloned().collect()
     }
 
-    /// Name the backend under `model` reports for itself.
-    pub fn backend_name(&self, model: &str) -> Result<String> {
-        Ok(self.entry(model)?.backend_name.clone())
+    /// Name the engine under `model` reports for itself.
+    pub fn engine_name(&self, model: &str) -> Result<String> {
+        Ok(self.entry(model)?.engine_name.clone())
     }
 
-    /// Plan label of a swappable model (errors for fixed backends).
+    /// Plan label of a swappable model (errors for fixed engines).
     pub fn plan_label(&self, model: &str) -> Result<String> {
         let entry = self.entry(model)?;
         match &entry.swap {
@@ -120,14 +126,23 @@ impl ModelRegistry {
         }
     }
 
-    /// Route a payload to `model`; returns its response channel.
-    pub fn submit(&self, model: &str, payload: Payload) -> Result<Receiver<Response>> {
-        self.entry(model)?.coordinator.submit(payload)
+    /// Typed client onto `model`'s coordinator — the same
+    /// [`InferenceClient`] single-model callers use, with deadlines,
+    /// priorities, cancellation, and typed errors.
+    pub fn client(&self, model: &str) -> Result<InferenceClient> {
+        Ok(self.entry(model)?.coordinator.client())
+    }
+
+    /// Route a payload to `model`; returns its ticket. (Convenience for
+    /// one-shot callers; sustained traffic should hold a
+    /// [`Self::client`].)
+    pub fn submit(&self, model: &str, payload: Payload) -> Result<Ticket> {
+        Ok(self.entry(model)?.coordinator.submit(payload)?)
     }
 
     /// Route a payload to `model` and block for the response.
     pub fn submit_wait(&self, model: &str, payload: Payload) -> Result<Response> {
-        self.entry(model)?.coordinator.submit_wait(payload)
+        Ok(self.entry(model)?.coordinator.submit_wait(payload)?)
     }
 
     /// Hot-swap the quantization plan of a running model.
@@ -140,8 +155,8 @@ impl ModelRegistry {
                 Ok(())
             }
             None => bail!(
-                "model `{model}` (backend `{}`) does not support plan hot-swap",
-                entry.backend_name
+                "model `{model}` (engine `{}`) does not support plan hot-swap",
+                entry.engine_name
             ),
         }
     }
@@ -157,17 +172,19 @@ impl ModelRegistry {
         entries.iter().map(|(k, e)| (k.clone(), e.coordinator.metrics())).collect()
     }
 
-    /// Drain and stop every model's workers, returning final metrics.
-    pub fn shutdown(self) -> BTreeMap<String, MetricsSnapshot> {
+    /// Gracefully drain and stop every model's workers, returning final
+    /// metrics. Every outstanding ticket resolves (with a response or a
+    /// typed error) before this returns.
+    pub fn shutdown_and_drain(self) -> BTreeMap<String, MetricsSnapshot> {
         let entries = std::mem::take(&mut *self.entries.write().unwrap());
         let mut out = BTreeMap::new();
         for (name, arc) in entries {
-            // `shutdown(self)` takes the registry by value, so no &self
-            // method (the only place entry Arcs are cloned, and they
-            // never outlive the call) can still be running — the map
-            // holds the last reference.
+            // `shutdown_and_drain(self)` takes the registry by value, so
+            // no &self method (the only place entry Arcs are cloned, and
+            // they never outlive the call) can still be running — the
+            // map holds the last reference.
             let entry = Arc::try_unwrap(arc).ok().expect("no live entry references at shutdown");
-            out.insert(name, entry.coordinator.shutdown());
+            out.insert(name, entry.coordinator.shutdown_and_drain());
         }
         out
     }
@@ -175,14 +192,14 @@ impl ModelRegistry {
 
 #[cfg(test)]
 mod tests {
-    use super::super::server::EchoBackend;
+    use super::super::engine::EchoEngine;
     use super::*;
     use crate::coordinator::request::Output;
 
     fn reg_with_echo(names: &[&str]) -> ModelRegistry {
         let reg = ModelRegistry::new();
         for n in names {
-            reg.register(n, Arc::new(EchoBackend { delay_us: 0 }), CoordinatorConfig::default())
+            reg.register(n, Arc::new(EchoEngine { delay_us: 0 }), CoordinatorConfig::default())
                 .unwrap();
         }
         reg
@@ -196,9 +213,21 @@ mod tests {
         let rb = reg.submit_wait("b", Payload::Seq(vec![2])).unwrap();
         assert_eq!(ra.output, Output::Tokens(vec![1]));
         assert_eq!(rb.output, Output::Tokens(vec![2]));
-        let snaps = reg.shutdown();
+        let snaps = reg.shutdown_and_drain();
         assert_eq!(snaps["a"].completed, 1);
         assert_eq!(snaps["b"].completed, 1);
+    }
+
+    #[test]
+    fn client_handles_route_like_direct_submission() {
+        let reg = reg_with_echo(&["m"]);
+        let client = reg.client("m").unwrap();
+        assert_eq!(client.engine_name(), "echo");
+        let resp = client.infer(Payload::Seq(vec![9])).unwrap();
+        assert_eq!(resp.output, Output::Tokens(vec![9]));
+        assert!(reg.client("nope").is_err());
+        let snaps = reg.shutdown_and_drain();
+        assert_eq!(snaps["m"].completed, 1);
     }
 
     #[test]
@@ -206,7 +235,7 @@ mod tests {
         let reg = reg_with_echo(&["alexnet"]);
         let err = reg.submit_wait("resnet", Payload::Seq(vec![1])).unwrap_err().to_string();
         assert!(err.contains("alexnet"), "err: {err}");
-        reg.shutdown();
+        reg.shutdown_and_drain();
     }
 
     #[test]
@@ -214,21 +243,21 @@ mod tests {
         let reg = reg_with_echo(&["m"]);
         let dup = reg.register(
             "m",
-            Arc::new(EchoBackend { delay_us: 0 }),
+            Arc::new(EchoEngine { delay_us: 0 }),
             CoordinatorConfig::default(),
         );
         assert!(dup.is_err());
-        reg.shutdown();
+        reg.shutdown_and_drain();
     }
 
     #[test]
-    fn fixed_backend_refuses_swap() {
+    fn fixed_engine_refuses_swap() {
         let reg = reg_with_echo(&["m"]);
         let cfg = QuantConfig { model: "m".into(), thr_w: 0.04, layers: vec![] };
         let err = reg.swap_plan("m", &cfg).unwrap_err().to_string();
         assert!(err.contains("hot-swap"), "err: {err}");
         assert!(reg.plan_label("m").is_err());
-        reg.shutdown();
+        reg.shutdown_and_drain();
     }
 
     #[test]
@@ -241,6 +270,6 @@ mod tests {
         assert_eq!(all["a"].completed, 5);
         assert_eq!(all["b"].completed, 0);
         assert_eq!(reg.metrics("a").unwrap().completed, 5);
-        reg.shutdown();
+        reg.shutdown_and_drain();
     }
 }

@@ -1,8 +1,13 @@
-//! Request/response types of the serving layer.
+//! Request/response types of the serving layer: payloads, outputs, the
+//! typed error taxonomy ([`ServeError`] at the client boundary,
+//! [`InferError`] per item inside an engine), per-request [`Deadline`]s
+//! and [`Priority`] classes, and the internal queued [`Request`].
 
 use crate::tensor::Tensor;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::SyncSender;
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// What a client submits.
 #[derive(Clone, Debug)]
@@ -13,7 +18,17 @@ pub enum Payload {
     Seq(Vec<usize>),
 }
 
-/// What the backend produces.
+impl Payload {
+    /// Short label for error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::Image(_) => "image",
+            Payload::Seq(_) => "sequence",
+        }
+    }
+}
+
+/// What an engine produces per accepted item.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Output {
     ClassId(usize),
@@ -21,16 +36,181 @@ pub enum Output {
     Tokens(Vec<usize>),
 }
 
-/// Internal queued request.
-pub struct Request {
+/// Scheduling class of a request. Within one class the queue is strict
+/// FIFO; across classes, batch formation always drains higher priority
+/// first.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl Priority {
+    /// Queue-lane index: 0 is served first.
+    pub(crate) fn lane(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+    pub(crate) const LANES: usize = 3;
+}
+
+/// Absolute completion deadline of a request. Expired requests are
+/// dropped at batch-formation time (they never reach the engine) and
+/// their tickets resolve to [`ServeError::DeadlineExceeded`]; a deadline
+/// already expired at submission is rejected synchronously.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Deadline(Option<Instant>);
+
+impl Deadline {
+    /// No deadline: the request waits as long as it has to.
+    pub const NONE: Deadline = Deadline(None);
+
+    /// Deadline `d` from now.
+    pub fn within(d: Duration) -> Self {
+        Deadline(Some(Instant::now() + d))
+    }
+
+    /// Deadline at an absolute instant.
+    pub fn at(t: Instant) -> Self {
+        Deadline(Some(t))
+    }
+
+    pub fn expired(&self) -> bool {
+        matches!(self.0, Some(t) if Instant::now() >= t)
+    }
+
+    /// The absolute instant, if any (bounds how long admission may
+    /// block the submitter).
+    pub(crate) fn until(&self) -> Option<Instant> {
+        self.0
+    }
+}
+
+/// How a client's submission options reach the queue.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOptions {
+    pub deadline: Deadline,
+    pub priority: Priority,
+}
+
+impl SubmitOptions {
+    pub fn with_deadline(mut self, d: Deadline) -> Self {
+        self.deadline = d;
+        self
+    }
+
+    pub fn with_priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+}
+
+/// Why serving a request failed — the typed error every client-facing
+/// call returns instead of silent drops or sentinel outputs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The submission queue was full (policy `Reject`), or the request
+    /// was shed from a full queue to admit newer work (`ShedOldest`).
+    QueueFull,
+    /// The ticket was cancelled before the request reached an engine.
+    Cancelled,
+    /// The deadline expired before the request reached an engine (or
+    /// was already expired at submission).
+    DeadlineExceeded,
+    /// The payload failed validation against the engine's capabilities.
+    WrongPayload(String),
+    /// The engine failed on this item (or broke its batch contract).
+    EngineFailure(String),
+    /// The coordinator is draining or has shut down.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::QueueFull => write!(f, "submission queue full"),
+            ServeError::Cancelled => write!(f, "request cancelled"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            ServeError::WrongPayload(why) => write!(f, "wrong payload: {why}"),
+            ServeError::EngineFailure(why) => write!(f, "engine failure: {why}"),
+            ServeError::ShuttingDown => write!(f, "coordinator shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Per-item failure reported by an [`super::Engine`]. The worker maps it
+/// into the client-facing [`ServeError`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum InferError {
+    /// The engine cannot process this payload kind/shape.
+    Unsupported(String),
+    /// The engine tried and failed.
+    Failed(String),
+}
+
+impl InferError {
+    pub fn unsupported(why: impl Into<String>) -> Self {
+        InferError::Unsupported(why.into())
+    }
+
+    pub fn failed(why: impl Into<String>) -> Self {
+        InferError::Failed(why.into())
+    }
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::Unsupported(why) => write!(f, "unsupported payload: {why}"),
+            InferError::Failed(why) => write!(f, "inference failed: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
+impl From<InferError> for ServeError {
+    fn from(e: InferError) -> Self {
+        match e {
+            InferError::Unsupported(why) => ServeError::WrongPayload(why),
+            InferError::Failed(why) => ServeError::EngineFailure(why),
+        }
+    }
+}
+
+/// Internal queued request (crate-private: clients hold a
+/// [`super::Ticket`], never the raw request).
+pub(crate) struct Request {
     pub id: u64,
     pub payload: Payload,
     pub submitted: Instant,
-    pub respond_to: SyncSender<Response>,
+    pub deadline: Deadline,
+    pub priority: Priority,
+    pub cancelled: Arc<AtomicBool>,
+    pub respond_to: SyncSender<Result<Response, ServeError>>,
+}
+
+impl Request {
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
+    }
+
+    /// Resolve the ticket with `result`; returns `false` when the
+    /// receiver was dropped (an abandoned ticket — callers count it).
+    pub fn resolve(self, result: Result<Response, ServeError>) -> bool {
+        self.respond_to.send(result).is_ok()
+    }
 }
 
 /// Completed response with timing.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Response {
     pub id: u64,
     pub output: Output,
@@ -38,4 +218,43 @@ pub struct Response {
     pub queue_s: f64,
     /// End-to-end latency (seconds).
     pub e2e_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_none_never_expires() {
+        assert!(!Deadline::NONE.expired());
+        assert!(!Deadline::within(Duration::from_secs(60)).expired());
+    }
+
+    #[test]
+    fn deadline_in_the_past_is_expired() {
+        assert!(Deadline::at(Instant::now() - Duration::from_millis(1)).expired());
+        let soon = Deadline::within(Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(soon.expired());
+    }
+
+    #[test]
+    fn priority_lanes_order_high_first() {
+        assert!(Priority::High.lane() < Priority::Normal.lane());
+        assert!(Priority::Normal.lane() < Priority::Low.lane());
+        assert_eq!(Priority::default(), Priority::Normal);
+    }
+
+    #[test]
+    fn serve_error_display_is_specific() {
+        let e = ServeError::WrongPayload("image must be [3, 32, 32]".into());
+        assert!(e.to_string().contains("[3, 32, 32]"));
+        assert_eq!(ServeError::from(InferError::failed("boom")), {
+            ServeError::EngineFailure("boom".into())
+        });
+        assert!(matches!(
+            ServeError::from(InferError::unsupported("seq")),
+            ServeError::WrongPayload(_)
+        ));
+    }
 }

@@ -1,59 +1,78 @@
-//! The serving coordinator: submission queue → dynamic batcher → worker
-//! pool → per-request response channels. Pure std (threads + mpsc); the
-//! backend is pluggable ([`Backend`]) — rust engine, counting engine, or
-//! a PJRT executable.
+//! The serving coordinator: typed client front door → priority
+//! submission queue → dynamic batcher → worker pool → per-ticket
+//! results. Pure std (threads + condvars); the engine is pluggable
+//! ([`Engine`]) — rust engine, counting engine, or a PJRT executable.
+//!
+//! Every failure is a typed [`ServeError`] delivered through the
+//! request's [`super::Ticket`]: engines report per-item `Result`s,
+//! batch-contract violations (wrong result count) fail the whole batch
+//! with `EngineFailure` — in release builds too, not behind a
+//! `debug_assert` — and responses whose ticket was abandoned are
+//! counted (`dropped_sends`) instead of vanishing.
 
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::{AdmissionPolicy, Batcher, BatcherConfig, SubmissionQueue};
+use super::client::{ClientCore, InferenceClient};
+use super::engine::Engine;
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::request::{Output, Payload, Request, Response};
+use super::request::{Payload, Request, Response, ServeError};
 use anyhow::Result;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
 use std::time::Instant;
-
-/// Inference backend: maps a batch of payloads to outputs (1:1, in
-/// order). Must be cheap to share across worker threads.
-pub trait Backend: Send + Sync + 'static {
-    fn infer(&self, batch: &[Payload]) -> Vec<Output>;
-    fn name(&self) -> &str {
-        "backend"
-    }
-}
 
 /// Coordinator configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct CoordinatorConfig {
     pub batcher: BatcherConfig,
     pub workers: usize,
-    /// Submission queue bound (backpressure: submit blocks when full).
+    /// Submission queue bound.
     pub queue_depth: usize,
+    /// What happens to submissions when the queue is full.
+    pub admission: AdmissionPolicy,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { batcher: BatcherConfig::default(), workers: 2, queue_depth: 256 }
+        Self {
+            batcher: BatcherConfig::default(),
+            workers: 2,
+            queue_depth: 256,
+            admission: AdmissionPolicy::Block,
+        }
     }
 }
 
 /// Handle to a running serving instance.
 pub struct Coordinator {
-    tx: Option<SyncSender<Request>>,
+    core: Arc<ClientCore>,
+    queue: Arc<SubmissionQueue>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    metrics: Arc<Metrics>,
-    next_id: AtomicU64,
+}
+
+/// Deliver one resolved request, counting an abandoned ticket.
+fn resolve(metrics: &Metrics, req: Request, result: Result<Response, ServeError>) {
+    if !req.resolve(result) {
+        metrics.record_dropped_send();
+    }
 }
 
 impl Coordinator {
-    /// Start the worker pool over `backend`.
-    pub fn start<B: Backend + ?Sized>(backend: Arc<B>, cfg: CoordinatorConfig) -> Self {
-        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
-        let batcher = Arc::new(Batcher::new(rx, cfg.batcher));
+    /// Start the worker pool over `engine`. The batcher is clamped to
+    /// the engine's declared `max_batch` capability.
+    pub fn start<E: Engine + ?Sized>(engine: Arc<E>, cfg: CoordinatorConfig) -> Self {
+        let caps = engine.capabilities();
+        let mut batcher_cfg = cfg.batcher;
+        if let Some(cap) = caps.max_batch {
+            batcher_cfg.max_batch = batcher_cfg.max_batch.min(cap.max(1));
+        }
+        let queue = Arc::new(SubmissionQueue::new(cfg.queue_depth, cfg.admission));
         let metrics = Arc::new(Metrics::new());
+        let batcher =
+            Arc::new(Batcher::new(Arc::clone(&queue), Arc::clone(&metrics), batcher_cfg));
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
                 let batcher = Arc::clone(&batcher);
-                let backend = Arc::clone(&backend);
+                let engine = Arc::clone(&engine);
                 let metrics = Arc::clone(&metrics);
                 std::thread::spawn(move || {
                     while let Some(batch) = batcher.next_batch() {
@@ -61,48 +80,70 @@ impl Coordinator {
                         let formed = Instant::now();
                         let payloads: Vec<Payload> =
                             batch.iter().map(|r| r.payload.clone()).collect();
-                        let outputs = backend.infer(&payloads);
-                        debug_assert_eq!(outputs.len(), batch.len());
-                        for (req, output) in batch.into_iter().zip(outputs) {
+                        let results = engine.infer_batch(&payloads);
+                        if results.len() != batch.len() {
+                            // Batch-contract violation: fail every
+                            // request of this batch, in release too.
+                            let why = format!(
+                                "engine `{}` returned {} results for a batch of {}",
+                                engine.name(),
+                                results.len(),
+                                batch.len()
+                            );
+                            metrics.record_engine_failures(batch.len() as u64);
+                            for req in batch {
+                                let e = ServeError::EngineFailure(why.clone());
+                                resolve(&metrics, req, Err(e));
+                            }
+                            continue;
+                        }
+                        for (req, item) in batch.into_iter().zip(results) {
                             let e2e = req.submitted.elapsed().as_secs_f64();
-                            let queue = formed.duration_since(req.submitted).as_secs_f64();
-                            metrics.record_response(e2e, queue);
-                            // A dropped client receiver is not an error.
-                            let _ = req.respond_to.send(Response {
-                                id: req.id,
-                                output,
-                                queue_s: queue,
-                                e2e_s: e2e,
-                            });
+                            let queue_s = formed.duration_since(req.submitted).as_secs_f64();
+                            match item {
+                                Ok(output) => {
+                                    metrics.record_response(e2e, queue_s);
+                                    let resp = Response {
+                                        id: req.id,
+                                        output,
+                                        queue_s,
+                                        e2e_s: e2e,
+                                    };
+                                    resolve(&metrics, req, Ok(resp));
+                                }
+                                Err(infer_err) => {
+                                    metrics.record_engine_failures(1);
+                                    resolve(&metrics, req, Err(infer_err.into()));
+                                }
+                            }
                         }
                     }
                 })
             })
             .collect();
-        Self { tx: Some(tx), workers, metrics, next_id: AtomicU64::new(0) }
+        let core = Arc::new(ClientCore {
+            queue: Arc::clone(&queue),
+            metrics,
+            caps,
+            next_id: AtomicU64::new(0),
+            engine_name: engine.name().to_string(),
+        });
+        Self { core, queue, workers }
     }
 
-    /// Submit a request; returns the response channel (async-style).
-    pub fn submit(&self, payload: Payload) -> Result<Receiver<Response>> {
-        let (rtx, rrx) = mpsc::sync_channel(1);
-        let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            payload,
-            submitted: Instant::now(),
-            respond_to: rtx,
-        };
-        self.tx
-            .as_ref()
-            .expect("coordinator running")
-            .send(req)
-            .map_err(|_| anyhow::anyhow!("coordinator shut down"))?;
-        Ok(rrx)
+    /// A cloneable typed client onto this coordinator.
+    pub fn client(&self) -> InferenceClient {
+        InferenceClient::new(Arc::clone(&self.core))
     }
 
-    /// Submit and block for the response.
-    pub fn submit_wait(&self, payload: Payload) -> Result<Response> {
-        let rx = self.submit(payload)?;
-        rx.recv().map_err(|_| anyhow::anyhow!("worker dropped response"))
+    /// Submit a request with default options; returns its ticket.
+    pub fn submit(&self, payload: Payload) -> Result<super::Ticket, ServeError> {
+        self.client().submit(payload)
+    }
+
+    /// Submit and block for the result.
+    pub fn submit_wait(&self, payload: Payload) -> Result<Response, ServeError> {
+        self.client().infer(payload)
     }
 
     /// Submit `n` requests cycling through `payloads`, then block until
@@ -114,81 +155,64 @@ impl Coordinator {
         if payloads.is_empty() || n == 0 {
             anyhow::bail!("drive needs at least one payload and one request");
         }
+        let client = self.client();
         let t0 = Instant::now();
-        let mut rxs = Vec::with_capacity(n);
+        let mut tickets = Vec::with_capacity(n);
         for i in 0..n {
-            rxs.push(self.submit(payloads[i % payloads.len()].clone())?);
+            tickets.push(client.submit(payloads[i % payloads.len()].clone())?);
         }
-        for rx in rxs {
-            rx.recv().map_err(|_| anyhow::anyhow!("worker dropped response"))?;
+        for t in tickets {
+            t.wait()?;
         }
         Ok(t0.elapsed() / n as u32)
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        self.core.metrics.snapshot()
     }
 
     /// Shared handle to the live metrics sink, so owners layered above
     /// the coordinator (the model registry) can record their own events
     /// — e.g. plan hot-swaps — into the same per-model stream.
     pub fn metrics_handle(&self) -> Arc<Metrics> {
-        Arc::clone(&self.metrics)
+        Arc::clone(&self.core.metrics)
     }
 
-    /// Drain and stop all workers, returning final metrics.
-    pub fn shutdown(mut self) -> MetricsSnapshot {
-        self.tx.take(); // close the queue
+    /// Graceful drain: stop admitting (subsequent submissions fail with
+    /// `ShuttingDown`), let the workers finish everything already
+    /// queued or in flight, join them, and return the final metrics.
+    /// Outstanding tickets all resolve — with a response or a typed
+    /// error — before this returns.
+    pub fn shutdown_and_drain(mut self) -> MetricsSnapshot {
+        self.queue.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        self.metrics.snapshot()
-    }
-}
-
-/// Trivial backend used by tests: echoes sequence payloads, classifies
-/// images as 0 after a configurable busy-delay.
-pub struct EchoBackend {
-    pub delay_us: u64,
-}
-
-impl Backend for EchoBackend {
-    fn infer(&self, batch: &[Payload]) -> Vec<Output> {
-        if self.delay_us > 0 {
-            std::thread::sleep(std::time::Duration::from_micros(self.delay_us));
-        }
-        batch
-            .iter()
-            .map(|p| match p {
-                Payload::Seq(s) => Output::Tokens(s.clone()),
-                Payload::Image(_) => Output::ClassId(0),
-            })
-            .collect()
-    }
-
-    fn name(&self) -> &str {
-        "echo"
+        self.core.metrics.snapshot()
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::engine::EchoEngine;
+    use super::super::request::Output;
     use super::*;
+    use std::time::Duration;
 
     #[test]
     fn serves_and_echoes() {
         let c =
-            Coordinator::start(Arc::new(EchoBackend { delay_us: 0 }), CoordinatorConfig::default());
+            Coordinator::start(Arc::new(EchoEngine { delay_us: 0 }), CoordinatorConfig::default());
         let resp = c.submit_wait(Payload::Seq(vec![4, 5, 6])).unwrap();
         assert_eq!(resp.output, Output::Tokens(vec![4, 5, 6]));
-        let snap = c.shutdown();
+        let snap = c.shutdown_and_drain();
         assert_eq!(snap.completed, 1);
     }
 
     #[test]
     fn many_concurrent_clients_all_answered() {
-        let c = Arc::new(Coordinator::start(
-            Arc::new(EchoBackend { delay_us: 50 }),
+        let c = Coordinator::start(
+            Arc::new(EchoEngine { delay_us: 50 }),
             CoordinatorConfig {
                 batcher: BatcherConfig {
                     max_batch: 4,
@@ -196,14 +220,15 @@ mod tests {
                 },
                 workers: 3,
                 queue_depth: 64,
+                admission: AdmissionPolicy::Block,
             },
-        ));
+        );
         let mut clients = Vec::new();
         for t in 0..4 {
-            let c = Arc::clone(&c);
+            let client = c.client();
             clients.push(std::thread::spawn(move || {
                 for i in 0..25 {
-                    let resp = c.submit_wait(Payload::Seq(vec![t, i])).unwrap();
+                    let resp = client.infer(Payload::Seq(vec![t, i])).unwrap();
                     assert_eq!(resp.output, Output::Tokens(vec![t, i]));
                 }
             }));
@@ -211,8 +236,7 @@ mod tests {
         for cl in clients {
             cl.join().unwrap();
         }
-        let c = Arc::try_unwrap(c).ok().expect("sole owner");
-        let snap = c.shutdown();
+        let snap = c.shutdown_and_drain();
         assert_eq!(snap.completed, 100);
         assert!(snap.avg_batch >= 1.0);
         assert!(snap.e2e.p50 > 0.0);
@@ -221,47 +245,84 @@ mod tests {
     #[test]
     fn drive_cycles_payloads_and_answers_all() {
         let c =
-            Coordinator::start(Arc::new(EchoBackend { delay_us: 0 }), CoordinatorConfig::default());
+            Coordinator::start(Arc::new(EchoEngine { delay_us: 0 }), CoordinatorConfig::default());
         let payloads = vec![Payload::Seq(vec![1]), Payload::Seq(vec![2])];
         let per = c.drive(&payloads, 10).unwrap();
         assert!(per > std::time::Duration::ZERO);
         assert!(c.drive(&[], 4).is_err());
-        let snap = c.shutdown();
+        let snap = c.shutdown_and_drain();
         assert_eq!(snap.completed, 10);
     }
 
     #[test]
-    fn shutdown_rejects_new_requests() {
+    fn drained_coordinator_rejects_new_requests_with_typed_error() {
         let c =
-            Coordinator::start(Arc::new(EchoBackend { delay_us: 0 }), CoordinatorConfig::default());
-        let snap = c.shutdown();
+            Coordinator::start(Arc::new(EchoEngine { delay_us: 0 }), CoordinatorConfig::default());
+        let client = c.client();
+        let snap = c.shutdown_and_drain();
         assert_eq!(snap.completed, 0);
+        // The client handle survives the drain but every submission now
+        // fails with the typed shutdown error.
+        let err = client.submit(Payload::Seq(vec![1])).unwrap_err();
+        assert_eq!(err, ServeError::ShuttingDown);
     }
 
     #[test]
     fn batching_actually_groups() {
         // One slow worker + many queued requests → avg batch > 1.
-        let c = Arc::new(Coordinator::start(
-            Arc::new(EchoBackend { delay_us: 2000 }),
+        let c = Coordinator::start(
+            Arc::new(EchoEngine { delay_us: 2000 }),
             CoordinatorConfig {
                 batcher: BatcherConfig {
                     max_batch: 8,
-                    max_wait: std::time::Duration::from_millis(4),
+                    max_wait: Duration::from_millis(4),
                 },
                 workers: 1,
                 queue_depth: 256,
+                admission: AdmissionPolicy::Block,
             },
-        ));
-        let mut rxs = Vec::new();
+        );
+        let mut tickets = Vec::new();
         for i in 0..64 {
-            rxs.push(c.submit(Payload::Seq(vec![i])).unwrap());
+            tickets.push(c.submit(Payload::Seq(vec![i])).unwrap());
         }
-        for rx in rxs {
-            rx.recv().unwrap();
+        for t in tickets {
+            t.wait().unwrap();
         }
-        let c = Arc::try_unwrap(c).ok().expect("sole owner");
-        let snap = c.shutdown();
+        let snap = c.shutdown_and_drain();
         assert_eq!(snap.completed, 64);
         assert!(snap.avg_batch > 1.5, "avg batch {}", snap.avg_batch);
+    }
+
+    #[test]
+    fn engine_max_batch_capability_clamps_the_batcher() {
+        struct Cap2;
+        impl super::super::engine::InfallibleEngine for Cap2 {
+            fn infer(&self, batch: &[Payload]) -> Vec<Output> {
+                assert!(batch.len() <= 2, "batch exceeded declared capability");
+                std::thread::sleep(Duration::from_micros(500));
+                batch.iter().map(|_| Output::ClassId(0)).collect()
+            }
+            fn accepts(&self) -> super::super::engine::Capabilities {
+                super::super::engine::Capabilities::all().with_max_batch(2)
+            }
+        }
+        let c = Coordinator::start(
+            Arc::new(super::super::engine::Infallible(Cap2)),
+            CoordinatorConfig {
+                batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(2) },
+                workers: 1,
+                queue_depth: 64,
+                admission: AdmissionPolicy::Block,
+            },
+        );
+        let tickets: Vec<_> =
+            (0..12).map(|i| c.submit(Payload::Seq(vec![i])).unwrap()).collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let snap = c.shutdown_and_drain();
+        assert_eq!(snap.completed, 12);
+        assert!(snap.avg_batch <= 2.0, "avg batch {}", snap.avg_batch);
     }
 }

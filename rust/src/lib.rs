@@ -29,7 +29,7 @@
 //! | [`expdot`] | §III-C, §IV | **batched** exponential counting-GEMM engines + INT8 baseline |
 //! | [`accel`] | §V, §VI-C/D | 3D-stacked accelerator simulator + energy |
 //! | [`runtime`] | — | PJRT loading/execution of AOT artifacts (feature `pjrt`) |
-//! | [`coordinator`] | — | serving: router, dynamic batcher, workers, batched backends, metrics |
+//! | [`coordinator`] | — | serving: typed `InferenceClient`/`Ticket` API over fallible `Engine`s, priority queue + admission policies, registry, hot-swap, metrics |
 //! | [`report`] | §VI | table/figure emitters for every paper exhibit |
 //!
 //! ## Build / test / bench

@@ -11,8 +11,8 @@
 
 use anyhow::{bail, Context, Result};
 use dnateq::coordinator::{
-    AlexNetBackend, CoordinatorConfig, ModelRegistry, Output, Payload, PjrtClassifierBackend,
-    ResNetBackend, SwappableBackend, TranslatorBackend,
+    AdmissionPolicy, AlexNetBackend, CoordinatorConfig, ModelRegistry, Output, Payload,
+    PjrtClassifierBackend, ResNetBackend, SwappableEngine, TranslatorBackend,
 };
 use dnateq::dataset::{ImageDataset, SeqDataset};
 use dnateq::dnateq::{
@@ -105,6 +105,16 @@ fn canonical_model(name: &str) -> Result<&'static str> {
                  transformer); trained weights present for: {trained:?}"
             )
         }
+    }
+}
+
+/// Admission policy names accepted by `serve --admission`.
+fn parse_admission(name: &str) -> Result<AdmissionPolicy> {
+    match name {
+        "block" => Ok(AdmissionPolicy::Block),
+        "reject" => Ok(AdmissionPolicy::Reject),
+        "shed" | "shed-oldest" => Ok(AdmissionPolicy::ShedOldest),
+        other => bail!("unknown admission policy `{other}`; use block, reject or shed"),
     }
 }
 
@@ -217,7 +227,7 @@ fn classifier_backend<M: ImageModel + 'static>(
     model: M,
     name: &str,
     kind: &str,
-) -> Result<Arc<dyn SwappableBackend>> {
+) -> Result<Arc<dyn SwappableEngine>> {
     Ok(match kind {
         "quantized" => {
             let cfg = plan_for(name)?;
@@ -296,6 +306,7 @@ fn serve(args: &Args) -> Result<()> {
     let n: usize = args.get("requests").unwrap_or("64").parse()?;
     let kind = args.get("backend").unwrap_or("engine");
     validate_backend(kind)?;
+    let admission = parse_admission(args.get("admission").unwrap_or("block"))?;
     let spec = match (args.get("models"), args.get("model")) {
         (Some(_), Some(_)) => bail!("pass either --models or --model, not both"),
         (Some(list), None) => list.to_string(),
@@ -315,14 +326,24 @@ fn serve(args: &Args) -> Result<()> {
 
     let registry = ModelRegistry::new();
     let mut traffic = BTreeMap::new();
+    let coord_cfg = CoordinatorConfig { admission, ..CoordinatorConfig::default() };
     for m in &models {
-        let t = register_model(&registry, m, kind, CoordinatorConfig::default())?;
+        let t = register_model(&registry, m, kind, coord_cfg)?;
         traffic.insert(m.to_string(), t);
     }
-    println!("serving {} model(s) [{}] with backend `{kind}`", models.len(), models.join(", "));
+    println!(
+        "serving {} model(s) [{}] with backend `{kind}` (admission {admission:?})",
+        models.len(),
+        models.join(", ")
+    );
 
-    // Interleave traffic round-robin across models so every batcher sees
-    // concurrent mixed load.
+    // One typed client per model (the single- and multi-model API);
+    // interleave traffic round-robin across models so every batcher
+    // sees concurrent mixed load.
+    let clients: BTreeMap<&str, dnateq::coordinator::InferenceClient> = models
+        .iter()
+        .map(|m| Ok((*m, registry.client(m)?)))
+        .collect::<Result<_>>()?;
     let mut pending = Vec::with_capacity(n);
     for i in 0..n {
         let model = models[i % models.len()];
@@ -336,22 +357,24 @@ fn serve(args: &Args) -> Result<()> {
                 (Payload::Seq(d.src[idx].clone()), None)
             }
         };
-        pending.push((model, label, registry.submit(model, payload)?));
+        pending.push((model, label, clients[model].submit(payload)?));
     }
 
     let mut hits: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
-    for (model, label, rx) in pending {
-        let resp = rx.recv().context("response channel closed")?;
+    for (model, label, ticket) in pending {
         let entry = hits.entry(model).or_default();
         entry.1 += 1;
-        match (label, &resp.output) {
-            (Some(want), Output::ClassId(got)) if *got == want => entry.0 += 1,
-            (None, Output::Tokens(toks)) if !toks.is_empty() => entry.0 += 1,
+        match (label, ticket.wait()) {
+            (Some(want), Ok(resp)) if resp.output == Output::ClassId(want) => entry.0 += 1,
+            (None, Ok(resp)) if matches!(&resp.output, Output::Tokens(t) if !t.is_empty()) => {
+                entry.0 += 1
+            }
+            (_, Err(e)) => eprintln!("[serve] {model}: request failed: {e}"),
             _ => {}
         }
     }
 
-    let snaps = registry.shutdown();
+    let snaps = registry.shutdown_and_drain();
     for (model, snap) in &snaps {
         let (ok, total) = hits.get(model.as_str()).copied().unwrap_or((0, 0));
         let metric = if matches!(traffic[model.as_str()], Traffic::Image(_)) {
@@ -442,7 +465,7 @@ fn build_swap_backend(
     model: &str,
     calib: &ImageDataset,
     thr: f64,
-) -> (Arc<dyn SwappableBackend>, QuantConfig, QuantConfig) {
+) -> (Arc<dyn SwappableEngine>, QuantConfig, QuantConfig) {
     fn plans_for<M: ImageModel>(
         m: &M,
         model: &str,
@@ -501,24 +524,25 @@ fn swap(args: &Args) -> Result<()> {
 
     // Submit the first half, swap mid-stream, submit the rest — nothing
     // may be dropped or reordered.
+    let client = registry.client(model)?;
     let mut pending = Vec::with_capacity(n);
     for i in 0..n / 2 {
-        pending.push(registry.submit(model, Payload::Image(eval.image(i % eval.len())))?);
+        pending.push(client.submit(Payload::Image(eval.image(i % eval.len())))?);
     }
     registry.swap_plan(model, &new_cfg)?;
     println!("swapped to:   {}", registry.plan_label(model)?);
     for i in n / 2..n {
-        pending.push(registry.submit(model, Payload::Image(eval.image(i % eval.len())))?);
+        pending.push(client.submit(Payload::Image(eval.image(i % eval.len())))?);
     }
     let mut answered = 0usize;
-    for rx in pending {
-        let resp = rx.recv().context("response dropped during hot-swap")?;
-        if matches!(resp.output, Output::ClassId(k) if k != usize::MAX) {
+    for ticket in pending {
+        let resp = ticket.wait().context("response dropped during hot-swap")?;
+        if matches!(resp.output, Output::ClassId(_)) {
             answered += 1;
         }
     }
 
-    let snaps = registry.shutdown();
+    let snaps = registry.shutdown_and_drain();
     println!("{model}: {answered}/{n} answered | {}", snaps[model].summary());
     let changes = diff_plans(&old_cfg, &new_cfg);
     println!("plan delta ({} change(s)):", changes.len());
@@ -642,7 +666,8 @@ fn run() -> Result<()> {
                  calibrate [--model M] [--force] [--quick]\n  \
                  report    --all | --table N | --figure N | --area [--quick]\n  \
                  simulate  [--quick]\n  \
-                 serve     [--models a,b,c] [--backend engine|quantized|pjrt] [--requests N]\n  \
+                 serve     [--models a,b,c] [--backend engine|quantized|pjrt] [--requests N]\n            \
+                 [--admission block|reject|shed]\n  \
                  plans     list | show <model> [--version V] | diff <model> <v1> <v2>\n  \
                  swap      <model> [--thr-w T] [--requests N]\n  \
                  infer     [--model alexnet|resnet] [--index I]"

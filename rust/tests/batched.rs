@@ -27,15 +27,17 @@ fn batched_serving_matches_per_image_predictions() {
             batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(4) },
             workers: 2,
             queue_depth: 64,
+            ..CoordinatorConfig::default()
         },
     );
-    let rxs: Vec<_> =
+    let tickets: Vec<_> =
         (0..data.len()).map(|i| c.submit(Payload::Image(data.image(i))).unwrap()).collect();
-    for (i, rx) in rxs.into_iter().enumerate() {
-        assert_eq!(rx.recv().unwrap().output, Output::ClassId(want[i]), "request {i}");
+    for (i, t) in tickets.into_iter().enumerate() {
+        assert_eq!(t.wait().unwrap().output, Output::ClassId(want[i]), "request {i}");
     }
-    let snap = c.shutdown();
+    let snap = c.shutdown_and_drain();
     assert_eq!(snap.completed, 24);
+    assert_eq!(snap.failed_total(), 0);
 }
 
 #[test]
@@ -76,10 +78,10 @@ fn batched_resnet_serving_stays_consistent() {
         Arc::new(ResNetBackend::fp32(model, "resnet-fp32")),
         CoordinatorConfig::default(),
     );
-    let rxs: Vec<_> =
+    let tickets: Vec<_> =
         (0..data.len()).map(|i| c.submit(Payload::Image(data.image(i))).unwrap()).collect();
-    for (i, rx) in rxs.into_iter().enumerate() {
-        assert_eq!(rx.recv().unwrap().output, Output::ClassId(want[i]), "request {i}");
+    for (i, t) in tickets.into_iter().enumerate() {
+        assert_eq!(t.wait().unwrap().output, Output::ClassId(want[i]), "request {i}");
     }
-    c.shutdown();
+    c.shutdown_and_drain();
 }

@@ -76,18 +76,19 @@ fn int8_and_counting_backends_serve_through_coordinator() {
         Arc::new(AlexNetBackend::fp32(model, "fp32")),
         CoordinatorConfig::default(),
     );
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for i in 0..8 {
-        rxs.push(c.submit(Payload::Image(data.image(i))).unwrap());
+        tickets.push(c.submit(Payload::Image(data.image(i))).unwrap());
     }
-    for rx in rxs {
-        match rx.recv().unwrap().output {
+    for t in tickets {
+        match t.wait().unwrap().output {
             Output::ClassId(k) => assert!(k < 10),
             other => panic!("unexpected {other:?}"),
         }
     }
-    let snap = c.shutdown();
+    let snap = c.shutdown_and_drain();
     assert_eq!(snap.completed, 8);
+    assert_eq!(snap.failed_total(), 0);
 }
 
 #[test]

@@ -10,7 +10,8 @@
 //!   reorders a response.
 
 use dnateq::coordinator::{
-    AlexNetBackend, Backend, BatcherConfig, CoordinatorConfig, ModelRegistry, Output, Payload,
+    AlexNetBackend, BatcherConfig, CoordinatorConfig, Engine, Infallible, InfallibleEngine,
+    ModelRegistry, Output, Payload,
 };
 use dnateq::dataset::ImageDataset;
 use dnateq::dnateq::{
@@ -132,14 +133,16 @@ fn property_plan_artifact_roundtrip_is_bit_exact() {
 
 /// Echoes sequence payloads and records the order in which payloads hit
 /// the backend. With one worker per model, backend order == per-model
-/// submission order iff the queue + batcher preserve FIFO.
+/// submission order iff the queue + batcher preserve FIFO. Written
+/// against the legacy infallible shape and registered through the
+/// `Infallible` adapter, so the migration path is exercised end to end.
 struct RecordingBackend {
     tag: usize,
     log: Arc<Mutex<Vec<(usize, usize)>>>,
     delay_us: u64,
 }
 
-impl Backend for RecordingBackend {
+impl InfallibleEngine for RecordingBackend {
     fn infer(&self, batch: &[Payload]) -> Vec<Output> {
         if self.delay_us > 0 {
             std::thread::sleep(Duration::from_micros(self.delay_us));
@@ -181,26 +184,34 @@ fn property_routing_preserves_per_model_order_under_mixed_batches() {
                     batcher: BatcherConfig { max_batch, max_wait: Duration::from_micros(300) },
                     workers: 1,
                     queue_depth: 256,
+                    ..CoordinatorConfig::default()
                 };
-                registry.register(name, Arc::new(backend), cfg).map_err(|e| e.to_string())?;
+                registry
+                    .register(name, Arc::new(Infallible(backend)), cfg)
+                    .map_err(|e| e.to_string())?;
             }
-            // Interleave round-robin: request i goes to model i % n with
-            // per-model sequence number i / n.
-            let mut rxs = Vec::new();
+            // Interleave round-robin through per-model typed clients:
+            // request i goes to model i % n with per-model sequence
+            // number i / n.
+            let clients: Vec<_> = names
+                .iter()
+                .map(|name| registry.client(name).map_err(|e| e.to_string()))
+                .collect::<Result<_, _>>()?;
+            let mut tickets = Vec::new();
             for i in 0..n_requests {
-                let model = &names[i % n_models];
                 let seq = i / n_models;
-                let rx =
-                    registry.submit(model, Payload::Seq(vec![seq])).map_err(|e| e.to_string())?;
-                rxs.push((seq, rx));
+                let ticket = clients[i % n_models]
+                    .submit(Payload::Seq(vec![seq]))
+                    .map_err(|e| e.to_string())?;
+                tickets.push((seq, ticket));
             }
-            for (seq, rx) in rxs {
-                let resp = rx.recv().map_err(|e| e.to_string())?;
+            for (seq, ticket) in tickets {
+                let resp = ticket.wait().map_err(|e| e.to_string())?;
                 if resp.output != Output::Tokens(vec![seq]) {
                     return Err(format!("response mismatch: wanted {seq}, got {:?}", resp.output));
                 }
             }
-            registry.shutdown();
+            registry.shutdown_and_drain();
             // Per-model arrival order at the backend must be 0, 1, 2, …
             let log = log.lock().unwrap();
             for tag in 0..n_models {
@@ -241,6 +252,7 @@ fn hot_swap_under_concurrent_load_never_drops_a_response() {
                 batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(500) },
                 workers: 2,
                 queue_depth: 128,
+                ..CoordinatorConfig::default()
             },
         )
         .unwrap();
@@ -279,10 +291,11 @@ fn hot_swap_under_concurrent_load_never_drops_a_response() {
     assert_eq!(answered, clients * per_client, "responses dropped during hot-swap");
 
     let registry = Arc::try_unwrap(registry).ok().expect("sole owner");
-    let snaps = registry.shutdown();
+    let snaps = registry.shutdown_and_drain();
     let snap = &snaps["alexnet_mini"];
     assert_eq!(snap.completed as usize, clients * per_client);
     assert_eq!(snap.swaps, swaps as u64);
+    assert_eq!(snap.failed_total(), 0, "no request may fail during hot-swap");
 }
 
 // ---------------------------------------------------------------------
@@ -307,5 +320,5 @@ fn stored_plan_serves_identically_to_in_memory_plan() {
     let direct = AlexNetBackend::quantized(AlexNetMini::random(503), &cfg, "direct");
     let reloaded = AlexNetBackend::quantized(AlexNetMini::random(503), &stored, "reloaded");
     let batch: Vec<Payload> = (0..data.len()).map(|i| Payload::Image(data.image(i))).collect();
-    assert_eq!(direct.infer(&batch), reloaded.infer(&batch));
+    assert_eq!(direct.infer_batch(&batch), reloaded.infer_batch(&batch));
 }

@@ -1,0 +1,520 @@
+//! Integration tests for the typed serving API: `InferenceClient`
+//! tickets (wait / wait_timeout / cancel), per-request deadlines and
+//! priorities, admission policies, graceful drain, and the typed
+//! `ServeError` taxonomy.
+//!
+//! The acceptance property pinned at the bottom: cancellation,
+//! deadline expiry, queue rejection, and engine failure each surface as
+//! their own typed error while concurrent healthy traffic completes in
+//! FIFO order.
+
+use dnateq::coordinator::{
+    AdmissionPolicy, BatcherConfig, Capabilities, Coordinator, CoordinatorConfig, Deadline,
+    EchoEngine, Engine, InferError, Output, Payload, Priority, ServeError, SubmitOptions,
+    TranslatorBackend,
+};
+use dnateq::nn::{ExecPlan, TransformerMini};
+use dnateq::tensor::Tensor;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Echoes sequences after a per-batch delay, recording the first token
+/// of every sequence in engine-arrival order. Token `FAIL_TOKEN` fails
+/// that item; token `GATE_TOKEN` sleeps `gate_ms` (used to hold the
+/// worker while the queue fills).
+struct RecordingEngine {
+    log: Arc<Mutex<Vec<usize>>>,
+    delay_us: u64,
+    gate_ms: u64,
+}
+
+const FAIL_TOKEN: usize = 500;
+const GATE_TOKEN: usize = 999;
+
+impl Engine for RecordingEngine {
+    fn infer_batch(&self, batch: &[Payload]) -> Vec<Result<Output, InferError>> {
+        if batch.iter().any(|p| matches!(p, Payload::Seq(s) if s[0] == GATE_TOKEN)) {
+            std::thread::sleep(Duration::from_millis(self.gate_ms));
+        } else if self.delay_us > 0 {
+            std::thread::sleep(Duration::from_micros(self.delay_us));
+        }
+        batch
+            .iter()
+            .map(|p| match p {
+                Payload::Seq(s) => {
+                    self.log.lock().unwrap().push(s[0]);
+                    if s[0] == FAIL_TOKEN {
+                        Err(InferError::failed("magic fail token"))
+                    } else {
+                        Ok(Output::Tokens(s.clone()))
+                    }
+                }
+                Payload::Image(_) => Err(InferError::unsupported("sequences only")),
+            })
+            .collect()
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities { images: false, seqs: true, vocab: None, max_batch: None }
+    }
+
+    fn name(&self) -> &str {
+        "recording"
+    }
+}
+
+/// Engine that violates the batch contract: always returns zero
+/// results regardless of batch size.
+struct LengthBugEngine;
+
+impl Engine for LengthBugEngine {
+    fn infer_batch(&self, _batch: &[Payload]) -> Vec<Result<Output, InferError>> {
+        Vec::new()
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::all()
+    }
+
+    fn name(&self) -> &str {
+        "length-bug"
+    }
+}
+
+fn slow_single_worker(delay_us: u64) -> Coordinator {
+    Coordinator::start(
+        Arc::new(EchoEngine { delay_us }),
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(200) },
+            workers: 1,
+            queue_depth: 64,
+            admission: AdmissionPolicy::Block,
+        },
+    )
+}
+
+// ---------------------------------------------------------------------
+// Deadlines.
+// ---------------------------------------------------------------------
+
+#[test]
+fn deadline_already_expired_at_submit_is_rejected_synchronously() {
+    let c = Coordinator::start(Arc::new(EchoEngine { delay_us: 0 }), CoordinatorConfig::default());
+    let client = c.client();
+    let opts = SubmitOptions::default()
+        .with_deadline(Deadline::at(Instant::now() - Duration::from_millis(1)));
+    let err = client.submit_with(Payload::Seq(vec![1]), opts).unwrap_err();
+    assert_eq!(err, ServeError::DeadlineExceeded);
+    let snap = c.shutdown_and_drain();
+    assert_eq!(snap.expired, 1);
+    assert_eq!(snap.completed, 0);
+}
+
+#[test]
+fn deadline_expiring_in_queue_drops_the_request_at_batch_formation() {
+    let c = slow_single_worker(50_000); // 50 ms per request
+    let client = c.client();
+    // Occupy the single worker, then queue a request that can only
+    // expire while it waits.
+    let gate = client.submit(Payload::Seq(vec![7])).unwrap();
+    let doomed = client
+        .submit_with(
+            Payload::Seq(vec![8]),
+            SubmitOptions::default().with_deadline(Deadline::within(Duration::from_millis(5))),
+        )
+        .unwrap();
+    assert_eq!(doomed.wait().unwrap_err(), ServeError::DeadlineExceeded);
+    assert_eq!(gate.wait().unwrap().output, Output::Tokens(vec![7]));
+    let snap = c.shutdown_and_drain();
+    assert_eq!(snap.expired, 1);
+    assert_eq!(snap.completed, 1);
+}
+
+#[test]
+fn blocked_admission_gives_up_at_the_requests_deadline() {
+    // Depth-1 queue under Block policy, held full by a slow worker: a
+    // deadlined submission must stop blocking at its own deadline and
+    // fail typed, not park until space frees.
+    let c = Coordinator::start(
+        Arc::new(EchoEngine { delay_us: 100_000 }),
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(200) },
+            workers: 1,
+            queue_depth: 1,
+            admission: AdmissionPolicy::Block,
+        },
+    );
+    let client = c.client();
+    let gate = client.submit(Payload::Seq(vec![1])).unwrap();
+    let queued = client.submit(Payload::Seq(vec![2])).unwrap(); // fills depth 1
+    let t0 = Instant::now();
+    let err = client
+        .submit_with(
+            Payload::Seq(vec![3]),
+            SubmitOptions::default().with_deadline(Deadline::within(Duration::from_millis(20))),
+        )
+        .unwrap_err();
+    assert_eq!(err, ServeError::DeadlineExceeded);
+    assert!(
+        t0.elapsed() < Duration::from_millis(90),
+        "blocked {}ms — past the 20ms deadline",
+        t0.elapsed().as_millis()
+    );
+    gate.wait().unwrap();
+    queued.wait().unwrap();
+    let snap = c.shutdown_and_drain();
+    assert_eq!(snap.expired, 1);
+    assert_eq!(snap.completed, 2);
+}
+
+// ---------------------------------------------------------------------
+// Cancellation.
+// ---------------------------------------------------------------------
+
+#[test]
+fn cancel_between_enqueue_and_batch_formation_resolves_cancelled() {
+    let c = slow_single_worker(50_000);
+    let client = c.client();
+    let gate = client.submit(Payload::Seq(vec![1])).unwrap();
+    let victim = client.submit(Payload::Seq(vec![2])).unwrap();
+    victim.cancel();
+    assert_eq!(victim.wait().unwrap_err(), ServeError::Cancelled);
+    assert_eq!(gate.wait().unwrap().output, Output::Tokens(vec![1]));
+    let snap = c.shutdown_and_drain();
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(snap.completed, 1);
+}
+
+#[test]
+fn wait_timeout_reports_pending_then_delivers() {
+    let c = slow_single_worker(30_000);
+    let ticket = c.submit(Payload::Seq(vec![3])).unwrap();
+    // Still inside the ~30 ms inference: the first short wait times out
+    // without consuming the result.
+    assert!(ticket.wait_timeout(Duration::from_millis(1)).is_none());
+    let resolved = ticket
+        .wait_timeout(Duration::from_secs(10))
+        .expect("request must resolve well within 10 s");
+    assert_eq!(resolved.unwrap().output, Output::Tokens(vec![3]));
+    c.shutdown_and_drain();
+}
+
+// ---------------------------------------------------------------------
+// Admission policies.
+// ---------------------------------------------------------------------
+
+#[test]
+fn reject_policy_surfaces_queue_full_to_the_submitter() {
+    let c = Coordinator::start(
+        Arc::new(EchoEngine { delay_us: 50_000 }),
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(200) },
+            workers: 1,
+            queue_depth: 1,
+            admission: AdmissionPolicy::Reject,
+        },
+    );
+    let client = c.client();
+    let mut ok = 0usize;
+    let mut rejected = 0usize;
+    let mut tickets = Vec::new();
+    for i in 0..3 {
+        match client.submit(Payload::Seq(vec![i])) {
+            Ok(t) => {
+                ok += 1;
+                tickets.push(t);
+            }
+            Err(e) => {
+                assert_eq!(e, ServeError::QueueFull);
+                rejected += 1;
+            }
+        }
+    }
+    assert!(ok >= 1, "some traffic must be admitted");
+    assert!(rejected >= 1, "a depth-1 queue must reject a 3-burst");
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let snap = c.shutdown_and_drain();
+    assert_eq!(snap.completed as usize, ok);
+    assert_eq!(snap.rejected as usize, rejected);
+}
+
+#[test]
+fn shed_oldest_under_full_queue_resolves_shed_tickets_with_queue_full() {
+    let c = Coordinator::start(
+        Arc::new(EchoEngine { delay_us: 50_000 }),
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(200) },
+            workers: 1,
+            queue_depth: 2,
+            admission: AdmissionPolicy::ShedOldest,
+        },
+    );
+    let client = c.client();
+    // Every submission is admitted (shedding makes room), so a 6-burst
+    // against a depth-2 queue must shed at least one older request.
+    let tickets: Vec<_> =
+        (0..6).map(|i| client.submit(Payload::Seq(vec![i])).unwrap()).collect();
+    let mut completed = 0u64;
+    let mut shed = 0u64;
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => completed += 1,
+            Err(ServeError::QueueFull) => shed += 1,
+            Err(other) => panic!("unexpected error under shed: {other:?}"),
+        }
+    }
+    assert_eq!(completed + shed, 6);
+    assert!(shed >= 1, "a 6-burst against depth 2 must shed");
+    let snap = c.shutdown_and_drain();
+    assert_eq!(snap.completed, completed);
+    assert_eq!(snap.shed, shed);
+}
+
+// ---------------------------------------------------------------------
+// Payload validation at submission.
+// ---------------------------------------------------------------------
+
+#[test]
+fn wrong_payloads_are_rejected_before_reaching_an_engine() {
+    // Echo accepts both kinds, so shape/content validation still runs.
+    let c = Coordinator::start(Arc::new(EchoEngine { delay_us: 0 }), CoordinatorConfig::default());
+    let client = c.client();
+    let bad_shape = client.submit(Payload::Image(Tensor::zeros(&[1, 16, 16]))).unwrap_err();
+    assert!(matches!(bad_shape, ServeError::WrongPayload(ref w) if w.contains("[3, 32, 32]")));
+    let empty_seq = client.submit(Payload::Seq(vec![])).unwrap_err();
+    assert!(matches!(empty_seq, ServeError::WrongPayload(_)));
+    let snap = c.shutdown_and_drain();
+    assert_eq!(snap.rejected, 2);
+    assert_eq!(snap.completed, 0);
+
+    // The translator additionally bounds token ids by its vocab.
+    let t = Coordinator::start(
+        Arc::new(TranslatorBackend {
+            model: TransformerMini::random(77),
+            plan: ExecPlan::fp32(),
+            max_len: 4,
+        }),
+        CoordinatorConfig::default(),
+    );
+    let client = t.client();
+    let image = client.submit(Payload::Image(Tensor::zeros(&[3, 32, 32]))).unwrap_err();
+    assert!(matches!(image, ServeError::WrongPayload(_)));
+    let oov = client.submit(Payload::Seq(vec![4, 1_000])).unwrap_err();
+    assert!(matches!(oov, ServeError::WrongPayload(ref w) if w.contains("1000")));
+    let ok = client.infer(Payload::Seq(vec![4, 5, 6])).unwrap();
+    assert!(matches!(ok.output, Output::Tokens(_)));
+    let snap = t.shutdown_and_drain();
+    assert_eq!(snap.rejected, 2);
+    assert_eq!(snap.completed, 1);
+}
+
+// ---------------------------------------------------------------------
+// Engine failures.
+// ---------------------------------------------------------------------
+
+#[test]
+fn batch_length_mismatch_fails_every_request_with_engine_failure() {
+    let c = Coordinator::start(Arc::new(LengthBugEngine), CoordinatorConfig::default());
+    let client = c.client();
+    let tickets: Vec<_> =
+        (0..3).map(|i| client.submit(Payload::Seq(vec![i])).unwrap()).collect();
+    for t in tickets {
+        let err = t.wait().unwrap_err();
+        assert!(
+            matches!(err, ServeError::EngineFailure(ref w) if w.contains("0 results")),
+            "{err:?}"
+        );
+    }
+    let snap = c.shutdown_and_drain();
+    assert_eq!(snap.engine_failures, 3);
+    assert_eq!(snap.completed, 0);
+}
+
+#[test]
+fn per_item_engine_failure_leaves_the_rest_of_the_batch_healthy() {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let c = Coordinator::start(
+        Arc::new(RecordingEngine { log, delay_us: 0, gate_ms: 0 }),
+        CoordinatorConfig::default(),
+    );
+    let client = c.client();
+    let good1 = client.submit(Payload::Seq(vec![1])).unwrap();
+    let bad = client.submit(Payload::Seq(vec![FAIL_TOKEN])).unwrap();
+    let good2 = client.submit(Payload::Seq(vec![2])).unwrap();
+    assert_eq!(good1.wait().unwrap().output, Output::Tokens(vec![1]));
+    assert!(matches!(bad.wait().unwrap_err(), ServeError::EngineFailure(_)));
+    assert_eq!(good2.wait().unwrap().output, Output::Tokens(vec![2]));
+    let snap = c.shutdown_and_drain();
+    assert_eq!(snap.engine_failures, 1);
+    assert_eq!(snap.completed, 2);
+}
+
+// ---------------------------------------------------------------------
+// Graceful drain.
+// ---------------------------------------------------------------------
+
+#[test]
+fn drain_with_in_flight_batches_resolves_every_outstanding_ticket() {
+    let c = Coordinator::start(
+        Arc::new(EchoEngine { delay_us: 10_000 }),
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 2, max_wait: Duration::from_micros(500) },
+            workers: 2,
+            queue_depth: 64,
+            admission: AdmissionPolicy::Block,
+        },
+    );
+    let client = c.client();
+    let tickets: Vec<_> =
+        (0..8).map(|i| client.submit(Payload::Seq(vec![i])).unwrap()).collect();
+    // Wait from another thread while the main thread drains.
+    let waiter = std::thread::spawn(move || {
+        tickets
+            .into_iter()
+            .map(|t| t.wait().expect("drain must complete in-flight requests"))
+            .count()
+    });
+    let snap = c.shutdown_and_drain();
+    assert_eq!(waiter.join().unwrap(), 8);
+    assert_eq!(snap.completed, 8);
+    assert_eq!(snap.failed_total(), 0);
+    // And the surviving client handle now gets the typed shutdown error.
+    assert_eq!(
+        client.submit(Payload::Seq(vec![9])).unwrap_err(),
+        ServeError::ShuttingDown
+    );
+}
+
+// ---------------------------------------------------------------------
+// Priorities.
+// ---------------------------------------------------------------------
+
+#[test]
+fn high_priority_requests_overtake_queued_normal_traffic() {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let c = Coordinator::start(
+        Arc::new(RecordingEngine { log: Arc::clone(&log), delay_us: 1_000, gate_ms: 60 }),
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(200) },
+            workers: 1,
+            queue_depth: 64,
+            admission: AdmissionPolicy::Block,
+        },
+    );
+    let client = c.client();
+    let gate = client.submit(Payload::Seq(vec![GATE_TOKEN])).unwrap();
+    std::thread::sleep(Duration::from_millis(10)); // gate batch formed
+    let mut tickets = Vec::new();
+    for i in 0..3 {
+        tickets.push(client.submit(Payload::Seq(vec![i])).unwrap());
+    }
+    tickets.push(
+        client
+            .submit_with(
+                Payload::Seq(vec![42]),
+                SubmitOptions::default().with_priority(Priority::High),
+            )
+            .unwrap(),
+    );
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    gate.wait().unwrap();
+    c.shutdown_and_drain();
+    let order = log.lock().unwrap().clone();
+    assert_eq!(order, vec![GATE_TOKEN, 42, 0, 1, 2], "high priority must run first");
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: every failure mode typed, healthy traffic FIFO.
+// ---------------------------------------------------------------------
+
+#[test]
+fn typed_errors_surface_while_concurrent_healthy_traffic_stays_fifo() {
+    const HEALTHY: usize = 24;
+    const CANCEL_TOKEN: usize = 100;
+    const EXPIRE_TOKEN: usize = 101;
+    const EXTRA_A: usize = 200;
+    const EXTRA_B: usize = 201;
+    // Depth sized so the queue holds the healthy burst + the three
+    // error-case requests + one extra, and the next submission after
+    // that must be rejected.
+    let depth = HEALTHY + 3 + 1;
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let c = Coordinator::start(
+        Arc::new(RecordingEngine { log: Arc::clone(&log), delay_us: 500, gate_ms: 120 }),
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(500) },
+            workers: 1,
+            queue_depth: depth,
+            admission: AdmissionPolicy::Reject,
+        },
+    );
+    let client = c.client();
+
+    // Hold the single worker inside a long batch so everything below
+    // queues up behind it.
+    let gate = client.submit(Payload::Seq(vec![GATE_TOKEN])).unwrap();
+    std::thread::sleep(Duration::from_millis(15)); // gate batch formed
+
+    let mut healthy = Vec::new();
+    for i in 0..HEALTHY / 2 {
+        healthy.push((i, client.submit(Payload::Seq(vec![i])).unwrap()));
+    }
+    let cancelled = client.submit(Payload::Seq(vec![CANCEL_TOKEN])).unwrap();
+    cancelled.cancel();
+    let expired = client
+        .submit_with(
+            Payload::Seq(vec![EXPIRE_TOKEN]),
+            SubmitOptions::default().with_deadline(Deadline::within(Duration::from_millis(5))),
+        )
+        .unwrap();
+    let failing = client.submit(Payload::Seq(vec![FAIL_TOKEN])).unwrap();
+    for i in HEALTHY / 2..HEALTHY {
+        healthy.push((i, client.submit(Payload::Seq(vec![i])).unwrap()));
+    }
+    // Queue now holds HEALTHY + 3 requests; one more fits, the next is
+    // rejected by admission.
+    let extra_a = client.submit(Payload::Seq(vec![EXTRA_A]));
+    let extra_b = client.submit(Payload::Seq(vec![EXTRA_B]));
+    let rejections = [&extra_a, &extra_b]
+        .iter()
+        .filter(|r| matches!(r, Err(ServeError::QueueFull)))
+        .count();
+    assert_eq!(rejections, 1, "exactly one extra must overflow the sized queue");
+
+    // Each failure mode surfaces as its own typed error…
+    assert_eq!(cancelled.wait().unwrap_err(), ServeError::Cancelled);
+    assert_eq!(expired.wait().unwrap_err(), ServeError::DeadlineExceeded);
+    assert!(matches!(failing.wait().unwrap_err(), ServeError::EngineFailure(_)));
+    // …while every healthy request completes with its own payload.
+    for (i, t) in healthy {
+        assert_eq!(t.wait().unwrap().output, Output::Tokens(vec![i]), "healthy {i}");
+    }
+    gate.wait().unwrap();
+    for extra in [extra_a, extra_b] {
+        if let Ok(t) = extra {
+            t.wait().unwrap();
+        }
+    }
+
+    let snap = c.shutdown_and_drain();
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(snap.expired, 1);
+    assert_eq!(snap.engine_failures, 1);
+    assert_eq!(snap.rejected, 1);
+    assert_eq!(snap.completed as usize, HEALTHY + 2); // gate + one extra
+    assert_eq!(snap.dropped_sends, 0);
+
+    // FIFO: the healthy tokens must reach the engine in submission
+    // order (cancelled/expired never appear — they were dropped at
+    // batch formation).
+    let order = log.lock().unwrap().clone();
+    let healthy_order: Vec<usize> =
+        order.iter().copied().filter(|&t| t < HEALTHY).collect();
+    assert_eq!(healthy_order, (0..HEALTHY).collect::<Vec<_>>(), "FIFO broken: {order:?}");
+    assert!(!order.contains(&CANCEL_TOKEN), "cancelled request reached the engine");
+    assert!(!order.contains(&EXPIRE_TOKEN), "expired request reached the engine");
+}
