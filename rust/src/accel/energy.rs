@@ -9,6 +9,14 @@
 //! substitution preserves their shape (DESIGN.md §Substitutions).
 
 use super::config::Scheme;
+use crate::dnateq::config::{QuantConfig, Scheme as PlanScheme};
+
+/// Taps per output neuron assumed when amortizing the exponential
+/// scheme's per-neuron post-processing (§VI-D) into a per-element cost.
+/// 256 is a mid-size convolution window (3×3×~28 channels); the planner
+/// only needs relative per-scheme ordering, which is stable across the
+/// plausible 64–1024 range.
+const NOMINAL_TAPS: f64 = 256.0;
 
 /// Per-event energy constants in picojoules.
 #[derive(Clone, Copy, Debug)]
@@ -96,6 +104,56 @@ impl EnergyModel {
             Scheme::DnaTeq => self.static_dnateq_w,
         }
     }
+
+    /// Energy of one INT-`n` multiply-accumulate. Scaled from the INT8
+    /// MAC: the multiplier array shrinks quadratically with operand
+    /// width, while operand registers, accumulator and clocking are a
+    /// fixed overhead (~35% at 8 bits, Horowitz-style breakdown). The
+    /// fixed term keeps narrow uniform MACs *more* expensive than the
+    /// counting step at matching width — the paper's motivation for the
+    /// exponential scheme at 3–5 bits.
+    pub fn uniform_mac_pj(&self, n_bits: u8) -> f64 {
+        let w = n_bits as f64 / 8.0;
+        self.mac_int8_pj * (0.35 + 0.65 * w * w)
+    }
+
+    /// Per-weight-element energy of a planner scheme at bitwidth `n`
+    /// (the quantity the Pareto-front search trades against RMAE).
+    ///
+    /// * `Exp` — one counting step plus the per-neuron post-processing
+    ///   of Eq. 8 amortized over [`NOMINAL_TAPS`] contributions. This
+    ///   reproduces §VI-D's shape: cheaper than INT8 at 3–5 bits,
+    ///   costlier at 7.
+    /// * `Uniform` — one INT-`n` MAC.
+    /// * `Pwl` — an INT MAC at the level-field width (region bits carry
+    ///   no arithmetic) plus a region-select add.
+    pub fn plan_element_pj(&self, scheme: PlanScheme, n_bits: u8) -> f64 {
+        match scheme {
+            PlanScheme::Exp => {
+                self.counting_step_pj(n_bits)
+                    + self.post_process_pj(n_bits, NOMINAL_TAPS) / NOMINAL_TAPS
+            }
+            PlanScheme::Uniform => self.uniform_mac_pj(n_bits),
+            PlanScheme::Pwl { breaks } => {
+                let regions = breaks as u32 + 1;
+                let region_bits = (u32::BITS - (regions - 1).leading_zeros()).min(7) as u8;
+                let level_bits = n_bits.saturating_sub(region_bits).max(2);
+                self.uniform_mac_pj(level_bits) + self.exp_add_pj
+            }
+        }
+    }
+
+    /// Total model compute energy (J) of a quantization plan: every
+    /// weight element costs one `plan_element_pj` event per inference.
+    /// Absolute joules are nominal; the planner and the front index only
+    /// rely on the relative ordering across front points.
+    pub fn config_energy_j(&self, cfg: &QuantConfig) -> f64 {
+        cfg.layers
+            .iter()
+            .map(|l| l.weights.elems as f64 * self.plan_element_pj(l.scheme, l.n_bits))
+            .sum::<f64>()
+            * 1e-12
+    }
 }
 
 /// Logic-die area accounting (mm², 32 nm) — §VI-D reports these totals;
@@ -139,6 +197,28 @@ impl AreaModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dnateq::config::{LayerKind, LayerQuant, TensorQuant};
+
+    fn mk_cfg(scheme: PlanScheme, n_bits: u8, elems: usize) -> QuantConfig {
+        let tq = |elems| TensorQuant { alpha: 1.0, beta: 0.0, rmae: 0.01, elems };
+        QuantConfig {
+            model: "m".into(),
+            thr_w: 5.0,
+            layers: vec![LayerQuant {
+                name: "l0".into(),
+                kind: LayerKind::Conv,
+                scheme,
+                n_bits,
+                base: 0.0,
+                weights: tq(elems),
+                acts: tq(elems),
+                seeded_by_weights: true,
+                rss_w: 0.0,
+                rss_a: 0.0,
+                converged: true,
+            }],
+        }
+    }
 
     #[test]
     fn counting_cheaper_than_mac_at_all_bitwidths() {
@@ -187,5 +267,52 @@ mod tests {
     fn dnateq_static_power_below_baseline() {
         let e = EnergyModel::default();
         assert!(e.static_w(Scheme::DnaTeq) < e.static_w(Scheme::Int8));
+    }
+
+    #[test]
+    fn uniform_mac_energy_is_monotonic_and_anchored_at_int8() {
+        let e = EnergyModel::default();
+        let mut prev = 0.0;
+        for n in 2..=8u8 {
+            let c = e.uniform_mac_pj(n);
+            assert!(c > prev, "n={n}");
+            prev = c;
+        }
+        assert!((e.uniform_mac_pj(8) - e.mac_int8_pj).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exp_scheme_cheap_at_narrow_widths_costly_at_seven() {
+        // §VI-D in plan-cost form: the exponential pipeline undercuts a
+        // same-width uniform MAC at 3–5 bits but overshoots INT8 at 7.
+        let e = EnergyModel::default();
+        for n in 3..=5u8 {
+            let exp = e.plan_element_pj(PlanScheme::Exp, n);
+            let uni = e.plan_element_pj(PlanScheme::Uniform, n);
+            assert!(exp < uni, "n={n}: exp {exp} vs uniform {uni}");
+        }
+        assert!(e.plan_element_pj(PlanScheme::Exp, 7) > e.mac_int8_pj);
+    }
+
+    #[test]
+    fn pwl_undercuts_uniform_at_matching_width() {
+        let e = EnergyModel::default();
+        for n in 4..=8u8 {
+            let pwl = e.plan_element_pj(PlanScheme::Pwl { breaks: 1 }, n);
+            let uni = e.plan_element_pj(PlanScheme::Uniform, n);
+            assert!(pwl > 0.0 && pwl < uni, "n={n}: pwl {pwl} vs uniform {uni}");
+        }
+    }
+
+    #[test]
+    fn config_energy_scales_with_elems_and_orders_by_cost() {
+        let e = EnergyModel::default();
+        let small = e.config_energy_j(&mk_cfg(PlanScheme::Exp, 4, 1_000));
+        let big = e.config_energy_j(&mk_cfg(PlanScheme::Exp, 4, 2_000));
+        assert!(small > 0.0);
+        assert!((big - 2.0 * small).abs() < 1e-15 * big.max(1.0));
+        let cheap = e.config_energy_j(&mk_cfg(PlanScheme::Exp, 3, 1_000));
+        let dear = e.config_energy_j(&mk_cfg(PlanScheme::Uniform, 8, 1_000));
+        assert!(cheap < dear);
     }
 }

@@ -182,10 +182,11 @@ mod tests {
 
     #[test]
     fn assign_bits_transplants_by_position() {
-        use crate::dnateq::{LayerKind, LayerQuant, TensorQuant};
+        use crate::dnateq::{LayerKind, LayerQuant, Scheme, TensorQuant};
         let mk = |n: u8| LayerQuant {
             name: format!("l{n}"),
             kind: LayerKind::Fc,
+            scheme: Scheme::Exp,
             n_bits: n,
             base: 1.2,
             weights: TensorQuant { alpha: 1.0, beta: 0.0, rmae: 0.0, elems: 1 },

@@ -83,8 +83,10 @@ impl<M: ImageModel + 'static> ClassifierBackend<M> {
     }
 
     pub fn quantized(model: M, cfg: &QuantConfig, label: &str) -> Self {
-        let slot =
-            PlanSlot { plan: Arc::new(ExecPlan::exp(&model, cfg)), label: plan_label_of(cfg) };
+        let slot = PlanSlot {
+            plan: Arc::new(ExecPlan::for_config(&model, cfg)),
+            label: plan_label_of(cfg),
+        };
         Self { model, plan: RwLock::new(slot), label: label.to_string() }
     }
 
@@ -95,7 +97,12 @@ impl<M: ImageModel + 'static> ClassifierBackend<M> {
 }
 
 fn plan_label_of(cfg: &QuantConfig) -> String {
-    format!("dnateq thr_w={:.2}% ({})", cfg.thr_w * 100.0, cfg.checksum_hex())
+    format!(
+        "dnateq thr_w={:.2}% [{}] ({})",
+        cfg.thr_w * 100.0,
+        cfg.scheme_names().join("+"),
+        cfg.checksum_hex()
+    )
 }
 
 impl<M: ImageModel + 'static> Engine for ClassifierBackend<M> {
@@ -126,9 +133,11 @@ impl<M: ImageModel + 'static> SwappableEngine for ClassifierBackend<M> {
     fn swap_plan(&self, cfg: &QuantConfig) -> anyhow::Result<()> {
         cfg.validate()?;
         // Build the new plan outside the lock (it round-trips every
-        // weight tensor), then publish plan + label in one store.
+        // weight tensor), then publish plan + label in one store. The
+        // per-layer scheme dispatch means a swap can move a layer
+        // between exp/uniform/pwl, not just change its parameters.
         let slot = PlanSlot {
-            plan: Arc::new(ExecPlan::exp(&self.model, cfg)),
+            plan: Arc::new(ExecPlan::for_config(&self.model, cfg)),
             label: plan_label_of(cfg),
         };
         *self.plan.write().unwrap() = slot;

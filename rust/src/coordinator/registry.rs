@@ -23,7 +23,7 @@ use super::metrics::MetricsSnapshot;
 use super::request::{Payload, Response};
 use super::server::{Coordinator, CoordinatorConfig};
 use super::Ticket;
-use crate::dnateq::QuantConfig;
+use crate::dnateq::{PlanPolicy, PlanStore, QuantConfig};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
@@ -161,6 +161,29 @@ impl ModelRegistry {
         }
     }
 
+    /// Resolve an SLA [`PlanPolicy`] against `model`'s stored Pareto
+    /// front and hot-swap the winning plan version in. Returns the
+    /// chosen version and its (checksum-verified) config, so callers
+    /// can log which front point is now serving.
+    pub fn apply_policy(
+        &self,
+        model: &str,
+        store: &PlanStore,
+        policy: PlanPolicy,
+    ) -> Result<(u32, QuantConfig)> {
+        let front = match store.load_front(model)? {
+            Some(f) => f,
+            None => bail!("model `{model}` has no plan front; run `plans build {model}` first"),
+        };
+        let point = match front.select(policy) {
+            Some(p) => p,
+            None => bail!("plan front for `{model}` is empty"),
+        };
+        let cfg = store.load(model, point.version)?;
+        self.swap_plan(model, &cfg)?;
+        Ok((point.version, cfg))
+    }
+
     /// Live metrics of one model.
     pub fn metrics(&self, model: &str) -> Result<MetricsSnapshot> {
         Ok(self.entry(model)?.coordinator.metrics())
@@ -257,6 +280,17 @@ mod tests {
         let err = reg.swap_plan("m", &cfg).unwrap_err().to_string();
         assert!(err.contains("hot-swap"), "err: {err}");
         assert!(reg.plan_label("m").is_err());
+        reg.shutdown_and_drain();
+    }
+
+    #[test]
+    fn apply_policy_requires_a_stored_front() {
+        use crate::util::TempDir;
+        let reg = reg_with_echo(&["m"]);
+        let dir = TempDir::new().unwrap();
+        let store = PlanStore::new(dir.path());
+        let err = reg.apply_policy("m", &store, PlanPolicy::MinBits).unwrap_err().to_string();
+        assert!(err.contains("no plan front"), "err: {err}");
         reg.shutdown_and_drain();
     }
 

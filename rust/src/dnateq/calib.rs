@@ -8,7 +8,7 @@
 //! stays under the budget — reproducing both Table V and the Fig. 11
 //! sensitivity sweep.
 
-use super::config::{LayerKind, LayerQuant, QuantConfig, TensorQuant};
+use super::config::{LayerKind, LayerQuant, QuantConfig, Scheme, TensorQuant};
 use super::search::{activation_threshold, search_layer, SearchOptions};
 use crate::tensor::Tensor;
 use crate::util::parallel_map;
@@ -77,6 +77,7 @@ pub fn config_for_threshold(
         LayerQuant {
             name: lt.name.clone(),
             kind: lt.kind,
+            scheme: Scheme::Exp,
             n_bits: res.n_bits,
             base: res.base,
             weights: TensorQuant {

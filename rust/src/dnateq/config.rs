@@ -20,7 +20,12 @@ use std::path::Path;
 
 /// Version of the on-disk plan-artifact schema. Bump when the envelope or
 /// body layout changes; loaders reject artifacts from a newer schema.
-pub const PLAN_SCHEMA_VERSION: u64 = 1;
+///
+/// v1 → v2: layers gained a `scheme` field (`exp` / `uniform` / `pwl<k>`).
+/// The field is omitted from the encoding when it is `exp`, so an all-exp
+/// v2 body is byte-identical to its v1 form and v1 checksums still verify;
+/// loaders default a missing `scheme` to [`Scheme::Exp`].
+pub const PLAN_SCHEMA_VERSION: u64 = 2;
 
 /// Layer operator kind (the paper quantizes CONV and FC layers).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,6 +48,58 @@ impl LayerKind {
             "FC" => LayerKind::Fc,
             other => bail!("unknown layer kind `{other}`"),
         })
+    }
+}
+
+/// Quantization scheme for one layer: the paper's exponential codes, a
+/// plain uniform grid, or a piecewise-linear grid (PWLQ-style) for
+/// outlier-heavy distributions. Carried by [`LayerQuant`] so a single
+/// plan can mix schemes per layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// DNA-TEQ exponential codes `sign(x)·(α·bⁱ + β)`.
+    Exp,
+    /// Symmetric uniform grid (Δ per level).
+    Uniform,
+    /// Piecewise-linear: `breaks` interior breakpoints split `|x|` into
+    /// regions, each with its own uniform grid.
+    Pwl { breaks: u8 },
+}
+
+impl Scheme {
+    pub fn name(&self) -> String {
+        match self {
+            Scheme::Exp => "exp".to_string(),
+            Scheme::Uniform => "uniform".to_string(),
+            Scheme::Pwl { breaks } => format!("pwl{breaks}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "exp" => Scheme::Exp,
+            "uniform" => Scheme::Uniform,
+            "pwl" => Scheme::Pwl { breaks: 1 },
+            other => match other.strip_prefix("pwl").and_then(|k| k.parse::<u8>().ok()) {
+                Some(breaks) if breaks >= 1 => Scheme::Pwl { breaks },
+                _ => bail!("unknown scheme `{other}`"),
+            },
+        })
+    }
+
+    /// Inclusive bit-width range this scheme supports. Exp is capped at 7
+    /// by the counting-GEMM datapath; uniform/pwl extend to 8. Pwl needs
+    /// enough bits for sign + region index + at least one level bit.
+    pub fn bit_range(&self) -> (u8, u8) {
+        match self {
+            Scheme::Exp => (2, 7),
+            Scheme::Uniform => (2, 8),
+            Scheme::Pwl { breaks } => {
+                let regions = *breaks as u32 + 1;
+                let region_bits = 32 - (regions - 1).leading_zeros().min(31);
+                ((region_bits as u8 + 2).max(2), 8)
+            }
+        }
     }
 }
 
@@ -82,9 +139,12 @@ impl TensorQuant {
 pub struct LayerQuant {
     pub name: String,
     pub kind: LayerKind,
-    /// Exponent bitwidth `n` (shared by both tensors).
+    /// Quantization scheme this layer uses (per-layer adaptive).
+    pub scheme: Scheme,
+    /// Code bitwidth `n` (shared by both tensors).
     pub n_bits: u8,
-    /// Exponential base `b` (shared by both tensors).
+    /// Exponential base `b` (shared by both tensors; 0.0 for non-exp
+    /// schemes, which have no base).
     pub base: f64,
     pub weights: TensorQuant,
     pub acts: TensorQuant,
@@ -120,8 +180,13 @@ impl LayerQuant {
         o.set("name", self.name.as_str())
             .set("kind", self.kind.name())
             .set("n_bits", self.n_bits)
-            .set("base", self.base)
-            .set("weights", self.weights.to_json())
+            .set("base", self.base);
+        // `scheme` is omitted for Exp so all-exp bodies stay byte-identical
+        // to schema-v1 encodings (their checksums keep verifying).
+        if self.scheme != Scheme::Exp {
+            o.set("scheme", self.scheme.name());
+        }
+        o.set("weights", self.weights.to_json())
             .set("acts", self.acts.to_json())
             .set("seeded_by_weights", self.seeded_by_weights)
             .set("rss_w", self.rss_w)
@@ -131,9 +196,15 @@ impl LayerQuant {
     }
 
     fn from_json(j: &Json) -> Result<Self> {
+        // Schema-v1 bodies have no `scheme` key; they are all-exponential.
+        let scheme = match j.get("scheme") {
+            Some(s) => Scheme::parse(s.as_str()?)?,
+            None => Scheme::Exp,
+        };
         Ok(Self {
             name: j.req("name")?.as_str()?.to_string(),
             kind: LayerKind::parse(j.req("kind")?.as_str()?)?,
+            scheme,
             n_bits: j.req("n_bits")?.as_usize()? as u8,
             base: j.req("base")?.as_f64()?,
             weights: TensorQuant::from_json(j.req("weights")?)?,
@@ -190,17 +261,33 @@ impl QuantConfig {
     }
 
     /// Histogram of layers per bitwidth (drives accelerator power-gating
-    /// and the 7-bit overhead discussion, §VI-D).
+    /// and the 7-bit overhead discussion, §VI-D). Bit-widths beyond the
+    /// INT8 ceiling saturate into the top bucket rather than being
+    /// dropped, so the bucket sum always equals the layer count.
     pub fn bitwidth_histogram(&self) -> [usize; 9] {
         let mut h = [0usize; 9];
+        let top = h.len() - 1;
         for l in &self.layers {
-            h[(l.n_bits as usize).min(8)] += 1;
+            h[(l.n_bits as usize).min(top)] += 1;
         }
         h
     }
 
     pub fn layer(&self, name: &str) -> Option<&LayerQuant> {
         self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Distinct scheme names used by this plan, in first-appearance order
+    /// (e.g. `["exp", "uniform"]`). Drives front-index summaries.
+    pub fn scheme_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        for l in &self.layers {
+            let n = l.scheme.name();
+            if !names.contains(&n) {
+                names.push(n);
+            }
+        }
+        names
     }
 
     pub fn to_json(&self) -> Json {
@@ -233,12 +320,39 @@ impl QuantConfig {
             bail!("thr_w {} must be finite and positive", self.thr_w);
         }
         for l in &self.layers {
-            l.w_params()
-                .validate()
-                .with_context(|| format!("layer `{}` weight params", l.name))?;
-            l.a_params()
-                .validate()
-                .with_context(|| format!("layer `{}` activation params", l.name))?;
+            match l.scheme {
+                Scheme::Exp => {
+                    l.w_params()
+                        .validate()
+                        .with_context(|| format!("layer `{}` weight params", l.name))?;
+                    l.a_params()
+                        .validate()
+                        .with_context(|| format!("layer `{}` activation params", l.name))?;
+                }
+                Scheme::Uniform | Scheme::Pwl { .. } => {
+                    let (lo, hi) = l.scheme.bit_range();
+                    if !(lo..=hi).contains(&l.n_bits) {
+                        bail!(
+                            "layer `{}`: scheme {} requires {lo}..={hi} bits, got {}",
+                            l.name,
+                            l.scheme.name(),
+                            l.n_bits
+                        );
+                    }
+                    for (which, t) in [("weight", &l.weights), ("activation", &l.acts)] {
+                        if !t.alpha.is_finite() || t.alpha <= 0.0 {
+                            bail!(
+                                "layer `{}` {which} step {} must be finite and positive",
+                                l.name,
+                                t.alpha
+                            );
+                        }
+                        if !t.beta.is_finite() {
+                            bail!("layer `{}` {which} offset {} must be finite", l.name, t.beta);
+                        }
+                    }
+                }
+            }
         }
         Ok(())
     }
@@ -317,6 +431,7 @@ mod tests {
         LayerQuant {
             name: name.into(),
             kind: LayerKind::Fc,
+            scheme: Scheme::Exp,
             n_bits: n,
             base: 1.3,
             weights: TensorQuant { alpha: 1.0, beta: 0.0, rmae: 0.01, elems },
@@ -382,6 +497,78 @@ mod tests {
         let h = cfg.bitwidth_histogram();
         assert_eq!(h[3], 2);
         assert_eq!(h[7], 1);
+    }
+
+    #[test]
+    fn bitwidth_histogram_saturates_above_eight() {
+        // Bit-widths past the INT8 ceiling must land in the top bucket,
+        // not be dropped (or panic). Built directly: histogram does not
+        // validate, so out-of-range widths can reach it.
+        let cfg = QuantConfig {
+            model: "m".into(),
+            thr_w: 0.01,
+            layers: vec![mk_layer("a", 9, 10), mk_layer("b", 12, 10), mk_layer("c", 8, 10)],
+        };
+        let h = cfg.bitwidth_histogram();
+        assert_eq!(h[8], 3);
+        assert_eq!(h.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn scheme_parse_roundtrips() {
+        let all =
+            [Scheme::Exp, Scheme::Uniform, Scheme::Pwl { breaks: 1 }, Scheme::Pwl { breaks: 3 }];
+        for s in all {
+            assert_eq!(Scheme::parse(&s.name()).unwrap(), s);
+        }
+        assert_eq!(Scheme::parse("pwl").unwrap(), Scheme::Pwl { breaks: 1 });
+        assert!(Scheme::parse("float4").is_err());
+        assert!(Scheme::parse("pwl0").is_err());
+    }
+
+    #[test]
+    fn v1_artifact_loads_with_exp_default() {
+        // An all-exp plan encodes without any `scheme` key, so its body —
+        // and therefore its checksum — is byte-identical to the schema-v1
+        // form. Stamping the envelope `schema_version: 1` reconstructs a
+        // true legacy artifact; it must load, defaulting every layer to
+        // `Scheme::Exp` with the checksum verifying.
+        let cfg = QuantConfig {
+            model: "m".into(),
+            thr_w: 0.04,
+            layers: vec![mk_layer("conv1", 5, 100), mk_layer("fc1", 3, 50)],
+        };
+        assert!(!cfg.to_json().encode().contains("scheme"));
+        let mut env = cfg.to_artifact_json();
+        env.set("schema_version", 1u64);
+        let loaded = QuantConfig::from_artifact_json(&env).unwrap();
+        assert!(loaded.layers.iter().all(|l| l.scheme == Scheme::Exp));
+        assert_eq!(loaded.checksum(), cfg.checksum());
+    }
+
+    #[test]
+    fn mixed_scheme_roundtrip_is_checksum_exact() {
+        let mut cfg = QuantConfig {
+            model: "m".into(),
+            thr_w: 0.04,
+            layers: vec![mk_layer("conv1", 5, 100), mk_layer("fc1", 8, 50), mk_layer("fc2", 4, 50)],
+        };
+        cfg.layers[1].scheme = Scheme::Uniform;
+        cfg.layers[1].base = 0.0;
+        cfg.layers[1].weights.alpha = 0.03;
+        cfg.layers[1].acts.alpha = 0.07;
+        cfg.layers[2].scheme = Scheme::Pwl { breaks: 1 };
+        cfg.layers[2].base = 0.0;
+        cfg.layers[2].weights = TensorQuant { alpha: 0.01, beta: 0.4, rmae: 0.02, elems: 50 };
+        cfg.layers[2].acts = TensorQuant { alpha: 0.05, beta: 1.2, rmae: 0.03, elems: 25 };
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("mixed.json");
+        cfg.save_json(&p).unwrap();
+        let cfg2 = QuantConfig::load_json(&p).unwrap();
+        assert_eq!(cfg2.checksum(), cfg.checksum());
+        assert_eq!(cfg2.layers[1].scheme, Scheme::Uniform);
+        assert_eq!(cfg2.layers[2].scheme, Scheme::Pwl { breaks: 1 });
+        assert_eq!(cfg2.scheme_names(), vec!["exp", "uniform", "pwl1"]);
     }
 
     #[test]

@@ -1,23 +1,31 @@
-//! DNA-TEQ — the paper's contribution (§III).
+//! DNA-TEQ — the paper's contribution (§III) plus the hybrid planner
+//! built on top of it.
 //!
 //! Tensors are represented as `x̄ = sign(x) · (α·bⁱ + β)` with per-layer
 //! parameters found by an adaptive offline search:
 //!
 //! 1. [`rss`] — goodness-of-fit analysis selecting the tensor that starts
 //!    the base search (step 2 of Fig. 3; Tables I & II).
-//! 2. [`search`] — Algorithm 1 (`SOB`) plus the bitwidth loop (3→7 bits)
-//!    and the network-level `Thr_w` controller (step 3–4 of Fig. 3;
-//!    Fig. 11).
-//! 3. [`quant`] — the quantizer itself (Eqs. 2–5) and RMAE (Eq. 6).
+//! 2. [`search`] — Algorithm 1 (`SOB`), the unified [`Planner`] over a
+//!    scheme × bit-width [`SearchSpace`] (the paper's 3→7-bit exp sweep
+//!    or the full {exp, uniform, pwl} × 2..=8 space), and the
+//!    Pareto-front search producing a [`PlanSet`].
+//! 3. [`quant`] — the exponential quantizer itself (Eqs. 2–5) and RMAE
+//!    (Eq. 6).
 //! 4. [`uniform`] — the linear INT-n baseline DNA-TEQ is compared against
 //!    (Tables IV & V).
-//! 5. [`calib`] — end-to-end calibration of a model: traces → [`config`].
-//! 6. [`plans`] — versioned, checksummed on-disk store for the resulting
-//!    plan artifacts (`artifacts/plans/<model>/<version>.json`).
+//! 5. [`pwl`] — piecewise-linear quantization for outlier-heavy layers
+//!    (PWLQ-style), the third scheme of the hybrid space.
+//! 6. [`calib`] — end-to-end calibration of a model: traces → [`config`].
+//! 7. [`plans`] — versioned, checksummed on-disk store for the resulting
+//!    plan artifacts (`artifacts/plans/<model>/<version>.json`) plus the
+//!    per-model Pareto-front index (`front.json`) and the SLA
+//!    [`PlanPolicy`] that picks a front point at serve time.
 
 pub mod calib;
 pub mod config;
 pub mod plans;
+pub mod pwl;
 pub mod quant;
 pub mod rss;
 pub mod search;
@@ -27,9 +35,16 @@ pub use calib::{
     calibrate_model, config_for_threshold, CalibrationInput, CalibrationOptions,
     CalibrationReport, LayerTensors, SweepPoint,
 };
-pub use config::{LayerKind, LayerQuant, PLAN_SCHEMA_VERSION, QuantConfig, TensorQuant};
-pub use plans::{diff_plans, render_plan, store_index_json, PlanStore, PlanSummary};
+pub use config::{LayerKind, LayerQuant, PLAN_SCHEMA_VERSION, QuantConfig, Scheme, TensorQuant};
+pub use plans::{
+    diff_plans, render_front, render_plan, store_index_json, FrontIndex, FrontPoint, PlanPolicy,
+    PlanStore, PlanSummary,
+};
+pub use pwl::PwlParams;
 pub use quant::{ExpQuantParams, QuantizedTensor, ZERO_CODE_SENTINEL};
 pub use rss::{fit_distributions, DistKind, FitReport};
-pub use search::{search_base, search_layer, LayerSearchResult, SearchOptions};
+pub use search::{
+    search_base, search_layer, LayerCandidate, LayerSearchResult, PlanPoint, PlanSet, Planner,
+    SearchOptions, SearchSpace,
+};
 pub use uniform::UniformParams;

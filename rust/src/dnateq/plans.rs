@@ -7,10 +7,151 @@
 //! matches the latest stored version is a no-op (calibration reruns do
 //! not mint new versions).
 
-use super::config::QuantConfig;
+use super::config::{QuantConfig, PLAN_SCHEMA_VERSION};
+use super::search::PlanSet;
 use crate::util::Json;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
+
+/// SLA-style policy for picking one point off a stored Pareto front.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanPolicy {
+    /// Lowest accumulated RMAE (most accurate plan).
+    MaxAccuracy,
+    /// Highest compression (fewest average bits).
+    MinBits,
+    /// Lowest estimated energy per inference element.
+    MinEnergy,
+}
+
+impl PlanPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanPolicy::MaxAccuracy => "max-accuracy",
+            PlanPolicy::MinBits => "min-bits",
+            PlanPolicy::MinEnergy => "min-energy",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "max-accuracy" => PlanPolicy::MaxAccuracy,
+            "min-bits" => PlanPolicy::MinBits,
+            "min-energy" => PlanPolicy::MinEnergy,
+            other => bail!(
+                "unknown plan policy `{other}`; use max-accuracy, min-bits or min-energy"
+            ),
+        })
+    }
+}
+
+/// One front entry in the persisted index: the stored plan version plus
+/// the metrics the selection policies rank by.
+#[derive(Clone, Debug)]
+pub struct FrontPoint {
+    pub version: u32,
+    pub checksum: String,
+    pub rmae: f64,
+    pub compression: f64,
+    pub avg_bits: f64,
+    pub energy_j: f64,
+    /// Distinct scheme names used by the plan, first-appearance order.
+    pub schemes: Vec<String>,
+}
+
+/// The persisted Pareto-front index for one model
+/// (`<root>/<model>/front.json`). Points are sorted by ascending RMAE.
+#[derive(Clone, Debug)]
+pub struct FrontIndex {
+    pub model: String,
+    pub thr_w: f64,
+    pub points: Vec<FrontPoint>,
+}
+
+impl FrontIndex {
+    /// Pick the front point a policy asks for. Ties resolve to the first
+    /// (most accurate) point, keeping selection deterministic.
+    pub fn select(&self, policy: PlanPolicy) -> Option<&FrontPoint> {
+        let better = |a: &FrontPoint, b: &FrontPoint| -> bool {
+            match policy {
+                PlanPolicy::MaxAccuracy => a.rmae < b.rmae,
+                PlanPolicy::MinBits => a.compression > b.compression,
+                PlanPolicy::MinEnergy => a.energy_j < b.energy_j,
+            }
+        };
+        let mut best: Option<&FrontPoint> = None;
+        for p in &self.points {
+            if best.map(|b| better(p, b)).unwrap_or(true) {
+                best = Some(p);
+            }
+        }
+        best
+    }
+
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set("version", p.version as u64)
+                    .set("checksum", p.checksum.as_str())
+                    .set("rmae", p.rmae)
+                    .set("compression", p.compression)
+                    .set("avg_bits", p.avg_bits)
+                    .set("energy_j", p.energy_j)
+                    .set(
+                        "schemes",
+                        p.schemes.iter().map(|s| Json::from(s.as_str())).collect::<Vec<_>>(),
+                    );
+                o
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("schema_version", PLAN_SCHEMA_VERSION)
+            .set("model", self.model.as_str())
+            .set("thr_w", self.thr_w)
+            .set("points", points);
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let version = j.req("schema_version")?.as_usize()? as u64;
+        if version > PLAN_SCHEMA_VERSION {
+            bail!(
+                "front index has schema version {version}, newer than supported {}",
+                PLAN_SCHEMA_VERSION
+            );
+        }
+        let points = j
+            .req("points")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let schemes = p
+                    .req("schemes")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| Ok(s.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(FrontPoint {
+                    version: p.req("version")?.as_usize()? as u32,
+                    checksum: p.req("checksum")?.as_str()?.to_string(),
+                    rmae: p.req("rmae")?.as_f64()?,
+                    compression: p.req("compression")?.as_f64()?,
+                    avg_bits: p.req("avg_bits")?.as_f64()?,
+                    energy_j: p.req("energy_j")?.as_f64()?,
+                    schemes,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            model: j.req("model")?.as_str()?.to_string(),
+            thr_w: j.req("thr_w")?.as_f64()?,
+            points,
+        })
+    }
+}
 
 /// Handle to a plan-artifact directory tree.
 #[derive(Clone, Debug)]
@@ -131,6 +272,69 @@ impl PlanStore {
         Ok(next)
     }
 
+    /// Path of a model's persisted front index. The `front.json` stem is
+    /// non-numeric, so [`PlanStore::versions`] never mistakes it for a
+    /// plan artifact.
+    pub fn front_path(&self, model: &str) -> PathBuf {
+        self.root.join(model).join("front.json")
+    }
+
+    /// Persist a planner [`PlanSet`]: every front point's config is stored
+    /// as a versioned plan artifact (idempotently — re-saving an identical
+    /// front mints no new versions), then the front index is written to
+    /// `front.json`. Returns the index as written.
+    pub fn save_front(&self, set: &PlanSet) -> Result<FrontIndex> {
+        let mut points = Vec::with_capacity(set.points.len());
+        for p in &set.points {
+            // save_next only dedupes against the latest version; a front
+            // stores several configs per model, so match any existing
+            // version by checksum to keep re-saves from minting versions.
+            let checksum = p.config.checksum_hex();
+            let existing = self.versions(&set.model)?.into_iter().find(|&v| {
+                self.load(&set.model, v).map(|c| c.checksum_hex() == checksum).unwrap_or(false)
+            });
+            let version = match existing {
+                Some(v) => v,
+                None => self
+                    .save_next(&p.config)
+                    .with_context(|| format!("storing front point for {}", set.model))?,
+            };
+            points.push(FrontPoint {
+                version,
+                checksum: p.config.checksum_hex(),
+                rmae: p.rmae,
+                compression: p.compression,
+                avg_bits: p.avg_bits,
+                energy_j: p.energy_j,
+                schemes: p.config.scheme_names(),
+            });
+        }
+        let index = FrontIndex { model: set.model.clone(), thr_w: set.thr_w, points };
+        index
+            .to_json()
+            .write_file(self.front_path(&set.model))
+            .with_context(|| format!("writing front index for {}", set.model))?;
+        Ok(index)
+    }
+
+    /// Load a model's front index, if one has been saved.
+    pub fn load_front(&self, model: &str) -> Result<Option<FrontIndex>> {
+        let path = self.front_path(model);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let idx = FrontIndex::from_json(&Json::read_file(&path)?)
+            .with_context(|| format!("loading front index {}", path.display()))?;
+        if idx.model != model {
+            bail!(
+                "front index at {} is for model `{}`, not `{model}` — misfiled artifact",
+                path.display(),
+                idx.model
+            );
+        }
+        Ok(Some(idx))
+    }
+
     /// Summaries of every stored plan (model-major, version-minor order).
     pub fn list(&self) -> Result<Vec<PlanSummary>> {
         let mut out = Vec::new();
@@ -216,21 +420,65 @@ pub fn render_plan(cfg: &QuantConfig, version: u32) -> String {
     );
     let _ = writeln!(
         s,
-        "{:<14} {:>5} {:>5} {:>9} {:>11} {:>11} {:>9} {:>6}",
-        "layer", "kind", "bits", "base", "rmae(w)", "rmae(act)", "seed", "conv"
+        "{:<14} {:>5} {:>8} {:>5} {:>9} {:>11} {:>11} {:>9} {:>6}",
+        "layer", "kind", "scheme", "bits", "base", "rmae(w)", "rmae(act)", "seed", "conv"
     );
     for l in &cfg.layers {
         let _ = writeln!(
             s,
-            "{:<14} {:>5} {:>5} {:>9.4} {:>11.5} {:>11.5} {:>9} {:>6}",
+            "{:<14} {:>5} {:>8} {:>5} {:>9.4} {:>11.5} {:>11.5} {:>9} {:>6}",
             l.name,
             l.kind.name(),
+            l.scheme.name(),
             l.n_bits,
             l.base,
             l.weights.rmae,
             l.acts.rmae,
             if l.seeded_by_weights { "W" } else { "A" },
             if l.converged { "yes" } else { "no" }
+        );
+    }
+    s
+}
+
+/// Render a stored front index as the `repro plans front` table, with
+/// the point each selection policy would pick marked on the right.
+pub fn render_front(idx: &FrontIndex) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "front {}  (thr_w {:.2}%, {} points)",
+        idx.model,
+        idx.thr_w * 100.0,
+        idx.points.len()
+    );
+    let _ = writeln!(
+        s,
+        "{:>4} {:>18} {:>10} {:>9} {:>11} {:>11}  {:<18} {}",
+        "ver", "checksum", "rmae", "avg bits", "compression", "energy(uJ)", "schemes", "policy"
+    );
+    let picks = [PlanPolicy::MaxAccuracy, PlanPolicy::MinBits, PlanPolicy::MinEnergy]
+        .into_iter()
+        .map(|p| (p, idx.select(p).map(|fp| fp.version)))
+        .collect::<Vec<_>>();
+    for p in &idx.points {
+        let chosen_by: Vec<&str> = picks
+            .iter()
+            .filter(|(_, v)| *v == Some(p.version))
+            .map(|(policy, _)| policy.name())
+            .collect();
+        let _ = writeln!(
+            s,
+            "{:>4} {:>18} {:>10.5} {:>9.2} {:>10.1}% {:>11.4}  {:<18} {}",
+            p.version,
+            p.checksum,
+            p.rmae,
+            p.avg_bits,
+            p.compression * 100.0,
+            p.energy_j * 1e6,
+            p.schemes.join("+"),
+            chosen_by.join(",")
         );
     }
     s
@@ -254,7 +502,8 @@ pub fn store_index_json(store: &PlanStore) -> Result<Json> {
 
 #[cfg(test)]
 mod tests {
-    use super::super::config::{LayerKind, LayerQuant, TensorQuant};
+    use super::super::config::{LayerKind, LayerQuant, Scheme, TensorQuant};
+    use super::super::search::PlanPoint;
     use super::*;
     use crate::util::TempDir;
 
@@ -265,6 +514,7 @@ mod tests {
             layers: vec![LayerQuant {
                 name: "fc0".into(),
                 kind: LayerKind::Fc,
+                scheme: Scheme::Exp,
                 n_bits: bits,
                 base: 1.31,
                 weights: TensorQuant { alpha: 0.7, beta: 0.01, rmae: 0.02, elems: 128 },
@@ -346,6 +596,85 @@ mod tests {
         let s = render_plan(&cfg, 3);
         assert!(s.contains("m/3"));
         assert!(s.contains("fc0"));
+        assert!(s.contains("exp"));
         assert!(s.contains(&cfg.checksum_hex()));
+    }
+
+    fn mk_set() -> PlanSet {
+        let point = |bits: u8, rmae: f64, energy_j: f64| {
+            let config = mk_cfg("m", 0.05, bits);
+            PlanPoint {
+                rmae,
+                compression: 1.0 - bits as f64 / 8.0,
+                avg_bits: bits as f64,
+                energy_j,
+                config,
+            }
+        };
+        PlanSet {
+            model: "m".into(),
+            thr_w: 0.05,
+            points: vec![point(7, 0.01, 3e-6), point(5, 0.05, 2e-6), point(3, 0.2, 1e-6)],
+        }
+    }
+
+    #[test]
+    fn front_roundtrips_and_policies_pick_their_ends() {
+        let dir = TempDir::new().unwrap();
+        let store = PlanStore::new(dir.path());
+        let idx = store.save_front(&mk_set()).unwrap();
+        assert_eq!(idx.points.len(), 3);
+        // front.json has a non-numeric stem: never mistaken for a plan.
+        assert_eq!(store.versions("m").unwrap(), vec![1, 2, 3]);
+        let loaded = store.load_front("m").unwrap().unwrap();
+        assert_eq!(loaded.model, "m");
+        assert_eq!(loaded.points.len(), 3);
+        let acc = loaded.select(PlanPolicy::MaxAccuracy).unwrap();
+        let bits = loaded.select(PlanPolicy::MinBits).unwrap();
+        let energy = loaded.select(PlanPolicy::MinEnergy).unwrap();
+        assert_eq!(acc.version, idx.points[0].version);
+        assert_eq!(bits.version, idx.points[2].version);
+        assert_eq!(energy.version, idx.points[2].version);
+        assert_ne!(acc.version, bits.version);
+        // Each selected version loads back to a checksum-verified plan.
+        let cfg = store.load("m", bits.version).unwrap();
+        assert_eq!(cfg.checksum_hex(), bits.checksum);
+    }
+
+    #[test]
+    fn saving_identical_front_twice_is_byte_stable() {
+        let dir = TempDir::new().unwrap();
+        let store = PlanStore::new(dir.path());
+        store.save_front(&mk_set()).unwrap();
+        let first = std::fs::read(store.front_path("m")).unwrap();
+        let again = store.save_front(&mk_set()).unwrap();
+        // No new versions minted, byte-identical index rewritten.
+        assert_eq!(store.versions("m").unwrap(), vec![1, 2, 3]);
+        assert_eq!(again.points.iter().map(|p| p.version).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(std::fs::read(store.front_path("m")).unwrap(), first);
+    }
+
+    #[test]
+    fn missing_front_is_none_and_policy_parse_roundtrips() {
+        let dir = TempDir::new().unwrap();
+        let store = PlanStore::new(dir.path());
+        assert!(store.load_front("ghost").unwrap().is_none());
+        for p in [PlanPolicy::MaxAccuracy, PlanPolicy::MinBits, PlanPolicy::MinEnergy] {
+            assert_eq!(PlanPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(PlanPolicy::parse("fastest").is_err());
+    }
+
+    #[test]
+    fn render_front_marks_policy_picks() {
+        let dir = TempDir::new().unwrap();
+        let store = PlanStore::new(dir.path());
+        let idx = store.save_front(&mk_set()).unwrap();
+        let s = render_front(&idx);
+        assert!(s.contains("front m"));
+        assert!(s.contains("max-accuracy"));
+        assert!(s.contains("min-bits"));
+        assert!(s.contains("min-energy"));
+        assert!(s.contains("exp"));
     }
 }

@@ -1,0 +1,365 @@
+//! Piecewise-linear quantization (PWLQ-style; arXiv 2002.00104) for
+//! outlier-heavy tensors.
+//!
+//! `|x|` is split into contiguous regions by ascending breakpoints; each
+//! region carries its own uniform grid. An `n`-bit code spends 1 sign
+//! bit, `region_bits` to index the region, and the remaining
+//! `level_bits = n − 1 − region_bits` on the in-region level, so the
+//! accounting is storage-honest like [`super::uniform`]. Code 0 decodes
+//! to exactly 0.0, keeping the zero-is-exact contract of
+//! [`super::quant`].
+
+use crate::tensor::{Tensor, TensorI8};
+use anyhow::{bail, Result};
+
+/// Parameters of a piecewise-linear quantizer over `|x|`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PwlParams {
+    /// Ascending region upper edges; the last edge is the clip max. A
+    /// quantizer with `k` interior breakpoints stores `k + 1` edges.
+    pub breaks: Vec<f64>,
+    /// Per-region step size Δ (same length as `breaks`).
+    pub deltas: Vec<f64>,
+    /// Total code bitwidth: sign + region index + level.
+    pub n_bits: u8,
+}
+
+/// Bits needed to index `regions` regions (`ceil(log2(regions))`).
+fn region_bits_for(regions: usize) -> u8 {
+    debug_assert!(regions >= 1);
+    (usize::BITS - (regions - 1).leading_zeros()).min(7) as u8
+}
+
+impl PwlParams {
+    pub fn regions(&self) -> usize {
+        self.breaks.len()
+    }
+
+    /// Interior breakpoint count (the `breaks` of [`Scheme::Pwl`]).
+    ///
+    /// [`Scheme::Pwl`]: super::config::Scheme::Pwl
+    pub fn interior_breaks(&self) -> u8 {
+        (self.breaks.len() - 1) as u8
+    }
+
+    pub fn region_bits(&self) -> u8 {
+        region_bits_for(self.regions())
+    }
+
+    /// In-region level count: `2^{n − 1 − region_bits}`.
+    pub fn levels(&self) -> usize {
+        1usize << (self.n_bits - 1 - self.region_bits())
+    }
+
+    /// First-region step Δ₀ (recorded as `TensorQuant::alpha`).
+    pub fn first_delta(&self) -> f64 {
+        self.deltas[0]
+    }
+
+    /// First region edge (recorded as `TensorQuant::beta`).
+    pub fn first_break(&self) -> f64 {
+        self.breaks[0]
+    }
+
+    /// Calibrate a quantizer with `n_breaks` interior breakpoints on `t`.
+    ///
+    /// A single breakpoint is grid-searched over high quantiles of the
+    /// nonzero magnitudes (minimizing RMAE); more breakpoints land on
+    /// evenly spaced quantiles. Deterministic: depends only on the tensor
+    /// contents.
+    pub fn calibrate(t: &Tensor, n_bits: u8, n_breaks: u8) -> Self {
+        assert!(n_breaks >= 1, "pwl needs at least one interior breakpoint");
+        let regions = n_breaks as usize + 1;
+        let region_bits = region_bits_for(regions);
+        assert!(
+            n_bits >= region_bits + 2 && n_bits <= 8,
+            "pwl bitwidth {n_bits} out of range for {regions} regions"
+        );
+        let max = t.data().iter().fold(0.0f32, |m, &x| m.max(x.abs())) as f64;
+        if max <= 0.0 {
+            // All-zero tensor: any positive grid is fine; everything
+            // encodes to code 0 and decodes to exactly 0.0.
+            let edges: Vec<f64> = (1..=regions).map(|r| r as f64 / regions as f64).collect();
+            return Self::from_edges(edges, n_bits);
+        }
+        let mut mags: Vec<f64> =
+            t.data().iter().map(|x| x.abs() as f64).filter(|&m| m > 0.0).collect();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let quantile = |q: f64| -> f64 {
+            let i = ((mags.len() - 1) as f64 * q).round() as usize;
+            mags[i]
+        };
+        if regions == 2 {
+            // One breakpoint: pick the RMAE-minimizing high quantile.
+            let mut best: Option<(f64, Self)> = None;
+            for q in [0.5, 0.7, 0.8, 0.9, 0.95] {
+                let b = quantile(q);
+                if b <= 0.0 || b >= max {
+                    continue;
+                }
+                let cand = Self::from_edges(vec![b, max], n_bits);
+                let e = cand.rmae(t);
+                if best.as_ref().map(|(be, _)| e < *be).unwrap_or(true) {
+                    best = Some((e, cand));
+                }
+            }
+            match best {
+                Some((_, p)) => p,
+                None => Self::from_edges(vec![max * 0.5, max], n_bits),
+            }
+        } else {
+            let mut edges = Vec::with_capacity(regions);
+            let mut prev = 0.0f64;
+            for r in 1..regions {
+                let mut e = quantile(r as f64 / regions as f64);
+                let floor = prev + max * 1e-9;
+                if e <= floor {
+                    e = floor;
+                }
+                edges.push(e.min(max * (1.0 - 1e-9)));
+                prev = *edges.last().unwrap();
+            }
+            edges.push(max.max(prev + max * 1e-9));
+            Self::from_edges(edges, n_bits)
+        }
+    }
+
+    /// Build params from explicit ascending region edges.
+    fn from_edges(edges: Vec<f64>, n_bits: u8) -> Self {
+        let region_bits = region_bits_for(edges.len());
+        let levels = (1usize << (n_bits - 1 - region_bits)) as f64;
+        let deltas = edges
+            .iter()
+            .scan(0.0f64, |lo, &hi| {
+                let d = (hi - *lo) / (levels - 1.0);
+                *lo = hi;
+                Some(d)
+            })
+            .collect();
+        Self { breaks: edges, deltas, n_bits }
+    }
+
+    /// Lower edge of region `r`.
+    fn lo(&self, r: usize) -> f64 {
+        if r == 0 {
+            0.0
+        } else {
+            self.breaks[r - 1]
+        }
+    }
+
+    #[inline]
+    pub fn encode(&self, x: f32) -> i8 {
+        let m = x.abs() as f64;
+        if m == 0.0 {
+            return 0;
+        }
+        let regions = self.regions();
+        let mut r = regions - 1; // clip above the top edge
+        for (i, &hi) in self.breaks.iter().enumerate() {
+            if m <= hi {
+                r = i;
+                break;
+            }
+        }
+        let levels = self.levels();
+        let k = (((m - self.lo(r)) / self.deltas[r]).round() as i64).clamp(0, levels as i64 - 1);
+        let idx = (r * levels) as i64 + k; // < 2^{n-1} ≤ 128
+        if x < 0.0 {
+            -(idx as i8)
+        } else {
+            idx as i8
+        }
+    }
+
+    #[inline]
+    pub fn decode(&self, q: i8) -> f32 {
+        if q == 0 {
+            return 0.0;
+        }
+        let levels = self.levels();
+        let idx = q.unsigned_abs() as usize;
+        let r = (idx / levels).min(self.regions() - 1);
+        let k = idx % levels;
+        let mag = self.lo(r) + k as f64 * self.deltas[r];
+        if q < 0 {
+            -mag as f32
+        } else {
+            mag as f32
+        }
+    }
+
+    pub fn quantize(&self, t: &Tensor) -> TensorI8 {
+        TensorI8::from_vec(t.shape(), t.data().iter().map(|&x| self.encode(x)).collect())
+    }
+
+    pub fn dequantize(&self, q: &TensorI8) -> Tensor {
+        Tensor::from_vec(q.shape(), q.data().iter().map(|&v| self.decode(v)).collect())
+    }
+
+    /// Quantize-dequantize roundtrip for error/accuracy evaluation.
+    pub fn roundtrip(&self, t: &Tensor) -> Tensor {
+        t.map(|x| self.decode(self.encode(x)))
+    }
+
+    /// RMAE (Eq. 6) of this quantizer on `t`.
+    pub fn rmae(&self, t: &Tensor) -> f64 {
+        let denom: f64 = t.data().iter().map(|&x| x.abs() as f64).sum();
+        if denom == 0.0 {
+            return 0.0;
+        }
+        let num: f64 = t
+            .data()
+            .iter()
+            .map(|&x| (self.decode(self.encode(x)) as f64 - x as f64).abs())
+            .sum();
+        num / denom
+    }
+
+    /// Stored bits per element (sign + region + level — all of `n_bits`).
+    pub fn bits_per_element(&self) -> f64 {
+        self.n_bits as f64
+    }
+
+    /// Reject parameter sets that cannot have come from a well-formed
+    /// calibration, mirroring the other quantizers' artifact-boundary
+    /// checks.
+    pub fn validate(&self) -> Result<()> {
+        if self.breaks.is_empty() || self.breaks.len() != self.deltas.len() {
+            bail!(
+                "pwl params need matching non-empty breaks/deltas ({} vs {})",
+                self.breaks.len(),
+                self.deltas.len()
+            );
+        }
+        let region_bits = self.region_bits();
+        if self.n_bits < region_bits + 2 || self.n_bits > 8 {
+            bail!(
+                "pwl bitwidth {} out of range for {} regions",
+                self.n_bits,
+                self.regions()
+            );
+        }
+        let mut prev = 0.0f64;
+        for (&b, &d) in self.breaks.iter().zip(&self.deltas) {
+            if !b.is_finite() || b <= prev {
+                bail!("pwl breaks must be finite, positive and ascending (got {b})");
+            }
+            if !d.is_finite() || d <= 0.0 {
+                bail!("pwl step {d} must be finite and positive");
+            }
+            prev = b;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnateq::uniform::UniformParams;
+    use crate::tensor::SplitMix64;
+
+    /// Mostly-small tensor with a sprinkle of large outliers — the shape
+    /// PWLQ is built for.
+    fn outlier_tensor(n: usize, seed: u64) -> Tensor {
+        let mut rng = SplitMix64::new(seed);
+        let bulk = Tensor::rand_normal(&[n], 0.0, 0.05, &mut rng);
+        let mut data = bulk.data().to_vec();
+        for i in (0..n).step_by(97) {
+            data[i] *= 50.0;
+        }
+        Tensor::from_vec(&[n], data)
+    }
+
+    #[test]
+    fn beats_uniform_on_outlier_heavy_data() {
+        let t = outlier_tensor(8192, 11);
+        for n in [4u8, 6] {
+            let p = PwlParams::calibrate(&t, n, 1);
+            let u = UniformParams::calibrate(&t, n);
+            assert!(
+                p.rmae(&t) < u.rmae(&t),
+                "n={n}: pwl {} should beat uniform {}",
+                p.rmae(&t),
+                u.rmae(&t)
+            );
+        }
+    }
+
+    #[test]
+    fn zero_maps_to_zero_exactly() {
+        let t = Tensor::from_vec(&[4], vec![0.0, 1.0, -2.0, 0.0]);
+        let p = PwlParams::calibrate(&t, 4, 1);
+        let d = p.roundtrip(&t);
+        assert_eq!(d.data()[0], 0.0);
+        assert_eq!(d.data()[3], 0.0);
+        assert_eq!(p.encode(0.0), 0);
+    }
+
+    #[test]
+    fn sign_is_preserved_and_codes_in_range() {
+        let t = outlier_tensor(2048, 12);
+        let p = PwlParams::calibrate(&t, 5, 1);
+        let limit = (p.regions() * p.levels()) as i32; // 2^{n-1}
+        for &x in t.data() {
+            let q = p.encode(x);
+            assert!((q as i32).abs() < limit, "code {q} out of range");
+            if x != 0.0 && q != 0 {
+                assert_eq!(x.signum(), p.decode(q).signum(), "sign flip at {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn calibrate_is_deterministic() {
+        let t = outlier_tensor(1024, 13);
+        for breaks in [1u8, 3] {
+            let a = PwlParams::calibrate(&t, 6, breaks);
+            let b = PwlParams::calibrate(&t, 6, breaks);
+            assert_eq!(a, b);
+            assert_eq!(a.regions(), breaks as usize + 1);
+            a.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn zero_tensor_is_safe() {
+        let t = Tensor::zeros(&[16]);
+        let p = PwlParams::calibrate(&t, 4, 1);
+        p.validate().unwrap();
+        assert_eq!(p.rmae(&t), 0.0);
+        assert_eq!(p.roundtrip(&t).data(), t.data());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_params() {
+        let ok = PwlParams::calibrate(&outlier_tensor(512, 14), 5, 1);
+        assert!(ok.validate().is_ok());
+        let mut bad = ok.clone();
+        bad.breaks[1] = bad.breaks[0]; // not ascending
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.deltas[0] = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.n_bits = 2; // no room for sign + region + level
+        assert!(bad.validate().is_err());
+        let mut bad = ok;
+        bad.breaks[0] = f64::NAN;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn rmae_decreases_with_bitwidth() {
+        let t = outlier_tensor(4096, 15);
+        let mut prev = f64::INFINITY;
+        for n in [3u8, 4, 5, 6, 8] {
+            let p = PwlParams::calibrate(&t, n, 1);
+            let e = p.rmae(&t);
+            assert!(e < prev * 1.05, "n={n}: RMAE {e} vs prev {prev}");
+            prev = e;
+        }
+        assert!(prev < 0.05, "8-bit pwl RMAE too high: {prev}");
+    }
+}

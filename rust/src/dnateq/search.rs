@@ -1,15 +1,28 @@
-//! The adaptive offline parameter search (§III-B, Fig. 3 steps 2–4).
+//! The adaptive offline parameter search (§III-B, Fig. 3 steps 2–4) and
+//! the hybrid per-layer planner built on top of it.
 //!
 //! * [`search_base`] — Algorithm 1 (`SOB`): hill-climb the exponential
 //!   base `b` by ±ε, refitting `α`/`β` (Eqs. 4–5) at every step, until the
 //!   RMAE (Eq. 6) stops improving.
-//! * [`search_layer`] — the per-layer bitwidth loop: RSS selects which
-//!   tensor seeds the search, `n` sweeps 3→7 bits until both tensors meet
-//!   their error thresholds (`Thr_w`, `Thr_act` from Eq. 7).
+//! * [`Planner`] — the unified per-layer search over a
+//!   [`SearchSpace`] of scheme × bit-width candidates: the paper's
+//!   exp-only 3→7 sweep ([`SearchSpace::exp_only`]) or the full hybrid
+//!   {exp, uniform, pwl} × 2..=8 space ([`SearchSpace::full`]).
+//! * [`Planner::plan_set`] — traces the accuracy/compression/energy
+//!   Pareto front of a model as a [`PlanSet`]: one [`QuantConfig`] per
+//!   non-dominated trade-off, ready to be persisted by the plan store.
+//! * [`search_layer`] — thin compatibility shim over [`Planner`] with
+//!   the legacy single-config signature.
 
+use super::calib::CalibrationInput;
+use super::config::{LayerKind, LayerQuant, QuantConfig, Scheme, TensorQuant};
+use super::pwl::PwlParams;
 use super::quant::{ExpQuantParams, MIN_BASE};
 use super::rss::fit_distributions;
+use super::uniform::UniformParams;
+use crate::accel::energy::EnergyModel;
 use crate::tensor::Tensor;
+use crate::util::parallel_map;
 
 /// Knobs of the offline search. Defaults mirror the paper.
 #[derive(Clone, Copy, Debug)]
@@ -131,6 +144,11 @@ pub struct LayerSearchResult {
 
 /// Full per-layer search: pick the seed tensor by RSS, sweep bitwidths
 /// from `min_bits` up, accept the first `n` meeting both thresholds.
+///
+/// Compatibility shim: delegates to [`Planner::plan_layer`] over an
+/// exponential-only [`SearchSpace`]. New code should construct a
+/// [`Planner`] directly — it exposes the same sweep plus the hybrid
+/// scheme space and the Pareto-front search.
 pub fn search_layer(
     weights: &Tensor,
     acts: &Tensor,
@@ -138,48 +156,389 @@ pub fn search_layer(
     thr_act: f64,
     opts: &SearchOptions,
 ) -> LayerSearchResult {
-    let rss_w = fit_distributions(weights).best().rss;
-    let rss_a = fit_distributions(acts).best().rss;
-    let seeded_by_weights = rss_w < rss_a;
+    let planner = Planner {
+        space: SearchSpace {
+            schemes: vec![Scheme::Exp],
+            min_bits: opts.min_bits,
+            max_bits: opts.max_bits,
+            thr_w,
+        },
+        opts: *opts,
+    };
+    let c = planner.plan_layer(weights, acts, thr_w, thr_act);
+    LayerSearchResult {
+        n_bits: c.n_bits,
+        base: c.base,
+        w_params: ExpQuantParams {
+            base: c.base,
+            alpha: c.weights.alpha,
+            beta: c.weights.beta,
+            n_bits: c.n_bits,
+        },
+        a_params: ExpQuantParams {
+            base: c.base,
+            alpha: c.acts.alpha,
+            beta: c.acts.beta,
+            n_bits: c.n_bits,
+        },
+        rmae_w: c.weights.rmae,
+        rmae_a: c.acts.rmae,
+        seeded_by_weights: c.seeded_by_weights,
+        rss_w: c.rss_w,
+        rss_a: c.rss_a,
+        converged: c.converged,
+        iterations: c.iterations,
+    }
+}
 
-    let (seed, partner) =
-        if seeded_by_weights { (weights, acts) } else { (acts, weights) };
+/// The hybrid planner's search space: which schemes to try, the bit-width
+/// sweep bounds, and the network-level weight-error threshold.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    /// Schemes tried at each bit-width, in preference order.
+    pub schemes: Vec<Scheme>,
+    pub min_bits: u8,
+    pub max_bits: u8,
+    /// Network-level `Thr_w` (Eq. 7); per-layer thresholds derive from it.
+    pub thr_w: f64,
+}
 
-    let mut total_iters = 0usize;
-    let mut last: Option<LayerSearchResult> = None;
-    for n in opts.min_bits..=opts.max_bits {
-        let seed_res = search_base(seed, n, opts);
-        total_iters += seed_res.iterations;
-        let partner_params = fit_partner(partner, seed_res.params.base, n);
-        let partner_err = partner_params.rmae(partner);
+impl SearchSpace {
+    /// The paper's space: exponential codes only, 3→7 bits.
+    pub fn exp_only(thr_w: f64) -> Self {
+        Self { schemes: vec![Scheme::Exp], min_bits: 3, max_bits: 7, thr_w }
+    }
 
-        let (w_params, a_params, rmae_w, rmae_a) = if seeded_by_weights {
-            (seed_res.params, partner_params, seed_res.rmae, partner_err)
-        } else {
-            (partner_params, seed_res.params, partner_err, seed_res.rmae)
+    /// The full hybrid space: {exp, uniform, pwl} × 2..=8 bits.
+    pub fn full(thr_w: f64) -> Self {
+        Self {
+            schemes: vec![Scheme::Exp, Scheme::Uniform, Scheme::Pwl { breaks: 1 }],
+            min_bits: 2,
+            max_bits: 8,
+            thr_w,
+        }
+    }
+
+    /// Whether `(scheme, n_bits)` lies inside both this space and the
+    /// scheme's own representable range.
+    pub fn admits(&self, scheme: Scheme, n_bits: u8) -> bool {
+        let (lo, hi) = scheme.bit_range();
+        n_bits >= self.min_bits.max(lo) && n_bits <= self.max_bits.min(hi)
+    }
+}
+
+/// One evaluated (scheme, bit-width) candidate for a layer.
+#[derive(Clone, Debug)]
+pub struct LayerCandidate {
+    pub scheme: Scheme,
+    pub n_bits: u8,
+    /// Exponential base (0.0 for non-exp schemes, which have none).
+    pub base: f64,
+    pub weights: TensorQuant,
+    pub acts: TensorQuant,
+    pub seeded_by_weights: bool,
+    pub rss_w: f64,
+    pub rss_a: f64,
+    /// Both tensors met their thresholds.
+    pub converged: bool,
+    /// Algorithm-1 iterations accumulated across the sweep up to and
+    /// including this candidate (uniform/pwl calibration is closed-form
+    /// and adds none).
+    pub iterations: usize,
+}
+
+impl LayerCandidate {
+    /// Combined weight + activation error, the accuracy axis of the front.
+    pub fn rmae_sum(&self) -> f64 {
+        self.weights.rmae + self.acts.rmae
+    }
+
+    /// Materialize as a plan layer record.
+    pub fn to_layer_quant(&self, name: &str, kind: LayerKind) -> LayerQuant {
+        LayerQuant {
+            name: name.to_string(),
+            kind,
+            scheme: self.scheme,
+            n_bits: self.n_bits,
+            base: self.base,
+            weights: self.weights,
+            acts: self.acts,
+            seeded_by_weights: self.seeded_by_weights,
+            rss_w: self.rss_w,
+            rss_a: self.rss_a,
+            converged: self.converged,
+        }
+    }
+}
+
+/// λ grid for scalarizing accuracy against bits while tracing the front:
+/// per-layer `argmin(rmae_w + rmae_a + λ·n_bits)` from pure accuracy
+/// (λ = 0) to bits-dominate (λ = 10³). Configs that coincide collapse in
+/// the checksum dedupe, so a dense grid costs nothing extra.
+const LAMBDA_GRID: [f64; 12] =
+    [0.0, 1e-3, 2e-3, 5e-3, 0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0, 1e3];
+
+/// One point on the accuracy/compression/energy Pareto front.
+#[derive(Clone, Debug)]
+pub struct PlanPoint {
+    pub config: QuantConfig,
+    /// Accumulated weight + activation RMAE (lower = more accurate).
+    pub rmae: f64,
+    /// Compression ratio vs INT8 (`1 − avg_bits/8`; higher = smaller).
+    pub compression: f64,
+    pub avg_bits: f64,
+    /// Estimated compute energy per inference element, in joules.
+    pub energy_j: f64,
+}
+
+/// The planner's Pareto front for one model: every non-dominated
+/// accuracy/compression trade-off found in the scheme × bit-width space,
+/// sorted by ascending RMAE (and therefore ascending compression).
+#[derive(Clone, Debug)]
+pub struct PlanSet {
+    pub model: String,
+    pub thr_w: f64,
+    pub points: Vec<PlanPoint>,
+}
+
+/// Keep only non-dominated points: sort by RMAE ascending (compression
+/// descending on ties), then keep each point whose compression strictly
+/// exceeds every earlier kept point's. The survivors are strictly
+/// ascending in both axes, so no kept point dominates another.
+fn skyline(mut points: Vec<PlanPoint>) -> Vec<PlanPoint> {
+    points.sort_by(|a, b| {
+        a.rmae
+            .partial_cmp(&b.rmae)
+            .unwrap()
+            .then(b.compression.partial_cmp(&a.compression).unwrap())
+    });
+    let mut kept: Vec<PlanPoint> = Vec::new();
+    let mut best_comp = f64::NEG_INFINITY;
+    for p in points {
+        if p.compression > best_comp {
+            best_comp = p.compression;
+            kept.push(p);
+        }
+    }
+    kept
+}
+
+/// Unified entry point for the per-layer search: one object owns the
+/// scheme × bit-width [`SearchSpace`] and the Algorithm-1 knobs that
+/// [`search_base`] / [`fit_partner`] / [`search_layer`] previously took
+/// piecemeal.
+#[derive(Clone, Debug)]
+pub struct Planner {
+    pub space: SearchSpace,
+    pub opts: SearchOptions,
+}
+
+impl Planner {
+    pub fn new(space: SearchSpace) -> Self {
+        let opts = SearchOptions {
+            min_bits: space.min_bits,
+            max_bits: space.max_bits,
+            ..SearchOptions::default()
         };
+        Self { space, opts }
+    }
 
-        let res = LayerSearchResult {
+    fn rss_pair(weights: &Tensor, acts: &Tensor) -> (f64, f64) {
+        (fit_distributions(weights).best().rss, fit_distributions(acts).best().rss)
+    }
+
+    /// Evaluate one (scheme, n) candidate. `total_iters` accumulates
+    /// Algorithm-1 hill-climb work across a sweep (exp only).
+    #[allow(clippy::too_many_arguments)]
+    fn candidate(
+        &self,
+        scheme: Scheme,
+        n: u8,
+        weights: &Tensor,
+        acts: &Tensor,
+        thr_w: f64,
+        thr_act: f64,
+        rss: (f64, f64),
+        total_iters: &mut usize,
+    ) -> LayerCandidate {
+        let (rss_w, rss_a) = rss;
+        let seeded_by_weights = rss_w < rss_a;
+        let (base, w_alpha, w_beta, a_alpha, a_beta, rmae_w, rmae_a) = match scheme {
+            Scheme::Exp => {
+                let (seed, partner) =
+                    if seeded_by_weights { (weights, acts) } else { (acts, weights) };
+                let seed_res = search_base(seed, n, &self.opts);
+                *total_iters += seed_res.iterations;
+                let partner_params = fit_partner(partner, seed_res.params.base, n);
+                let partner_err = partner_params.rmae(partner);
+                let (w, a, ew, ea) = if seeded_by_weights {
+                    (seed_res.params, partner_params, seed_res.rmae, partner_err)
+                } else {
+                    (partner_params, seed_res.params, partner_err, seed_res.rmae)
+                };
+                (w.base, w.alpha, w.beta, a.alpha, a.beta, ew, ea)
+            }
+            Scheme::Uniform => {
+                let w = UniformParams::calibrate(weights, n);
+                let a = UniformParams::calibrate(acts, n);
+                (0.0, w.delta, 0.0, a.delta, 0.0, w.rmae(weights), a.rmae(acts))
+            }
+            Scheme::Pwl { breaks } => {
+                let w = PwlParams::calibrate(weights, n, breaks);
+                let a = PwlParams::calibrate(acts, n, breaks);
+                (
+                    0.0,
+                    w.first_delta(),
+                    w.first_break(),
+                    a.first_delta(),
+                    a.first_break(),
+                    w.rmae(weights),
+                    a.rmae(acts),
+                )
+            }
+        };
+        LayerCandidate {
+            scheme,
             n_bits: n,
-            base: seed_res.params.base,
-            w_params,
-            a_params,
-            rmae_w,
-            rmae_a,
+            base,
+            weights: TensorQuant {
+                alpha: w_alpha,
+                beta: w_beta,
+                rmae: rmae_w,
+                elems: weights.len(),
+            },
+            acts: TensorQuant { alpha: a_alpha, beta: a_beta, rmae: rmae_a, elems: acts.len() },
             seeded_by_weights,
             rss_w,
             rss_a,
             converged: rmae_w <= thr_w && rmae_a <= thr_act,
-            iterations: total_iters,
-        };
-        if res.converged {
-            return res;
+            iterations: *total_iters,
         }
-        last = Some(res);
     }
-    // No bitwidth satisfied both thresholds: report the widest attempt
-    // (the paper keeps 7-bit layers; <3% of layers land here).
-    last.expect("at least one bitwidth attempted")
+
+    /// Single-plan per-layer search: sweep bit-widths ascending (schemes
+    /// in declared order at each width), accept the first candidate
+    /// meeting both thresholds — exactly the paper's sweep for the
+    /// exp-only space. Falls back to the lowest-error widest candidate
+    /// when nothing converges.
+    pub fn plan_layer(
+        &self,
+        weights: &Tensor,
+        acts: &Tensor,
+        thr_w: f64,
+        thr_act: f64,
+    ) -> LayerCandidate {
+        let rss = Self::rss_pair(weights, acts);
+        let mut total_iters = 0usize;
+        let mut last: Option<LayerCandidate> = None;
+        for n in self.space.min_bits..=self.space.max_bits {
+            for &scheme in &self.space.schemes {
+                if !self.space.admits(scheme, n) {
+                    continue;
+                }
+                let c =
+                    self.candidate(scheme, n, weights, acts, thr_w, thr_act, rss, &mut total_iters);
+                if c.converged {
+                    return c;
+                }
+                let better = last
+                    .as_ref()
+                    .map(|l| c.n_bits > l.n_bits || c.rmae_sum() < l.rmae_sum())
+                    .unwrap_or(true);
+                if better {
+                    last = Some(c);
+                }
+            }
+        }
+        last.expect("search space admits at least one candidate")
+    }
+
+    /// Every admissible (scheme, bit-width) candidate for one layer, in
+    /// deterministic sweep order — fuel for the Pareto-front search.
+    pub fn layer_candidates(
+        &self,
+        weights: &Tensor,
+        acts: &Tensor,
+        thr_w: f64,
+        thr_act: f64,
+    ) -> Vec<LayerCandidate> {
+        let rss = Self::rss_pair(weights, acts);
+        let mut total_iters = 0usize;
+        let mut out = Vec::new();
+        for n in self.space.min_bits..=self.space.max_bits {
+            for &scheme in &self.space.schemes {
+                if self.space.admits(scheme, n) {
+                    out.push(self.candidate(
+                        scheme,
+                        n,
+                        weights,
+                        acts,
+                        thr_w,
+                        thr_act,
+                        rss,
+                        &mut total_iters,
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Trace the model's accuracy/compression/energy Pareto front.
+    ///
+    /// Per-layer candidates are evaluated once (layers in parallel); a λ
+    /// grid then scalarizes accuracy against bits, each λ yielding one
+    /// [`QuantConfig`] by independent per-layer argmin. Duplicate configs
+    /// collapse by checksum and dominated points are discarded, so the
+    /// result is the non-dominated staircase from most-accurate to
+    /// most-compressed. Fully deterministic for a given input.
+    pub fn plan_set(&self, input: &CalibrationInput) -> PlanSet {
+        let thr_w = self.space.thr_w;
+        let per_layer: Vec<Vec<LayerCandidate>> = parallel_map(&input.layers, |lt| {
+            // First-layer special case: 10× tighter (§VI-E).
+            let layer_thr_w = if lt.is_first { thr_w / 10.0 } else { thr_w };
+            let thr_act = activation_threshold(
+                layer_thr_w,
+                lt.acts.mean_abs() as f64,
+                lt.weights.mean_abs() as f64,
+            );
+            self.layer_candidates(&lt.weights, &lt.acts, layer_thr_w, thr_act)
+        });
+
+        let energy = EnergyModel::default();
+        let mut points: Vec<PlanPoint> = Vec::new();
+        let mut seen: Vec<u64> = Vec::new();
+        for &lambda in &LAMBDA_GRID {
+            let layers: Vec<LayerQuant> = input
+                .layers
+                .iter()
+                .zip(&per_layer)
+                .map(|(lt, cands)| {
+                    let best = cands
+                        .iter()
+                        .min_by(|a, b| {
+                            let sa = a.rmae_sum() + lambda * a.n_bits as f64;
+                            let sb = b.rmae_sum() + lambda * b.n_bits as f64;
+                            sa.partial_cmp(&sb).unwrap()
+                        })
+                        .expect("search space admits at least one candidate");
+                    best.to_layer_quant(&lt.name, lt.kind)
+                })
+                .collect();
+            let config = QuantConfig { model: input.model.clone(), thr_w, layers };
+            let checksum = config.checksum();
+            if seen.contains(&checksum) {
+                continue;
+            }
+            seen.push(checksum);
+            let rmae = config.accumulated_rmae();
+            let compression = config.compression_ratio();
+            let avg_bits = config.avg_bitwidth();
+            let energy_j = energy.config_energy_j(&config);
+            points.push(PlanPoint { config, rmae, compression, avg_bits, energy_j });
+        }
+        PlanSet { model: input.model.clone(), thr_w, points: skyline(points) }
+    }
 }
 
 #[cfg(test)]
@@ -258,6 +617,115 @@ mod tests {
         // Act magnitudes equal to weights → clamp at 0.5×, not 0.
         let t2 = activation_threshold(0.01, 1.0, 1.0);
         assert!((t2 - 0.005).abs() < 1e-12);
+    }
+
+    fn mixed_input(seed: u64) -> CalibrationInput {
+        // One exponential-shaped layer (exp codes shine) and one
+        // uniform-shaped layer (linear grids shine): the hybrid planner
+        // should use different schemes where each wins.
+        let mut rng = SplitMix64::new(seed);
+        let layers = vec![
+            super::super::calib::LayerTensors {
+                name: "conv1".into(),
+                kind: LayerKind::Conv,
+                weights: Tensor::rand_signed_exponential(&[2048], 3.0, &mut rng),
+                acts: Tensor::rand_signed_exponential(&[4096], 0.7, &mut rng),
+                is_first: true,
+            },
+            super::super::calib::LayerTensors {
+                name: "fc1".into(),
+                kind: LayerKind::Fc,
+                weights: Tensor::rand_uniform(&[2048], -1.0, 1.0, &mut rng),
+                acts: Tensor::rand_uniform(&[4096], 0.0, 2.0, &mut rng),
+                is_first: false,
+            },
+        ];
+        CalibrationInput { model: "toy".into(), layers }
+    }
+
+    #[test]
+    fn full_space_reaches_eight_bits_when_needed() {
+        // Impossible thresholds: the hybrid fallback must land on the
+        // widest width, which only uniform/pwl can reach.
+        let mut rng = SplitMix64::new(41);
+        let w = Tensor::rand_uniform(&[2048], -1.0, 1.0, &mut rng);
+        let a = Tensor::rand_uniform(&[2048], 0.0, 1.0, &mut rng);
+        let planner = Planner::new(SearchSpace::full(0.05));
+        let c = planner.plan_layer(&w, &a, 1e-9, 1e-9);
+        assert_eq!(c.n_bits, 8);
+        assert_ne!(c.scheme, Scheme::Exp);
+        assert!(!c.converged);
+    }
+
+    #[test]
+    fn planner_exp_only_matches_legacy_search_layer() {
+        let w = expo(2048, 2.0, 42);
+        let a = expo(2048, 1.0, 43);
+        let opts = SearchOptions::default();
+        let legacy = search_layer(&w, &a, 0.05, 0.10, &opts);
+        let planner = Planner::new(SearchSpace::exp_only(0.05));
+        let c = planner.plan_layer(&w, &a, 0.05, 0.10);
+        assert_eq!(c.scheme, Scheme::Exp);
+        assert_eq!(c.n_bits, legacy.n_bits);
+        assert_eq!(c.base.to_bits(), legacy.base.to_bits());
+        assert_eq!(c.weights.alpha.to_bits(), legacy.w_params.alpha.to_bits());
+        assert_eq!(c.acts.beta.to_bits(), legacy.a_params.beta.to_bits());
+        assert_eq!(c.iterations, legacy.iterations);
+        assert_eq!(c.converged, legacy.converged);
+    }
+
+    #[test]
+    fn plan_set_front_is_non_dominated_and_sorted() {
+        let input = mixed_input(44);
+        let set = Planner::new(SearchSpace::full(0.05)).plan_set(&input);
+        assert!(!set.points.is_empty());
+        for p in &set.points {
+            p.config.validate().unwrap();
+            assert!(p.energy_j > 0.0);
+        }
+        for w in set.points.windows(2) {
+            assert!(w[0].rmae < w[1].rmae, "front not sorted by rmae");
+            assert!(w[0].compression < w[1].compression, "front not ascending in compression");
+        }
+        for (i, p) in set.points.iter().enumerate() {
+            for (j, q) in set.points.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let dominated = q.rmae <= p.rmae
+                    && q.compression >= p.compression
+                    && (q.rmae < p.rmae || q.compression > p.compression);
+                assert!(!dominated, "point {i} dominated by {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_set_is_deterministic() {
+        let a = Planner::new(SearchSpace::full(0.05)).plan_set(&mixed_input(45));
+        let b = Planner::new(SearchSpace::full(0.05)).plan_set(&mixed_input(45));
+        assert_eq!(a.points.len(), b.points.len());
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.config.checksum(), pb.config.checksum());
+            assert_eq!(pa.energy_j.to_bits(), pb.energy_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn plan_set_spans_multiple_schemes() {
+        let set = Planner::new(SearchSpace::full(0.05)).plan_set(&mixed_input(46));
+        let mut schemes: Vec<String> = Vec::new();
+        for p in &set.points {
+            for s in p.config.scheme_names() {
+                if !schemes.contains(&s) {
+                    schemes.push(s);
+                }
+            }
+        }
+        assert!(
+            schemes.len() >= 2,
+            "hybrid front should span ≥ 2 schemes, got {schemes:?}"
+        );
     }
 
     #[test]

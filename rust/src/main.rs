@@ -4,8 +4,9 @@
 //!   calibrate [--model M] [--force]      run the Fig.-3 pipeline (cached)
 //!   report    [--all|--table N|--figure N|--area]   regenerate exhibits
 //!   simulate                             accelerator comparison (Figs. 8/9)
-//!   serve     [--models a,b,c] [--requests N] [--backend KIND]
+//!   serve     [--models a,b,c] [--requests N] [--backend KIND] [--plan-policy P]
 //!   plans     list | show <model> [--version V] | diff <model> <v1> <v2>
+//!             | build <model> [--thr-w T] | front <model>
 //!   swap      <model> [--thr-w T] [--requests N]   hot-swap demo under load
 //!   infer     [--model M] [--index I]    one PJRT inference from artifacts
 
@@ -16,12 +17,12 @@ use dnateq::coordinator::{
 };
 use dnateq::dataset::{ImageDataset, SeqDataset};
 use dnateq::dnateq::{
-    config_for_threshold, diff_plans, render_plan, CalibrationOptions, PlanStore, QuantConfig,
-    SearchOptions,
+    config_for_threshold, diff_plans, render_front, render_plan, CalibrationInput,
+    CalibrationOptions, PlanPolicy, PlanStore, Planner, QuantConfig, SearchOptions, SearchSpace,
 };
 use dnateq::nn::{
-    collect_image_calibration, eval::ImageModel, AlexNetMini, ExecPlan, ResNetMini,
-    TransformerMini, WeightMap,
+    collect_image_calibration, collect_seq_calibration, eval::ImageModel, AlexNetMini, ExecPlan,
+    ResNetMini, TransformerMini, WeightMap,
 };
 use dnateq::report::{calibrate_or_load, tables, CalibOutcome, MODELS};
 use dnateq::runtime::Runtime;
@@ -166,6 +167,35 @@ fn plan_for(model: &str) -> Result<QuantConfig> {
     Ok(calibrate_or_load(model, false, &calib_options(true))?.config)
 }
 
+/// Calibration inputs for the hybrid planner: trained weights + the
+/// calib split when the artifacts exist, reproducible synthetic
+/// otherwise (mirrors how `swap` builds its recalibration inputs).
+fn calibration_input_for(model: &str) -> Result<CalibrationInput> {
+    let images = || {
+        ImageDataset::load(artifact_path("data"), "calib")
+            .unwrap_or_else(|_| ImageDataset::synthetic(8, 0xCA11B))
+    };
+    Ok(match model {
+        "alexnet_mini" => collect_image_calibration(&alexnet_model(), &images().take(4)),
+        "resnet_mini" => collect_image_calibration(&resnet_model(), &images().take(4)),
+        "transformer_mini" => {
+            let calib = SeqDataset::load(artifact_path("data"), "calib")
+                .unwrap_or_else(|_| SeqDataset::synthetic(8, 0xCA11B));
+            collect_seq_calibration(&transformer_model(), &calib.take(4))
+        }
+        other => bail!("no calibration wiring for model `{other}`"),
+    })
+}
+
+/// `--thr-w` accepts a fraction (`0.08`) or percent (`8` / `8%`).
+fn parse_thr_w(raw: &str) -> Result<f64> {
+    let mut thr: f64 = raw.trim_end_matches('%').parse()?;
+    if thr >= 1.0 {
+        thr /= 100.0;
+    }
+    Ok(thr)
+}
+
 // ---------------------------------------------------------------------
 // serve — multi-model registry serving.
 // ---------------------------------------------------------------------
@@ -307,6 +337,7 @@ fn serve(args: &Args) -> Result<()> {
     let kind = args.get("backend").unwrap_or("engine");
     validate_backend(kind)?;
     let admission = parse_admission(args.get("admission").unwrap_or("block"))?;
+    let policy = args.get("plan-policy").map(PlanPolicy::parse).transpose()?;
     let spec = match (args.get("models"), args.get("model")) {
         (Some(_), Some(_)) => bail!("pass either --models or --model, not both"),
         (Some(list), None) => list.to_string(),
@@ -336,6 +367,28 @@ fn serve(args: &Args) -> Result<()> {
         models.len(),
         models.join(", ")
     );
+
+    // SLA-driven startup plan selection: resolve the policy against each
+    // model's stored Pareto front and hot-swap the winning version in
+    // (counted by the per-model swap metric). Fixed-plan engines (pjrt,
+    // the translator) cannot swap and are skipped with a notice.
+    if let Some(policy) = policy {
+        let store = PlanStore::open_default();
+        for m in &models {
+            if registry.plan_label(m).is_err() {
+                eprintln!("[policy] {m}: fixed-plan engine; --plan-policy skipped");
+                continue;
+            }
+            let (v, cfg) = registry.apply_policy(m, &store, policy)?;
+            println!(
+                "[policy] {m}: {} → plan v{v} (avg bits {:.2}, schemes {}, checksum {})",
+                policy.name(),
+                cfg.avg_bitwidth(),
+                cfg.scheme_names().join("+"),
+                cfg.checksum_hex()
+            );
+        }
+    }
 
     // One typed client per model (the single- and multi-model API);
     // interleave traffic round-robin across models so every batcher
@@ -449,7 +502,32 @@ fn plans(args: &Args) -> Result<()> {
                 }
             }
         }
-        Some(other) => bail!("unknown plans action `{other}`; use list, show or diff"),
+        Some("build") => {
+            let model = canonical_model(
+                args.positional(1)
+                    .or(args.get("model"))
+                    .context("plans build <model> [--thr-w T]")?,
+            )?;
+            let thr = parse_thr_w(args.get("thr-w").unwrap_or("0.04"))?;
+            let input = calibration_input_for(model)?;
+            let set = Planner::new(SearchSpace::full(thr)).plan_set(&input);
+            let front = store.save_front(&set)?;
+            print!("{}", render_front(&front));
+        }
+        Some("front") => {
+            let model = canonical_model(
+                args.positional(1).or(args.get("model")).context("plans front <model>")?,
+            )?;
+            match store.load_front(model)? {
+                Some(front) => print!("{}", render_front(&front)),
+                None => bail!(
+                    "no stored front for `{model}`; run `repro plans build {model}` first"
+                ),
+            }
+        }
+        Some(other) => {
+            bail!("unknown plans action `{other}`; use list, show, diff, build or front")
+        }
     }
     Ok(())
 }
@@ -496,10 +574,7 @@ fn swap(args: &Args) -> Result<()> {
     if model == "transformer_mini" {
         bail!("plan hot-swap is wired for the image classifiers (alexnet_mini, resnet_mini)");
     }
-    let mut thr: f64 = args.get("thr-w").unwrap_or("0.08").trim_end_matches('%').parse()?;
-    if thr >= 1.0 {
-        thr /= 100.0; // `--thr-w 8` means 8%
-    }
+    let thr = parse_thr_w(args.get("thr-w").unwrap_or("0.08"))?;
     let n: usize = args.get("requests").unwrap_or("96").parse()?;
 
     // Calibration inputs: trained weights + real calib split when the
@@ -667,8 +742,10 @@ fn run() -> Result<()> {
                  report    --all | --table N | --figure N | --area [--quick]\n  \
                  simulate  [--quick]\n  \
                  serve     [--models a,b,c] [--backend engine|quantized|pjrt] [--requests N]\n            \
-                 [--admission block|reject|shed]\n  \
-                 plans     list | show <model> [--version V] | diff <model> <v1> <v2>\n  \
+                 [--admission block|reject|shed]\n            \
+                 [--plan-policy max-accuracy|min-bits|min-energy]\n  \
+                 plans     list | show <model> [--version V] | diff <model> <v1> <v2>\n            \
+                 | build <model> [--thr-w T] | front <model>\n  \
                  swap      <model> [--thr-w T] [--requests N]\n  \
                  infer     [--model alexnet|resnet] [--index I]"
             );

@@ -9,7 +9,7 @@
 
 use super::linalg::{gemm, gemm_bt, gemm_bt_par, gemm_par, im2col, im2col_batch};
 use super::trace::TraceStore;
-use crate::dnateq::{ExpQuantParams, LayerKind, QuantConfig, UniformParams};
+use crate::dnateq::{ExpQuantParams, LayerKind, PwlParams, QuantConfig, Scheme, UniformParams};
 use crate::tensor::Tensor;
 use std::collections::HashMap;
 
@@ -31,6 +31,10 @@ pub enum ActQuant {
     /// Uniform symmetric at `n` bits, Δ calibrated dynamically per input
     /// (how both the INT8 baseline and Table IV's uniform rows work).
     Uniform(u8),
+    /// Piecewise-linear at `n_bits` with `breaks` interior breakpoints,
+    /// edges calibrated dynamically per input (like [`ActQuant::Uniform`],
+    /// the quantizer sees exactly the tensor it encodes).
+    Pwl { n_bits: u8, breaks: u8 },
 }
 
 impl ActQuant {
@@ -39,23 +43,26 @@ impl ActQuant {
             ActQuant::None => None,
             ActQuant::Exp(p) => Some(p.roundtrip(x)),
             ActQuant::Uniform(n) => Some(UniformParams::calibrate(x, *n).roundtrip(x)),
+            ActQuant::Pwl { n_bits, breaks } => {
+                Some(PwlParams::calibrate(x, *n_bits, *breaks).roundtrip(x))
+            }
         }
     }
 }
 
 /// Apply activation fake-quantization independently to every
 /// leading-axis slice of `x` (each slice is one request/image of shape
-/// `slice_shape`). Dynamically calibrated quantizers ([`ActQuant::Uniform`])
-/// then see exactly the tensor they would in the batch-1 path, so batched
-/// execution stays bit-identical to per-sample execution and one
-/// request's range never rescales a co-batched request. Fixed-parameter
-/// exponential quantization is element-wise, so it takes the copy-free
-/// whole-batch path — already bit-identical per slice.
+/// `slice_shape`). Dynamically calibrated quantizers ([`ActQuant::Uniform`]
+/// and [`ActQuant::Pwl`]) then see exactly the tensor they would in the
+/// batch-1 path, so batched execution stays bit-identical to per-sample
+/// execution and one request's range never rescales a co-batched request.
+/// Fixed-parameter exponential quantization is element-wise, so it takes
+/// the copy-free whole-batch path — already bit-identical per slice.
 fn quantize_per_slice(act: &ActQuant, x: &Tensor, slice_shape: &[usize]) -> Option<Tensor> {
     match act {
         ActQuant::None => None,
         ActQuant::Exp(_) => act.apply(x),
-        ActQuant::Uniform(_) => {
+        ActQuant::Uniform(_) | ActQuant::Pwl { .. } => {
             let n = x.shape()[0];
             let mut data = Vec::with_capacity(x.len());
             for i in 0..n {
@@ -105,11 +112,13 @@ impl ExecPlan {
     }
 
     /// DNA-TEQ plan: fake-quantize every calibrated layer with its
-    /// exponential parameters.
+    /// exponential parameters. Layers carrying a non-exponential scheme
+    /// are skipped (their α/β are not [`ExpQuantParams`]); hybrid
+    /// configs belong to [`ExecPlan::for_config`].
     pub fn exp(model: &dyn HasQuantLayers, cfg: &QuantConfig) -> Self {
         let mut plan = Self::default();
         for lr in model.quant_layers() {
-            if let Some(lq) = cfg.layer(lr.name) {
+            if let Some(lq) = cfg.layer(lr.name).filter(|l| l.scheme == Scheme::Exp) {
                 plan.insert(
                     lr.name,
                     LayerExec {
@@ -117,6 +126,44 @@ impl ExecPlan {
                         act: ActQuant::Exp(lq.a_params()),
                     },
                 );
+            }
+        }
+        plan
+    }
+
+    /// Hybrid plan: every calibrated layer fake-quantized with **its
+    /// own scheme** — the serving-side realization of a [`PlanSet`]
+    /// front point. Exponential layers replay their stored α/β/base;
+    /// uniform and piecewise-linear layers re-calibrate their grids
+    /// from the actual weights at the stored bitwidth (the artifact
+    /// pins `scheme`+`n_bits`; the grid is cheap and deterministic to
+    /// rebuild, exactly like the dynamic activation path).
+    ///
+    /// [`PlanSet`]: crate::dnateq::PlanSet
+    pub fn for_config(model: &dyn HasQuantLayers, cfg: &QuantConfig) -> Self {
+        let mut plan = Self::default();
+        for lr in model.quant_layers() {
+            if let Some(lq) = cfg.layer(lr.name) {
+                let exec = match lq.scheme {
+                    Scheme::Exp => LayerExec {
+                        weights_override: Some(lq.w_params().roundtrip(lr.weights)),
+                        act: ActQuant::Exp(lq.a_params()),
+                    },
+                    Scheme::Uniform => LayerExec {
+                        weights_override: Some(
+                            UniformParams::calibrate(lr.weights, lq.n_bits).roundtrip(lr.weights),
+                        ),
+                        act: ActQuant::Uniform(lq.n_bits),
+                    },
+                    Scheme::Pwl { breaks } => LayerExec {
+                        weights_override: Some(
+                            PwlParams::calibrate(lr.weights, lq.n_bits, breaks)
+                                .roundtrip(lr.weights),
+                        ),
+                        act: ActQuant::Pwl { n_bits: lq.n_bits, breaks },
+                    },
+                };
+                plan.insert(lr.name, exec);
             }
         }
         plan
@@ -428,6 +475,7 @@ mod tests {
             layers: vec![LayerQuant {
                 name: "other".into(),
                 kind: LayerKind::Fc,
+                scheme: Scheme::Exp,
                 n_bits: 4,
                 base: 1.2,
                 weights: TensorQuant { alpha: 1.0, beta: 0.0, rmae: 0.0, elems: 1 },
@@ -443,6 +491,45 @@ mod tests {
         // and `other` is absent from the model, so the plan stays empty.
         assert!(plan.get("fc0").is_none());
         assert!(plan.get("other").is_none());
+    }
+
+    #[test]
+    fn for_config_dispatches_per_scheme() {
+        use crate::dnateq::{LayerQuant, TensorQuant};
+        let m = mk_fc(120);
+        let tq = || TensorQuant { alpha: 1.0, beta: 0.0, rmae: 0.0, elems: 1 };
+        let mk = |scheme, n_bits| QuantConfig {
+            model: "onefc".into(),
+            thr_w: 0.05,
+            layers: vec![LayerQuant {
+                name: "fc0".into(),
+                kind: LayerKind::Fc,
+                scheme,
+                n_bits,
+                base: 0.0,
+                weights: tq(),
+                acts: tq(),
+                seeded_by_weights: true,
+                rss_w: 0.0,
+                rss_a: 0.0,
+                converged: true,
+            }],
+        };
+        let uni = ExecPlan::for_config(&m, &mk(Scheme::Uniform, 8));
+        assert!(matches!(uni.get("fc0").unwrap().act, ActQuant::Uniform(8)));
+        let pwl = ExecPlan::for_config(&m, &mk(Scheme::Pwl { breaks: 1 }, 6));
+        assert!(matches!(pwl.get("fc0").unwrap().act, ActQuant::Pwl { n_bits: 6, breaks: 1 }));
+        // The exp() builder skips non-exp layers instead of misreading
+        // their α/β as exponential parameters.
+        assert!(ExecPlan::exp(&m, &mk(Scheme::Uniform, 8)).get("fc0").is_none());
+        // Both hybrid plans still track FP32 closely at their widths.
+        let mut rng = SplitMix64::new(121);
+        let x = Tensor::rand_normal(&[2, 16], 0.0, 1.0, &mut rng);
+        let want = m.fc.forward(&x, &ExecPlan::fp32(), None);
+        for plan in [&uni, &pwl] {
+            let got = m.fc.forward(&x, plan, None);
+            assert!(got.rmae(&want) < 0.08);
+        }
     }
 
     #[test]
@@ -480,9 +567,14 @@ mod tests {
         let w = Tensor::rand_normal(&[4, 3 * 9], 0.0, 0.5, &mut rng);
         let m = OneConv { conv: Conv2d::new("c", w, vec![0.5, -0.5, 0.0, 1.0], 3, 3, 2, 1) };
         let batch = Tensor::rand_normal(&[3, 3, 7, 5], 0.0, 1.0, &mut rng);
-        // Uniform act-quant calibrates dynamically per input: the batched
-        // path must still match image-at-a-time bit-for-bit.
-        for plan in [ExecPlan::fp32(), ExecPlan::int8(&m)] {
+        // Uniform and PWL act-quant calibrate dynamically per input: the
+        // batched path must still match image-at-a-time bit-for-bit.
+        let mut pwl = ExecPlan::fp32();
+        pwl.insert(
+            "c",
+            LayerExec { weights_override: None, act: ActQuant::Pwl { n_bits: 6, breaks: 1 } },
+        );
+        for plan in [ExecPlan::fp32(), ExecPlan::int8(&m), pwl] {
             let got = m.conv.forward_batch(&batch, &plan, None);
             assert_eq!(got.shape()[0], 3);
             for i in 0..3 {

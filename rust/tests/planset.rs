@@ -1,0 +1,204 @@
+//! Integration + property tests for the hybrid planner (PR: Pareto-front
+//! PlanSet + SLA plan policies).
+//!
+//! Pinned here:
+//! * every PlanSet front point round-trips **bit-exactly** through the
+//!   versioned PlanStore (checksums + per-field bit patterns), and the
+//!   persisted front index reloads with bit-identical metrics;
+//! * the front is a strictly ascending, non-dominated staircase, and the
+//!   fixture model's front spans several points and several schemes;
+//! * `apply_policy` resolves an SLA policy against the stored front and
+//!   hot-swaps the winning version into a serving registry — visible via
+//!   the per-model swap counter and the plan label.
+
+use dnateq::coordinator::{AlexNetBackend, CoordinatorConfig, ModelRegistry, Output, Payload};
+use dnateq::dataset::ImageDataset;
+use dnateq::dnateq::{
+    CalibrationInput, LayerKind, LayerTensors, PlanPolicy, PlanStore, Planner, SearchSpace,
+};
+use dnateq::nn::{collect_image_calibration, AlexNetMini};
+use dnateq::tensor::{SplitMix64, Tensor};
+use dnateq::util::prop::{for_all, PropConfig};
+use dnateq::util::TempDir;
+use std::sync::Arc;
+
+/// A small synthetic model whose layers favor different schemes: one
+/// exponential-shaped (exp codes win), one uniform-shaped (linear grids
+/// win), one heavy-tailed with outliers (pwl-friendly).
+fn fixture_input(seed: u64) -> CalibrationInput {
+    let mut rng = SplitMix64::new(seed);
+    let mut tail_w = Tensor::rand_normal(&[3072], 0.0, 0.05, &mut rng);
+    for v in tail_w.data_mut().iter_mut().step_by(97) {
+        *v *= 50.0;
+    }
+    let layers = vec![
+        LayerTensors {
+            name: "conv1".into(),
+            kind: LayerKind::Conv,
+            weights: Tensor::rand_signed_exponential(&[2048], 3.0, &mut rng),
+            acts: Tensor::rand_signed_exponential(&[4096], 0.7, &mut rng),
+            is_first: true,
+        },
+        LayerTensors {
+            name: "fc1".into(),
+            kind: LayerKind::Fc,
+            weights: Tensor::rand_uniform(&[2048], -1.0, 1.0, &mut rng),
+            acts: Tensor::rand_uniform(&[4096], 0.0, 2.0, &mut rng),
+            is_first: false,
+        },
+        LayerTensors {
+            name: "fc2".into(),
+            kind: LayerKind::Fc,
+            weights: tail_w,
+            acts: Tensor::rand_normal(&[4096], 0.0, 1.0, &mut rng),
+            is_first: false,
+        },
+    ];
+    CalibrationInput { model: "fixture".into(), layers }
+}
+
+// ---------------------------------------------------------------------
+// Front points round-trip bit-exactly through the store.
+// ---------------------------------------------------------------------
+
+#[test]
+fn property_front_points_roundtrip_bit_exactly_through_store() {
+    let dir = TempDir::new().unwrap();
+    let mut case = 0u32;
+    for_all(
+        PropConfig { cases: 3, seed: 0xF207 },
+        |rng: &mut SplitMix64, _size| rng.next_u64(),
+        |&seed| {
+            case += 1;
+            let store = PlanStore::new(dir.path().join(format!("case{case}")));
+            let set = Planner::new(SearchSpace::full(0.05)).plan_set(&fixture_input(seed));
+            let front = store.save_front(&set).map_err(|e| format!("{e:#}"))?;
+            if front.points.len() != set.points.len() {
+                return Err(format!(
+                    "front stored {} of {} points",
+                    front.points.len(),
+                    set.points.len()
+                ));
+            }
+            let reloaded = store
+                .load_front(&set.model)
+                .map_err(|e| format!("{e:#}"))?
+                .ok_or("front index missing after save")?;
+            for ((fp, rp), pp) in front.points.iter().zip(&reloaded.points).zip(&set.points) {
+                // The stored plan artifact is the exact config.
+                let stored = store.load(&set.model, fp.version).map_err(|e| format!("{e:#}"))?;
+                if stored.checksum() != pp.config.checksum() {
+                    return Err(format!("v{}: checksum drifted through store", fp.version));
+                }
+                for (la, lb) in stored.layers.iter().zip(&pp.config.layers) {
+                    if la.scheme != lb.scheme || la.n_bits != lb.n_bits {
+                        return Err(format!("layer `{}`: scheme/bits drifted", la.name));
+                    }
+                    let pairs = [
+                        (la.base, lb.base),
+                        (la.weights.alpha, lb.weights.alpha),
+                        (la.weights.beta, lb.weights.beta),
+                        (la.weights.rmae, lb.weights.rmae),
+                        (la.acts.alpha, lb.acts.alpha),
+                        (la.acts.beta, lb.acts.beta),
+                    ];
+                    for (x, y) in pairs {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!("layer `{}`: {x:?} != {y:?}", la.name));
+                        }
+                    }
+                }
+                // The reloaded index carries bit-identical metrics.
+                let metric_pairs = [
+                    (rp.rmae, pp.rmae),
+                    (rp.compression, pp.compression),
+                    (rp.avg_bits, pp.avg_bits),
+                    (rp.energy_j, pp.energy_j),
+                ];
+                for (x, y) in metric_pairs {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!("v{}: index metric {x:?} != {y:?}", fp.version));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Fixture front shape: several points, several schemes, non-dominated.
+// ---------------------------------------------------------------------
+
+#[test]
+fn fixture_front_spans_points_and_schemes() {
+    let set = Planner::new(SearchSpace::full(0.05)).plan_set(&fixture_input(0xF1));
+    assert!(set.points.len() >= 3, "front has only {} point(s)", set.points.len());
+    let mut schemes: Vec<String> = Vec::new();
+    for p in &set.points {
+        for s in p.config.scheme_names() {
+            if !schemes.contains(&s) {
+                schemes.push(s);
+            }
+        }
+    }
+    assert!(schemes.len() >= 2, "front should span ≥ 2 schemes, got {schemes:?}");
+    for w in set.points.windows(2) {
+        assert!(w[0].rmae < w[1].rmae, "front not strictly ascending in rmae");
+        assert!(w[0].compression < w[1].compression, "front not ascending in compression");
+    }
+    for p in &set.points {
+        p.config.validate().unwrap();
+        assert!(p.energy_j > 0.0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// SLA policy → stored front → hot-swap into a serving registry.
+// ---------------------------------------------------------------------
+
+#[test]
+fn policies_swap_distinct_front_versions_into_serving() {
+    let model = AlexNetMini::random(907);
+    let data = ImageDataset::synthetic(6, 908);
+    let input = collect_image_calibration(&model, &data.take(2));
+    let set = Planner::new(SearchSpace::full(0.08)).plan_set(&input);
+    assert!(set.points.len() >= 2, "need a non-trivial front, got {} point(s)", set.points.len());
+
+    let dir = TempDir::new().unwrap();
+    let store = PlanStore::new(dir.path());
+    let front = store.save_front(&set).unwrap();
+
+    let registry = ModelRegistry::new();
+    registry
+        .register_swappable(
+            &set.model,
+            Arc::new(AlexNetBackend::fp32(model, "alexnet")),
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+    assert_eq!(registry.plan_label(&set.model).unwrap(), "fp32");
+
+    let (v_acc, cfg_acc) =
+        registry.apply_policy(&set.model, &store, PlanPolicy::MaxAccuracy).unwrap();
+    assert_eq!(registry.metrics(&set.model).unwrap().swaps, 1);
+    let label_acc = registry.plan_label(&set.model).unwrap();
+    assert!(label_acc.contains(&cfg_acc.checksum_hex()), "label: {label_acc}");
+
+    let (v_bits, cfg_bits) =
+        registry.apply_policy(&set.model, &store, PlanPolicy::MinBits).unwrap();
+    assert_eq!(registry.metrics(&set.model).unwrap().swaps, 2);
+    assert_ne!(v_acc, v_bits, "policies must pick different front versions");
+    assert!(cfg_bits.avg_bitwidth() < cfg_acc.avg_bitwidth());
+    assert_ne!(registry.plan_label(&set.model).unwrap(), label_acc);
+
+    // The registry installed exactly what the front index selects.
+    assert_eq!(front.select(PlanPolicy::MaxAccuracy).unwrap().version, v_acc);
+    assert_eq!(front.select(PlanPolicy::MinBits).unwrap().version, v_bits);
+
+    // The hybrid plan serves requests after the swap.
+    let resp = registry.submit_wait(&set.model, Payload::Image(data.image(0))).unwrap();
+    assert!(matches!(resp.output, Output::ClassId(k) if k < 10), "{:?}", resp.output);
+
+    registry.shutdown_and_drain();
+}

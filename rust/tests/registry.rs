@@ -15,7 +15,7 @@ use dnateq::coordinator::{
 };
 use dnateq::dataset::ImageDataset;
 use dnateq::dnateq::{
-    config_for_threshold, LayerKind, LayerQuant, PlanStore, QuantConfig, SearchOptions,
+    config_for_threshold, LayerKind, LayerQuant, PlanStore, QuantConfig, Scheme, SearchOptions,
     TensorQuant,
 };
 use dnateq::nn::{collect_image_calibration, AlexNetMini};
@@ -46,6 +46,11 @@ fn random_config(rng: &mut SplitMix64, size: usize) -> QuantConfig {
         .map(|i| LayerQuant {
             name: format!("layer{i}"),
             kind: if rng.next_below(2) == 0 { LayerKind::Conv } else { LayerKind::Fc },
+            scheme: match rng.next_below(3) {
+                0 => Scheme::Exp,
+                1 => Scheme::Uniform,
+                _ => Scheme::Pwl { breaks: 1 + rng.next_below(3) as u8 },
+            },
             n_bits: 1 + rng.next_below(7) as u8,
             base: 1.0 + rng.next_f64().abs() * 4.0 + 1e-9,
             weights: TensorQuant {
@@ -97,7 +102,11 @@ fn assert_bit_exact(a: &QuantConfig, b: &QuantConfig) -> Result<(), String> {
                 return Err(format!("layer `{}`: {x:?} != {y:?} (bits differ)", la.name));
             }
         }
-        if la.n_bits != lb.n_bits || la.kind != lb.kind || la.name != lb.name {
+        if la.n_bits != lb.n_bits
+            || la.kind != lb.kind
+            || la.name != lb.name
+            || la.scheme != lb.scheme
+        {
             return Err(format!("layer `{}` metadata mismatch", la.name));
         }
     }
