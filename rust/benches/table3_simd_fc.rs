@@ -9,7 +9,7 @@
 
 use dnateq::artifact_path;
 use dnateq::dnateq::ExpQuantParams;
-use dnateq::expdot::{CountingFc, Int8Fc};
+use dnateq::expdot::{simd, CountingFc, Int8Fc, SimdBackend};
 use dnateq::tensor::{SplitMix64, Tensor};
 use dnateq::util::bench::{bench, black_box, write_json, BenchResult};
 
@@ -18,7 +18,12 @@ const BATCHES: [usize; 3] = [1, 8, 32];
 fn main() {
     let mut rng = SplitMix64::new(0xF00D);
     let mut results: Vec<BenchResult> = Vec::new();
-    println!("Table III bench — latency per forward call (whole batch), batch ∈ {BATCHES:?}\n");
+    let backend = simd::active_backend();
+    println!(
+        "Table III bench — latency per forward call (whole batch), batch ∈ {BATCHES:?} \
+         (simd backend: {})\n",
+        backend.name()
+    );
     for n in [1024usize, 2048, 4096] {
         let w = Tensor::rand_signed_exponential(&[n, n], 4.0, &mut rng);
         let x_cal = Tensor::rand_signed_exponential(&[1, n], 1.0, &mut rng);
@@ -32,6 +37,24 @@ fn main() {
                 (bits, CountingFc::new(&w, wp, ap, None))
             })
             .collect();
+        // Forced-scalar twins on SIMD-capable hosts, so the dispatch win
+        // is visible in one report (existing case names stay untouched
+        // for baseline compatibility).
+        let counting_scalar: Vec<(u8, CountingFc)> = if backend != SimdBackend::Scalar {
+            [3u8, 4]
+                .into_iter()
+                .map(|bits| {
+                    let wp = ExpQuantParams::init_for_tensor(&w, bits);
+                    let mut ap =
+                        ExpQuantParams { base: wp.base, alpha: 1.0, beta: 0.0, n_bits: bits };
+                    ap.refit_scale_offset(&x_cal);
+                    let fc = CountingFc::new(&w, wp, ap, None).with_backend(SimdBackend::Scalar);
+                    (bits, fc)
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         for batch in BATCHES {
             let x = Tensor::rand_signed_exponential(&[batch, n], 1.0, &mut rng);
             let r = bench(&format!("FC({n},{n}) int8 b={batch}"), 600, || {
@@ -45,6 +68,18 @@ fn main() {
             results.push(r);
             for (bits, fc) in &counting {
                 let r = bench(&format!("FC({n},{n}) dnateq {bits}-bit b={batch}"), 600, || {
+                    if batch == 1 {
+                        black_box(fc.forward(&x));
+                    } else {
+                        black_box(fc.forward_batch(&x));
+                    }
+                });
+                println!("{}", r.summary());
+                results.push(r);
+            }
+            for (bits, fc) in &counting_scalar {
+                let name = format!("FC({n},{n}) dnateq {bits}-bit b={batch} [scalar]");
+                let r = bench(&name, 600, || {
                     if batch == 1 {
                         black_box(fc.forward(&x));
                     } else {

@@ -12,7 +12,10 @@
 //!   below `--min-speedup`;
 //! * **any request fails during the sweep**: engine failures, shed,
 //!   rejected, cancelled, expired, or dropped-receiver sends must all
-//!   be zero under this healthy fixed-shape load.
+//!   be zero under this healthy fixed-shape load;
+//! * on a SIMD-capable runner, the forced-SIMD kernel cases fall below
+//!   `--min-simd-ratio` × the forced-scalar cases at any batch size —
+//!   the explicit-SIMD counting path must never lose to its fallback.
 //!
 //! ```bash
 //! cargo run --release --bin bench_gate -- \
@@ -27,9 +30,10 @@ use dnateq::coordinator::{
 };
 use dnateq::dataset::ImageDataset;
 use dnateq::dnateq::ExpQuantParams;
+use dnateq::expdot::simd::{self, SimdBackend};
 use dnateq::expdot::CountingFc;
 use dnateq::tensor::{SplitMix64, Tensor};
-use dnateq::util::bench::BenchResult;
+use dnateq::util::bench::{bench, black_box, BenchResult};
 use dnateq::util::Json;
 use std::sync::Arc;
 use std::time::Duration;
@@ -45,6 +49,10 @@ struct Opts {
     update_baseline: bool,
     tolerance: f64,
     min_speedup: f64,
+    /// SIMD/scalar median ratio floor per kernel case; slightly below
+    /// parity (0.85) so runner noise cannot fail a genuinely-equal pair,
+    /// while a real SIMD regression still trips the gate.
+    min_simd_ratio: f64,
 }
 
 fn parse_opts() -> Opts {
@@ -54,6 +62,7 @@ fn parse_opts() -> Opts {
         update_baseline: false,
         tolerance: 0.15,
         min_speedup: 0.8,
+        min_simd_ratio: 0.85,
     };
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -83,6 +92,11 @@ fn parse_opts() -> Opts {
             }
             "--min-speedup" => {
                 o.min_speedup = value(i).parse().expect("--min-speedup is a ratio, e.g. 0.8");
+                i += 2;
+            }
+            "--min-simd-ratio" => {
+                o.min_simd_ratio =
+                    value(i).parse().expect("--min-simd-ratio is a ratio, e.g. 0.85");
                 i += 2;
             }
             other => {
@@ -188,16 +202,59 @@ fn run_sweep(counters: &mut FailureCounters) -> Vec<BenchResult> {
     results
 }
 
+/// Direct scalar-vs-SIMD kernel cases: the same 4-bit 3072→256 layer as
+/// the serving sweep, benched as bare `forward_batch` calls under both
+/// forced backends at batch {1, 8, 32}. On scalar-only runners the
+/// "simd" instance *is* scalar, so baseline case names always resolve
+/// and the ratio sits at ~1. Appends all six cases to `results` and
+/// returns the per-batch speedups as the report's `simd` section.
+fn run_kernel_sweep(results: &mut Vec<BenchResult>) -> (Json, Vec<(usize, f64)>) {
+    let mut rng = SplitMix64::new(0xC1_BE7C);
+    let w = Tensor::rand_signed_exponential(&[OUT_FEATURES, IN_FEATURES], 3.0, &mut rng);
+    let x_cal = Tensor::rand_signed_exponential(&[1, IN_FEATURES], 1.0, &mut rng);
+    let wp = ExpQuantParams::init_for_tensor(&w, 4);
+    let mut ap = ExpQuantParams { base: wp.base, alpha: 1.0, beta: 0.0, n_bits: 4 };
+    ap.refit_scale_offset(&x_cal);
+    let best = simd::best_available();
+    let fc_scalar = CountingFc::new(&w, wp, ap, None).with_backend(SimdBackend::Scalar);
+    let fc_simd = CountingFc::new(&w, wp, ap, None).with_backend(best);
+
+    let mut info = Json::obj();
+    info.set("active", best.name());
+    let mut ratios = Vec::new();
+    for batch in SWEEP {
+        let x = Tensor::rand_signed_exponential(&[batch, IN_FEATURES], 1.0, &mut rng);
+        let sname = format!("ci-fc-kernel {IN_FEATURES}x{OUT_FEATURES} scalar b={batch}");
+        let vname = format!("ci-fc-kernel {IN_FEATURES}x{OUT_FEATURES} simd b={batch}");
+        let rs = bench(&sname, 200, || {
+            black_box(fc_scalar.forward_batch(&x));
+        });
+        let rv = bench(&vname, 200, || {
+            black_box(fc_simd.forward_batch(&x));
+        });
+        let ratio = rs.median.as_secs_f64() / rv.median.as_secs_f64().max(1e-12);
+        println!("{}", rs.summary());
+        println!("{}", rv.summary());
+        println!("kernel simd speedup (b={batch}, backend {}): {ratio:.2}x", best.name());
+        info.set(&format!("speedup_b{batch}"), ratio);
+        ratios.push((batch, ratio));
+        results.push(rs);
+        results.push(rv);
+    }
+    (info, ratios)
+}
+
 fn median_of<'a>(results: &'a [BenchResult], suffix: &str) -> Option<&'a BenchResult> {
     results.iter().find(|r| r.name.ends_with(suffix))
 }
 
 /// Encode a run as the gate's report JSON: timing cases + the failure
-/// counters the gate asserts on.
-fn report_json(results: &[BenchResult], counters: &FailureCounters) -> Json {
+/// counters the gate asserts on + the scalar-vs-SIMD kernel section.
+fn report_json(results: &[BenchResult], counters: &FailureCounters, simd_info: &Json) -> Json {
     let mut o = Json::obj();
     o.set("cases", Json::Arr(results.iter().map(|r| r.to_json()).collect()))
-        .set("counters", counters.to_json());
+        .set("counters", counters.to_json())
+        .set("simd", simd_info.clone());
     o
 }
 
@@ -236,7 +293,8 @@ fn load_baseline(path: &str) -> Vec<(String, f64)> {
 fn main() {
     let opts = parse_opts();
     let mut counters = FailureCounters::default();
-    let results = run_sweep(&mut counters);
+    let mut results = run_sweep(&mut counters);
+    let (simd_info, simd_ratios) = run_kernel_sweep(&mut results);
 
     // Machine-independent guard: the batched hot path must actually beat
     // (or at minimum match, within tolerance) unbatched serving.
@@ -248,7 +306,7 @@ fn main() {
     println!("failure counters: {}", counters.describe());
 
     if let Some(out) = &opts.out {
-        write_report(out, &report_json(&results, &counters));
+        write_report(out, &report_json(&results, &counters, &simd_info));
         println!("JSON -> {out}");
     }
 
@@ -265,10 +323,23 @@ fn main() {
             counters.describe()
         ));
     }
+    // Only meaningful where the backends actually differ: on scalar-only
+    // runners both kernel instances ran the same code and the ratio is
+    // pure noise, so the SIMD floor is not enforced there.
+    if simd::best_available() != SimdBackend::Scalar {
+        for (batch, ratio) in &simd_ratios {
+            if *ratio < opts.min_simd_ratio {
+                failures.push(format!(
+                    "SIMD kernel at b={batch} ran {ratio:.2}x vs scalar, below the {:.2}x floor",
+                    opts.min_simd_ratio
+                ));
+            }
+        }
+    }
 
     if let Some(baseline_path) = &opts.baseline {
         if opts.update_baseline {
-            write_report(baseline_path, &report_json(&results, &counters));
+            write_report(baseline_path, &report_json(&results, &counters, &simd_info));
             println!("baseline refreshed -> {baseline_path}");
         } else {
             for (name, base_ms) in load_baseline(baseline_path) {

@@ -83,6 +83,14 @@ impl ExpDotContext {
         4 * ((self.pair_table_len() + 1) + 2 * (self.single_table_len() + 1))
     }
 
+    /// Largest legal pre-shifted code (`2·R_max`, always < `0xFF`, the
+    /// zero marker) — the invariant the SIMD kernels' debug asserts
+    /// check before indexing count tables.
+    #[inline]
+    pub fn max_shifted_code(&self) -> u8 {
+        (2 * self.r_max) as u8
+    }
+
     /// Index into the pair table for an exponent sum `a + w`.
     #[inline]
     pub fn pair_index(&self, code_sum: i32) -> usize {

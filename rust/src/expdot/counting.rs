@@ -8,7 +8,8 @@
 //! nibble-packed weights for 3-bit layers.
 
 use super::context::ExpDotContext;
-use super::pack::{nibble_lut, pack_codes, shift_codes, PackedCodes};
+use super::pack::{nibble_lut, pack_codes, PackedCodes};
+use super::simd::{self, SimdBackend};
 use crate::dnateq::{ExpQuantParams, QuantizedTensor, ZERO_CODE_SENTINEL};
 use crate::tensor::Tensor;
 use crate::util::parallel::parallel_row_blocks;
@@ -45,6 +46,50 @@ enum WeightStore {
     Packed(PackedCodes),
 }
 
+/// Reusable decode buffers for one weight row of a [`WeightStore::Packed`]
+/// layer (unused by the byte layout, which hands out slices directly).
+#[derive(Default)]
+struct RowScratch {
+    plus: Vec<u8>,
+    signs: Vec<i8>,
+}
+
+impl WeightStore {
+    /// Weight row `j` as parallel pre-shifted-code / sign slices — the
+    /// one representation [`simd::accumulate_row`] consumes. Packed rows
+    /// decode into `scratch` once per row (amortized across the batch
+    /// tile); zero/invalid nibbles decode to `(0xFF, 0)`, which the
+    /// accumulator masks out exactly like byte-layout zeros.
+    fn row<'a>(
+        &'a self,
+        j: usize,
+        inf: usize,
+        lut: &[(u8, i8); 16],
+        backend: SimdBackend,
+        scratch: &'a mut RowScratch,
+    ) -> (&'a [u8], &'a [i8]) {
+        match self {
+            WeightStore::Bytes { plus, signs } => {
+                (&plus[j * inf..(j + 1) * inf], &signs[j * inf..(j + 1) * inf])
+            }
+            WeightStore::Packed(packed) => {
+                let row_off = j * inf;
+                debug_assert!(row_off % 2 == 0, "in_features must keep rows byte-aligned");
+                let row_bytes = &packed.bytes[row_off / 2..(row_off + inf).div_ceil(2)];
+                simd::decode_nibbles(
+                    backend,
+                    row_bytes,
+                    inf,
+                    lut,
+                    &mut scratch.plus,
+                    &mut scratch.signs,
+                );
+                (&scratch.plus, &scratch.signs)
+            }
+        }
+    }
+}
+
 /// FC layer executed entirely in the exponential domain (§IV).
 ///
 /// Weights are quantized offline at construction; activations are
@@ -56,6 +101,9 @@ pub struct CountingFc {
     pub out_features: usize,
     pub in_features: usize,
     bias: Option<Vec<f32>>,
+    /// SIMD backend captured at construction ([`simd::active_backend`]);
+    /// override per instance with [`CountingFc::with_backend`].
+    backend: SimdBackend,
 }
 
 /// Output neurons processed per activation pass. Each neuron needs a
@@ -105,7 +153,22 @@ impl CountingFc {
                 .collect();
             WeightStore::Bytes { plus, signs: q.signs }
         };
-        Self { ctx, store, out_features, in_features, bias }
+        let backend = simd::active_backend();
+        Self { ctx, store, out_features, in_features, bias, backend }
+    }
+
+    /// Rebind this layer to `backend` (must be available on this host).
+    /// Lets scalar and SIMD instances coexist in one process — the
+    /// equivalence property suite and `bench_gate` compare them live.
+    pub fn with_backend(mut self, backend: SimdBackend) -> Self {
+        assert!(simd::available(backend), "backend {} unavailable on this CPU", backend.name());
+        self.backend = backend;
+        self
+    }
+
+    /// The SIMD backend this instance dispatches to.
+    pub fn backend(&self) -> SimdBackend {
+        self.backend
     }
 
     pub fn context(&self) -> &ExpDotContext {
@@ -163,7 +226,8 @@ impl CountingFc {
         }
         // One quantization + shift pass per batch (runtime Quantizer).
         let qa = self.ctx.a_params.quantize(x);
-        let a_plus = shift_codes(&qa.codes, self.ctx.r_max);
+        let a_plus = simd::shift_codes(self.backend, &qa.codes, self.ctx.r_max);
+        debug_assert!(a_plus.iter().all(|&p| p == 0xFF || p <= self.ctx.max_shifted_code()));
 
         let macs = batch * self.out_features * self.in_features;
         let out = parallel_row_blocks(self.out_features, batch, macs, PAR_MIN_MACS, |j0, j1| {
@@ -195,6 +259,8 @@ impl CountingFc {
         let mut wcnt = vec![0i32; sets * (slen + 1)];
         let mut acnt = vec![0i32; sets * (slen + 1)];
 
+        let lut = nibble_lut(self.ctx.r_max);
+        let mut scratch = RowScratch::default();
         let width = j1 - j0;
         let mut out = vec![0.0f32; batch * width];
         let mut b0 = 0usize;
@@ -209,68 +275,26 @@ impl CountingFc {
                 wcnt[..live * (slen + 1)].fill(0);
                 acnt[..live * (slen + 1)].fill(0);
 
-                match &self.store {
-                    WeightStore::Bytes { plus, signs } => {
-                        for (jj, j) in (t0..tn).enumerate() {
-                            let wrow = &plus[j * inf..(j + 1) * inf];
-                            let srow = &signs[j * inf..(j + 1) * inf];
-                            for i in 0..inf {
-                                let wp = unsafe { *wrow.get_unchecked(i) } as usize;
-                                if wp == 0xFF {
-                                    continue;
-                                }
-                                let ws = unsafe { *srow.get_unchecked(i) } as i32;
-                                for bb in 0..bt {
-                                    let ai = (b0 + bb) * inf + i;
-                                    let ap = unsafe { *a_plus.get_unchecked(ai) } as usize;
-                                    if ap == 0xFF {
-                                        continue;
-                                    }
-                                    let s = (unsafe { *a_signs.get_unchecked(ai) } as i32) * ws;
-                                    let set = jj * bt + bb;
-                                    unsafe {
-                                        *pair.get_unchecked_mut(set * (plen + 1) + ap + wp) += s;
-                                        *wcnt.get_unchecked_mut(set * (slen + 1) + wp) += s;
-                                        *acnt.get_unchecked_mut(set * (slen + 1) + ap) += s;
-                                    }
-                                }
-                            }
-                        }
-                    }
-                    WeightStore::Packed(packed) => {
-                        let lut = nibble_lut(self.ctx.r_max);
-                        for (jj, j) in (t0..tn).enumerate() {
-                            let row_off = j * inf;
-                            debug_assert!(
-                                row_off % 2 == 0,
-                                "in_features must keep rows byte-aligned"
-                            );
-                            let row_bytes = &packed.bytes[row_off / 2..(row_off + inf).div_ceil(2)];
-                            for i in 0..inf {
-                                let byte = unsafe { *row_bytes.get_unchecked(i / 2) };
-                                let nib = (byte >> ((i & 1) * 4)) & 0xF;
-                                let (wp, wsign) = unsafe { *lut.get_unchecked(nib as usize) };
-                                if wsign == 0 {
-                                    continue;
-                                }
-                                let wp = wp as usize;
-                                for bb in 0..bt {
-                                    let ai = (b0 + bb) * inf + i;
-                                    let ap = unsafe { *a_plus.get_unchecked(ai) } as usize;
-                                    if ap == 0xFF {
-                                        continue;
-                                    }
-                                    let s = (unsafe { *a_signs.get_unchecked(ai) } as i32)
-                                        * (wsign as i32);
-                                    let set = jj * bt + bb;
-                                    unsafe {
-                                        *pair.get_unchecked_mut(set * (plen + 1) + ap + wp) += s;
-                                        *wcnt.get_unchecked_mut(set * (slen + 1) + wp) += s;
-                                        *acnt.get_unchecked_mut(set * (slen + 1) + ap) += s;
-                                    }
-                                }
-                            }
-                        }
+                // Each weight row is materialized once (packed rows decode
+                // into scratch) and swept against every batch column of the
+                // tile while it is L1-hot; counter updates are order-free
+                // i32 adds, so any sweep order is bit-identical.
+                for (jj, j) in (t0..tn).enumerate() {
+                    let (wrow, srow) = self.store.row(j, inf, &lut, self.backend, &mut scratch);
+                    for bb in 0..bt {
+                        let ai0 = (b0 + bb) * inf;
+                        let set = jj * bt + bb;
+                        let (pb, sb) = (set * (plen + 1), set * (slen + 1));
+                        simd::accumulate_row(
+                            self.backend,
+                            wrow,
+                            srow,
+                            &a_plus[ai0..ai0 + inf],
+                            &a_signs[ai0..ai0 + inf],
+                            &mut pair[pb..pb + plen],
+                            &mut wcnt[sb..sb + slen],
+                            &mut acnt[sb..sb + slen],
+                        );
                     }
                 }
 
@@ -304,16 +328,18 @@ impl CountingFc {
         let r_max = self.ctx.r_max;
         // Pre-shift activation codes once: `a + R_max` (0xFF = zero), the
         // same trick the Input Shift-Reg plays in hardware (§V-B).
-        let a_plus = shift_codes(a_codes, r_max);
+        let a_plus = simd::shift_codes(self.backend, a_codes, r_max);
 
         let plen = self.ctx.pair_table_len();
         let slen = self.ctx.single_table_len();
         // Counter block: NEURON_BLOCK × (pair + w + a) tables plus one
-        // trash slot per table (branchless zero handling), L1-resident.
+        // trash slot per table, L1-resident.
         let mut pair = vec![0i32; NEURON_BLOCK * (plen + 1)];
         let mut wcnt = vec![0i32; NEURON_BLOCK * (slen + 1)];
         let mut acnt = vec![0i32; NEURON_BLOCK * (slen + 1)];
 
+        let lut = nibble_lut(r_max);
+        let mut scratch = RowScratch::default();
         let mut j0 = 0usize;
         while j0 < self.out_features {
             let jn = (j0 + NEURON_BLOCK).min(self.out_features);
@@ -322,64 +348,22 @@ impl CountingFc {
             wcnt[..width * (slen + 1)].fill(0);
             acnt[..width * (slen + 1)].fill(0);
 
-            match &self.store {
-                WeightStore::Bytes { plus, signs } => {
-                    for (jj, j) in (j0..jn).enumerate() {
-                        let wrow = &plus[j * self.in_features..(j + 1) * self.in_features];
-                        let srow = &signs[j * self.in_features..(j + 1) * self.in_features];
-                        let p = &mut pair[jj * (plen + 1)..(jj + 1) * (plen + 1)];
-                        let wc = &mut wcnt[jj * (slen + 1)..(jj + 1) * (slen + 1)];
-                        let ac = &mut acnt[jj * (slen + 1)..(jj + 1) * (slen + 1)];
-                        // Inner loop of the §IV hot spot. A branchless
-                        // trash-slot variant was measured 8% slower (see
-                        // EXPERIMENTS.md §Perf): zero-skip branches are
-                        // well-predicted and skipping saves table RMWs.
-                        for i in 0..self.in_features {
-                            let ap = a_plus[i] as usize;
-                            let wp = unsafe { *wrow.get_unchecked(i) } as usize;
-                            if ap == 0xFF || wp == 0xFF {
-                                continue;
-                            }
-                            let s =
-                                (a_signs[i] as i32) * (unsafe { *srow.get_unchecked(i) } as i32);
-                            unsafe {
-                                *p.get_unchecked_mut(ap + wp) += s;
-                                *wc.get_unchecked_mut(wp) += s;
-                                *ac.get_unchecked_mut(ap) += s;
-                            }
-                        }
-                    }
-                }
-                WeightStore::Packed(packed) => {
-                    // Extended LUT: invalid/zero nibbles map to the trash
-                    // slot with sign 0 — fully branchless on the weight
-                    // side too.
-                    let lut = nibble_lut(r_max);
-                    for (jj, j) in (j0..jn).enumerate() {
-                        let row_off = j * self.in_features;
-                        let p = &mut pair[jj * (plen + 1)..(jj + 1) * (plen + 1)];
-                        let wc = &mut wcnt[jj * (slen + 1)..(jj + 1) * (slen + 1)];
-                        let ac = &mut acnt[jj * (slen + 1)..(jj + 1) * (slen + 1)];
-                        debug_assert!(row_off % 2 == 0, "in_features must keep rows byte-aligned");
-                        let row_end = (row_off + self.in_features).div_ceil(2);
-                        let row_bytes = &packed.bytes[row_off / 2..row_end];
-                        for i in 0..self.in_features {
-                            let ap = a_plus[i] as usize;
-                            let byte = unsafe { *row_bytes.get_unchecked(i / 2) };
-                            let nib = (byte >> ((i & 1) * 4)) & 0xF;
-                            let (wp, wsign) = unsafe { *lut.get_unchecked(nib as usize) };
-                            if ap == 0xFF || wsign == 0 {
-                                continue;
-                            }
-                            let s = (a_signs[i] as i32) * (wsign as i32);
-                            unsafe {
-                                *p.get_unchecked_mut(ap + wp as usize) += s;
-                                *wc.get_unchecked_mut(wp as usize) += s;
-                                *ac.get_unchecked_mut(ap) += s;
-                            }
-                        }
-                    }
-                }
+            // Inner loop of the §IV hot spot, one weight row per counter
+            // set (see `simd::accumulate_row` for the scalar/AVX2 pair).
+            for (jj, j) in (j0..jn).enumerate() {
+                let (wrow, srow) =
+                    self.store.row(j, self.in_features, &lut, self.backend, &mut scratch);
+                let (pb, sb) = (jj * (plen + 1), jj * (slen + 1));
+                simd::accumulate_row(
+                    self.backend,
+                    wrow,
+                    srow,
+                    &a_plus,
+                    a_signs,
+                    &mut pair[pb..pb + plen],
+                    &mut wcnt[sb..sb + slen],
+                    &mut acnt[sb..sb + slen],
+                );
             }
 
             // Post-processing (Dequantizer stage): short float pass —
@@ -418,6 +402,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: 512-wide dequantized dot sweep
     fn reference_dot_equals_dequantized_dot() {
         let mut rng = SplitMix64::new(81);
         for n in [3u8, 4, 5, 7] {
@@ -435,6 +420,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: full matmul cross-check
     fn counting_fc_matches_dequantized_matmul() {
         let mut rng = SplitMix64::new(82);
         for n in [3u8, 4, 6] {
@@ -513,6 +499,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: 20-case property sweep
     fn forward_batch_bit_identical_to_stacked_forward() {
         use crate::util::prop::{for_all, PropConfig};
         for_all(
@@ -550,6 +537,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: per-pair oracle over the whole batch
     fn forward_batch_matches_reference_dot_within_bound() {
         // The blocked batched kernel against the per-pair Eq.-8 oracle
         // (§IV error bound: short-float reconstruction noise only).
@@ -576,6 +564,25 @@ mod tests {
     }
 
     #[test]
+    fn forced_scalar_backend_is_bit_identical() {
+        // Both backends (and both weight layouts: packed 3-bit, bytes
+        // 5-bit) must agree bitwise; on scalar-only hosts the "best"
+        // instance simply is scalar and the check is an identity.
+        let mut rng = SplitMix64::new(87);
+        for n in [3u8, 5] {
+            let w = Tensor::rand_signed_exponential(&[7, 48], 2.0, &mut rng);
+            let x = Tensor::rand_signed_exponential(&[3, 48], 0.9, &mut rng);
+            let (wp, ap) = shared_params(&w, &x, n);
+            let best = CountingFc::new(&w, wp, ap, None)
+                .with_backend(crate::expdot::simd::best_available());
+            let scalar = CountingFc::new(&w, wp, ap, None)
+                .with_backend(crate::expdot::simd::SimdBackend::Scalar);
+            assert_eq!(scalar.forward_batch(&x).data(), best.forward_batch(&x).data());
+            assert_eq!(scalar.forward(&x).data(), best.forward(&x).data());
+        }
+    }
+
+    #[test]
     fn forward_batch_handles_empty_and_single_batches() {
         let mut rng = SplitMix64::new(86);
         let w = Tensor::rand_signed_exponential(&[5, 32], 2.0, &mut rng);
@@ -589,6 +596,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: 24-case property sweep
     fn property_counting_equals_reference() {
         use crate::util::prop::{for_all, PropConfig};
         for_all(

@@ -5,6 +5,7 @@
 //! i32-accumulating GEMV with an unrolled inner loop (the portable analog
 //! of `VPDPBUSD`), then a single dequantization multiply per output.
 
+use super::simd::{self, SimdBackend};
 use crate::dnateq::UniformParams;
 use crate::tensor::Tensor;
 use crate::util::parallel::parallel_row_blocks;
@@ -20,6 +21,9 @@ pub struct Int8Fc {
     pub out_features: usize,
     pub in_features: usize,
     bias: Option<Vec<f32>>,
+    /// SIMD backend captured at construction ([`simd::active_backend`]);
+    /// override per instance with [`Int8Fc::with_backend`].
+    backend: SimdBackend,
 }
 
 impl Int8Fc {
@@ -32,7 +36,20 @@ impl Int8Fc {
         }
         let w_params = UniformParams::calibrate(weights, 8);
         let w_q = weights.data().iter().map(|&x| w_params.encode(x)).collect();
-        Self { w_q, w_params, out_features, in_features, bias }
+        let backend = simd::active_backend();
+        Self { w_q, w_params, out_features, in_features, bias, backend }
+    }
+
+    /// Rebind this layer to `backend` (must be available on this host).
+    pub fn with_backend(mut self, backend: SimdBackend) -> Self {
+        assert!(simd::available(backend), "backend {} unavailable on this CPU", backend.name());
+        self.backend = backend;
+        self
+    }
+
+    /// The SIMD backend this instance dispatches to.
+    pub fn backend(&self) -> SimdBackend {
+        self.backend
     }
 
     /// Weight storage in bytes (1 B/element).
@@ -59,7 +76,7 @@ impl Int8Fc {
             let orow = &mut out[b * self.out_features..(b + 1) * self.out_features];
             for j in 0..self.out_features {
                 let wrow = &self.w_q[j * self.in_features..(j + 1) * self.in_features];
-                orow[j] = gemv_i8(&a_q, wrow) as f32 * scale
+                orow[j] = simd::dot_i8(self.backend, &a_q, wrow) as f32 * scale
                     + self.bias.as_ref().map_or(0.0, |bb| bb[j]);
             }
         }
@@ -122,7 +139,8 @@ impl Int8Fc {
             let bias = self.bias.as_ref().map_or(0.0, |bb| bb[j]);
             for b in 0..batch {
                 let arow = &a_q[b * inf..(b + 1) * inf];
-                out[b * width + jj] = gemv_i8(arow, wrow) as f32 * scales[b] + bias;
+                let dot = simd::dot_i8(self.backend, arow, wrow) as f32;
+                out[b * width + jj] = dot * scales[b] + bias;
             }
         }
         out
@@ -166,6 +184,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy: full f32 matmul cross-check
     fn int8_fc_approximates_f32_matmul() {
         let mut rng = SplitMix64::new(92);
         let (outf, inf, batch) = (9, 257, 2);
@@ -194,6 +213,20 @@ mod tests {
     }
 
     #[test]
+    fn forced_scalar_backend_is_bit_identical() {
+        // `dot_i8` is exact i32 arithmetic under both backends, so whole
+        // forwards agree bitwise (identity on scalar-only hosts).
+        let mut rng = SplitMix64::new(93);
+        let w = Tensor::rand_normal(&[6, 37], 0.0, 0.2, &mut rng);
+        let x = Tensor::rand_uniform(&[4, 37], -1.0, 1.0, &mut rng);
+        let best = Int8Fc::new(&w, None).with_backend(simd::best_available());
+        let scalar = Int8Fc::new(&w, None).with_backend(SimdBackend::Scalar);
+        assert_eq!(scalar.forward_batch(&x).data(), best.forward_batch(&x).data());
+        assert_eq!(scalar.forward(&x).data(), best.forward(&x).data());
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // heavy: 20-case property sweep
     fn forward_batch_bit_identical_to_stacked_forward() {
         use crate::util::prop::{for_all, PropConfig};
         for_all(

@@ -18,13 +18,18 @@
 //! * [`int8`] — the VNNI-style INT8 dot-product baseline of Table III.
 //! * [`pack`] — nibble packing of (sign, exponent) codes; the 2×
 //!   footprint reduction is where the large-layer speedups come from.
+//! * [`simd`] — explicit AVX2 kernels for the counting/INT8 inner loops
+//!   behind runtime feature detection, bit-exact with the scalar
+//!   fallbacks and forcible to either backend for testing.
 
 pub mod context;
 pub mod counting;
 pub mod int8;
 pub mod pack;
+pub mod simd;
 
 pub use context::ExpDotContext;
 pub use counting::{exp_dot_reference, CountingFc};
 pub use int8::Int8Fc;
 pub use pack::{pack_codes, shift_codes, unpack_codes, PackedCodes};
+pub use simd::SimdBackend;

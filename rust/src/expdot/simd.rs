@@ -1,0 +1,630 @@
+//! Explicit SIMD kernels for the exponential-domain hot loops, behind
+//! runtime dispatch.
+//!
+//! The counting GEMM's inner loops are exponent extraction/shifting
+//! ([`shift_codes`]), nibble decoding of the packed 3-bit store
+//! ([`decode_nibbles`]), and the counter-table scatter itself
+//! ([`accumulate_row`]); the INT8 baseline's is the i8 dot product
+//! ([`dot_i8`]) and the f32 engine's im2col is a strided copy
+//! ([`copy_f32`]). Each has an AVX2 implementation (`std::arch`
+//! intrinsics behind `is_x86_feature_detected!`) and the original
+//! scalar code as the portable fallback. **Every SIMD path is bit-exact
+//! with scalar**: the vector work is integer (wrapping adds, compares,
+//! table lookups) or pure copies, and counter updates are commutative
+//! i32 adds, so only the order of side-effect-free operations changes.
+//!
+//! Backend resolution (cheapest override wins):
+//! 1. a process-wide programmatic override installed via [`force`]
+//!    (the `--simd` CLI flag);
+//! 2. the `DNATEQ_SIMD` environment variable (`scalar` / `avx2` /
+//!    `auto`) — how the CI matrix pins each dispatch arm;
+//! 3. runtime CPU detection ([`detect`]).
+//!
+//! The engines capture [`active_backend`] at construction and expose a
+//! `with_backend` builder, so scalar and SIMD instances can be compared
+//! side by side in the same process (the equivalence property suite and
+//! `bench_gate` both do).
+//!
+//! AVX-512 is deliberately left out for now: the counter tables are
+//! scatter-bound, detection/intrinsic coverage on stable is younger,
+//! and the win over AVX2 would be marginal for these loops.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// A counting-kernel instruction-set backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdBackend {
+    /// Portable scalar code — the reference semantics on every arch.
+    Scalar,
+    /// 256-bit AVX2 integer kernels (x86_64 only, runtime-detected).
+    Avx2,
+}
+
+impl SimdBackend {
+    /// Stable lower-case name (used in bench case labels and logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdBackend::Scalar => "scalar",
+            SimdBackend::Avx2 => "avx2",
+        }
+    }
+}
+
+/// `FORCE` values: 0 = no override, 1 = scalar, 2 = avx2.
+static FORCE: AtomicU8 = AtomicU8::new(0);
+/// Resolved env-or-detected default, computed once.
+static DEFAULT: OnceLock<SimdBackend> = OnceLock::new();
+
+/// What the CPU supports, ignoring every override.
+pub fn detect() -> SimdBackend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdBackend::Avx2;
+        }
+    }
+    SimdBackend::Scalar
+}
+
+/// The best backend this host can run (cached [`detect`]).
+pub fn best_available() -> SimdBackend {
+    static BEST: OnceLock<SimdBackend> = OnceLock::new();
+    *BEST.get_or_init(detect)
+}
+
+/// Whether `backend` can execute on this host.
+pub fn available(backend: SimdBackend) -> bool {
+    backend == SimdBackend::Scalar || best_available() == backend
+}
+
+/// Parse a backend name: `scalar`, `avx2`/`simd`, or `auto` (= clear
+/// the override and fall back to env/detection).
+pub fn parse(name: &str) -> Result<Option<SimdBackend>, String> {
+    match name {
+        "auto" | "" => Ok(None),
+        "scalar" => Ok(Some(SimdBackend::Scalar)),
+        "avx2" | "simd" => Ok(Some(SimdBackend::Avx2)),
+        other => Err(format!("unknown SIMD backend `{other}`; use scalar, avx2 or auto")),
+    }
+}
+
+/// Install (or clear, with `None`) the process-wide backend override.
+/// Takes precedence over `DNATEQ_SIMD` and detection for every engine
+/// constructed afterwards. Fails if the host cannot run `backend`.
+pub fn force(backend: Option<SimdBackend>) -> Result<(), String> {
+    if let Some(b) = backend {
+        if !available(b) {
+            return Err(format!("SIMD backend `{}` is not supported on this CPU", b.name()));
+        }
+    }
+    let code = match backend {
+        None => 0,
+        Some(SimdBackend::Scalar) => 1,
+        Some(SimdBackend::Avx2) => 2,
+    };
+    FORCE.store(code, Ordering::Relaxed);
+    Ok(())
+}
+
+/// The backend new engines bind to: [`force`] override, else
+/// `DNATEQ_SIMD`, else [`detect`]. Panics (loudly, for CI) if the env
+/// var names an unknown or unsupported backend.
+pub fn active_backend() -> SimdBackend {
+    match FORCE.load(Ordering::Relaxed) {
+        1 => SimdBackend::Scalar,
+        2 => SimdBackend::Avx2,
+        _ => *DEFAULT.get_or_init(env_default),
+    }
+}
+
+fn env_default() -> SimdBackend {
+    match std::env::var("DNATEQ_SIMD") {
+        Ok(v) => match parse(&v) {
+            Ok(Some(b)) => {
+                assert!(
+                    available(b),
+                    "DNATEQ_SIMD={v} but this host cannot run the `{}` backend",
+                    b.name()
+                );
+                b
+            }
+            Ok(None) => detect(),
+            Err(e) => panic!("DNATEQ_SIMD: {e}"),
+        },
+        Err(_) => detect(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Exponent extraction / code shifting (the `log_shift` idiom).
+// ---------------------------------------------------------------------
+
+/// Pre-shift exponent codes to table offsets: `code + R_max`, with
+/// `0xFF` marking exact zeros. Dispatching twin of
+/// [`crate::expdot::pack::shift_codes`] (the scalar reference).
+pub fn shift_codes(backend: SimdBackend, codes: &[i8], r_max: i32) -> Vec<u8> {
+    match backend {
+        SimdBackend::Scalar => super::pack::shift_codes(codes, r_max),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx2` is only constructible on hosts where
+        // `is_x86_feature_detected!("avx2")` held (see `available`).
+        SimdBackend::Avx2 => unsafe { shift_codes_avx2(codes, r_max) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdBackend::Avx2 => super::pack::shift_codes(codes, r_max),
+    }
+}
+
+/// 32 codes per iteration: compare-to-sentinel mask, wrapping byte add
+/// of `R_max` (codes ∈ [-127, 127], shifted ∈ [0, 254], so the i8
+/// wrapping add yields the exact u8 offset), blend in `0xFF` for zeros.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn shift_codes_avx2(codes: &[i8], r_max: i32) -> Vec<u8> {
+    use std::arch::x86_64::*;
+    let n = codes.len();
+    let mut out = vec![0u8; n];
+    let sentinel = _mm256_set1_epi8(crate::dnateq::ZERO_CODE_SENTINEL);
+    let offset = _mm256_set1_epi8(r_max as i8);
+    let ff = _mm256_set1_epi8(-1);
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let v = _mm256_loadu_si256(codes.as_ptr().add(i) as *const __m256i);
+        let is_zero = _mm256_cmpeq_epi8(v, sentinel);
+        let shifted = _mm256_add_epi8(v, offset);
+        let res = _mm256_blendv_epi8(shifted, ff, is_zero);
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, res);
+        i += 32;
+    }
+    for j in i..n {
+        let c = codes[j];
+        out[j] = if c == crate::dnateq::ZERO_CODE_SENTINEL {
+            0xFF
+        } else {
+            (c as i32 + r_max) as u8
+        };
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Nibble decoding of the packed 3-bit weight store.
+// ---------------------------------------------------------------------
+
+/// Decode `n` nibble-packed elements into parallel pre-shifted-code /
+/// sign buffers via the 16-entry LUT (invalid or zero nibbles decode to
+/// `(0xFF, 0)`, which the accumulators mask out). The AVX2 path maps
+/// the LUT onto `pshufb`: 32 elements per iteration from 16 packed
+/// bytes.
+pub fn decode_nibbles(
+    backend: SimdBackend,
+    bytes: &[u8],
+    n: usize,
+    lut: &[(u8, i8); 16],
+    plus: &mut Vec<u8>,
+    signs: &mut Vec<i8>,
+) {
+    assert!(bytes.len() * 2 >= n, "packed row too short: {} bytes for {n} elems", bytes.len());
+    plus.clear();
+    plus.resize(n, 0);
+    signs.clear();
+    signs.resize(n, 0);
+    match backend {
+        SimdBackend::Scalar => decode_nibbles_scalar(bytes, n, lut, plus, signs),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx2` implies runtime AVX2 support (see `available`).
+        SimdBackend::Avx2 => unsafe { decode_nibbles_avx2(bytes, n, lut, plus, signs) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdBackend::Avx2 => decode_nibbles_scalar(bytes, n, lut, plus, signs),
+    }
+}
+
+fn decode_nibbles_scalar(
+    bytes: &[u8],
+    n: usize,
+    lut: &[(u8, i8); 16],
+    plus: &mut [u8],
+    signs: &mut [i8],
+) {
+    for i in 0..n {
+        let byte = bytes[i / 2];
+        let nib = (byte >> ((i & 1) * 4)) & 0xF;
+        let (p, s) = lut[nib as usize];
+        plus[i] = p;
+        signs[i] = s;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn decode_nibbles_avx2(
+    bytes: &[u8],
+    n: usize,
+    lut: &[(u8, i8); 16],
+    plus: &mut [u8],
+    signs: &mut [i8],
+) {
+    use std::arch::x86_64::*;
+    let mut plus_tbl = [0u8; 16];
+    let mut sign_tbl = [0i8; 16];
+    for (k, &(p, s)) in lut.iter().enumerate() {
+        plus_tbl[k] = p;
+        sign_tbl[k] = s;
+    }
+    let plus_lut = _mm_loadu_si128(plus_tbl.as_ptr() as *const __m128i);
+    let sign_lut = _mm_loadu_si128(sign_tbl.as_ptr() as *const __m128i);
+    let low = _mm_set1_epi8(0x0F);
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let b = _mm_loadu_si128(bytes.as_ptr().add(i / 2) as *const __m128i);
+        let lo = _mm_and_si128(b, low);
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(b), low);
+        // Interleave low/high nibbles back into element order: byte k
+        // holds elements 2k (low nibble) and 2k+1 (high nibble).
+        let n0 = _mm_unpacklo_epi8(lo, hi); // elements i .. i+15
+        let n1 = _mm_unpackhi_epi8(lo, hi); // elements i+16 .. i+31
+        _mm_storeu_si128(plus.as_mut_ptr().add(i) as *mut __m128i, _mm_shuffle_epi8(plus_lut, n0));
+        _mm_storeu_si128(
+            plus.as_mut_ptr().add(i + 16) as *mut __m128i,
+            _mm_shuffle_epi8(plus_lut, n1),
+        );
+        _mm_storeu_si128(signs.as_mut_ptr().add(i) as *mut __m128i, _mm_shuffle_epi8(sign_lut, n0));
+        _mm_storeu_si128(
+            signs.as_mut_ptr().add(i + 16) as *mut __m128i,
+            _mm_shuffle_epi8(sign_lut, n1),
+        );
+        i += 32;
+    }
+    decode_nibbles_scalar(&bytes[i / 2..], n - i, lut, &mut plus[i..], &mut signs[i..]);
+}
+
+// ---------------------------------------------------------------------
+// Counter-table scatter: the §IV counting hot spot.
+// ---------------------------------------------------------------------
+
+/// Accumulate one (weight row × activation row) pass into the three
+/// count tables: `pair[ap+wp] += s`, `wcnt[wp] += s`, `acnt[ap] += s`
+/// for every position where neither side is the `0xFF` zero marker,
+/// with `s = w_sign · a_sign`.
+///
+/// The AVX2 path computes the 32-lane validity mask and sign products
+/// branchlessly, then drains only the live lanes through the scatter
+/// (bit-scan over the movemask); zero-dense tensors — DNA-TEQ's common
+/// case — skip their dead lanes almost for free. Updates are
+/// commutative i32 adds, so the result is bit-identical to scalar.
+///
+/// Caller contract (same trust the scalar kernel always had, checked
+/// via `debug_assert`): every non-`0xFF` byte in `w_plus`/`a_plus` is
+/// `< wcnt.len()`/`< acnt.len()`, their sum is `< pair.len()`, and the
+/// sign slices hold ±1 at every live position.
+#[allow(clippy::too_many_arguments)]
+pub fn accumulate_row(
+    backend: SimdBackend,
+    w_plus: &[u8],
+    w_signs: &[i8],
+    a_plus: &[u8],
+    a_signs: &[i8],
+    pair: &mut [i32],
+    wcnt: &mut [i32],
+    acnt: &mut [i32],
+) {
+    assert_eq!(w_plus.len(), w_signs.len());
+    assert_eq!(a_plus.len(), a_signs.len());
+    assert_eq!(w_plus.len(), a_plus.len());
+    match backend {
+        SimdBackend::Scalar => {
+            accumulate_row_scalar(w_plus, w_signs, a_plus, a_signs, pair, wcnt, acnt)
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx2` implies runtime AVX2 support (see `available`).
+        SimdBackend::Avx2 => unsafe {
+            accumulate_row_avx2(w_plus, w_signs, a_plus, a_signs, pair, wcnt, acnt)
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdBackend::Avx2 => {
+            accumulate_row_scalar(w_plus, w_signs, a_plus, a_signs, pair, wcnt, acnt)
+        }
+    }
+}
+
+/// The portable reference: the register-blocked scalar loop the
+/// counting engines always ran. Zero-skip branches are well-predicted
+/// and skipping saves table RMWs (a branchless trash-slot variant was
+/// measured 8% slower — see EXPERIMENTS.md §Perf).
+fn accumulate_row_scalar(
+    w_plus: &[u8],
+    w_signs: &[i8],
+    a_plus: &[u8],
+    a_signs: &[i8],
+    pair: &mut [i32],
+    wcnt: &mut [i32],
+    acnt: &mut [i32],
+) {
+    for i in 0..w_plus.len() {
+        // SAFETY: `i < w_plus.len()` and the slice lengths were asserted
+        // equal by the dispatch wrapper.
+        let wp = unsafe { *w_plus.get_unchecked(i) } as usize;
+        let ap = unsafe { *a_plus.get_unchecked(i) } as usize;
+        if wp == 0xFF || ap == 0xFF {
+            continue;
+        }
+        let s = (unsafe { *w_signs.get_unchecked(i) } as i32)
+            * (unsafe { *a_signs.get_unchecked(i) } as i32);
+        debug_assert!(ap + wp < pair.len() && wp < wcnt.len() && ap < acnt.len());
+        // SAFETY: live codes are bounded by the caller contract above.
+        unsafe {
+            *pair.get_unchecked_mut(ap + wp) += s;
+            *wcnt.get_unchecked_mut(wp) += s;
+            *acnt.get_unchecked_mut(ap) += s;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn accumulate_row_avx2(
+    w_plus: &[u8],
+    w_signs: &[i8],
+    a_plus: &[u8],
+    a_signs: &[i8],
+    pair: &mut [i32],
+    wcnt: &mut [i32],
+    acnt: &mut [i32],
+) {
+    use std::arch::x86_64::*;
+    let n = w_plus.len();
+    let ff = _mm256_set1_epi8(-1);
+    let mut sbuf = [0i8; 32];
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let wv = _mm256_loadu_si256(w_plus.as_ptr().add(i) as *const __m256i);
+        let av = _mm256_loadu_si256(a_plus.as_ptr().add(i) as *const __m256i);
+        let dead = _mm256_or_si256(_mm256_cmpeq_epi8(wv, ff), _mm256_cmpeq_epi8(av, ff));
+        let mut live = !(_mm256_movemask_epi8(dead) as u32);
+        if live != 0 {
+            // psignb: w_sign · sign(a_sign) — exact ±1 product, dead
+            // lanes are never read back.
+            let ws = _mm256_loadu_si256(w_signs.as_ptr().add(i) as *const __m256i);
+            let asv = _mm256_loadu_si256(a_signs.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(sbuf.as_mut_ptr() as *mut __m256i, _mm256_sign_epi8(ws, asv));
+            while live != 0 {
+                let k = live.trailing_zeros() as usize;
+                live &= live - 1;
+                let wp = *w_plus.get_unchecked(i + k) as usize;
+                let ap = *a_plus.get_unchecked(i + k) as usize;
+                let s = *sbuf.get_unchecked(k) as i32;
+                debug_assert!(ap + wp < pair.len() && wp < wcnt.len() && ap < acnt.len());
+                *pair.get_unchecked_mut(ap + wp) += s;
+                *wcnt.get_unchecked_mut(wp) += s;
+                *acnt.get_unchecked_mut(ap) += s;
+            }
+        }
+        i += 32;
+    }
+    accumulate_row_scalar(
+        &w_plus[i..],
+        &w_signs[i..],
+        &a_plus[i..],
+        &a_signs[i..],
+        pair,
+        wcnt,
+        acnt,
+    );
+}
+
+// ---------------------------------------------------------------------
+// INT8 dot product (the VNNI-style baseline).
+// ---------------------------------------------------------------------
+
+/// i32-accumulating i8 dot product. The AVX2 path widens 16 lanes at a
+/// time to i16 and uses `pmaddwd` (exact i32 pair sums of i8 products),
+/// so it computes the same mod-2³² integer sum as the scalar reference
+/// [`crate::expdot::int8::gemv_i8`] in a different association order —
+/// identical results, integer adds being commutative.
+pub fn dot_i8(backend: SimdBackend, a: &[i8], w: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), w.len());
+    match backend {
+        SimdBackend::Scalar => super::int8::gemv_i8(a, w),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx2` implies runtime AVX2 support (see `available`).
+        SimdBackend::Avx2 => unsafe { dot_i8_avx2(a, w) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdBackend::Avx2 => super::int8::gemv_i8(a, w),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8_avx2(a: &[i8], w: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(i) as *const __m128i));
+        let vw = _mm256_cvtepi8_epi16(_mm_loadu_si128(w.as_ptr().add(i) as *const __m128i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vw));
+        i += 16;
+    }
+    let lo = _mm256_castsi256_si128(acc);
+    let hi = _mm256_extracti128_si256::<1>(acc);
+    let s = _mm_add_epi32(lo, hi);
+    let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<1>(s));
+    _mm_cvtsi128_si32(s) + super::int8::gemv_i8(&a[i..], &w[i..])
+}
+
+// ---------------------------------------------------------------------
+// f32 block copy (im2col's stride-1 inner loop).
+// ---------------------------------------------------------------------
+
+/// Copy `src` into `dst` (equal lengths). Scalar uses `copy_from_slice`
+/// (memcpy); AVX2 runs explicit 8-wide unaligned vector moves. Copies
+/// are trivially bit-exact.
+pub fn copy_f32(backend: SimdBackend, dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    match backend {
+        SimdBackend::Scalar => dst.copy_from_slice(src),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx2` implies runtime AVX2 (and thus AVX) support.
+        SimdBackend::Avx2 => unsafe { copy_f32_avx(dst.as_mut_ptr(), src.as_ptr(), dst.len()) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdBackend::Avx2 => dst.copy_from_slice(src),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn copy_f32_avx(dst: *mut f32, src: *const f32, n: usize) {
+    use std::arch::x86_64::*;
+    let mut i = 0usize;
+    while i + 8 <= n {
+        _mm256_storeu_ps(dst.add(i), _mm256_loadu_ps(src.add(i)));
+        i += 8;
+    }
+    while i < n {
+        *dst.add(i) = *src.add(i);
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnateq::ZERO_CODE_SENTINEL;
+    use crate::expdot::pack::{self, nibble_lut};
+    use crate::tensor::SplitMix64;
+
+    /// The SIMD backend to exercise, or `None` on scalar-only hosts
+    /// (the avx2-vs-scalar tests then pass vacuously; CI's simd lane
+    /// and the sanitizer job run them for real).
+    fn simd() -> Option<SimdBackend> {
+        match best_available() {
+            SimdBackend::Scalar => None,
+            b => Some(b),
+        }
+    }
+
+    fn rand_codes(
+        n: usize,
+        r_max: i32,
+        zero_every: usize,
+        rng: &mut SplitMix64,
+    ) -> (Vec<i8>, Vec<i8>) {
+        let mut codes = Vec::with_capacity(n);
+        let mut signs = Vec::with_capacity(n);
+        for i in 0..n {
+            if zero_every > 0 && i % zero_every == 0 {
+                codes.push(ZERO_CODE_SENTINEL);
+                signs.push(1);
+            } else {
+                let span = (2 * r_max + 1) as usize;
+                codes.push((rng.next_below(span) as i32 - r_max) as i8);
+                signs.push(if rng.next_below(2) == 0 { 1 } else { -1 });
+            }
+        }
+        (codes, signs)
+    }
+
+    #[test]
+    fn parse_accepts_known_names() {
+        assert_eq!(parse("scalar"), Ok(Some(SimdBackend::Scalar)));
+        assert_eq!(parse("avx2"), Ok(Some(SimdBackend::Avx2)));
+        assert_eq!(parse("simd"), Ok(Some(SimdBackend::Avx2)));
+        assert_eq!(parse("auto"), Ok(None));
+        assert!(parse("neon").is_err());
+    }
+
+    #[test]
+    fn scalar_is_always_available() {
+        assert!(available(SimdBackend::Scalar));
+        // Whatever detection says is, by definition, available.
+        assert!(available(best_available()));
+    }
+
+    #[test]
+    fn shift_codes_matches_scalar_all_widths() {
+        let Some(simd) = simd() else { return };
+        let mut rng = SplitMix64::new(0x5111);
+        // Odd lengths hit the tail; r_max 127 hits the wrapping add.
+        for (n, r_max, zero_every) in [(33, 1, 3), (257, 7, 5), (96, 127, 1), (500, 127, 7)] {
+            let (codes, _) = rand_codes(n, r_max, zero_every, &mut rng);
+            let want = pack::shift_codes(&codes, r_max);
+            let got = shift_codes(simd, &codes, r_max);
+            assert_eq!(got, want, "n={n} r_max={r_max}");
+        }
+    }
+
+    #[test]
+    fn decode_nibbles_matches_scalar() {
+        let Some(simd) = simd() else { return };
+        let mut rng = SplitMix64::new(0x5112);
+        let lut = nibble_lut(3);
+        for n in [31usize, 32, 64, 97, 320] {
+            let bytes: Vec<u8> = (0..n.div_ceil(2)).map(|_| rng.next_below(256) as u8).collect();
+            let (mut ps, mut ss) = (Vec::new(), Vec::new());
+            let (mut pv, mut sv) = (Vec::new(), Vec::new());
+            decode_nibbles(SimdBackend::Scalar, &bytes, n, &lut, &mut ps, &mut ss);
+            decode_nibbles(simd, &bytes, n, &lut, &mut pv, &mut sv);
+            assert_eq!(pv, ps, "plus n={n}");
+            assert_eq!(sv, ss, "signs n={n}");
+        }
+    }
+
+    #[test]
+    fn accumulate_row_matches_scalar() {
+        let Some(simd) = simd() else { return };
+        let mut rng = SplitMix64::new(0x5113);
+        for (n, r_max, zero_every) in [(64usize, 3, 4), (129, 7, 0), (333, 127, 2), (31, 1, 1)] {
+            let (wc, ws) = rand_codes(n, r_max, zero_every, &mut rng);
+            let (ac, asn) = rand_codes(n, r_max, zero_every.max(1) + 1, &mut rng);
+            let wp = pack::shift_codes(&wc, r_max);
+            let ap = pack::shift_codes(&ac, r_max);
+            let (plen, slen) = ((4 * r_max + 1) as usize, (2 * r_max + 1) as usize);
+            let mut t_s = (vec![0i32; plen], vec![0i32; slen], vec![0i32; slen]);
+            let mut t_v = t_s.clone();
+            let sc = SimdBackend::Scalar;
+            accumulate_row(sc, &wp, &ws, &ap, &asn, &mut t_s.0, &mut t_s.1, &mut t_s.2);
+            accumulate_row(simd, &wp, &ws, &ap, &asn, &mut t_v.0, &mut t_v.1, &mut t_v.2);
+            assert_eq!(t_v, t_s, "n={n} r_max={r_max}");
+        }
+    }
+
+    #[test]
+    fn accumulate_row_all_sentinel_is_a_noop() {
+        let n = 70;
+        let wp = vec![0xFFu8; n];
+        let ws = vec![1i8; n];
+        let mut tables = (vec![0i32; 13], vec![0i32; 7], vec![0i32; 7]);
+        for b in [SimdBackend::Scalar, best_available()] {
+            accumulate_row(b, &wp, &ws, &wp, &ws, &mut tables.0, &mut tables.1, &mut tables.2);
+            assert!(tables.0.iter().chain(&tables.1).chain(&tables.2).all(|&c| c == 0));
+        }
+    }
+
+    #[test]
+    fn dot_i8_matches_scalar_reference() {
+        let Some(simd) = simd() else { return };
+        let mut rng = SplitMix64::new(0x5114);
+        for n in [0usize, 1, 15, 16, 17, 64, 333, 1001] {
+            let a: Vec<i8> = (0..n).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect();
+            let w: Vec<i8> = (0..n).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect();
+            assert_eq!(dot_i8(simd, &a, &w), super::super::int8::gemv_i8(&a, &w), "n={n}");
+        }
+    }
+
+    #[test]
+    fn copy_f32_matches_scalar() {
+        let Some(simd) = simd() else { return };
+        let mut rng = SplitMix64::new(0x5115);
+        for n in [0usize, 1, 7, 8, 9, 31, 100] {
+            let src: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            copy_f32(SimdBackend::Scalar, &mut a, &src);
+            copy_f32(simd, &mut b, &src);
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+}

@@ -9,6 +9,10 @@
 //!             | build <model> [--thr-w T] | front <model>
 //!   swap      <model> [--thr-w T] [--requests N]   hot-swap demo under load
 //!   infer     [--model M] [--index I]    one PJRT inference from artifacts
+//!
+//! Global flag (after the subcommand): `--simd scalar|avx2|auto`
+//! forces the kernel dispatch backend before any engine is constructed
+//! (default: `DNATEQ_SIMD` env var, then runtime CPU detection).
 
 use anyhow::{bail, Context, Result};
 use dnateq::coordinator::{
@@ -363,9 +367,10 @@ fn serve(args: &Args) -> Result<()> {
         traffic.insert(m.to_string(), t);
     }
     println!(
-        "serving {} model(s) [{}] with backend `{kind}` (admission {admission:?})",
+        "serving {} model(s) [{}] with backend `{kind}` (admission {admission:?}, simd {})",
         models.len(),
-        models.join(", ")
+        models.join(", "),
+        dnateq::expdot::simd::active_backend().name()
     );
 
     // SLA-driven startup plan selection: resolve the policy against each
@@ -631,6 +636,12 @@ fn swap(args: &Args) -> Result<()> {
 
 fn run() -> Result<()> {
     let args = Args::parse();
+    // Global SIMD override (`--simd scalar|avx2|auto`), installed before
+    // any engine is constructed so every backend binds to it.
+    if let Some(v) = args.get("simd") {
+        let backend = dnateq::expdot::simd::parse(v).map_err(anyhow::Error::msg)?;
+        dnateq::expdot::simd::force(backend).map_err(anyhow::Error::msg)?;
+    }
     match args.cmd.as_str() {
         "calibrate" => {
             let force = args.has("force");
@@ -744,6 +755,7 @@ fn run() -> Result<()> {
                  serve     [--models a,b,c] [--backend engine|quantized|pjrt] [--requests N]\n            \
                  [--admission block|reject|shed]\n            \
                  [--plan-policy max-accuracy|min-bits|min-energy]\n  \
+                 global    --simd scalar|avx2|auto   force the kernel dispatch backend\n  \
                  plans     list | show <model> [--version V] | diff <model> <v1> <v2>\n            \
                  | build <model> [--thr-w T] | front <model>\n  \
                  swap      <model> [--thr-w T] [--requests N]\n  \

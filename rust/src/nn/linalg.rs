@@ -4,6 +4,7 @@
 //! interactive speed) plus the im2col transform that lowers convolutions
 //! onto it.
 
+use crate::expdot::simd;
 use crate::tensor::Tensor;
 use crate::util::parallel::{chunk_ranges, parallel_map, suggested_pieces};
 
@@ -166,6 +167,27 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     s0 + s1 + s2 + s3 + tail
 }
 
+/// One output row of an im2col patch row for stride-1 kernels: the taps
+/// `ix = ox + kx - pad` read a *contiguous* input run, so the inner `ox`
+/// loop collapses to a single block copy of the in-bounds span
+/// (`orow` positions outside it keep their zero padding), vectorized via
+/// [`simd::copy_f32`].
+fn copy_patch_row(
+    backend: simd::SimdBackend,
+    in_row: &[f32],
+    orow: &mut [f32],
+    kx: usize,
+    pad: usize,
+) {
+    let (w, ow) = (in_row.len(), orow.len());
+    let lo = pad.saturating_sub(kx);
+    let hi = (w + pad).saturating_sub(kx).min(ow);
+    if lo < hi {
+        let ix0 = lo + kx - pad;
+        simd::copy_f32(backend, &mut orow[lo..hi], &in_row[ix0..ix0 + (hi - lo)]);
+    }
+}
+
 /// im2col for NCHW input: `[c, h, w]` → `[kh·kw·c_in, oh·ow]` patch
 /// matrix, so `conv = gemm(W[out, kh·kw·c_in], patches)`.
 #[allow(clippy::too_many_arguments)]
@@ -183,6 +205,7 @@ pub fn im2col(
     let ow = (w + 2 * pad - kw) / stride + 1;
     let rows = c_in * kh * kw;
     let cols = oh * ow;
+    let backend = simd::active_backend();
     let mut out = vec![0.0f32; rows * cols];
     for c in 0..c_in {
         for ky in 0..kh {
@@ -195,6 +218,10 @@ pub fn im2col(
                         continue; // zero padding already in place
                     }
                     let in_row = &input[(c * h + iy as usize) * w..(c * h + iy as usize + 1) * w];
+                    if stride == 1 {
+                        copy_patch_row(backend, in_row, &mut orow[oy * ow..(oy + 1) * ow], kx, pad);
+                        continue;
+                    }
                     for ox in 0..ow {
                         let ix = (ox * stride + kx) as isize - pad as isize;
                         if ix < 0 || ix >= w as isize {
@@ -232,6 +259,7 @@ pub fn im2col_batch(
     let cols = n * img_cols;
     let img_stride = c_in * h * w;
     debug_assert_eq!(input.len(), n * img_stride);
+    let backend = simd::active_backend();
     let mut out = vec![0.0f32; rows * cols];
     for img in 0..n {
         let data = &input[img * img_stride..(img + 1) * img_stride];
@@ -247,6 +275,11 @@ pub fn im2col_batch(
                         }
                         let in_row =
                             &data[(c * h + iy as usize) * w..(c * h + iy as usize + 1) * w];
+                        if stride == 1 {
+                            let oyrow = &mut orow[oy * ow..(oy + 1) * ow];
+                            copy_patch_row(backend, in_row, oyrow, kx, pad);
+                            continue;
+                        }
                         for ox in 0..ow {
                             let ix = (ox * stride + kx) as isize - pad as isize;
                             if ix < 0 || ix >= w as isize {
@@ -328,6 +361,44 @@ mod tests {
                 let got = &m.data()[r * n * img_cols + img * img_cols..][..img_cols];
                 let want = &single.data()[r * img_cols..(r + 1) * img_cols];
                 assert_eq!(got, want, "img {img} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_stride1_matches_naive_gather() {
+        // The stride-1 fast path block-copies the in-bounds run; check it
+        // against per-element gathering, including kernels wider than the
+        // input (runs clamped on both sides).
+        let mut rng = SplitMix64::new(106);
+        let shapes = [
+            (2usize, 4usize, 5usize, 3usize, 3usize, 1usize),
+            (1, 3, 3, 5, 5, 2),
+            (2, 5, 3, 1, 3, 1),
+        ];
+        for (c_in, h, w, kh, kw, pad) in shapes {
+            let input = Tensor::rand_normal(&[c_in, h, w], 0.0, 1.0, &mut rng);
+            let (m, oh, ow) = im2col(input.data(), c_in, h, w, kh, kw, 1, pad);
+            for c in 0..c_in {
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let r = (c * kh + ky) * kw + kx;
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                let iy = (oy + ky) as isize - pad as isize;
+                                let ix = (ox + kx) as isize - pad as isize;
+                                let oob = iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize;
+                                let want = if oob {
+                                    0.0
+                                } else {
+                                    input.data()[(c * h + iy as usize) * w + ix as usize]
+                                };
+                                let got = m.data()[r * oh * ow + oy * ow + ox];
+                                assert_eq!(got, want, "r={r} oy={oy} ox={ox}");
+                            }
+                        }
+                    }
+                }
             }
         }
     }
