@@ -37,17 +37,20 @@ fn drive(
 ) -> BenchResult {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
-        workers: 2,
+        min_workers: 2,
+        max_workers: 2,
         queue_depth: 512,
         ..CoordinatorConfig::default()
     };
     let c = Coordinator::start(engine, cfg);
     let payloads: Vec<Payload> =
         (0..data.len().min(n)).map(|i| Payload::Image(data.image(i))).collect();
-    let per = c.drive(&payloads, n).expect("serving drive");
+    let report = c.drive(&payloads, n).expect("serving drive");
+    let per = report.per_request;
     let snap = c.shutdown_and_drain();
     assert_eq!(snap.failed_total(), 0, "healthy bench traffic must not fail");
     println!("{label:<28} {}", snap.summary());
+    println!("{label:<28} load: {}", report.load.summary());
     BenchResult {
         name: label.to_string(),
         median: per,
@@ -70,7 +73,8 @@ fn drive_registry(
 ) -> BenchResult {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
-        workers: 2,
+        min_workers: 2,
+        max_workers: 2,
         queue_depth: 512,
         ..CoordinatorConfig::default()
     };

@@ -15,7 +15,11 @@
 //!   be zero under this healthy fixed-shape load;
 //! * on a SIMD-capable runner, the forced-SIMD kernel cases fall below
 //!   `--min-simd-ratio` × the forced-scalar cases at any batch size —
-//!   the explicit-SIMD counting path must never lose to its fallback.
+//!   the explicit-SIMD counting path must never lose to its fallback;
+//! * the open-loop **tail-latency SLO** regresses: a short seeded
+//!   Poisson loadgen scenario on the counting backend must keep its
+//!   end-to-end p99/p999 under the baseline `loadgen` ceilings ×
+//!   (1 + `--tail-tolerance`), with zero typed failures.
 //!
 //! ```bash
 //! cargo run --release --bin bench_gate -- \
@@ -32,6 +36,7 @@ use dnateq::dataset::ImageDataset;
 use dnateq::dnateq::ExpQuantParams;
 use dnateq::expdot::simd::{self, SimdBackend};
 use dnateq::expdot::CountingFc;
+use dnateq::loadgen::{self, LoadReport, Scenario};
 use dnateq::tensor::{SplitMix64, Tensor};
 use dnateq::util::bench::{bench, black_box, BenchResult};
 use dnateq::util::Json;
@@ -42,6 +47,11 @@ const IN_FEATURES: usize = 3 * 32 * 32;
 const OUT_FEATURES: usize = 256;
 const REQUESTS: usize = 64;
 const SWEEP: [usize; 3] = [1, 8, 32];
+/// Offered rate of the tail-latency scenario: modest enough that the
+/// autoscaled pool keeps up on a hosted runner, so the p99 measures
+/// batching/queueing behavior rather than raw saturation.
+const LOADGEN_RATE_RPS: f64 = 120.0;
+const LOADGEN_DURATION_S: f64 = 1.5;
 
 struct Opts {
     out: Option<String>,
@@ -53,6 +63,10 @@ struct Opts {
     /// parity (0.85) so runner noise cannot fail a genuinely-equal pair,
     /// while a real SIMD regression still trips the gate.
     min_simd_ratio: f64,
+    /// Headroom over the baseline loadgen p99/p999 ceilings. Tails are
+    /// far noisier than medians on shared runners, so the default is
+    /// looser than `--tolerance`.
+    tail_tolerance: f64,
 }
 
 fn parse_opts() -> Opts {
@@ -63,6 +77,7 @@ fn parse_opts() -> Opts {
         tolerance: 0.15,
         min_speedup: 0.8,
         min_simd_ratio: 0.85,
+        tail_tolerance: 0.5,
     };
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -97,6 +112,11 @@ fn parse_opts() -> Opts {
             "--min-simd-ratio" => {
                 o.min_simd_ratio =
                     value(i).parse().expect("--min-simd-ratio is a ratio, e.g. 0.85");
+                i += 2;
+            }
+            "--tail-tolerance" => {
+                o.tail_tolerance =
+                    value(i).parse().expect("--tail-tolerance is a fraction, e.g. 0.5");
                 i += 2;
             }
             other => {
@@ -159,16 +179,47 @@ fn drive(
 ) -> Duration {
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
-        workers: 2,
+        min_workers: 2,
+        max_workers: 2,
         queue_depth: 256,
         admission: AdmissionPolicy::Block,
     };
     let c = Coordinator::start(backend, cfg);
     let payloads: Vec<Payload> =
         (0..data.len().min(n)).map(|i| Payload::Image(data.image(i))).collect();
-    let per = c.drive(&payloads, n).expect("bench drive");
+    let per = c.drive(&payloads, n).expect("bench drive").per_request;
     counters.absorb(&c.shutdown_and_drain());
     per
+}
+
+/// The tail-latency SLO case: a short seeded open-loop Poisson scenario
+/// on the counting backend through an autoscaling pool. Returns the
+/// report plus its JSON section (`loadgen` in BENCH_ci.json).
+fn run_loadgen(counters: &mut FailureCounters) -> (Json, LoadReport) {
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        min_workers: 1,
+        max_workers: 4,
+        queue_depth: 1024,
+        admission: AdmissionPolicy::Block,
+    };
+    let c = Coordinator::start(loadgen::cli::counting_engine(loadgen::cli::CI_ENGINE_SEED), cfg);
+    let data = ImageDataset::synthetic(32, 0xC1DA7A);
+    let payloads: Vec<Payload> = (0..data.len()).map(|i| Payload::Image(data.image(i))).collect();
+    let scenario = Scenario {
+        name: "ci-poisson".into(),
+        rate_rps: LOADGEN_RATE_RPS,
+        duration_s: LOADGEN_DURATION_S,
+        seed: 0x51_0AD,
+        ..Scenario::default()
+    };
+    let report = scenario.run(&c.client(), &payloads);
+    counters.absorb(&c.shutdown_and_drain());
+    println!("loadgen {}: {}", scenario.name, report.summary());
+    println!("{}", report.class_table());
+    let mut section = report.to_json();
+    section.set("scenario", scenario.to_json());
+    (section, report)
 }
 
 fn run_sweep(counters: &mut FailureCounters) -> Vec<BenchResult> {
@@ -249,12 +300,19 @@ fn median_of<'a>(results: &'a [BenchResult], suffix: &str) -> Option<&'a BenchRe
 }
 
 /// Encode a run as the gate's report JSON: timing cases + the failure
-/// counters the gate asserts on + the scalar-vs-SIMD kernel section.
-fn report_json(results: &[BenchResult], counters: &FailureCounters, simd_info: &Json) -> Json {
+/// counters the gate asserts on + the scalar-vs-SIMD kernel section +
+/// the open-loop tail-latency section.
+fn report_json(
+    results: &[BenchResult],
+    counters: &FailureCounters,
+    simd_info: &Json,
+    loadgen_info: &Json,
+) -> Json {
     let mut o = Json::obj();
     o.set("cases", Json::Arr(results.iter().map(|r| r.to_json()).collect()))
         .set("counters", counters.to_json())
-        .set("simd", simd_info.clone());
+        .set("simd", simd_info.clone())
+        .set("loadgen", loadgen_info.clone());
     o
 }
 
@@ -290,11 +348,27 @@ fn load_baseline(path: &str) -> Vec<(String, f64)> {
         .collect()
 }
 
+/// Pull the tail-latency ceilings out of a baseline's `loadgen`
+/// section. Accepts the hand-written ceiling shape
+/// (`{e2e_p99_ms, e2e_p999_ms}`) and the `--update-baseline` output
+/// (`{e2e_ms: {p99_ms, p999_ms, ...}, ...}`). `None` when the baseline
+/// predates the loadgen gate — the caller warns and skips.
+fn load_tail_ceilings(baseline: &Json) -> Option<(f64, f64)> {
+    let lg = baseline.get("loadgen")?;
+    let flat = |key: &str| lg.get(key).and_then(|v| v.as_f64().ok());
+    let nested =
+        |key: &str| lg.get("e2e_ms").and_then(|e| e.get(key)).and_then(|v| v.as_f64().ok());
+    let p99 = flat("e2e_p99_ms").or_else(|| nested("p99_ms"))?;
+    let p999 = flat("e2e_p999_ms").or_else(|| nested("p999_ms"))?;
+    Some((p99, p999))
+}
+
 fn main() {
     let opts = parse_opts();
     let mut counters = FailureCounters::default();
     let mut results = run_sweep(&mut counters);
     let (simd_info, simd_ratios) = run_kernel_sweep(&mut results);
+    let (loadgen_info, load) = run_loadgen(&mut counters);
 
     // Machine-independent guard: the batched hot path must actually beat
     // (or at minimum match, within tolerance) unbatched serving.
@@ -306,7 +380,7 @@ fn main() {
     println!("failure counters: {}", counters.describe());
 
     if let Some(out) = &opts.out {
-        write_report(out, &report_json(&results, &counters, &simd_info));
+        write_report(out, &report_json(&results, &counters, &simd_info, &loadgen_info));
         println!("JSON -> {out}");
     }
 
@@ -336,10 +410,20 @@ fn main() {
             }
         }
     }
+    // The open-loop scenario must complete cleanly: every typed failure
+    // kind (deadline, shed, engine failure, ...) is a gate failure here,
+    // even ones the coordinator metrics would not count.
+    if load.failed > 0 {
+        failures.push(format!(
+            "loadgen scenario had {} typed failures out of {} offered: {:?}",
+            load.failed, load.offered, load.failures
+        ));
+    }
 
     if let Some(baseline_path) = &opts.baseline {
         if opts.update_baseline {
-            write_report(baseline_path, &report_json(&results, &counters, &simd_info));
+            let refreshed = report_json(&results, &counters, &simd_info, &loadgen_info);
+            write_report(baseline_path, &refreshed);
             println!("baseline refreshed -> {baseline_path}");
         } else {
             for (name, base_ms) in load_baseline(baseline_path) {
@@ -361,6 +445,36 @@ fn main() {
                          (> {:.0}% throughput regression)",
                         opts.tolerance * 100.0
                     ));
+                }
+            }
+            // Tail-latency SLO gate: the scenario's measured e2e p99/p999
+            // must stay under the baseline ceilings × (1 + tail tolerance).
+            let baseline = Json::read_file(baseline_path).ok();
+            match baseline.as_ref().and_then(load_tail_ceilings) {
+                Some((p99_ceiling_ms, p999_ceiling_ms)) => {
+                    let checks = [
+                        ("e2e p99", load.e2e.p99 * 1e3, p99_ceiling_ms),
+                        ("e2e p999", load.e2e.p999 * 1e3, p999_ceiling_ms),
+                    ];
+                    for (name, cur_ms, base_ms) in checks {
+                        let limit_ms = base_ms * (1.0 + opts.tail_tolerance);
+                        let verdict = if cur_ms > limit_ms { "REGRESSED" } else { "ok" };
+                        println!(
+                            "loadgen {name:<32} {cur_ms:>9.3} ms vs ceiling {base_ms:>9.3} ms (limit {limit_ms:>9.3}) {verdict}"
+                        );
+                        if cur_ms > limit_ms {
+                            failures.push(format!(
+                                "loadgen {name}: {cur_ms:.3} ms vs baseline ceiling {base_ms:.3} ms \
+                                 (limit {limit_ms:.3} ms at +{:.0}% tail tolerance)",
+                                opts.tail_tolerance * 100.0
+                            ));
+                        }
+                    }
+                }
+                None => {
+                    println!(
+                        "baseline {baseline_path} has no `loadgen` ceilings — tail-latency gate skipped"
+                    );
                 }
             }
         }

@@ -1,0 +1,63 @@
+//! `loadgen` — open-loop load generator against the serving stack.
+//!
+//! Replays a seeded Poisson or bursty (ON-OFF) arrival schedule against
+//! a fresh coordinator and reports goodput plus per-priority
+//! p50/p99/p999 end-to-end and queue-wait latency; `--out` emits
+//! `BENCH_loadgen.json`. Same flags as `repro loadgen` (one shared
+//! implementation in `dnateq::loadgen::cli`).
+//!
+//! ```bash
+//! cargo run --release --bin loadgen -- \
+//!     --engine counting --pattern poisson --rate 150 --duration 2 \
+//!     --seed 42 --fail-on-errors --out artifacts/reports/BENCH_loadgen.json
+//! ```
+//!
+//! `--fail-on-errors` exits 1 when any request ends in a typed failure
+//! (the CI smoke's zero-failure assertion). Force the SIMD backend via
+//! the `DNATEQ_SIMD` env var, as everywhere else.
+
+use std::collections::BTreeMap;
+
+fn parse_flags(args: &[String]) -> BTreeMap<String, String> {
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let Some(key) = args[i].strip_prefix("--") else {
+            eprintln!("unexpected positional argument `{}` (flags only)", args[i]);
+            std::process::exit(2);
+        };
+        match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => {
+                flags.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+            _ => {
+                // Value-less flag (e.g. --fail-on-errors).
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+    }
+    flags
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let flags = parse_flags(&args);
+    let fail_on_errors = flags.contains_key("fail-on-errors");
+    match dnateq::loadgen::cli::run_from_flags(&flags) {
+        Ok(report) => {
+            if fail_on_errors && report.failed > 0 {
+                eprintln!(
+                    "loadgen FAILED: {} of {} requests ended in typed failures: {:?}",
+                    report.failed, report.offered, report.failures
+                );
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("loadgen error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}

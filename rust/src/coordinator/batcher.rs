@@ -1,22 +1,28 @@
-//! Submission queue + dynamic batcher.
+//! Submission queue + continuous batcher.
 //!
 //! The queue holds one FIFO lane per [`Priority`] class behind a mutex +
 //! condvars; admission under a full queue is explicit policy
 //! ([`AdmissionPolicy`]): block the submitter, reject with
 //! `ServeError::QueueFull`, or shed the oldest lowest-priority queued
-//! request to admit the newcomer. The batcher drains lanes
-//! highest-priority-first (strict FIFO within a lane), groups up to
-//! `max_batch` requests, waits at most `max_wait` for stragglers — and
-//! drops cancelled or deadline-expired requests **at batch-formation
-//! time**, resolving their tickets with the matching typed error before
-//! the batch ever reaches an engine.
+//! request to admit the newcomer.
+//!
+//! Batch formation is a **slot-refill** API ([`Batcher::fill_slots`]):
+//! a worker asks for up to `free` requests — however many of its batch
+//! slots just opened — and the batcher fills them from the priority
+//! lanes immediately, waiting at most `max_wait` for stragglers once
+//! the first request is in hand. Workers therefore refill as their
+//! slots free up instead of forming stop-the-world batches on a fixed
+//! cadence, and an idle timeout lets pool workers surface to re-check
+//! autoscaling decisions. Cancelled or deadline-expired requests are
+//! dropped **at slot-fill time**, resolving their tickets with the
+//! matching typed error before they ever reach an engine.
 //!
 //! Invariants (property-tested below):
 //! * conservation — every admitted request is either batched exactly
 //!   once or resolved with a typed error;
 //! * FIFO — within one priority class, batch concatenation preserves
 //!   submission order;
-//! * bound — every batch has `1..=max_batch` requests.
+//! * bound — every fill returns `1..=free` requests.
 
 use super::metrics::Metrics;
 use super::request::{Priority, Request, ServeError};
@@ -50,6 +56,27 @@ pub enum AdmissionPolicy {
     /// ticket resolves to `QueueFull`). If everything queued outranks
     /// the newcomer, the newcomer is rejected instead.
     ShedOldest,
+}
+
+impl AdmissionPolicy {
+    /// Stable CLI/JSON name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Block => "block",
+            AdmissionPolicy::Reject => "reject",
+            AdmissionPolicy::ShedOldest => "shed",
+        }
+    }
+
+    /// Parse the CLI/JSON name; `Err` carries the unknown input.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "block" => Ok(AdmissionPolicy::Block),
+            "reject" => Ok(AdmissionPolicy::Reject),
+            "shed" => Ok(AdmissionPolicy::ShedOldest),
+            other => Err(format!("unknown admission policy `{other}` (block|reject|shed)")),
+        }
+    }
 }
 
 struct QueueState {
@@ -204,16 +231,38 @@ impl SubmissionQueue {
         self.not_full.notify_all();
     }
 
-    #[cfg(test)]
-    fn len(&self) -> usize {
+    /// Instantaneous queued-request count (the autoscaler's load
+    /// signal).
+    pub fn len(&self) -> usize {
         self.state.lock().unwrap().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether [`Self::close`] has been called (drain in progress).
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
     }
 }
 
-/// Forms batches from the shared queue. Multiple workers share one
+/// Outcome of one [`Batcher::fill_slots`] call.
+pub(crate) enum SlotFill {
+    /// `1..=free` live requests, ready for an engine step.
+    Batch(Vec<Request>),
+    /// No request arrived within the idle timeout. Pool workers use
+    /// this to surface and re-check whether the autoscaler retired
+    /// them; the queue is still open.
+    Idle,
+    /// The queue is closed and fully drained — worker shutdown signal.
+    Closed,
+}
+
+/// Fills worker slots from the shared queue. Multiple workers share one
 /// `Batcher`; each call pulls an exclusive set of requests (the queue is
 /// the synchronization point), and cancelled/expired requests are
-/// resolved here — at batch formation — instead of running inference.
+/// resolved here — at slot-fill time — instead of running inference.
 pub(crate) struct Batcher {
     queue: Arc<SubmissionQueue>,
     metrics: Arc<Metrics>,
@@ -249,29 +298,68 @@ impl Batcher {
         }
     }
 
-    /// Block for the next batch. Returns `None` once the queue is closed
-    /// and fully drained (worker shutdown signal).
-    pub fn next_batch(&self) -> Option<Vec<Request>> {
-        loop {
-            let first = self.queue.pop()?;
-            let Some(first) = self.still_live(first) else { continue };
-            let mut batch = vec![first];
-            let deadline = Instant::now() + self.cfg.max_wait;
-            while batch.len() < self.cfg.max_batch {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match self.queue.pop_timeout(deadline - now) {
-                    PopResult::Item(r) => {
-                        if let Some(r) = self.still_live(r) {
-                            batch.push(r);
-                        }
-                    }
-                    PopResult::TimedOut | PopResult::Closed => break,
-                }
+    /// Upper bound a worker should request per engine step.
+    pub fn max_batch(&self) -> usize {
+        self.cfg.max_batch
+    }
+
+    /// Fill up to `free` freshly-opened batch slots — the continuous-
+    /// batching core. Blocks until the first live request arrives (or
+    /// `idle_timeout` elapses, or the queue closes), then gathers
+    /// stragglers for at most `max_wait` before handing the slots to
+    /// the engine. `idle_timeout: None` waits indefinitely, so the call
+    /// can only return `Batch` or `Closed`.
+    pub fn fill_slots(&self, free: usize, idle_timeout: Option<Duration>) -> SlotFill {
+        assert!(free >= 1, "a worker must have at least one free slot");
+        // Phase 1: the first live request. Dead (cancelled/expired)
+        // requests are resolved and never occupy a slot.
+        let first = loop {
+            let popped = match idle_timeout {
+                None => match self.queue.pop() {
+                    Some(r) => r,
+                    None => return SlotFill::Closed,
+                },
+                Some(t) => match self.queue.pop_timeout(t) {
+                    PopResult::Item(r) => r,
+                    PopResult::TimedOut => return SlotFill::Idle,
+                    PopResult::Closed => return SlotFill::Closed,
+                },
+            };
+            if let Some(r) = self.still_live(popped) {
+                break r;
             }
-            return Some(batch);
+        };
+        // Phase 2: straggler gathering, bounded by `max_wait` and the
+        // caller's free-slot budget.
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.cfg.max_wait;
+        while batch.len() < free {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.queue.pop_timeout(deadline - now) {
+                PopResult::Item(r) => {
+                    if let Some(r) = self.still_live(r) {
+                        batch.push(r);
+                    }
+                }
+                PopResult::TimedOut | PopResult::Closed => break,
+            }
+        }
+        SlotFill::Batch(batch)
+    }
+
+    /// Block for the next full-width fill. Returns `None` once the
+    /// queue is closed and fully drained (worker shutdown signal).
+    /// Convenience wrapper over [`Self::fill_slots`] for callers
+    /// without an autoscaling pool (tests, fixed single-purpose
+    /// workers).
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        match self.fill_slots(self.cfg.max_batch, None) {
+            SlotFill::Batch(b) => Some(b),
+            SlotFill::Closed => None,
+            SlotFill::Idle => unreachable!("no idle timeout was set"),
         }
     }
 }
@@ -362,6 +450,57 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn fill_slots_honors_the_free_slot_budget() {
+        let (b, q, m) = batcher(
+            64,
+            AdmissionPolicy::Block,
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        );
+        let mut keep = Vec::new();
+        for i in 0..5 {
+            let (r, rx) = mk_request(i, Priority::Normal);
+            keep.push(rx);
+            q.push(r, &m).unwrap();
+        }
+        // A worker with only 2 free slots takes exactly 2; the rest
+        // stay queued for the next refill.
+        match b.fill_slots(2, None) {
+            SlotFill::Batch(batch) => {
+                assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+            }
+            _ => panic!("expected a batch"),
+        }
+        assert_eq!(q.len(), 3);
+        match b.fill_slots(8, None) {
+            SlotFill::Batch(batch) => {
+                assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3, 4]);
+            }
+            _ => panic!("expected a batch"),
+        }
+    }
+
+    #[test]
+    fn fill_slots_idle_timeout_surfaces_without_a_batch() {
+        let (b, q, m) = batcher(8, AdmissionPolicy::Block, BatcherConfig::default());
+        let t0 = Instant::now();
+        assert!(matches!(b.fill_slots(4, Some(Duration::from_millis(5))), SlotFill::Idle));
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        // With traffic present the same call returns a batch...
+        let (r, _keep) = mk_request(7, Priority::Normal);
+        q.push(r, &m).unwrap();
+        match b.fill_slots(4, Some(Duration::from_millis(5))) {
+            SlotFill::Batch(batch) => assert_eq!(batch[0].id, 7),
+            _ => panic!("expected a batch"),
+        }
+        // ...and a closed drained queue reports Closed, not Idle.
+        q.close();
+        assert!(matches!(
+            b.fill_slots(4, Some(Duration::from_millis(5))),
+            SlotFill::Closed
+        ));
     }
 
     #[test]

@@ -33,6 +33,10 @@ pub struct Metrics {
     engine_failures: AtomicU64,
     /// Results that could not be delivered: the ticket was dropped.
     dropped_sends: AtomicU64,
+    /// Worker-pool grow events (autoscaler added a worker).
+    scale_ups: AtomicU64,
+    /// Worker-pool shrink events (autoscaler retired a worker).
+    scale_downs: AtomicU64,
     /// End-to-end latencies (seconds).
     e2e: Mutex<Vec<f64>>,
     /// Queue-wait latencies (seconds).
@@ -53,6 +57,8 @@ impl Default for Metrics {
             shed: AtomicU64::new(0),
             engine_failures: AtomicU64::new(0),
             dropped_sends: AtomicU64::new(0),
+            scale_ups: AtomicU64::new(0),
+            scale_downs: AtomicU64::new(0),
             e2e: Mutex::new(Vec::new()),
             queue: Mutex::new(Vec::new()),
         }
@@ -104,6 +110,14 @@ impl Metrics {
         self.dropped_sends.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_scale_up(&self) {
+        self.scale_ups.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_scale_down(&self) {
+        self.scale_downs.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let e2e = self.e2e.lock().unwrap().clone();
         let queue = self.queue.lock().unwrap().clone();
@@ -120,6 +134,8 @@ impl Metrics {
             shed: self.shed.load(Ordering::Relaxed),
             engine_failures: self.engine_failures.load(Ordering::Relaxed),
             dropped_sends: self.dropped_sends.load(Ordering::Relaxed),
+            scale_ups: self.scale_ups.load(Ordering::Relaxed),
+            scale_downs: self.scale_downs.load(Ordering::Relaxed),
             e2e: Percentiles::of(e2e),
             queue: Percentiles::of(queue),
         }
@@ -133,23 +149,42 @@ pub struct Percentiles {
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
+    pub p999: f64,
     pub max: f64,
 }
 
 impl Percentiles {
-    pub fn of(mut xs: Vec<f64>) -> Self {
+    /// Well-defined on any input: non-finite samples are discarded, an
+    /// empty set yields all-zero percentiles (never NaN — these numbers
+    /// flow into emitted JSON and gate comparisons), and a single
+    /// sample is every percentile of itself.
+    pub fn of(xs: Vec<f64>) -> Self {
+        let mut xs: Vec<f64> = xs.into_iter().filter(|x| x.is_finite()).collect();
         if xs.is_empty() {
             return Self::default();
         }
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         let q = |p: f64| xs[((xs.len() as f64 - 1.0) * p).floor() as usize];
         Self {
             mean: xs.iter().sum::<f64>() / xs.len() as f64,
             p50: q(0.50),
             p95: q(0.95),
             p99: q(0.99),
+            p999: q(0.999),
             max: *xs.last().unwrap(),
         }
+    }
+
+    /// JSON view in milliseconds — the unit every emitted report uses.
+    pub fn to_json_ms(&self) -> crate::util::Json {
+        let mut j = crate::util::Json::obj();
+        j.set("mean_ms", self.mean * 1e3)
+            .set("p50_ms", self.p50 * 1e3)
+            .set("p95_ms", self.p95 * 1e3)
+            .set("p99_ms", self.p99 * 1e3)
+            .set("p999_ms", self.p999 * 1e3)
+            .set("max_ms", self.max * 1e3);
+        j
     }
 }
 
@@ -167,6 +202,10 @@ pub struct MetricsSnapshot {
     pub shed: u64,
     pub engine_failures: u64,
     pub dropped_sends: u64,
+    /// Worker-pool autoscaler grow events.
+    pub scale_ups: u64,
+    /// Worker-pool autoscaler shrink events.
+    pub scale_downs: u64,
     pub e2e: Percentiles,
     pub queue: Percentiles,
 }
@@ -211,15 +250,21 @@ impl MetricsSnapshot {
         } else {
             String::new()
         };
+        let pool = if self.scale_ups > 0 || self.scale_downs > 0 {
+            format!(", pool +{}/-{}", self.scale_ups, self.scale_downs)
+        } else {
+            String::new()
+        };
         format!(
-            "{} req, {:.1} req/s, avg batch {:.2}{swaps}, e2e p50/p95/p99 = \
-             {:.2}/{:.2}/{:.2} ms{failures}",
+            "{} req, {:.1} req/s, avg batch {:.2}{swaps}{pool}, e2e p50/p95/p99/p999 = \
+             {:.2}/{:.2}/{:.2}/{:.2} ms{failures}",
             self.completed,
             self.throughput_rps,
             self.avg_batch,
             self.e2e.p50 * 1e3,
             self.e2e.p95 * 1e3,
             self.e2e.p99 * 1e3,
+            self.e2e.p999 * 1e3,
         )
     }
 }
@@ -235,14 +280,41 @@ mod tests {
         assert_eq!(p.p50, 50.0);
         assert_eq!(p.p95, 95.0);
         assert_eq!(p.p99, 99.0);
+        assert_eq!(p.p999, 99.0);
         assert_eq!(p.max, 100.0);
         assert!((p.mean - 50.5).abs() < 1e-9);
+        // At 2000 samples p999 separates from p99.
+        let xs: Vec<f64> = (1..=2000).map(|x| x as f64).collect();
+        let p = Percentiles::of(xs);
+        assert_eq!(p.p99, 1980.0);
+        assert_eq!(p.p999, 1999.0);
     }
 
     #[test]
     fn empty_percentiles_are_zero() {
         let p = Percentiles::of(vec![]);
         assert_eq!(p.p99, 0.0);
+        assert_eq!(p.p999, 0.0);
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let p = Percentiles::of(vec![0.25]);
+        assert_eq!((p.p50, p.p99, p.p999, p.max), (0.25, 0.25, 0.25, 0.25));
+        assert_eq!(p.mean, 0.25);
+    }
+
+    #[test]
+    fn non_finite_samples_never_reach_the_json() {
+        let p = Percentiles::of(vec![f64::NAN, 1.0, f64::INFINITY, 3.0, f64::NEG_INFINITY]);
+        assert_eq!(p.p50, 1.0);
+        assert_eq!(p.max, 3.0);
+        let encoded = p.to_json_ms().encode();
+        assert!(!encoded.contains("null"), "{encoded}");
+        // All-NaN input degrades to zeros, not NaN.
+        let p = Percentiles::of(vec![f64::NAN, f64::NAN]);
+        assert_eq!(p.p999, 0.0);
+        assert!(!p.to_json_ms().encode().contains("null"));
     }
 
     #[test]
@@ -271,6 +343,19 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.swaps, 2);
         assert!(s.summary().contains("2 swaps"), "{}", s.summary());
+    }
+
+    #[test]
+    fn scale_events_are_counted_and_surfaced() {
+        let m = Metrics::new();
+        m.record_scale_up();
+        m.record_scale_up();
+        m.record_scale_down();
+        let s = m.snapshot();
+        assert_eq!((s.scale_ups, s.scale_downs), (2, 1));
+        assert!(s.summary().contains("pool +2/-1"), "{}", s.summary());
+        // Fixed pools keep the summary clean.
+        assert!(!Metrics::new().snapshot().summary().contains("pool"));
     }
 
     #[test]

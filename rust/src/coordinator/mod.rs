@@ -5,11 +5,14 @@
 //! queue's [`AdmissionPolicy`], and returns a [`Ticket`] supporting
 //! `wait()`, `wait_timeout()`, and `cancel()`, with a per-request
 //! [`Deadline`] and [`Priority`]. Behind it: priority submission queue
-//! → dynamic batcher (cancelled and deadline-expired requests are
-//! dropped **at batch formation**, never run) → worker pool over a
+//! → **continuous batcher** (workers refill exactly the batch slots
+//! that just opened via `fill_slots`, instead of forming batches
+//! stop-the-world; cancelled and deadline-expired requests are dropped
+//! **at slot-fill time**, never run) → **autoscaling worker pool**
+//! (min/max workers, grown and shrunk by observed queue depth) over a
 //! pluggable fallible [`Engine`] (rust engine, exponential counting
 //! engine, or a PJRT-compiled AOT artifact), with per-request latency
-//! metrics and typed failure counters.
+//! metrics (p50/p95/p99/p999) and typed failure counters.
 //!
 //! **Error taxonomy** ([`ServeError`]): every way a request can fail is
 //! a typed, observable outcome —
@@ -60,4 +63,4 @@ pub use registry::{ModelRegistry, SwappableEngine};
 pub use request::{
     Deadline, InferError, Output, Payload, Priority, Response, ServeError, SubmitOptions,
 };
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Coordinator, CoordinatorConfig, DriveReport};

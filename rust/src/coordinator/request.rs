@@ -130,6 +130,21 @@ pub enum ServeError {
     ShuttingDown,
 }
 
+impl ServeError {
+    /// Stable snake_case key for this failure class — the aggregation
+    /// key used by the loadgen recorder and emitted JSON reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::QueueFull => "queue_full",
+            ServeError::Cancelled => "cancelled",
+            ServeError::DeadlineExceeded => "deadline_exceeded",
+            ServeError::WrongPayload(_) => "wrong_payload",
+            ServeError::EngineFailure(_) => "engine_failure",
+            ServeError::ShuttingDown => "shutting_down",
+        }
+    }
+}
+
 impl std::fmt::Display for ServeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -243,6 +258,20 @@ mod tests {
         assert!(Priority::High.lane() < Priority::Normal.lane());
         assert!(Priority::Normal.lane() < Priority::Low.lane());
         assert_eq!(Priority::default(), Priority::Normal);
+    }
+
+    #[test]
+    fn serve_error_kinds_are_distinct() {
+        let all = [
+            ServeError::QueueFull,
+            ServeError::Cancelled,
+            ServeError::DeadlineExceeded,
+            ServeError::WrongPayload("x".into()),
+            ServeError::EngineFailure("x".into()),
+            ServeError::ShuttingDown,
+        ];
+        let kinds: std::collections::BTreeSet<&str> = all.iter().map(|e| e.kind()).collect();
+        assert_eq!(kinds.len(), all.len());
     }
 
     #[test]

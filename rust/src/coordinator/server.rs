@@ -1,7 +1,18 @@
 //! The serving coordinator: typed client front door → priority
-//! submission queue → dynamic batcher → worker pool → per-ticket
-//! results. Pure std (threads + condvars); the engine is pluggable
-//! ([`Engine`]) — rust engine, counting engine, or a PJRT executable.
+//! submission queue → continuous batcher → autoscaling worker pool →
+//! per-ticket results. Pure std (threads + condvars); the engine is
+//! pluggable ([`Engine`]) — rust engine, counting engine, or a PJRT
+//! executable.
+//!
+//! Workers run a **continuous batching** loop: each engine step asks
+//! the shared [`Batcher`] to refill exactly the slots that just opened
+//! ([`Batcher::fill_slots`]), so freshly-arrived high-priority work is
+//! picked up the moment capacity exists instead of waiting for a
+//! stop-the-world batch cadence. The pool **autoscales** between
+//! `min_workers` and `max_workers`: a supervisor thread samples queue
+//! depth, spawns a worker when the backlog exceeds what the active
+//! workers can absorb in one step, and retires one after a sustained
+//! idle period (the retiring worker exits at its next idle slot-fill).
 //!
 //! Every failure is a typed [`ServeError`] delivered through the
 //! request's [`super::Ticket`]: engines report per-item `Result`s,
@@ -10,21 +21,37 @@
 //! `debug_assert` — and responses whose ticket was abandoned are
 //! counted (`dropped_sends`) instead of vanishing.
 
-use super::batcher::{AdmissionPolicy, Batcher, BatcherConfig, SubmissionQueue};
+use super::batcher::{AdmissionPolicy, Batcher, BatcherConfig, SlotFill, SubmissionQueue};
 use super::client::{ClientCore, InferenceClient};
 use super::engine::Engine;
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::request::{Payload, Request, Response, ServeError};
+use super::request::{Payload, Priority, Request, Response, ServeError};
+use crate::loadgen::{LoadReport, Recorder};
 use anyhow::Result;
-use std::sync::atomic::AtomicU64;
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long an idle worker waits for traffic before surfacing to
+/// re-check whether the autoscaler retired it.
+const IDLE_RECHECK: Duration = Duration::from_millis(20);
+/// Autoscaler sampling period.
+const SCALE_TICK: Duration = Duration::from_millis(5);
+/// Consecutive empty-queue autoscaler ticks before one worker is
+/// retired (~100ms of sustained idleness at `SCALE_TICK`).
+const IDLE_TICKS_TO_SHRINK: u32 = 20;
 
 /// Coordinator configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct CoordinatorConfig {
     pub batcher: BatcherConfig,
-    pub workers: usize,
+    /// Worker-pool floor — the pool starts here and never shrinks
+    /// below it.
+    pub min_workers: usize,
+    /// Worker-pool ceiling. Equal to `min_workers` disables
+    /// autoscaling entirely (no supervisor thread is spawned).
+    pub max_workers: usize,
     /// Submission queue bound.
     pub queue_depth: usize,
     /// What happens to submissions when the queue is full.
@@ -35,9 +62,48 @@ impl Default for CoordinatorConfig {
     fn default() -> Self {
         Self {
             batcher: BatcherConfig::default(),
-            workers: 2,
+            min_workers: 2,
+            max_workers: 2,
             queue_depth: 256,
             admission: AdmissionPolicy::Block,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Fixed-size pool of `n` workers (autoscaling disabled).
+    pub fn with_workers(n: usize) -> Self {
+        Self { min_workers: n, max_workers: n, ..Self::default() }
+    }
+}
+
+/// Shared autoscaling state: how many workers should exist (`target`),
+/// how many currently do (`active`), and their join handles.
+struct Pool {
+    target: AtomicUsize,
+    active: AtomicUsize,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Pool {
+    /// Called by an idle worker: retire iff the pool is over target.
+    /// The CAS loop guarantees exactly one worker wins each decrement,
+    /// so the pool never undershoots the supervisor's target.
+    fn try_retire(&self) -> bool {
+        let mut active = self.active.load(Ordering::SeqCst);
+        loop {
+            if active <= self.target.load(Ordering::SeqCst) {
+                return false;
+            }
+            match self.active.compare_exchange(
+                active,
+                active - 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return true,
+                Err(now) => active = now,
+            }
         }
     }
 }
@@ -46,7 +112,8 @@ impl Default for CoordinatorConfig {
 pub struct Coordinator {
     core: Arc<ClientCore>,
     queue: Arc<SubmissionQueue>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    pool: Arc<Pool>,
+    supervisor: Option<JoinHandle<()>>,
 }
 
 /// Deliver one resolved request, counting an abandoned ticket.
@@ -56,71 +123,172 @@ fn resolve(metrics: &Metrics, req: Request, result: Result<Response, ServeError>
     }
 }
 
+/// Run one engine step over a filled batch and resolve every ticket.
+fn process_batch<E: Engine + ?Sized>(engine: &E, metrics: &Metrics, batch: Vec<Request>) {
+    metrics.record_batch(batch.len());
+    let formed = Instant::now();
+    let payloads: Vec<Payload> = batch.iter().map(|r| r.payload.clone()).collect();
+    let results = engine.infer_batch(&payloads);
+    if results.len() != batch.len() {
+        // Batch-contract violation: fail every request of this batch,
+        // in release too.
+        let why = format!(
+            "engine `{}` returned {} results for a batch of {}",
+            engine.name(),
+            results.len(),
+            batch.len()
+        );
+        metrics.record_engine_failures(batch.len() as u64);
+        for req in batch {
+            let e = ServeError::EngineFailure(why.clone());
+            resolve(metrics, req, Err(e));
+        }
+        return;
+    }
+    for (req, item) in batch.into_iter().zip(results) {
+        let e2e = req.submitted.elapsed().as_secs_f64();
+        let queue_s = formed.duration_since(req.submitted).as_secs_f64();
+        match item {
+            Ok(output) => {
+                metrics.record_response(e2e, queue_s);
+                let resp = Response { id: req.id, output, queue_s, e2e_s: e2e };
+                resolve(metrics, req, Ok(resp));
+            }
+            Err(infer_err) => {
+                metrics.record_engine_failures(1);
+                resolve(metrics, req, Err(infer_err.into()));
+            }
+        }
+    }
+}
+
+/// Spawn one pool worker running the continuous slot-refill loop.
+fn spawn_worker<E: Engine + ?Sized>(
+    pool: &Arc<Pool>,
+    batcher: &Arc<Batcher>,
+    engine: &Arc<E>,
+    metrics: &Arc<Metrics>,
+) {
+    pool.active.fetch_add(1, Ordering::SeqCst);
+    let pool2 = Arc::clone(pool);
+    let batcher = Arc::clone(batcher);
+    let engine = Arc::clone(engine);
+    let metrics = Arc::clone(metrics);
+    let handle = std::thread::spawn(move || {
+        loop {
+            // The engine step consumed every slot it was given, so the
+            // whole batch width is free again each iteration.
+            match batcher.fill_slots(batcher.max_batch(), Some(IDLE_RECHECK)) {
+                SlotFill::Closed => break,
+                SlotFill::Idle => {
+                    if pool2.try_retire() {
+                        // `try_retire` already decremented `active`.
+                        return;
+                    }
+                }
+                SlotFill::Batch(batch) => process_batch(engine.as_ref(), &metrics, batch),
+            }
+        }
+        pool2.active.fetch_sub(1, Ordering::SeqCst);
+    });
+    pool.handles.lock().unwrap().push(handle);
+}
+
+/// Spawn the autoscaler: sample queue depth every `SCALE_TICK`, grow
+/// when the backlog exceeds one step's worth of active capacity,
+/// shrink after sustained idleness. Exits when the queue closes.
+fn spawn_supervisor<E: Engine + ?Sized>(
+    queue: Arc<SubmissionQueue>,
+    pool: Arc<Pool>,
+    batcher: Arc<Batcher>,
+    engine: Arc<E>,
+    metrics: Arc<Metrics>,
+    min_workers: usize,
+    max_workers: usize,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut idle_ticks = 0u32;
+        loop {
+            std::thread::sleep(SCALE_TICK);
+            if queue.is_closed() {
+                return;
+            }
+            let depth = queue.len();
+            let active = pool.active.load(Ordering::SeqCst);
+            if depth > active.saturating_mul(batcher.max_batch()) && active < max_workers {
+                // More queued than the pool can absorb in one step:
+                // add a worker.
+                pool.target.store(active + 1, Ordering::SeqCst);
+                spawn_worker(&pool, &batcher, &engine, &metrics);
+                metrics.record_scale_up();
+                idle_ticks = 0;
+            } else if queue.is_empty() {
+                let target = pool.target.load(Ordering::SeqCst);
+                if target > min_workers {
+                    idle_ticks += 1;
+                    if idle_ticks >= IDLE_TICKS_TO_SHRINK {
+                        // Lower the target; the next idle worker to
+                        // surface from `fill_slots` retires itself.
+                        pool.target.store(target - 1, Ordering::SeqCst);
+                        metrics.record_scale_down();
+                        idle_ticks = 0;
+                    }
+                } else {
+                    idle_ticks = 0;
+                }
+            } else {
+                idle_ticks = 0;
+            }
+        }
+    })
+}
+
+/// What [`Coordinator::drive`] returns: the legacy per-request mean
+/// plus the full latency distribution, computed by the same
+/// [`Recorder`] the open-loop load generator uses — one measurement
+/// code path for benches, the CI gate, and loadgen.
+pub struct DriveReport {
+    /// Mean wall time per request (total wall / n).
+    pub per_request: Duration,
+    /// Full closed-loop latency/goodput report.
+    pub load: LoadReport,
+}
+
 impl Coordinator {
     /// Start the worker pool over `engine`. The batcher is clamped to
-    /// the engine's declared `max_batch` capability.
+    /// the engine's declared `max_batch` capability; the pool starts at
+    /// `min_workers` and autoscales up to `max_workers` by queue depth.
     pub fn start<E: Engine + ?Sized>(engine: Arc<E>, cfg: CoordinatorConfig) -> Self {
         let caps = engine.capabilities();
         let mut batcher_cfg = cfg.batcher;
         if let Some(cap) = caps.max_batch {
             batcher_cfg.max_batch = batcher_cfg.max_batch.min(cap.max(1));
         }
+        let min_workers = cfg.min_workers.max(1);
+        let max_workers = cfg.max_workers.max(min_workers);
         let queue = Arc::new(SubmissionQueue::new(cfg.queue_depth, cfg.admission));
         let metrics = Arc::new(Metrics::new());
         let batcher =
             Arc::new(Batcher::new(Arc::clone(&queue), Arc::clone(&metrics), batcher_cfg));
-        let workers = (0..cfg.workers.max(1))
-            .map(|_| {
-                let batcher = Arc::clone(&batcher);
-                let engine = Arc::clone(&engine);
-                let metrics = Arc::clone(&metrics);
-                std::thread::spawn(move || {
-                    while let Some(batch) = batcher.next_batch() {
-                        metrics.record_batch(batch.len());
-                        let formed = Instant::now();
-                        let payloads: Vec<Payload> =
-                            batch.iter().map(|r| r.payload.clone()).collect();
-                        let results = engine.infer_batch(&payloads);
-                        if results.len() != batch.len() {
-                            // Batch-contract violation: fail every
-                            // request of this batch, in release too.
-                            let why = format!(
-                                "engine `{}` returned {} results for a batch of {}",
-                                engine.name(),
-                                results.len(),
-                                batch.len()
-                            );
-                            metrics.record_engine_failures(batch.len() as u64);
-                            for req in batch {
-                                let e = ServeError::EngineFailure(why.clone());
-                                resolve(&metrics, req, Err(e));
-                            }
-                            continue;
-                        }
-                        for (req, item) in batch.into_iter().zip(results) {
-                            let e2e = req.submitted.elapsed().as_secs_f64();
-                            let queue_s = formed.duration_since(req.submitted).as_secs_f64();
-                            match item {
-                                Ok(output) => {
-                                    metrics.record_response(e2e, queue_s);
-                                    let resp = Response {
-                                        id: req.id,
-                                        output,
-                                        queue_s,
-                                        e2e_s: e2e,
-                                    };
-                                    resolve(&metrics, req, Ok(resp));
-                                }
-                                Err(infer_err) => {
-                                    metrics.record_engine_failures(1);
-                                    resolve(&metrics, req, Err(infer_err.into()));
-                                }
-                            }
-                        }
-                    }
-                })
-            })
-            .collect();
+        let pool = Arc::new(Pool {
+            target: AtomicUsize::new(min_workers),
+            active: AtomicUsize::new(0),
+            handles: Mutex::new(Vec::new()),
+        });
+        for _ in 0..min_workers {
+            spawn_worker(&pool, &batcher, &engine, &metrics);
+        }
+        let supervisor = (max_workers > min_workers).then(|| {
+            spawn_supervisor(
+                Arc::clone(&queue),
+                Arc::clone(&pool),
+                Arc::clone(&batcher),
+                Arc::clone(&engine),
+                Arc::clone(&metrics),
+                min_workers,
+                max_workers,
+            )
+        });
         let core = Arc::new(ClientCore {
             queue: Arc::clone(&queue),
             metrics,
@@ -128,7 +296,7 @@ impl Coordinator {
             next_id: AtomicU64::new(0),
             engine_name: engine.name().to_string(),
         });
-        Self { core, queue, workers }
+        Self { core, queue, pool, supervisor }
     }
 
     /// A cloneable typed client onto this coordinator.
@@ -146,25 +314,44 @@ impl Coordinator {
         self.client().infer(payload)
     }
 
+    /// Currently running pool workers.
+    pub fn active_workers(&self) -> usize {
+        self.pool.active.load(Ordering::SeqCst)
+    }
+
+    /// Instantaneous submission-queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
     /// Submit `n` requests cycling through `payloads`, then block until
-    /// every response arrives; returns mean wall time per request. The
-    /// shared measurement core of the serving benches and the CI bench
-    /// gate (one implementation so the gate measures exactly what the
-    /// bench reports).
-    pub fn drive(&self, payloads: &[Payload], n: usize) -> Result<std::time::Duration> {
+    /// every response arrives. The shared measurement core of the
+    /// serving benches and the CI bench gate — latency is recorded by
+    /// the same [`Recorder`] the open-loop load generator uses, so both
+    /// report through one code path. The first failed request aborts
+    /// with its error.
+    pub fn drive(&self, payloads: &[Payload], n: usize) -> Result<DriveReport> {
         if payloads.is_empty() || n == 0 {
             anyhow::bail!("drive needs at least one payload and one request");
         }
         let client = self.client();
+        let mut recorder = Recorder::new();
         let t0 = Instant::now();
         let mut tickets = Vec::with_capacity(n);
         for i in 0..n {
             tickets.push(client.submit(payloads[i % payloads.len()].clone())?);
         }
         for t in tickets {
-            t.wait()?;
+            match t.wait() {
+                Ok(resp) => recorder.record_ok(Priority::Normal, resp.e2e_s, resp.queue_s),
+                Err(e) => {
+                    recorder.record_err(Priority::Normal, &e);
+                    return Err(e.into());
+                }
+            }
         }
-        Ok(t0.elapsed() / n as u32)
+        let wall = t0.elapsed();
+        Ok(DriveReport { per_request: wall / n as u32, load: recorder.report(n, wall) })
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -185,7 +372,12 @@ impl Coordinator {
     /// error — before this returns.
     pub fn shutdown_and_drain(mut self) -> MetricsSnapshot {
         self.queue.close();
-        for w in self.workers.drain(..) {
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.pool.handles.lock().unwrap());
+        for w in handles {
             let _ = w.join();
         }
         self.core.metrics.snapshot()
@@ -197,7 +389,6 @@ mod tests {
     use super::super::engine::EchoEngine;
     use super::super::request::Output;
     use super::*;
-    use std::time::Duration;
 
     #[test]
     fn serves_and_echoes() {
@@ -218,7 +409,8 @@ mod tests {
                     max_batch: 4,
                     max_wait: std::time::Duration::from_millis(1),
                 },
-                workers: 3,
+                min_workers: 3,
+                max_workers: 3,
                 queue_depth: 64,
                 admission: AdmissionPolicy::Block,
             },
@@ -240,6 +432,8 @@ mod tests {
         assert_eq!(snap.completed, 100);
         assert!(snap.avg_batch >= 1.0);
         assert!(snap.e2e.p50 > 0.0);
+        // Fixed-size pool: the autoscaler never runs.
+        assert_eq!((snap.scale_ups, snap.scale_downs), (0, 0));
     }
 
     #[test]
@@ -247,8 +441,14 @@ mod tests {
         let c =
             Coordinator::start(Arc::new(EchoEngine { delay_us: 0 }), CoordinatorConfig::default());
         let payloads = vec![Payload::Seq(vec![1]), Payload::Seq(vec![2])];
-        let per = c.drive(&payloads, 10).unwrap();
-        assert!(per > std::time::Duration::ZERO);
+        let report = c.drive(&payloads, 10).unwrap();
+        assert!(report.per_request > std::time::Duration::ZERO);
+        // drive measures through the loadgen recorder: the closed-loop
+        // report agrees with what the coordinator served.
+        assert_eq!(report.load.completed, 10);
+        assert_eq!(report.load.offered, 10);
+        assert_eq!(report.load.failed, 0);
+        assert!(report.load.e2e.p99 > 0.0);
         assert!(c.drive(&[], 4).is_err());
         let snap = c.shutdown_and_drain();
         assert_eq!(snap.completed, 10);
@@ -277,7 +477,8 @@ mod tests {
                     max_batch: 8,
                     max_wait: Duration::from_millis(4),
                 },
-                workers: 1,
+                min_workers: 1,
+                max_workers: 1,
                 queue_depth: 256,
                 admission: AdmissionPolicy::Block,
             },
@@ -311,7 +512,8 @@ mod tests {
             Arc::new(super::super::engine::Infallible(Cap2)),
             CoordinatorConfig {
                 batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(2) },
-                workers: 1,
+                min_workers: 1,
+                max_workers: 1,
                 queue_depth: 64,
                 admission: AdmissionPolicy::Block,
             },
@@ -324,5 +526,43 @@ mod tests {
         let snap = c.shutdown_and_drain();
         assert_eq!(snap.completed, 12);
         assert!(snap.avg_batch <= 2.0, "avg batch {}", snap.avg_batch);
+    }
+
+    #[test]
+    fn pool_scales_up_under_load_and_back_down_when_idle() {
+        // One slow worker cannot absorb 160 queued requests, so the
+        // supervisor must grow the pool; once the burst drains, the
+        // pool must settle back to `min_workers`.
+        let c = Coordinator::start(
+            Arc::new(EchoEngine { delay_us: 3000 }),
+            CoordinatorConfig {
+                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+                min_workers: 1,
+                max_workers: 4,
+                queue_depth: 512,
+                admission: AdmissionPolicy::Block,
+            },
+        );
+        assert_eq!(c.active_workers(), 1);
+        let tickets: Vec<_> =
+            (0..160).map(|i| c.submit(Payload::Seq(vec![i])).unwrap()).collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        assert!(
+            c.metrics().scale_ups >= 1,
+            "160 queued requests against one 3ms worker must trigger a scale-up"
+        );
+        // Idle: the supervisor lowers the target and idle workers
+        // retire at their next slot-fill.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while c.active_workers() > 1 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(c.active_workers(), 1, "pool must shrink back to min_workers when idle");
+        let snap = c.shutdown_and_drain();
+        assert_eq!(snap.completed, 160);
+        assert!(snap.scale_downs >= 1);
+        assert_eq!(snap.failed_total(), 0);
     }
 }

@@ -29,7 +29,8 @@
 //! | [`expdot`] | §III-C, §IV | **batched** exponential counting-GEMM engines + INT8 baseline |
 //! | [`accel`] | §V, §VI-C/D | 3D-stacked accelerator simulator + energy |
 //! | [`runtime`] | — | PJRT loading/execution of AOT artifacts (feature `pjrt`) |
-//! | [`coordinator`] | — | serving: typed `InferenceClient`/`Ticket` API over fallible `Engine`s, priority queue + admission policies, registry, hot-swap, metrics |
+//! | [`coordinator`] | — | serving: typed `InferenceClient`/`Ticket` API over fallible `Engine`s, priority queue + admission policies, continuous batching, autoscaling pools, registry, hot-swap, metrics |
+//! | [`loadgen`] | — | open-loop Poisson/bursty load generator + per-priority p50/p99/p999 recorder (`BENCH_loadgen.json`, tail-latency SLO gate) |
 //! | [`report`] | §VI | table/figure emitters for every paper exhibit |
 //!
 //! ## Build / test / bench
@@ -50,6 +51,7 @@ pub mod coordinator;
 pub mod dataset;
 pub mod dnateq;
 pub mod expdot;
+pub mod loadgen;
 pub mod nn;
 pub mod report;
 pub mod runtime;

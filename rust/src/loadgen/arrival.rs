@@ -1,0 +1,125 @@
+//! Open-loop arrival processes.
+//!
+//! Open-loop means the schedule is decided before the system is
+//! observed: arrival offsets are generated ahead of time from a seeded
+//! [`SplitMix64`] stream (`tensor::rng` — no wall-clock randomness), so
+//! a slow server cannot push back on the arrival rate, which is exactly
+//! what makes tail latency under overload measurable. The same seed
+//! always yields the same schedule.
+
+use crate::tensor::SplitMix64;
+
+/// The arrival process shape.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalPattern {
+    /// Memoryless Poisson arrivals at the scenario rate.
+    Poisson,
+    /// ON-OFF bursty arrivals: Poisson bursts during `on_s`-long ON
+    /// windows separated by silent `off_s`-long OFF windows. The ON
+    /// rate is scaled by `(on+off)/on`, so the long-run offered rate
+    /// still matches the scenario rate while each burst overloads the
+    /// server by that factor.
+    Burst { on_s: f64, off_s: f64 },
+}
+
+impl ArrivalPattern {
+    /// Stable CLI/JSON name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalPattern::Poisson => "poisson",
+            ArrivalPattern::Burst { .. } => "burst",
+        }
+    }
+
+    /// Arrival offsets in seconds from scenario start — strictly
+    /// increasing, fully determined by `rng`'s seed.
+    pub fn schedule(&self, rate_rps: f64, duration_s: f64, rng: &mut SplitMix64) -> Vec<f64> {
+        assert!(rate_rps > 0.0, "arrival rate must be positive");
+        assert!(duration_s > 0.0, "duration must be positive");
+        let mut out = Vec::new();
+        match *self {
+            ArrivalPattern::Poisson => {
+                let mut t = 0.0;
+                loop {
+                    t += exp_sample(rng, rate_rps);
+                    if t >= duration_s {
+                        break;
+                    }
+                    out.push(t);
+                }
+            }
+            ArrivalPattern::Burst { on_s, off_s } => {
+                assert!(on_s > 0.0, "burst ON window must be positive");
+                assert!(off_s >= 0.0, "burst OFF window must be non-negative");
+                let cycle = on_s + off_s;
+                let on_rate = rate_rps * cycle / on_s;
+                // Generate a Poisson process on compressed "ON time",
+                // then re-insert the OFF gaps to map onto wall time.
+                let mut on_t = 0.0;
+                loop {
+                    on_t += exp_sample(rng, on_rate);
+                    let bursts = (on_t / on_s).floor();
+                    let wall = bursts * cycle + (on_t - bursts * on_s);
+                    if wall >= duration_s {
+                        break;
+                    }
+                    out.push(wall);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Inverse-CDF exponential inter-arrival sample. `next_f64` is in
+/// `[0, 1)`, so `1 - u` is in `(0, 1]` and the log is always finite.
+fn exp_sample(rng: &mut SplitMix64, rate: f64) -> f64 {
+    -(1.0 - rng.next_f64()).ln() / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_deterministic_in_the_seed() {
+        for pattern in
+            [ArrivalPattern::Poisson, ArrivalPattern::Burst { on_s: 0.1, off_s: 0.3 }]
+        {
+            let a = pattern.schedule(500.0, 2.0, &mut SplitMix64::new(42));
+            let b = pattern.schedule(500.0, 2.0, &mut SplitMix64::new(42));
+            assert_eq!(a, b);
+            let c = pattern.schedule(500.0, 2.0, &mut SplitMix64::new(43));
+            assert_ne!(a, c, "different seeds must differ ({})", pattern.name());
+        }
+    }
+
+    #[test]
+    fn poisson_count_matches_rate_and_offsets_increase() {
+        let xs = ArrivalPattern::Poisson.schedule(500.0, 4.0, &mut SplitMix64::new(7));
+        // E[count] = 2000, sd ≈ 45 — ±20% is > 8 sigma.
+        assert!((1600..=2400).contains(&xs.len()), "count {}", xs.len());
+        for w in xs.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        assert!(xs.iter().all(|&t| t > 0.0 && t < 4.0));
+    }
+
+    #[test]
+    fn burst_arrivals_stay_inside_on_windows_at_the_requested_rate() {
+        let (on_s, off_s) = (0.05, 0.15);
+        let xs = ArrivalPattern::Burst { on_s, off_s }
+            .schedule(500.0, 4.0, &mut SplitMix64::new(9));
+        // Long-run rate matches the requested 500 rps despite 75%
+        // silence.
+        assert!((1600..=2400).contains(&xs.len()), "count {}", xs.len());
+        let cycle = on_s + off_s;
+        for &t in &xs {
+            let phase = t - (t / cycle).floor() * cycle;
+            assert!(phase <= on_s + 1e-9, "arrival at {t} sits in an OFF window");
+        }
+        for w in xs.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+}

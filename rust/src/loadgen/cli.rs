@@ -1,0 +1,277 @@
+//! Flag-driven entrypoint shared by the standalone `loadgen` bin and
+//! the `repro loadgen` subcommand — one implementation, two front
+//! doors, identical flags.
+//!
+//! ```bash
+//! loadgen --engine counting --pattern poisson --rate 150 --duration 2 \
+//!     --seed 42 --admission block --out artifacts/reports/BENCH_loadgen.json
+//! ```
+
+use super::arrival::ArrivalPattern;
+use super::recorder::LoadReport;
+use super::scenario::Scenario;
+use crate::coordinator::{
+    AdmissionPolicy, BatcherConfig, Coordinator, CoordinatorConfig, CountingFcBackend,
+    EchoEngine, Payload,
+};
+use crate::dataset::ImageDataset;
+use crate::dnateq::ExpQuantParams;
+use crate::expdot::CountingFc;
+use crate::tensor::{SplitMix64, Tensor};
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Seed of the fixed CI counting layer (distinct from the bench_gate
+/// timing sweep so the two never alias).
+pub const CI_ENGINE_SEED: u64 = 0xC1_10AD;
+
+/// Flags `run_from_flags` understands. `simd` and `fail-on-errors` are
+/// accepted but handled by the callers (global dispatch override /
+/// bin exit code).
+const KNOWN_FLAGS: [&str; 19] = [
+    "name",
+    "pattern",
+    "rate",
+    "duration",
+    "seed",
+    "burst-on",
+    "burst-off",
+    "priority-mix",
+    "deadline-ms",
+    "admission",
+    "engine",
+    "delay-us",
+    "max-batch",
+    "max-wait-ms",
+    "min-workers",
+    "max-workers",
+    "queue-depth",
+    "out",
+    "simd",
+];
+
+/// The fixed-shape 4-bit 3072→256 counting-FC backend the CI jobs
+/// drive — the same construction as the bench_gate timing sweep, so
+/// the tail-latency SLO gate exercises the real quantized hot path.
+pub fn counting_engine(seed: u64) -> Arc<CountingFcBackend> {
+    let mut rng = SplitMix64::new(seed);
+    let w = Tensor::rand_signed_exponential(&[256, 3 * 32 * 32], 3.0, &mut rng);
+    let x_cal = Tensor::rand_signed_exponential(&[1, 3 * 32 * 32], 1.0, &mut rng);
+    let wp = ExpQuantParams::init_for_tensor(&w, 4);
+    let mut ap = ExpQuantParams { base: wp.base, alpha: 1.0, beta: 0.0, n_bits: 4 };
+    ap.refit_scale_offset(&x_cal);
+    Arc::new(CountingFcBackend { fc: CountingFc::new(&w, wp, ap, None) })
+}
+
+fn f64_flag(flags: &BTreeMap<String, String>, key: &str, default: f64) -> Result<f64> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().with_context(|| format!("--{key} must be a number, got `{v}`")),
+    }
+}
+
+fn usize_flag(flags: &BTreeMap<String, String>, key: &str, default: usize) -> Result<usize> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().with_context(|| format!("--{key} must be an integer, got `{v}`")),
+    }
+}
+
+fn u64_flag(flags: &BTreeMap<String, String>, key: &str, default: u64) -> Result<u64> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().with_context(|| format!("--{key} must be an integer, got `{v}`")),
+    }
+}
+
+/// Parse `h:n:l` priority weights.
+fn parse_mix(s: &str) -> Result<[f64; 3]> {
+    let parts: Vec<&str> = s.split(':').collect();
+    if parts.len() != 3 {
+        bail!("--priority-mix wants `high:normal:low` weights, e.g. 1:2:1 (got `{s}`)");
+    }
+    let mut mix = [0.0; 3];
+    for (slot, part) in mix.iter_mut().zip(&parts) {
+        *slot = part
+            .parse()
+            .with_context(|| format!("--priority-mix weight `{part}` is not a number"))?;
+        if !slot.is_finite() || *slot < 0.0 {
+            bail!("--priority-mix weights must be non-negative finite numbers (got `{part}`)");
+        }
+    }
+    Ok(mix)
+}
+
+/// Build the [`Scenario`] described by the flags.
+pub fn scenario_from_flags(flags: &BTreeMap<String, String>) -> Result<Scenario> {
+    let pattern = match flags.get("pattern").map(String::as_str).unwrap_or("poisson") {
+        "poisson" => ArrivalPattern::Poisson,
+        "burst" => ArrivalPattern::Burst {
+            on_s: f64_flag(flags, "burst-on", 0.05)?,
+            off_s: f64_flag(flags, "burst-off", 0.15)?,
+        },
+        other => bail!("unknown arrival pattern `{other}` (poisson|burst)"),
+    };
+    let deadline = match flags.get("deadline-ms") {
+        None => None,
+        Some(v) => {
+            let ms: f64 = v.parse().with_context(|| format!("--deadline-ms got `{v}`"))?;
+            Some(Duration::from_secs_f64(ms / 1e3))
+        }
+    };
+    let defaults = Scenario::default();
+    Ok(Scenario {
+        name: flags.get("name").cloned().unwrap_or_else(|| pattern.name().to_string()),
+        pattern,
+        rate_rps: f64_flag(flags, "rate", defaults.rate_rps)?,
+        duration_s: f64_flag(flags, "duration", defaults.duration_s)?,
+        seed: u64_flag(flags, "seed", defaults.seed)?,
+        priority_mix: match flags.get("priority-mix") {
+            None => defaults.priority_mix,
+            Some(s) => parse_mix(s)?,
+        },
+        deadline,
+    })
+}
+
+/// Run a scenario end-to-end from CLI flags: build the engine and
+/// coordinator, replay the arrival plan, print the report, optionally
+/// emit `BENCH_loadgen.json`. Returns the report so callers can gate
+/// on it (exit codes, SLO checks).
+pub fn run_from_flags(flags: &BTreeMap<String, String>) -> Result<LoadReport> {
+    for key in flags.keys() {
+        if !KNOWN_FLAGS.contains(&key.as_str()) && key != "fail-on-errors" {
+            bail!("unknown loadgen flag `--{key}`");
+        }
+    }
+    let scenario = scenario_from_flags(flags)?;
+    let admission =
+        AdmissionPolicy::parse(flags.get("admission").map(String::as_str).unwrap_or("block"))
+            .map_err(anyhow::Error::msg)?;
+    let max_batch = usize_flag(flags, "max-batch", 8)?;
+    let max_wait_ms = f64_flag(flags, "max-wait-ms", 1.0)?;
+    let min_workers = usize_flag(flags, "min-workers", 1)?;
+    let max_workers = usize_flag(flags, "max-workers", 4)?.max(min_workers);
+    let queue_depth = usize_flag(flags, "queue-depth", 1024)?;
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_secs_f64(max_wait_ms / 1e3),
+        },
+        min_workers,
+        max_workers,
+        queue_depth,
+        admission,
+    };
+
+    let engine_kind = flags.get("engine").map(String::as_str).unwrap_or("counting");
+    let (coordinator, payloads): (Coordinator, Vec<Payload>) = match engine_kind {
+        "counting" => {
+            let data = ImageDataset::synthetic(32, 0xC1DA7A);
+            let payloads = (0..data.len()).map(|i| Payload::Image(data.image(i))).collect();
+            (Coordinator::start(counting_engine(CI_ENGINE_SEED), cfg), payloads)
+        }
+        "echo" => {
+            let delay_us = u64_flag(flags, "delay-us", 200)?;
+            let payloads = (0..8).map(|i| Payload::Seq(vec![i, i + 1, i + 2])).collect();
+            (Coordinator::start(Arc::new(EchoEngine { delay_us }), cfg), payloads)
+        }
+        other => bail!("unknown loadgen engine `{other}` (counting|echo)"),
+    };
+
+    println!(
+        "loadgen: scenario `{}` ({} @ {:.0} rps for {:.1}s, seed {:#x}), engine {engine_kind}, \
+         admission {}, pool {}..{} x batch {}",
+        scenario.name,
+        scenario.pattern.name(),
+        scenario.rate_rps,
+        scenario.duration_s,
+        scenario.seed,
+        admission.name(),
+        min_workers,
+        max_workers,
+        max_batch,
+    );
+    let report = scenario.run(&coordinator.client(), &payloads);
+    let snap = coordinator.shutdown_and_drain();
+    println!("{}", report.summary());
+    println!("{}", report.class_table());
+    println!("serving: {}", snap.summary());
+
+    if let Some(out) = flags.get("out") {
+        let mut serving = Json::obj();
+        serving
+            .set("engine", engine_kind)
+            .set("admission", admission.name())
+            .set("max_batch", max_batch)
+            .set("max_wait_ms", max_wait_ms)
+            .set("min_workers", min_workers)
+            .set("max_workers", max_workers)
+            .set("queue_depth", queue_depth)
+            .set("scale_ups", snap.scale_ups)
+            .set("scale_downs", snap.scale_downs);
+        let mut j = report.to_json();
+        j.set("scenario", scenario.to_json()).set("serving", serving);
+        j.write_file(out).with_context(|| format!("writing loadgen report to {out}"))?;
+        println!("JSON -> {out}");
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(pairs: &[(&str, &str)]) -> BTreeMap<String, String> {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn scenario_flags_parse_round_trip() {
+        let s = scenario_from_flags(&flags(&[
+            ("pattern", "burst"),
+            ("burst-on", "0.02"),
+            ("burst-off", "0.08"),
+            ("rate", "333"),
+            ("duration", "1.5"),
+            ("seed", "99"),
+            ("priority-mix", "3:1:0"),
+            ("deadline-ms", "120"),
+        ]))
+        .unwrap();
+        assert_eq!(s.pattern, ArrivalPattern::Burst { on_s: 0.02, off_s: 0.08 });
+        assert_eq!(s.rate_rps, 333.0);
+        assert_eq!(s.seed, 99);
+        assert_eq!(s.priority_mix, [3.0, 1.0, 0.0]);
+        assert_eq!(s.deadline, Some(Duration::from_millis(120)));
+        assert!(scenario_from_flags(&flags(&[("pattern", "sine")])).is_err());
+        assert!(scenario_from_flags(&flags(&[("priority-mix", "1:2")])).is_err());
+        assert!(scenario_from_flags(&flags(&[("priority-mix", "1:-2:1")])).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected() {
+        let err = run_from_flags(&flags(&[("rat", "100")])).unwrap_err();
+        assert!(err.to_string().contains("rat"), "{err}");
+    }
+
+    #[test]
+    fn echo_run_from_flags_is_deterministic_in_offered_count() {
+        let f = flags(&[
+            ("engine", "echo"),
+            ("rate", "300"),
+            ("duration", "0.4"),
+            ("seed", "42"),
+            ("max-workers", "2"),
+        ]);
+        let a = run_from_flags(&f).unwrap();
+        let b = run_from_flags(&f).unwrap();
+        assert_eq!(a.offered, b.offered, "same seed must offer the same request count");
+        assert!(a.offered > 0);
+        assert_eq!(a.failed, 0, "failures: {:?}", a.failures);
+        assert_eq!(a.completed as usize, a.offered);
+    }
+}

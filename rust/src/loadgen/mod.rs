@@ -1,0 +1,32 @@
+//! Open-loop load generation + tail-latency recording (L3.5).
+//!
+//! The serving stand-in for "heavy traffic from millions of users":
+//! a seeded, open-loop arrival process ([`ArrivalPattern`]: Poisson or
+//! bursty ON-OFF) drives a [`Scenario`] — rate, duration, priority mix,
+//! optional per-request deadline — against any coordinator through the
+//! normal typed [`crate::coordinator::InferenceClient`]. Open-loop
+//! means arrivals never wait for responses, so queueing delay under
+//! overload shows up in the tail instead of silently throttling the
+//! generator.
+//!
+//! Outcomes land in a [`Recorder`] (per-priority-class completions,
+//! typed failures, latency samples) and fold into a [`LoadReport`]:
+//! goodput plus p50/p99/p999 end-to-end and queue-wait latency per
+//! class, emitted as `BENCH_loadgen.json`. The same recorder backs the
+//! closed-loop `Coordinator::drive` bench path, so benches, the CI
+//! bench gate, and the load generator all measure through one code
+//! path — and `bench_gate` holds a p99 SLO line against the committed
+//! baseline.
+//!
+//! Everything is deterministic in the scenario seed (`tensor::rng`
+//! SplitMix64, no wall-clock randomness): the same seed offers the
+//! same requests at the same offsets with the same priorities.
+
+pub mod arrival;
+pub mod cli;
+pub mod recorder;
+pub mod scenario;
+
+pub use arrival::ArrivalPattern;
+pub use recorder::{ClassReport, LoadReport, Recorder, PRIORITY_NAMES};
+pub use scenario::{Arrival, Scenario};

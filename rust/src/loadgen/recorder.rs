@@ -1,0 +1,288 @@
+//! Latency/goodput recording shared by the open-loop load generator
+//! and the closed-loop `Coordinator::drive` bench path.
+//!
+//! The [`Recorder`] accumulates per-priority-class outcomes — end-to-end
+//! and queue-wait latency samples for completions, typed-failure tallies
+//! keyed by [`ServeError::kind`] — and folds into a [`LoadReport`]:
+//! goodput plus p50/p99/p999 per class and overall, ready to emit as
+//! `BENCH_loadgen.json` (via the NaN-free [`Percentiles::to_json_ms`]).
+
+use crate::coordinator::{Percentiles, Priority, ServeError};
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Display/JSON names of the three priority classes, in lane order.
+pub const PRIORITY_NAMES: [&str; 3] = ["high", "normal", "low"];
+
+fn lane(p: Priority) -> usize {
+    match p {
+        Priority::High => 0,
+        Priority::Normal => 1,
+        Priority::Low => 2,
+    }
+}
+
+#[derive(Default)]
+struct ClassRecord {
+    submitted: u64,
+    e2e: Vec<f64>,
+    queue: Vec<f64>,
+    failures: BTreeMap<&'static str, u64>,
+}
+
+/// Accumulates request outcomes per priority class.
+#[derive(Default)]
+pub struct Recorder {
+    classes: [ClassRecord; 3],
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed request (latencies in seconds, as carried
+    /// by `Response`).
+    pub fn record_ok(&mut self, priority: Priority, e2e_s: f64, queue_s: f64) {
+        let c = &mut self.classes[lane(priority)];
+        c.submitted += 1;
+        c.e2e.push(e2e_s);
+        c.queue.push(queue_s);
+    }
+
+    /// Record one request that ended in a typed failure.
+    pub fn record_err(&mut self, priority: Priority, err: &ServeError) {
+        let c = &mut self.classes[lane(priority)];
+        c.submitted += 1;
+        *c.failures.entry(err.kind()).or_insert(0) += 1;
+    }
+
+    /// Fold into the final report. `offered` is the planned request
+    /// count (arrivals in the scenario, `n` for a closed-loop drive);
+    /// `wall` the elapsed run time.
+    pub fn report(self, offered: usize, wall: Duration) -> LoadReport {
+        let wall_s = wall.as_secs_f64().max(1e-9);
+        let mut all_e2e = Vec::new();
+        let mut all_queue = Vec::new();
+        let mut failures: BTreeMap<&'static str, u64> = BTreeMap::new();
+        let mut submitted = 0u64;
+        let mut completed = 0u64;
+        let classes: Vec<ClassReport> = self
+            .classes
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                submitted += c.submitted;
+                completed += c.e2e.len() as u64;
+                all_e2e.extend_from_slice(&c.e2e);
+                all_queue.extend_from_slice(&c.queue);
+                for (k, v) in &c.failures {
+                    *failures.entry(k).or_insert(0) += v;
+                }
+                ClassReport {
+                    priority: PRIORITY_NAMES[i],
+                    submitted: c.submitted,
+                    completed: c.e2e.len() as u64,
+                    e2e: Percentiles::of(c.e2e.clone()),
+                    queue: Percentiles::of(c.queue.clone()),
+                    failures: c.failures.clone(),
+                }
+            })
+            .collect();
+        let failed = failures.values().sum();
+        LoadReport {
+            offered,
+            submitted,
+            completed,
+            failed,
+            wall_s,
+            offered_rps: offered as f64 / wall_s,
+            goodput_rps: completed as f64 / wall_s,
+            e2e: Percentiles::of(all_e2e),
+            queue: Percentiles::of(all_queue),
+            classes,
+            failures,
+        }
+    }
+}
+
+/// Per-priority-class slice of a [`LoadReport`].
+#[derive(Clone, Debug)]
+pub struct ClassReport {
+    pub priority: &'static str,
+    pub submitted: u64,
+    pub completed: u64,
+    pub e2e: Percentiles,
+    pub queue: Percentiles,
+    pub failures: BTreeMap<&'static str, u64>,
+}
+
+/// The final scenario/drive report: goodput and tail latency, overall
+/// and per priority class.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Requests the arrival plan called for.
+    pub offered: usize,
+    /// Requests actually pushed at the client (== offered unless the
+    /// submitter was aborted).
+    pub submitted: u64,
+    /// Requests that produced a normal response.
+    pub completed: u64,
+    /// Requests that ended in any typed failure.
+    pub failed: u64,
+    pub wall_s: f64,
+    pub offered_rps: f64,
+    /// Completions per wall second — the SLO-facing throughput.
+    pub goodput_rps: f64,
+    /// Overall end-to-end latency distribution (seconds).
+    pub e2e: Percentiles,
+    /// Overall queue-wait distribution (seconds).
+    pub queue: Percentiles,
+    /// One entry per priority class, lane order (high, normal, low).
+    pub classes: Vec<ClassReport>,
+    /// Aggregated typed-failure tallies keyed by [`ServeError::kind`].
+    pub failures: BTreeMap<&'static str, u64>,
+}
+
+impl LoadReport {
+    pub fn engine_failures(&self) -> u64 {
+        self.failures.get("engine_failure").copied().unwrap_or(0)
+    }
+
+    /// The `BENCH_loadgen.json` body (scenario/serving config is
+    /// attached by the caller).
+    pub fn to_json(&self) -> Json {
+        let mut failures = Json::obj();
+        for (k, v) in &self.failures {
+            failures.set(*k, *v);
+        }
+        let mut per_priority = Json::obj();
+        for c in &self.classes {
+            let mut cj = Json::obj();
+            cj.set("submitted", c.submitted)
+                .set("completed", c.completed)
+                .set("e2e_ms", c.e2e.to_json_ms())
+                .set("queue_ms", c.queue.to_json_ms());
+            let mut cf = Json::obj();
+            for (k, v) in &c.failures {
+                cf.set(*k, *v);
+            }
+            cj.set("failures", cf);
+            per_priority.set(c.priority, cj);
+        }
+        let mut j = Json::obj();
+        j.set("offered", self.offered)
+            .set("submitted", self.submitted)
+            .set("completed", self.completed)
+            .set("failed", self.failed)
+            .set("wall_s", self.wall_s)
+            .set("offered_rps", self.offered_rps)
+            .set("goodput_rps", self.goodput_rps)
+            .set("e2e_ms", self.e2e.to_json_ms())
+            .set("queue_ms", self.queue.to_json_ms())
+            .set("failures", failures)
+            .set("per_priority", per_priority);
+        j
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let failures = if self.failed > 0 {
+            let parts: Vec<String> =
+                self.failures.iter().map(|(k, v)| format!("{v} {k}")).collect();
+            format!(", failed: {}", parts.join(" / "))
+        } else {
+            String::new()
+        };
+        format!(
+            "offered {} ({:.1} rps), completed {} (goodput {:.1} rps), e2e p50/p99/p999 = \
+             {:.2}/{:.2}/{:.2} ms, queue p99 = {:.2} ms{failures}",
+            self.offered,
+            self.offered_rps,
+            self.completed,
+            self.goodput_rps,
+            self.e2e.p50 * 1e3,
+            self.e2e.p99 * 1e3,
+            self.e2e.p999 * 1e3,
+            self.queue.p99 * 1e3,
+        )
+    }
+
+    /// Per-priority breakdown, one line per class.
+    pub fn class_table(&self) -> String {
+        self.classes
+            .iter()
+            .map(|c| {
+                format!(
+                    "  {:<6} {:>6}/{:<6} e2e p50/p99/p999 = {:.2}/{:.2}/{:.2} ms",
+                    c.priority,
+                    c.completed,
+                    c.submitted,
+                    c.e2e.p50 * 1e3,
+                    c.e2e.p99 * 1e3,
+                    c.e2e.p999 * 1e3,
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_tallies_per_class_and_overall() {
+        let mut r = Recorder::new();
+        for i in 0..10 {
+            r.record_ok(Priority::Normal, 0.010 + i as f64 * 1e-4, 0.001);
+        }
+        r.record_ok(Priority::High, 0.002, 0.0005);
+        r.record_err(Priority::Low, &ServeError::QueueFull);
+        r.record_err(Priority::Low, &ServeError::EngineFailure("boom".into()));
+        let rep = r.report(13, Duration::from_secs(1));
+        assert_eq!(rep.offered, 13);
+        assert_eq!(rep.submitted, 13);
+        assert_eq!(rep.completed, 11);
+        assert_eq!(rep.failed, 2);
+        assert_eq!(rep.engine_failures(), 1);
+        assert_eq!(rep.failures["queue_full"], 1);
+        assert!((rep.goodput_rps - 11.0).abs() < 1e-6);
+        assert_eq!(rep.classes.len(), 3);
+        assert_eq!(rep.classes[0].priority, "high");
+        assert_eq!(rep.classes[0].completed, 1);
+        assert_eq!(rep.classes[2].submitted, 2);
+        assert_eq!(rep.classes[2].completed, 0);
+        // High class: its single sample is every percentile.
+        assert_eq!(rep.classes[0].e2e.p999, 0.002);
+        assert!(rep.e2e.p50 >= 0.002);
+    }
+
+    #[test]
+    fn report_json_is_nan_free_even_when_empty() {
+        let rep = Recorder::new().report(0, Duration::from_millis(1));
+        let encoded = rep.to_json().encode();
+        assert!(!encoded.contains("null"), "{encoded}");
+        assert!(!encoded.contains("NaN"), "{encoded}");
+        // Per-priority sections exist for all three classes.
+        let j = rep.to_json();
+        let pp = j.req("per_priority").unwrap();
+        for name in PRIORITY_NAMES {
+            assert!(pp.get(name).is_some(), "missing class {name}");
+        }
+    }
+
+    #[test]
+    fn summary_and_table_render() {
+        let mut r = Recorder::new();
+        r.record_ok(Priority::Normal, 0.010, 0.001);
+        r.record_err(Priority::Low, &ServeError::QueueFull);
+        let rep = r.report(2, Duration::from_secs(2));
+        let s = rep.summary();
+        assert!(s.contains("offered 2"), "{s}");
+        assert!(s.contains("1 queue_full"), "{s}");
+        assert_eq!(rep.class_table().lines().count(), 3);
+    }
+}

@@ -1,0 +1,231 @@
+//! Scenario = arrival process × traffic mix × run length.
+//!
+//! A [`Scenario`] owns everything about the *offered load*: pattern,
+//! rate, duration, seed, priority mix, and optional per-request
+//! deadline. It deliberately knows nothing about the serving side (the
+//! engine, pool sizing, queue policy live in `CoordinatorConfig`), so
+//! one scenario can be replayed against any coordinator. `run` drives
+//! the schedule open-loop against an [`InferenceClient`] and returns a
+//! [`LoadReport`].
+
+use super::arrival::ArrivalPattern;
+use super::recorder::{LoadReport, Recorder};
+use crate::coordinator::{
+    Deadline, InferenceClient, Payload, Priority, ServeError, SubmitOptions, Ticket,
+};
+use crate::tensor::SplitMix64;
+use crate::util::Json;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One open-loop load scenario, fully determined by its fields (the
+/// seed covers both arrival times and the priority draw).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub pattern: ArrivalPattern,
+    /// Long-run offered rate, requests per second.
+    pub rate_rps: f64,
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Relative weights of High/Normal/Low traffic.
+    pub priority_mix: [f64; 3],
+    /// Per-request deadline, if the scenario models an SLO per call.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Self {
+            name: "poisson".into(),
+            pattern: ArrivalPattern::Poisson,
+            rate_rps: 200.0,
+            duration_s: 2.0,
+            seed: 0x10AD_9E4,
+            priority_mix: [1.0, 2.0, 1.0],
+            deadline: None,
+        }
+    }
+}
+
+/// One planned arrival.
+#[derive(Clone, Copy, Debug)]
+pub struct Arrival {
+    /// Offset from scenario start, seconds.
+    pub at_s: f64,
+    pub priority: Priority,
+}
+
+fn pick_priority(rng: &mut SplitMix64, mix: &[f64; 3]) -> Priority {
+    let total: f64 = mix.iter().sum();
+    if total <= 0.0 {
+        return Priority::Normal;
+    }
+    let x = rng.next_f64() * total;
+    if x < mix[0] {
+        Priority::High
+    } else if x < mix[0] + mix[1] {
+        Priority::Normal
+    } else {
+        Priority::Low
+    }
+}
+
+impl Scenario {
+    /// The full arrival plan — deterministic in the seed, computed
+    /// before any request is sent (open-loop).
+    pub fn arrivals(&self) -> Vec<Arrival> {
+        let mut rng = SplitMix64::new(self.seed);
+        let times = self.pattern.schedule(self.rate_rps, self.duration_s, &mut rng);
+        times
+            .into_iter()
+            .map(|at_s| Arrival { at_s, priority: pick_priority(&mut rng, &self.priority_mix) })
+            .collect()
+    }
+
+    /// Scenario config as emitted into `BENCH_loadgen.json`.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", self.name.as_str())
+            .set("pattern", self.pattern.name())
+            .set("rate_rps", self.rate_rps)
+            .set("duration_s", self.duration_s)
+            .set("seed", self.seed)
+            .set(
+                "priority_mix",
+                self.priority_mix.iter().map(|&w| Json::from(w)).collect::<Vec<Json>>(),
+            );
+        if let ArrivalPattern::Burst { on_s, off_s } = self.pattern {
+            j.set("burst_on_s", on_s).set("burst_off_s", off_s);
+        }
+        match self.deadline {
+            Some(d) => j.set("deadline_ms", d.as_secs_f64() * 1e3),
+            None => j.set("deadline_ms", Json::Null),
+        };
+        j
+    }
+
+    /// Run the scenario open-loop against `client`, cycling `payloads`
+    /// across arrivals. Submission happens on the calling thread at the
+    /// scheduled offsets; tickets resolve on a collector thread, so a
+    /// slow response never stalls the arrival process (the latency
+    /// numbers come from the `Response` timestamps, not from collector
+    /// scheduling). Blocks until every outcome is recorded.
+    pub fn run(&self, client: &InferenceClient, payloads: &[Payload]) -> LoadReport {
+        assert!(!payloads.is_empty(), "scenario needs at least one payload");
+        let plan = self.arrivals();
+        let offered = plan.len();
+        let (tx, rx) = mpsc::channel::<(Priority, Result<Ticket, ServeError>)>();
+        let collector = std::thread::spawn(move || {
+            let mut rec = Recorder::new();
+            for (priority, submitted) in rx {
+                match submitted {
+                    Ok(ticket) => match ticket.wait() {
+                        Ok(resp) => rec.record_ok(priority, resp.e2e_s, resp.queue_s),
+                        Err(e) => rec.record_err(priority, &e),
+                    },
+                    Err(e) => rec.record_err(priority, &e),
+                }
+            }
+            rec
+        });
+        let t0 = Instant::now();
+        for (i, arrival) in plan.iter().enumerate() {
+            let due = t0 + Duration::from_secs_f64(arrival.at_s);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+            let mut opts = SubmitOptions::default().with_priority(arrival.priority);
+            if let Some(d) = self.deadline {
+                opts = opts.with_deadline(Deadline::within(d));
+            }
+            let outcome = client.submit_with(payloads[i % payloads.len()].clone(), opts);
+            if tx.send((arrival.priority, outcome)).is_err() {
+                break;
+            }
+        }
+        drop(tx);
+        let recorder = collector.join().expect("loadgen collector thread");
+        recorder.report(offered, t0.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{
+        AdmissionPolicy, BatcherConfig, Coordinator, CoordinatorConfig, EchoEngine,
+    };
+    use std::sync::Arc;
+
+    #[test]
+    fn arrival_plans_are_deterministic_and_mixed() {
+        let s = Scenario { rate_rps: 400.0, duration_s: 1.0, ..Scenario::default() };
+        let a = s.arrivals();
+        let b = s.arrivals();
+        assert_eq!(a.len(), b.len());
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| x.at_s == y.at_s && x.priority == y.priority));
+        // The 1:2:1 default mix produces all three classes at n≈400.
+        for p in [Priority::High, Priority::Normal, Priority::Low] {
+            assert!(a.iter().any(|x| x.priority == p), "missing {p:?}");
+        }
+    }
+
+    #[test]
+    fn degenerate_priority_mix_defaults_to_normal() {
+        let s = Scenario {
+            priority_mix: [0.0, 0.0, 0.0],
+            rate_rps: 300.0,
+            duration_s: 0.5,
+            ..Scenario::default()
+        };
+        assert!(s.arrivals().iter().all(|a| a.priority == Priority::Normal));
+    }
+
+    #[test]
+    fn scenario_json_names_the_pattern() {
+        let s = Scenario {
+            pattern: ArrivalPattern::Burst { on_s: 0.05, off_s: 0.1 },
+            deadline: Some(Duration::from_millis(250)),
+            ..Scenario::default()
+        };
+        let j = s.to_json();
+        assert_eq!(j.req("pattern").unwrap().as_str().unwrap(), "burst");
+        assert!(j.req("burst_on_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.req("deadline_ms").unwrap().as_f64().unwrap(), 250.0);
+        assert!(Scenario::default().to_json().get("burst_on_s").is_none());
+    }
+
+    #[test]
+    fn echo_scenario_end_to_end_completes_everything() {
+        let c = Coordinator::start(
+            Arc::new(EchoEngine { delay_us: 100 }),
+            CoordinatorConfig {
+                batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+                min_workers: 1,
+                max_workers: 2,
+                queue_depth: 1024,
+                admission: AdmissionPolicy::Block,
+            },
+        );
+        let s = Scenario {
+            name: "echo-smoke".into(),
+            rate_rps: 400.0,
+            duration_s: 0.5,
+            ..Scenario::default()
+        };
+        let report = s.run(&c.client(), &[Payload::Seq(vec![1, 2, 3])]);
+        assert_eq!(report.offered as u64, report.submitted);
+        assert_eq!(report.submitted, report.completed, "failures: {:?}", report.failures);
+        assert_eq!(report.failed, 0);
+        assert!(report.offered > 0);
+        assert!(report.e2e.p50 > 0.0);
+        assert!(report.e2e.p999 >= report.e2e.p99);
+        let snap = c.shutdown_and_drain();
+        assert_eq!(snap.completed, report.completed);
+    }
+}

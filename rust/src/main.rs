@@ -9,6 +9,8 @@
 //!             | build <model> [--thr-w T] | front <model>
 //!   swap      <model> [--thr-w T] [--requests N]   hot-swap demo under load
 //!   infer     [--model M] [--index I]    one PJRT inference from artifacts
+//!   loadgen   [--rate R] [--pattern poisson|burst] [--admission P] [--out F]
+//!             open-loop load generation (same flags as the `loadgen` bin)
 //!
 //! Global flag (after the subcommand): `--simd scalar|avx2|auto`
 //! forces the kernel dispatch backend before any engine is constructed
@@ -113,14 +115,10 @@ fn canonical_model(name: &str) -> Result<&'static str> {
     }
 }
 
-/// Admission policy names accepted by `serve --admission`.
+/// Admission policy names accepted by `serve --admission` (shared with
+/// the loadgen CLI via [`AdmissionPolicy::parse`]).
 fn parse_admission(name: &str) -> Result<AdmissionPolicy> {
-    match name {
-        "block" => Ok(AdmissionPolicy::Block),
-        "reject" => Ok(AdmissionPolicy::Reject),
-        "shed" | "shed-oldest" => Ok(AdmissionPolicy::ShedOldest),
-        other => bail!("unknown admission policy `{other}`; use block, reject or shed"),
-    }
+    AdmissionPolicy::parse(name).map_err(anyhow::Error::msg)
 }
 
 /// Serving backend kinds and the feature gate for `pjrt`.
@@ -359,9 +357,24 @@ fn serve(args: &Args) -> Result<()> {
         bail!("no models requested");
     }
 
+    let defaults = CoordinatorConfig::default();
+    let min_workers: usize = args
+        .get("min-workers")
+        .map(str::parse)
+        .transpose()
+        .context("--min-workers must be an integer")?
+        .unwrap_or(defaults.min_workers);
+    let max_workers: usize = args
+        .get("max-workers")
+        .map(str::parse)
+        .transpose()
+        .context("--max-workers must be an integer")?
+        .unwrap_or(defaults.max_workers)
+        .max(min_workers);
+
     let registry = ModelRegistry::new();
     let mut traffic = BTreeMap::new();
-    let coord_cfg = CoordinatorConfig { admission, ..CoordinatorConfig::default() };
+    let coord_cfg = CoordinatorConfig { admission, min_workers, max_workers, ..defaults };
     for m in &models {
         let t = register_model(&registry, m, kind, coord_cfg)?;
         traffic.insert(m.to_string(), t);
@@ -725,6 +738,19 @@ fn run() -> Result<()> {
         "serve" => serve(&args)?,
         "plans" => plans(&args)?,
         "swap" => swap(&args)?,
+        "loadgen" => {
+            // `--simd` was already consumed above; the shared CLI also
+            // accepts it, so passing it through is harmless.
+            let report = dnateq::loadgen::cli::run_from_flags(&args.flags)?;
+            if args.has("fail-on-errors") && report.failed > 0 {
+                bail!(
+                    "loadgen: {} of {} requests ended in typed failures: {:?}",
+                    report.failed,
+                    report.offered,
+                    report.failures
+                );
+            }
+        }
         "infer" => {
             let model = match args.get("model").unwrap_or("alexnet") {
                 "alexnet" | "alexnet_mini" => "alexnet",
@@ -748,18 +774,21 @@ fn run() -> Result<()> {
         _ => {
             println!(
                 "repro — DNA-TEQ reproduction\n\
-                 usage: repro <calibrate|report|simulate|serve|plans|swap|infer> [flags]\n  \
+                 usage: repro <calibrate|report|simulate|serve|plans|swap|infer|loadgen> [flags]\n  \
                  calibrate [--model M] [--force] [--quick]\n  \
                  report    --all | --table N | --figure N | --area [--quick]\n  \
                  simulate  [--quick]\n  \
                  serve     [--models a,b,c] [--backend engine|quantized|pjrt] [--requests N]\n            \
-                 [--admission block|reject|shed]\n            \
+                 [--admission block|reject|shed] [--min-workers N] [--max-workers N]\n            \
                  [--plan-policy max-accuracy|min-bits|min-energy]\n  \
                  global    --simd scalar|avx2|auto   force the kernel dispatch backend\n  \
                  plans     list | show <model> [--version V] | diff <model> <v1> <v2>\n            \
                  | build <model> [--thr-w T] | front <model>\n  \
                  swap      <model> [--thr-w T] [--requests N]\n  \
-                 infer     [--model alexnet|resnet] [--index I]"
+                 infer     [--model alexnet|resnet] [--index I]\n  \
+                 loadgen   [--engine counting|echo] [--pattern poisson|burst] [--rate R]\n            \
+                 [--duration S] [--seed N] [--priority-mix h:n:l] [--admission P]\n            \
+                 [--min-workers N] [--max-workers N] [--out BENCH_loadgen.json]"
             );
         }
     }

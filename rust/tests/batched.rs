@@ -25,7 +25,8 @@ fn batched_serving_matches_per_image_predictions() {
         Arc::new(AlexNetBackend::fp32(model, "fp32")),
         CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(4) },
-            workers: 2,
+            min_workers: 2,
+            max_workers: 2,
             queue_depth: 64,
             ..CoordinatorConfig::default()
         },

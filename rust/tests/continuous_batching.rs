@@ -1,0 +1,151 @@
+//! Continuous-batching semantics: slot-refill serving must be
+//! result-identical to stop-the-world batching, and `Block` admission
+//! must respect per-request deadlines while waiting for a queue slot.
+//!
+//! The equivalence property leans on the PR-1 kernel guarantee that
+//! `forward_batch` is bit-identical across batch splits, so the
+//! stop-the-world reference (chunking the submission order at
+//! `max_batch`) predicts the served outputs exactly, no matter how the
+//! continuous batcher actually grouped them. The CI matrix runs this
+//! under both scalar and SIMD dispatch.
+
+use dnateq::coordinator::{
+    AdmissionPolicy, BatcherConfig, Coordinator, CoordinatorConfig, Deadline, EchoEngine, Engine,
+    Output, Payload, ServeError, SubmitOptions,
+};
+use dnateq::dataset::ImageDataset;
+use dnateq::loadgen::cli::counting_engine;
+use dnateq::util::prop::{for_all, PropConfig};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[test]
+fn slot_refill_serving_matches_stop_the_world_batching() {
+    let engine = counting_engine(0xE9_0115);
+    let data = ImageDataset::synthetic(16, 0x7E57);
+    for_all(
+        PropConfig { cases: 12, seed: 0xC0_BA7C },
+        |rng, size| {
+            let n = 1 + rng.next_below((2 * size).min(24));
+            let max_batch = 1 + rng.next_below(8);
+            let min_workers = 1 + rng.next_below(2);
+            let idxs: Vec<usize> = (0..n).map(|_| rng.next_below(data.len())).collect();
+            (idxs, max_batch, min_workers)
+        },
+        |(idxs, max_batch, min_workers)| {
+            let payloads: Vec<Payload> =
+                idxs.iter().map(|&i| Payload::Image(data.image(i))).collect();
+
+            // Reference: stop-the-world batches in submission order.
+            let mut expect: Vec<Output> = Vec::with_capacity(payloads.len());
+            for chunk in payloads.chunks(*max_batch) {
+                for r in engine.infer_batch(chunk) {
+                    expect.push(r.map_err(|e| format!("reference inference failed: {e}"))?);
+                }
+            }
+
+            // Served: continuous batching, slots refill as items finish,
+            // with the autoscaler allowed to grow the pool mid-run.
+            let c = Coordinator::start(
+                Arc::clone(&engine),
+                CoordinatorConfig {
+                    batcher: BatcherConfig {
+                        max_batch: *max_batch,
+                        max_wait: Duration::from_micros(200),
+                    },
+                    min_workers: *min_workers,
+                    max_workers: min_workers + 2,
+                    queue_depth: 256,
+                    admission: AdmissionPolicy::Block,
+                },
+            );
+            let tickets: Vec<_> = payloads
+                .iter()
+                .map(|p| c.submit(p.clone()).expect("healthy submit"))
+                .collect();
+            let mut got = Vec::with_capacity(tickets.len());
+            for t in tickets {
+                got.push(t.wait().map_err(|e| format!("serving failed: {e}"))?.output);
+            }
+            let snap = c.shutdown_and_drain();
+            if snap.failed_total() != 0 {
+                return Err(format!("unexpected serving failures: {}", snap.summary()));
+            }
+            if got != expect {
+                return Err(format!(
+                    "served outputs diverged from the stop-the-world reference\n\
+                     expect: {expect:?}\n   got: {got:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A single-slot coordinator whose queue holds one request: submitting
+/// a third request under `Block` admission must wait for a slot, get
+/// admitted when one frees up mid-wait, and still complete.
+#[test]
+fn block_admission_admits_when_a_slot_frees_before_the_deadline() {
+    let c = Coordinator::start(
+        Arc::new(EchoEngine { delay_us: 50_000 }),
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(200) },
+            min_workers: 1,
+            max_workers: 1,
+            queue_depth: 1,
+            admission: AdmissionPolicy::Block,
+        },
+    );
+    // First request occupies the worker, second fills the queue.
+    let a = c.submit(Payload::Seq(vec![1])).unwrap();
+    let b = c.submit(Payload::Seq(vec![2])).unwrap();
+
+    // The third blocks at admission; a slot opens once the worker picks
+    // up `b` (~50 ms in), well before its 500 ms deadline.
+    let t0 = Instant::now();
+    let opts = SubmitOptions::default().with_deadline(Deadline::within(Duration::from_millis(500)));
+    let ticket = c.client().submit_with(Payload::Seq(vec![3]), opts).expect("admitted mid-wait");
+    let waited = t0.elapsed();
+    assert!(
+        waited >= Duration::from_millis(40),
+        "expected to block for a slot, waited only {waited:?}"
+    );
+
+    let resp = ticket.wait().expect("admitted request completes");
+    assert_eq!(resp.output, Output::Tokens(vec![3]));
+    assert!(a.wait().is_ok() && b.wait().is_ok());
+    c.shutdown_and_drain();
+}
+
+/// Same setup, but the deadline expires while still blocked at
+/// admission: the submit must fail with `DeadlineExceeded` at roughly
+/// the deadline, not wait for the queue indefinitely.
+#[test]
+fn block_admission_gives_up_when_the_deadline_expires_mid_wait() {
+    let c = Coordinator::start(
+        Arc::new(EchoEngine { delay_us: 200_000 }),
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(200) },
+            min_workers: 1,
+            max_workers: 1,
+            queue_depth: 1,
+            admission: AdmissionPolicy::Block,
+        },
+    );
+    let a = c.submit(Payload::Seq(vec![1])).unwrap();
+    let b = c.submit(Payload::Seq(vec![2])).unwrap();
+
+    let t0 = Instant::now();
+    let opts = SubmitOptions::default().with_deadline(Deadline::within(Duration::from_millis(60)));
+    let err = c.client().submit_with(Payload::Seq(vec![3]), opts).unwrap_err();
+    let waited = t0.elapsed();
+    assert!(matches!(err, ServeError::DeadlineExceeded), "got {err:?}");
+    assert!(
+        waited < Duration::from_millis(150),
+        "blocked past the deadline: waited {waited:?}"
+    );
+
+    assert!(a.wait().is_ok() && b.wait().is_ok());
+    c.shutdown_and_drain();
+}

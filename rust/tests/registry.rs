@@ -191,7 +191,8 @@ fn property_routing_preserves_per_model_order_under_mixed_batches() {
                 let backend = RecordingBackend { tag, log: Arc::clone(&log), delay_us: 80 };
                 let cfg = CoordinatorConfig {
                     batcher: BatcherConfig { max_batch, max_wait: Duration::from_micros(300) },
-                    workers: 1,
+                    min_workers: 1,
+                    max_workers: 1,
                     queue_depth: 256,
                     ..CoordinatorConfig::default()
                 };
@@ -259,7 +260,8 @@ fn hot_swap_under_concurrent_load_never_drops_a_response() {
             Arc::new(AlexNetBackend::fp32(model, "alexnet")),
             CoordinatorConfig {
                 batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(500) },
-                workers: 2,
+                min_workers: 2,
+                max_workers: 2,
                 queue_depth: 128,
                 ..CoordinatorConfig::default()
             },

@@ -86,7 +86,8 @@ fn slow_single_worker(delay_us: u64) -> Coordinator {
         Arc::new(EchoEngine { delay_us }),
         CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(200) },
-            workers: 1,
+            min_workers: 1,
+            max_workers: 1,
             queue_depth: 64,
             admission: AdmissionPolicy::Block,
         },
@@ -139,7 +140,8 @@ fn blocked_admission_gives_up_at_the_requests_deadline() {
         Arc::new(EchoEngine { delay_us: 100_000 }),
         CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(200) },
-            workers: 1,
+            min_workers: 1,
+            max_workers: 1,
             queue_depth: 1,
             admission: AdmissionPolicy::Block,
         },
@@ -209,7 +211,8 @@ fn reject_policy_surfaces_queue_full_to_the_submitter() {
         Arc::new(EchoEngine { delay_us: 50_000 }),
         CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(200) },
-            workers: 1,
+            min_workers: 1,
+            max_workers: 1,
             queue_depth: 1,
             admission: AdmissionPolicy::Reject,
         },
@@ -246,7 +249,8 @@ fn shed_oldest_under_full_queue_resolves_shed_tickets_with_queue_full() {
         Arc::new(EchoEngine { delay_us: 50_000 }),
         CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(200) },
-            workers: 1,
+            min_workers: 1,
+            max_workers: 1,
             queue_depth: 2,
             admission: AdmissionPolicy::ShedOldest,
         },
@@ -361,7 +365,8 @@ fn drain_with_in_flight_batches_resolves_every_outstanding_ticket() {
         Arc::new(EchoEngine { delay_us: 10_000 }),
         CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 2, max_wait: Duration::from_micros(500) },
-            workers: 2,
+            min_workers: 2,
+            max_workers: 2,
             queue_depth: 64,
             admission: AdmissionPolicy::Block,
         },
@@ -398,7 +403,8 @@ fn high_priority_requests_overtake_queued_normal_traffic() {
         Arc::new(RecordingEngine { log: Arc::clone(&log), delay_us: 1_000, gate_ms: 60 }),
         CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(200) },
-            workers: 1,
+            min_workers: 1,
+            max_workers: 1,
             queue_depth: 64,
             admission: AdmissionPolicy::Block,
         },
@@ -447,7 +453,8 @@ fn typed_errors_surface_while_concurrent_healthy_traffic_stays_fifo() {
         Arc::new(RecordingEngine { log: Arc::clone(&log), delay_us: 500, gate_ms: 120 }),
         CoordinatorConfig {
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(500) },
-            workers: 1,
+            min_workers: 1,
+            max_workers: 1,
             queue_depth: depth,
             admission: AdmissionPolicy::Reject,
         },
