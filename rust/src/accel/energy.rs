@@ -18,6 +18,12 @@ use crate::dnateq::config::{QuantConfig, Scheme as PlanScheme};
 /// plausible 64–1024 range.
 const NOMINAL_TAPS: f64 = 256.0;
 
+/// The one pJ→J conversion factor. Every path that turns per-event
+/// picojoules into joules — [`EnergyModel::config_energy_j`] offline,
+/// the per-request co-simulation in [`crate::energysim`] online — must
+/// go through this constant so the two accountings can never drift.
+pub const PJ_TO_J: f64 = 1e-12;
+
 /// Per-event energy constants in picojoules.
 #[derive(Clone, Copy, Debug)]
 pub struct EnergyModel {
@@ -152,7 +158,7 @@ impl EnergyModel {
             .iter()
             .map(|l| l.weights.elems as f64 * self.plan_element_pj(l.scheme, l.n_bits))
             .sum::<f64>()
-            * 1e-12
+            * PJ_TO_J
     }
 }
 
@@ -302,6 +308,27 @@ mod tests {
             let uni = e.plan_element_pj(PlanScheme::Uniform, n);
             assert!(pwl > 0.0 && pwl < uni, "n={n}: pwl {pwl} vs uniform {uni}");
         }
+    }
+
+    #[test]
+    fn plan_element_totals_pin_the_pj_to_j_conversion() {
+        // Hand-computed anchor for the unit-drift audit: a Uniform-8
+        // layer costs exactly one INT8 MAC (0.80 pJ) per weight element
+        // — `uniform_mac_pj(8) = 0.80·(0.35 + 0.65·1²)` — so 1000
+        // elements are exactly 800 pJ, i.e. 8.0e-10 J through PJ_TO_J.
+        let e = EnergyModel::default();
+        let cfg = mk_cfg(PlanScheme::Uniform, 8, 1_000);
+        let total_pj: f64 = cfg
+            .layers
+            .iter()
+            .map(|l| l.weights.elems as f64 * e.plan_element_pj(l.scheme, l.n_bits))
+            .sum();
+        assert!((total_pj - 800.0).abs() < 1e-9, "got {total_pj} pJ");
+        let total_j = e.config_energy_j(&cfg);
+        assert!((total_j - 8.0e-10).abs() < 1e-21, "got {total_j} J");
+        // And the conversion is exactly the shared constant, not a
+        // reimplementation that could drift.
+        assert!((total_j - total_pj * PJ_TO_J).abs() < f64::EPSILON * total_j.abs());
     }
 
     #[test]

@@ -18,7 +18,7 @@ pub mod sim;
 pub mod workload;
 
 pub use config::{AccelConfig, Scheme};
-pub use energy::{AreaModel, EnergyModel};
+pub use energy::{AreaModel, EnergyModel, PJ_TO_J};
 pub use memory::MemoryModel;
 pub use sim::{geomean, simulate_layer, simulate_network, Comparison, LayerSim, NetworkSim};
 pub use workload::{

@@ -19,7 +19,13 @@
 //! * the open-loop **tail-latency SLO** regresses: a short seeded
 //!   Poisson loadgen scenario on the counting backend must keep its
 //!   end-to-end p99/p999 under the baseline `loadgen` ceilings ×
-//!   (1 + `--tail-tolerance`), with zero typed failures.
+//!   (1 + `--tail-tolerance`), with zero typed failures;
+//! * the **energy co-simulation** loses the paper's headline: the
+//!   seeded `ci-energy` scenario (exp-4 vs INT8 plans through the real
+//!   batcher on the identical arrival schedule) must report exp
+//!   joules/request ≤ 0.5× INT8, and must not drift above the
+//!   baseline's recorded ratio × (1 + `--tolerance`) when the baseline
+//!   carries an `energy` section.
 //!
 //! ```bash
 //! cargo run --release --bin bench_gate -- \
@@ -34,6 +40,7 @@ use dnateq::coordinator::{
 };
 use dnateq::dataset::ImageDataset;
 use dnateq::dnateq::ExpQuantParams;
+use dnateq::energysim::{run_ci_energy, CiEnergyReport};
 use dnateq::expdot::simd::{self, SimdBackend};
 use dnateq::expdot::CountingFc;
 use dnateq::loadgen::{self, LoadReport, Scenario};
@@ -52,6 +59,16 @@ const SWEEP: [usize; 3] = [1, 8, 32];
 /// batching/queueing behavior rather than raw saturation.
 const LOADGEN_RATE_RPS: f64 = 120.0;
 const LOADGEN_DURATION_S: f64 = 1.5;
+/// Offered load of the seeded `ci-energy` co-simulation case. Short:
+/// the joule totals are pure arithmetic over the (seeded) arrival
+/// count, so the case needs enough requests to be representative, not
+/// enough wall time to be statistically quiet.
+const ENERGY_RATE_RPS: f64 = 120.0;
+const ENERGY_DURATION_S: f64 = 0.75;
+/// Paper-direction ceiling on exp ÷ INT8 joules per request (Fig. 9:
+/// ~66% savings ⇒ ratio ≈ 0.34–0.42; 0.5 leaves headroom for plan
+/// tweaks without ever letting the headline invert).
+const ENERGY_RATIO_CEILING: f64 = 0.5;
 
 struct Opts {
     out: Option<String>,
@@ -183,6 +200,7 @@ fn drive(
         max_workers: 2,
         queue_depth: 256,
         admission: AdmissionPolicy::Block,
+        power_envelope_watts: None,
     };
     let c = Coordinator::start(backend, cfg);
     let payloads: Vec<Payload> =
@@ -202,6 +220,7 @@ fn run_loadgen(counters: &mut FailureCounters) -> (Json, LoadReport) {
         max_workers: 4,
         queue_depth: 1024,
         admission: AdmissionPolicy::Block,
+        power_envelope_watts: None,
     };
     let c = Coordinator::start(loadgen::cli::counting_engine(loadgen::cli::CI_ENGINE_SEED), cfg);
     let data = ImageDataset::synthetic(32, 0xC1DA7A);
@@ -220,6 +239,19 @@ fn run_loadgen(counters: &mut FailureCounters) -> (Json, LoadReport) {
     let mut section = report.to_json();
     section.set("scenario", scenario.to_json());
     (section, report)
+}
+
+/// The energy co-simulation case: the seeded `ci-energy` scenario runs
+/// the same arrival schedule twice — once under the exp-4 plan, once
+/// under uniform INT8 — through the real batcher, and reports simulated
+/// joules/request for each. The totals are pure per-item arithmetic
+/// over the plan, so they are bit-identical run to run; only the ratio
+/// is gated. Returns the report plus its JSON section (`energy` in
+/// BENCH_ci.json).
+fn run_energy() -> (Json, CiEnergyReport) {
+    let report = run_ci_energy(ENERGY_RATE_RPS, ENERGY_DURATION_S);
+    println!("{}", report.summary());
+    (report.to_json(), report)
 }
 
 fn run_sweep(counters: &mut FailureCounters) -> Vec<BenchResult> {
@@ -301,18 +333,20 @@ fn median_of<'a>(results: &'a [BenchResult], suffix: &str) -> Option<&'a BenchRe
 
 /// Encode a run as the gate's report JSON: timing cases + the failure
 /// counters the gate asserts on + the scalar-vs-SIMD kernel section +
-/// the open-loop tail-latency section.
+/// the open-loop tail-latency section + the energy co-sim section.
 fn report_json(
     results: &[BenchResult],
     counters: &FailureCounters,
     simd_info: &Json,
     loadgen_info: &Json,
+    energy_info: &Json,
 ) -> Json {
     let mut o = Json::obj();
     o.set("cases", Json::Arr(results.iter().map(|r| r.to_json()).collect()))
         .set("counters", counters.to_json())
         .set("simd", simd_info.clone())
-        .set("loadgen", loadgen_info.clone());
+        .set("loadgen", loadgen_info.clone())
+        .set("energy", energy_info.clone());
     o
 }
 
@@ -363,12 +397,20 @@ fn load_tail_ceilings(baseline: &Json) -> Option<(f64, f64)> {
     Some((p99, p999))
 }
 
+/// Pull the recorded exp÷INT8 joules-per-request ratio out of a
+/// baseline's `energy` section. `None` when the baseline predates the
+/// energy gate — the caller warns and skips.
+fn load_energy_ratio(baseline: &Json) -> Option<f64> {
+    baseline.get("energy")?.get("ratio_j_per_request").and_then(|v| v.as_f64().ok())
+}
+
 fn main() {
     let opts = parse_opts();
     let mut counters = FailureCounters::default();
     let mut results = run_sweep(&mut counters);
     let (simd_info, simd_ratios) = run_kernel_sweep(&mut results);
     let (loadgen_info, load) = run_loadgen(&mut counters);
+    let (energy_info, energy) = run_energy();
 
     // Machine-independent guard: the batched hot path must actually beat
     // (or at minimum match, within tolerance) unbatched serving.
@@ -380,7 +422,10 @@ fn main() {
     println!("failure counters: {}", counters.describe());
 
     if let Some(out) = &opts.out {
-        write_report(out, &report_json(&results, &counters, &simd_info, &loadgen_info));
+        write_report(
+            out,
+            &report_json(&results, &counters, &simd_info, &loadgen_info, &energy_info),
+        );
         println!("JSON -> {out}");
     }
 
@@ -419,10 +464,26 @@ fn main() {
             load.failed, load.offered, load.failures
         ));
     }
+    // Paper-direction energy gate: absolute, baseline-independent. The
+    // exp plan must keep its joules/request at or under half of INT8 on
+    // the identical seeded arrival schedule.
+    let energy_ratio = energy.ratio();
+    println!(
+        "energy co-sim exp/int8 joules-per-request ratio: {energy_ratio:.4} \
+         (ceiling {ENERGY_RATIO_CEILING:.2})"
+    );
+    let energy_ok = energy_ratio.is_finite() && energy_ratio <= ENERGY_RATIO_CEILING;
+    if !energy_ok {
+        failures.push(format!(
+            "energy co-sim ratio {energy_ratio:.4} exceeds the {ENERGY_RATIO_CEILING:.2} \
+             exp-vs-INT8 joules/request ceiling"
+        ));
+    }
 
     if let Some(baseline_path) = &opts.baseline {
         if opts.update_baseline {
-            let refreshed = report_json(&results, &counters, &simd_info, &loadgen_info);
+            let refreshed =
+                report_json(&results, &counters, &simd_info, &loadgen_info, &energy_info);
             write_report(baseline_path, &refreshed);
             println!("baseline refreshed -> {baseline_path}");
         } else {
@@ -474,6 +535,31 @@ fn main() {
                 None => {
                     println!(
                         "baseline {baseline_path} has no `loadgen` ceilings — tail-latency gate skipped"
+                    );
+                }
+            }
+            // Energy drift gate: the measured ratio must not creep above
+            // the baseline's recorded ratio × (1 + tolerance). The joule
+            // totals are deterministic, so tolerance here guards plan
+            // edits, not runner noise.
+            match baseline.as_ref().and_then(load_energy_ratio) {
+                Some(base_ratio) => {
+                    let limit = base_ratio * (1.0 + opts.tolerance);
+                    let verdict = if energy_ratio > limit { "REGRESSED" } else { "ok" };
+                    println!(
+                        "energy ratio {energy_ratio:>9.4} vs baseline {base_ratio:>9.4} (limit {limit:>9.4}) {verdict}"
+                    );
+                    if energy_ratio > limit {
+                        failures.push(format!(
+                            "energy co-sim ratio {energy_ratio:.4} vs baseline {base_ratio:.4} \
+                             (limit {limit:.4} at +{:.0}% tolerance)",
+                            opts.tolerance * 100.0
+                        ));
+                    }
+                }
+                None => {
+                    println!(
+                        "baseline {baseline_path} has no `energy` section — energy drift gate skipped"
                     );
                 }
             }

@@ -56,6 +56,14 @@ pub enum AdmissionPolicy {
     /// ticket resolves to `QueueFull`). If everything queued outranks
     /// the newcomer, the newcomer is rejected instead.
     ShedOldest,
+    /// Energy-budget admission: while the co-simulated rolling power
+    /// (see [`crate::energysim::PowerMeter`]) exceeds the configured
+    /// envelope, lowest-priority submissions are shed with
+    /// `ServeError::QueueFull`; higher classes are admitted normally.
+    /// A full queue otherwise behaves like `Block`. Without an
+    /// envelope (or an engine that reports energy) it degenerates to
+    /// plain `Block`.
+    EnergyBudget,
 }
 
 impl AdmissionPolicy {
@@ -65,6 +73,7 @@ impl AdmissionPolicy {
             AdmissionPolicy::Block => "block",
             AdmissionPolicy::Reject => "reject",
             AdmissionPolicy::ShedOldest => "shed",
+            AdmissionPolicy::EnergyBudget => "energy-budget",
         }
     }
 
@@ -74,7 +83,10 @@ impl AdmissionPolicy {
             "block" => Ok(AdmissionPolicy::Block),
             "reject" => Ok(AdmissionPolicy::Reject),
             "shed" => Ok(AdmissionPolicy::ShedOldest),
-            other => Err(format!("unknown admission policy `{other}` (block|reject|shed)")),
+            "energy-budget" => Ok(AdmissionPolicy::EnergyBudget),
+            other => Err(format!(
+                "unknown admission policy `{other}` (block|reject|shed|energy-budget)"
+            )),
         }
     }
 }
@@ -111,6 +123,9 @@ pub(crate) struct SubmissionQueue {
     not_full: Condvar,
     depth: usize,
     policy: AdmissionPolicy,
+    /// Simulated power envelope (W) for [`AdmissionPolicy::EnergyBudget`];
+    /// `None` disables budget shedding even under that policy.
+    envelope: Option<f64>,
 }
 
 impl SubmissionQueue {
@@ -126,12 +141,33 @@ impl SubmissionQueue {
             not_full: Condvar::new(),
             depth,
             policy,
+            envelope: None,
         }
+    }
+
+    /// Set the power envelope `EnergyBudget` admission sheds against.
+    pub fn with_envelope(mut self, watts: Option<f64>) -> Self {
+        self.envelope = watts;
+        self
     }
 
     /// Admit `req` under the queue's policy. On `ShedOldest`, the shed
     /// victim's ticket is resolved (and counted) before this returns.
+    /// On `EnergyBudget`, a lowest-priority submission is shed up front
+    /// whenever the rolling simulated power exceeds the envelope —
+    /// before the queue lock is even taken, so budget shedding can
+    /// never interact with the drain path.
     pub fn push(&self, req: Request, metrics: &Metrics) -> Result<(), ServeError> {
+        if self.policy == AdmissionPolicy::EnergyBudget {
+            if let Some(envelope) = self.envelope {
+                if req.priority.lane() == Priority::LANES - 1
+                    && metrics.rolling_watts() > envelope
+                {
+                    metrics.record_energy_shed();
+                    return Err(ServeError::QueueFull);
+                }
+            }
+        }
         let mut st = self.state.lock().unwrap();
         loop {
             if st.closed {
@@ -144,7 +180,9 @@ impl SubmissionQueue {
                 return Ok(());
             }
             match self.policy {
-                AdmissionPolicy::Block => {
+                // Under `EnergyBudget` a full queue backpressures like
+                // `Block`: the budget decision already happened above.
+                AdmissionPolicy::Block | AdmissionPolicy::EnergyBudget => {
                     // Backpressure is bounded by the request's own
                     // deadline: blocking the submitter past it would
                     // only enqueue a request already doomed to expire.
@@ -579,6 +617,56 @@ mod tests {
         assert!(live_rx.try_recv().is_err(), "live request still pending");
         let snap = m.snapshot();
         assert_eq!((snap.cancelled, snap.expired), (1, 1));
+    }
+
+    #[test]
+    fn admission_policy_names_round_trip() {
+        for policy in [
+            AdmissionPolicy::Block,
+            AdmissionPolicy::Reject,
+            AdmissionPolicy::ShedOldest,
+            AdmissionPolicy::EnergyBudget,
+        ] {
+            assert_eq!(AdmissionPolicy::parse(policy.name()), Ok(policy));
+        }
+        let err = AdmissionPolicy::parse("bogus").unwrap_err();
+        assert!(err.contains("energy-budget"), "{err}");
+    }
+
+    #[test]
+    fn energy_budget_sheds_low_only_while_over_envelope() {
+        let q = Arc::new(
+            SubmissionQueue::new(8, AdmissionPolicy::EnergyBudget).with_envelope(Some(1e-15)),
+        );
+        let m = Arc::new(Metrics::new());
+        // Heat the rolling window past the (tiny) envelope.
+        m.record_energy(1.0e-6, 1);
+        assert!(m.rolling_watts() > 1e-15);
+        let (low, _low_rx) = mk_request(0, Priority::Low);
+        assert_eq!(q.push(low, &m).unwrap_err(), ServeError::QueueFull);
+        // Normal and High are admitted regardless of the budget.
+        let (normal, _n_rx) = mk_request(1, Priority::Normal);
+        let (high, _h_rx) = mk_request(2, Priority::High);
+        q.push(normal, &m).unwrap();
+        q.push(high, &m).unwrap();
+        assert_eq!(q.len(), 2);
+        let snap = m.snapshot();
+        assert_eq!(snap.energy_shed, 1);
+        assert_eq!(snap.shed, 0, "budget shedding is not ShedOldest eviction");
+    }
+
+    #[test]
+    fn energy_budget_without_envelope_never_sheds() {
+        let q = Arc::new(SubmissionQueue::new(8, AdmissionPolicy::EnergyBudget));
+        let m = Arc::new(Metrics::new());
+        m.record_energy(1.0, 1); // absurdly hot window
+        let (low, _rx) = mk_request(0, Priority::Low);
+        q.push(low, &m).unwrap();
+        assert_eq!(m.snapshot().energy_shed, 0);
+        // Close still wakes everything: drain path unaffected.
+        q.close();
+        let (late, _rx2) = mk_request(1, Priority::Low);
+        assert_eq!(q.push(late, &m).unwrap_err(), ServeError::ShuttingDown);
     }
 
     #[test]

@@ -109,6 +109,17 @@ pub trait Engine: Send + Sync + 'static {
     fn name(&self) -> &str {
         "engine"
     }
+
+    /// Per-item co-simulated energy for `batch`, parallel to the
+    /// results of [`Engine::infer_batch`] (`reports[i]` prices
+    /// `batch[i]`). `None` — the default — means this engine does no
+    /// energy accounting; [`crate::energysim::CoSimEngine`] overrides
+    /// it, and the coordinator threads the joules into metrics and
+    /// responses whenever a batch reports them.
+    fn cosim_energy(&self, batch: &[Payload]) -> Option<Vec<crate::energysim::EnergyReport>> {
+        let _ = batch;
+        None
+    }
 }
 
 /// Legacy infallible engine shape, kept as a migration adapter: a type

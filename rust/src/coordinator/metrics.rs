@@ -6,9 +6,19 @@
 //! `dropped_sends` for responses whose ticket was abandoned (receiver
 //! gone), so nothing disappears silently.
 
+use crate::energysim::PowerMeter;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+/// Co-simulated energy accounting: cumulative joules/output units plus
+/// the rolling power window the `EnergyBudget` admission policy reads.
+#[derive(Debug, Default)]
+struct EnergyState {
+    meter: PowerMeter,
+    requests: u64,
+    output_units: u64,
+}
 
 /// Shared metrics sink (thread-safe).
 #[derive(Debug)]
@@ -33,6 +43,11 @@ pub struct Metrics {
     engine_failures: AtomicU64,
     /// Results that could not be delivered: the ticket was dropped.
     dropped_sends: AtomicU64,
+    /// Submissions shed by the `EnergyBudget` admission policy while
+    /// the rolling power window exceeded the envelope. A refinement of
+    /// `rejected` (the client counts the returned `QueueFull` there
+    /// too), surfaced separately so energy shedding is observable.
+    energy_shed: AtomicU64,
     /// Worker-pool grow events (autoscaler added a worker).
     scale_ups: AtomicU64,
     /// Worker-pool shrink events (autoscaler retired a worker).
@@ -41,6 +56,8 @@ pub struct Metrics {
     e2e: Mutex<Vec<f64>>,
     /// Queue-wait latencies (seconds).
     queue: Mutex<Vec<f64>>,
+    /// Co-simulated energy (cumulative + rolling power window).
+    energy: Mutex<EnergyState>,
 }
 
 impl Default for Metrics {
@@ -57,10 +74,12 @@ impl Default for Metrics {
             shed: AtomicU64::new(0),
             engine_failures: AtomicU64::new(0),
             dropped_sends: AtomicU64::new(0),
+            energy_shed: AtomicU64::new(0),
             scale_ups: AtomicU64::new(0),
             scale_downs: AtomicU64::new(0),
             e2e: Mutex::new(Vec::new()),
             queue: Mutex::new(Vec::new()),
+            energy: Mutex::new(EnergyState::default()),
         }
     }
 }
@@ -118,11 +137,40 @@ impl Metrics {
         self.scale_downs.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one co-simulated request: `joules` spent producing
+    /// `output_units` output units (tokens / class ids / logit
+    /// elements). Also feeds the rolling power window behind
+    /// [`Metrics::rolling_watts`].
+    pub fn record_energy(&self, joules: f64, output_units: u64) {
+        let mut e = self.energy.lock().unwrap();
+        e.meter.record(joules);
+        e.requests += 1;
+        e.output_units += output_units;
+    }
+
+    /// Simulated power over the recent window (W) — what the
+    /// `EnergyBudget` admission policy compares against its envelope.
+    pub fn rolling_watts(&self) -> f64 {
+        self.energy.lock().unwrap().meter.watts()
+    }
+
+    /// Count one submission shed by `EnergyBudget` admission.
+    pub fn record_energy_shed(&self) {
+        self.energy_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let e2e = self.e2e.lock().unwrap().clone();
         let queue = self.queue.lock().unwrap().clone();
         let completed = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed).max(1);
+        let (energy_total_j, energy_requests, energy_j_per_request, energy_j_per_output) = {
+            let e = self.energy.lock().unwrap();
+            let total = e.meter.total_j();
+            let per_req = if e.requests > 0 { total / e.requests as f64 } else { 0.0 };
+            let per_out = if e.output_units > 0 { total / e.output_units as f64 } else { 0.0 };
+            (total, e.requests, per_req, per_out)
+        };
         MetricsSnapshot {
             completed,
             throughput_rps: completed as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
@@ -134,8 +182,13 @@ impl Metrics {
             shed: self.shed.load(Ordering::Relaxed),
             engine_failures: self.engine_failures.load(Ordering::Relaxed),
             dropped_sends: self.dropped_sends.load(Ordering::Relaxed),
+            energy_shed: self.energy_shed.load(Ordering::Relaxed),
             scale_ups: self.scale_ups.load(Ordering::Relaxed),
             scale_downs: self.scale_downs.load(Ordering::Relaxed),
+            energy_total_j,
+            energy_requests,
+            energy_j_per_request,
+            energy_j_per_output,
             e2e: Percentiles::of(e2e),
             queue: Percentiles::of(queue),
         }
@@ -202,10 +255,23 @@ pub struct MetricsSnapshot {
     pub shed: u64,
     pub engine_failures: u64,
     pub dropped_sends: u64,
+    /// Submissions shed by `EnergyBudget` admission (also counted in
+    /// `rejected` by the client, which sees the `QueueFull` error).
+    pub energy_shed: u64,
     /// Worker-pool autoscaler grow events.
     pub scale_ups: u64,
     /// Worker-pool autoscaler shrink events.
     pub scale_downs: u64,
+    /// Cumulative co-simulated joules across all completed requests
+    /// (0 when the engine does no energy accounting).
+    pub energy_total_j: f64,
+    /// Requests that carried a co-simulated energy report.
+    pub energy_requests: u64,
+    /// Mean co-simulated joules per request (0 when none recorded).
+    pub energy_j_per_request: f64,
+    /// Mean co-simulated joules per output unit — token, class id or
+    /// logit element (0 when none recorded).
+    pub energy_j_per_output: f64,
     pub e2e: Percentiles,
     pub queue: Percentiles,
 }
@@ -214,7 +280,7 @@ impl MetricsSnapshot {
     /// Every failure counter as `(name, value)` pairs, in display
     /// order — the one list shared by consumers that aggregate or
     /// serialize them (e.g. the bench gate).
-    pub fn failure_counters(&self) -> [(&'static str, u64); 6] {
+    pub fn failure_counters(&self) -> [(&'static str, u64); 7] {
         [
             ("cancelled", self.cancelled),
             ("expired", self.expired),
@@ -222,10 +288,13 @@ impl MetricsSnapshot {
             ("shed", self.shed),
             ("engine_failures", self.engine_failures),
             ("dropped_sends", self.dropped_sends),
+            ("energy_shed", self.energy_shed),
         ]
     }
 
-    /// Requests that ended in any typed failure.
+    /// Requests that ended in any typed failure. `energy_shed` is
+    /// deliberately absent: those submissions already count under
+    /// `rejected` (the client records the returned `QueueFull`).
     pub fn failed_total(&self) -> u64 {
         self.cancelled + self.expired + self.rejected + self.shed + self.engine_failures
     }
@@ -255,8 +324,22 @@ impl MetricsSnapshot {
         } else {
             String::new()
         };
+        let energy = if self.energy_requests > 0 {
+            format!(
+                ", energy {:.3e} J total ({:.3e} J/req{})",
+                self.energy_total_j,
+                self.energy_j_per_request,
+                if self.energy_shed > 0 {
+                    format!(", {} energy-shed", self.energy_shed)
+                } else {
+                    String::new()
+                },
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "{} req, {:.1} req/s, avg batch {:.2}{swaps}{pool}, e2e p50/p95/p99/p999 = \
+            "{} req, {:.1} req/s, avg batch {:.2}{swaps}{pool}{energy}, e2e p50/p95/p99/p999 = \
              {:.2}/{:.2}/{:.2}/{:.2} ms{failures}",
             self.completed,
             self.throughput_rps,
@@ -379,5 +462,45 @@ mod tests {
         assert!(text.contains("2 expired"), "{text}");
         assert!(text.contains("3 engine"), "{text}");
         assert!(text.contains("1 dropped sends"), "{text}");
+    }
+
+    #[test]
+    fn energy_accumulates_into_gauges() {
+        let m = Metrics::new();
+        m.record_energy(2.0e-6, 4);
+        m.record_energy(4.0e-6, 8);
+        let s = m.snapshot();
+        assert_eq!(s.energy_requests, 2);
+        assert!((s.energy_total_j - 6.0e-6).abs() < 1e-18);
+        assert!((s.energy_j_per_request - 3.0e-6).abs() < 1e-18);
+        assert!((s.energy_j_per_output - 0.5e-6).abs() < 1e-18);
+        // Both samples landed inside the rolling window just now.
+        assert!(m.rolling_watts() > 0.0);
+        assert!(s.summary().contains("energy"), "{}", s.summary());
+    }
+
+    #[test]
+    fn energy_gauges_are_zero_not_nan_when_unused() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.energy_requests, 0);
+        assert_eq!(s.energy_total_j, 0.0);
+        assert_eq!(s.energy_j_per_request, 0.0);
+        assert_eq!(s.energy_j_per_output, 0.0);
+        assert!(!s.summary().contains("energy"), "{}", s.summary());
+    }
+
+    #[test]
+    fn energy_shed_is_surfaced_but_not_double_counted_in_failed_total() {
+        let m = Metrics::new();
+        m.record_energy_shed();
+        m.record_energy_shed();
+        // The client also records the QueueFull it got back.
+        m.record_rejected();
+        m.record_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.energy_shed, 2);
+        assert_eq!(s.failed_total(), 2, "energy_shed must not double-count");
+        let counters = s.failure_counters();
+        assert_eq!(counters[6], ("energy_shed", 2));
     }
 }

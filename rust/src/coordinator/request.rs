@@ -233,6 +233,10 @@ pub struct Response {
     pub queue_s: f64,
     /// End-to-end latency (seconds).
     pub e2e_s: f64,
+    /// Co-simulated energy spent serving this request (joules). `None`
+    /// when the engine does no energy accounting (see
+    /// [`super::Engine::cosim_energy`]).
+    pub energy_j: Option<f64>,
 }
 
 #[cfg(test)]

@@ -25,7 +25,7 @@ use super::batcher::{AdmissionPolicy, Batcher, BatcherConfig, SlotFill, Submissi
 use super::client::{ClientCore, InferenceClient};
 use super::engine::Engine;
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::request::{Payload, Priority, Request, Response, ServeError};
+use super::request::{Output, Payload, Priority, Request, Response, ServeError};
 use crate::loadgen::{LoadReport, Recorder};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -56,6 +56,10 @@ pub struct CoordinatorConfig {
     pub queue_depth: usize,
     /// What happens to submissions when the queue is full.
     pub admission: AdmissionPolicy,
+    /// Simulated rolling-power envelope (W) that
+    /// [`AdmissionPolicy::EnergyBudget`] sheds against. `None` disables
+    /// budget shedding; ignored under every other policy.
+    pub power_envelope_watts: Option<f64>,
 }
 
 impl Default for CoordinatorConfig {
@@ -66,6 +70,7 @@ impl Default for CoordinatorConfig {
             max_workers: 2,
             queue_depth: 256,
             admission: AdmissionPolicy::Block,
+            power_envelope_watts: None,
         }
     }
 }
@@ -123,6 +128,17 @@ fn resolve(metrics: &Metrics, req: Request, result: Result<Response, ServeError>
     }
 }
 
+/// How many output units one response carries — the denominator of the
+/// joules-per-output gauge (tokens for sequence models, one class id
+/// for classifiers, logit elements for raw heads).
+fn output_units(out: &Output) -> u64 {
+    match out {
+        Output::ClassId(_) => 1,
+        Output::Tokens(toks) => toks.len().max(1) as u64,
+        Output::Logits(t) => t.len().max(1) as u64,
+    }
+}
+
 /// Run one engine step over a filled batch and resolve every ticket.
 fn process_batch<E: Engine + ?Sized>(engine: &E, metrics: &Metrics, batch: Vec<Request>) {
     metrics.record_batch(batch.len());
@@ -145,13 +161,20 @@ fn process_batch<E: Engine + ?Sized>(engine: &E, metrics: &Metrics, batch: Vec<R
         }
         return;
     }
-    for (req, item) in batch.into_iter().zip(results) {
+    // Energy co-simulation prices the same payloads the engine just
+    // ran; `reports[i]` answers `batch[i]`, like the results do.
+    let energy = engine.cosim_energy(&payloads);
+    for (i, (req, item)) in batch.into_iter().zip(results).enumerate() {
         let e2e = req.submitted.elapsed().as_secs_f64();
         let queue_s = formed.duration_since(req.submitted).as_secs_f64();
         match item {
             Ok(output) => {
                 metrics.record_response(e2e, queue_s);
-                let resp = Response { id: req.id, output, queue_s, e2e_s: e2e };
+                let energy_j = energy.as_ref().and_then(|v| v.get(i)).map(|r| {
+                    metrics.record_energy(r.joules, output_units(&output));
+                    r.joules
+                });
+                let resp = Response { id: req.id, output, queue_s, e2e_s: e2e, energy_j };
                 resolve(metrics, req, Ok(resp));
             }
             Err(infer_err) => {
@@ -266,7 +289,10 @@ impl Coordinator {
         }
         let min_workers = cfg.min_workers.max(1);
         let max_workers = cfg.max_workers.max(min_workers);
-        let queue = Arc::new(SubmissionQueue::new(cfg.queue_depth, cfg.admission));
+        let queue = Arc::new(
+            SubmissionQueue::new(cfg.queue_depth, cfg.admission)
+                .with_envelope(cfg.power_envelope_watts),
+        );
         let metrics = Arc::new(Metrics::new());
         let batcher =
             Arc::new(Batcher::new(Arc::clone(&queue), Arc::clone(&metrics), batcher_cfg));
@@ -343,7 +369,12 @@ impl Coordinator {
         }
         for t in tickets {
             match t.wait() {
-                Ok(resp) => recorder.record_ok(Priority::Normal, resp.e2e_s, resp.queue_s),
+                Ok(resp) => recorder.record_ok_energy(
+                    Priority::Normal,
+                    resp.e2e_s,
+                    resp.queue_s,
+                    resp.energy_j,
+                ),
                 Err(e) => {
                     recorder.record_err(Priority::Normal, &e);
                     return Err(e.into());
@@ -413,6 +444,7 @@ mod tests {
                 max_workers: 3,
                 queue_depth: 64,
                 admission: AdmissionPolicy::Block,
+                power_envelope_watts: None,
             },
         );
         let mut clients = Vec::new();
@@ -481,6 +513,7 @@ mod tests {
                 max_workers: 1,
                 queue_depth: 256,
                 admission: AdmissionPolicy::Block,
+                power_envelope_watts: None,
             },
         );
         let mut tickets = Vec::new();
@@ -516,6 +549,7 @@ mod tests {
                 max_workers: 1,
                 queue_depth: 64,
                 admission: AdmissionPolicy::Block,
+                power_envelope_watts: None,
             },
         );
         let tickets: Vec<_> =
@@ -541,6 +575,7 @@ mod tests {
                 max_workers: 4,
                 queue_depth: 512,
                 admission: AdmissionPolicy::Block,
+                power_envelope_watts: None,
             },
         );
         assert_eq!(c.active_workers(), 1);

@@ -263,14 +263,39 @@ impl QuantConfig {
     /// Histogram of layers per bitwidth (drives accelerator power-gating
     /// and the 7-bit overhead discussion, §VI-D). Bit-widths beyond the
     /// INT8 ceiling saturate into the top bucket rather than being
-    /// dropped, so the bucket sum always equals the layer count.
+    /// dropped, so the bucket sum always equals the layer count; when
+    /// that happens one warning per plan is logged to stderr (validated
+    /// plans never hit it — only hand-built configs can).
     pub fn bitwidth_histogram(&self) -> [usize; 9] {
-        let mut h = [0usize; 9];
-        let top = h.len() - 1;
-        for l in &self.layers {
-            h[(l.n_bits as usize).min(top)] += 1;
+        let (h, warning) = self.bitwidth_histogram_checked();
+        if let Some(w) = warning {
+            eprintln!("warning: {w}");
         }
         h
+    }
+
+    /// [`Self::bitwidth_histogram`] plus the saturation warning (at most
+    /// one per plan) instead of logging it, for callers — and tests —
+    /// that want the condition as data.
+    pub fn bitwidth_histogram_checked(&self) -> ([usize; 9], Option<String>) {
+        let mut h = [0usize; 9];
+        let top = h.len() - 1;
+        let mut saturated = 0usize;
+        for l in &self.layers {
+            let n = l.n_bits as usize;
+            if n > top {
+                saturated += 1;
+            }
+            h[n.min(top)] += 1;
+        }
+        let warning = (saturated > 0).then(|| {
+            format!(
+                "plan `{}`: {saturated} layer(s) exceed the {top}-bit histogram ceiling; \
+                 counted in the top bucket",
+                self.model
+            )
+        });
+        (h, warning)
     }
 
     pub fn layer(&self, name: &str) -> Option<&LayerQuant> {
@@ -512,6 +537,33 @@ mod tests {
         let h = cfg.bitwidth_histogram();
         assert_eq!(h[8], 3);
         assert_eq!(h.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn bitwidth_histogram_warns_once_per_plan_on_saturation() {
+        let sat = QuantConfig {
+            model: "m".into(),
+            thr_w: 0.01,
+            layers: vec![mk_layer("a", 9, 10), mk_layer("b", 12, 10), mk_layer("c", 8, 10)],
+        };
+        let (h, warning) = sat.bitwidth_histogram_checked();
+        assert_eq!(h[8], 3);
+        // One warning per plan — not one per saturated layer — naming
+        // how many layers overflowed.
+        let w = warning.expect("saturating plan must warn");
+        assert!(w.contains("2 layer(s)"), "{w}");
+        assert!(w.contains("plan `m`"), "{w}");
+
+        // In-range widths (8 included) must stay silent.
+        let ok = QuantConfig {
+            model: "m".into(),
+            thr_w: 0.01,
+            layers: vec![mk_layer("a", 8, 10), mk_layer("b", 3, 10)],
+        };
+        let (h, warning) = ok.bitwidth_histogram_checked();
+        assert_eq!(h[8], 1);
+        assert_eq!(h[3], 1);
+        assert!(warning.is_none(), "{warning:?}");
     }
 
     #[test]

@@ -1,0 +1,123 @@
+//! Rolling-power estimation for energy-budget admission.
+//!
+//! Per-request joules are deterministic arithmetic (see
+//! [`super::cosim`]); *power* is the one place wall-clock enters: a
+//! [`PowerMeter`] holds the joules recorded over a sliding window and
+//! reports their average watts. The `EnergyBudget` admission policy
+//! compares that estimate against the configured envelope and sheds
+//! lowest-priority submissions while the window runs hot — power only
+//! gates admission, never the energy totals the CI gate pins.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Window the serving metrics average simulated power over. Long enough
+/// to smooth per-batch quantization at CI rates (~tens of requests per
+/// window), short enough that an idle envelope recovers quickly.
+pub const DEFAULT_POWER_WINDOW: Duration = Duration::from_millis(250);
+
+/// Sliding-window joules → watts estimator plus a cumulative total.
+#[derive(Debug)]
+pub struct PowerMeter {
+    window: Duration,
+    samples: VecDeque<(Instant, f64)>,
+    total_j: f64,
+}
+
+impl Default for PowerMeter {
+    fn default() -> Self {
+        Self::new(DEFAULT_POWER_WINDOW)
+    }
+}
+
+impl PowerMeter {
+    pub fn new(window: Duration) -> Self {
+        assert!(window > Duration::ZERO, "power window must be positive");
+        Self { window, samples: VecDeque::new(), total_j: 0.0 }
+    }
+
+    /// Record `joules` of simulated energy spent now. Non-finite or
+    /// non-positive samples are ignored (they could only poison the
+    /// watts estimate and the cumulative total).
+    pub fn record(&mut self, joules: f64) {
+        self.record_at(Instant::now(), joules);
+    }
+
+    /// [`Self::record`] at an explicit instant (tests).
+    pub fn record_at(&mut self, now: Instant, joules: f64) {
+        if !joules.is_finite() || joules <= 0.0 {
+            return;
+        }
+        self.total_j += joules;
+        self.samples.push_back((now, joules));
+        self.prune(now);
+    }
+
+    /// Average simulated power over the window ending now.
+    pub fn watts(&mut self) -> f64 {
+        self.watts_at(Instant::now())
+    }
+
+    /// [`Self::watts`] at an explicit instant (tests).
+    pub fn watts_at(&mut self, now: Instant) -> f64 {
+        self.prune(now);
+        let in_window: f64 = self.samples.iter().map(|&(_, j)| j).sum();
+        in_window / self.window.as_secs_f64()
+    }
+
+    /// Cumulative joules ever recorded (never decays with the window).
+    pub fn total_j(&self) -> f64 {
+        self.total_j
+    }
+
+    pub fn window(&self) -> Duration {
+        self.window
+    }
+
+    fn prune(&mut self, now: Instant) {
+        while let Some(&(t, _)) = self.samples.front() {
+            // `duration_since` saturates to zero for samples "in the
+            // future" (recorded between our `now` and theirs).
+            if now.duration_since(t) > self.window {
+                self.samples.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn watts_is_window_energy_over_window_seconds() {
+        let t0 = Instant::now();
+        let mut m = PowerMeter::new(Duration::from_millis(100));
+        m.record_at(t0, 0.5);
+        m.record_at(t0 + Duration::from_millis(50), 0.5);
+        // 1 J inside a 0.1 s window → 10 W.
+        assert!((m.watts_at(t0 + Duration::from_millis(50)) - 10.0).abs() < 1e-9);
+        // 140 ms in, the first sample has aged out: 0.5 J → 5 W.
+        assert!((m.watts_at(t0 + Duration::from_millis(140)) - 5.0).abs() < 1e-9);
+        // Far in the future the window is empty but the total persists.
+        assert_eq!(m.watts_at(t0 + Duration::from_secs(10)), 0.0);
+        assert!((m.total_j() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_samples_are_ignored() {
+        let t0 = Instant::now();
+        let mut m = PowerMeter::default();
+        m.record_at(t0, 0.0);
+        m.record_at(t0, -1.0);
+        m.record_at(t0, f64::NAN);
+        m.record_at(t0, f64::INFINITY);
+        assert_eq!(m.total_j(), 0.0);
+        assert_eq!(m.watts_at(t0), 0.0);
+        m.record_at(t0, 2.5e-7);
+        assert_eq!(m.total_j(), 2.5e-7);
+        assert!(m.watts_at(t0) > 0.0);
+    }
+}

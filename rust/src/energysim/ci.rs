@@ -1,0 +1,246 @@
+//! The seeded `ci-energy` head-to-head: exp-4-bit vs INT8 joules per
+//! request through the *real* serving path (client → priority queue →
+//! continuous batcher → counting engine), on the identical arrival
+//! schedule.
+//!
+//! Both runs replay the same Poisson plan (same seed, rate, duration,
+//! priority draw) against the same counting-FC backend; only the
+//! co-simulated plan differs. Because per-request joules are pure
+//! arithmetic over the plan (never timing-dependent), the reported
+//! totals are bit-deterministic across runs — exactly what the CI
+//! `energy-smoke` job asserts with `jq`.
+
+use super::cosim::{CoSimEngine, CostModel};
+use crate::accel::{AccelConfig, EnergyModel};
+use crate::coordinator::{
+    AdmissionPolicy, BatcherConfig, Coordinator, CoordinatorConfig, Payload,
+};
+use crate::dataset::ImageDataset;
+use crate::dnateq::config::{LayerKind, LayerQuant, QuantConfig, Scheme, TensorQuant};
+use crate::loadgen::cli::{counting_engine, CI_ENGINE_SEED};
+use crate::loadgen::{ArrivalPattern, Scenario};
+use crate::util::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Arrival seed of the `ci-energy` scenario (distinct from the loadgen
+/// and bench_gate seeds so the three schedules never alias).
+pub const CI_ENERGY_SEED: u64 = 0xE6_0C1;
+
+/// Input features of the CI counting layer (a flattened `[3, 32, 32]`
+/// image) — mirrors [`counting_engine`].
+pub const CI_FC_IN: usize = 3 * 32 * 32;
+/// Output features of the CI counting layer.
+pub const CI_FC_OUT: usize = 256;
+
+/// The quantization plan describing the CI counting layer under one
+/// scheme/bitwidth — the plan the co-simulation prices.
+pub fn ci_fc_plan(scheme: Scheme, n_bits: u8) -> QuantConfig {
+    let tq = |elems| TensorQuant { alpha: 1.0, beta: 0.0, rmae: 0.02, elems };
+    QuantConfig {
+        model: format!("ci-fc-{}{n_bits}", scheme.name()),
+        thr_w: 0.05,
+        layers: vec![LayerQuant {
+            name: "fc".into(),
+            kind: LayerKind::Fc,
+            scheme,
+            n_bits,
+            base: 1.5,
+            weights: tq(CI_FC_IN * CI_FC_OUT),
+            acts: tq(CI_FC_IN),
+            seeded_by_weights: true,
+            rss_w: 0.0,
+            rss_a: 0.0,
+            converged: true,
+        }],
+    }
+}
+
+/// The exponential-domain plan matching the real 4-bit counting engine.
+pub fn exp_plan() -> QuantConfig {
+    ci_fc_plan(Scheme::Exp, 4)
+}
+
+/// The INT8 baseline plan on the same layer shape.
+pub fn int8_plan() -> QuantConfig {
+    ci_fc_plan(Scheme::Uniform, 8)
+}
+
+/// Outcome of one `ci-energy` run.
+#[derive(Clone, Debug)]
+pub struct EnergyCase {
+    /// Co-simulated plan name (`ci-fc-exp4` / `ci-fc-uniform8`).
+    pub plan: String,
+    pub offered: usize,
+    pub completed: u64,
+    pub energy_total_j: f64,
+    pub j_per_request: f64,
+    pub j_per_output: f64,
+    pub energy_shed: u64,
+}
+
+impl EnergyCase {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("plan", self.plan.as_str())
+            .set("offered", self.offered)
+            .set("completed", self.completed)
+            .set("energy_total_j", self.energy_total_j)
+            .set("j_per_request", self.j_per_request)
+            .set("j_per_output", self.j_per_output)
+            .set("energy_shed", self.energy_shed);
+        j
+    }
+}
+
+/// The exp-vs-INT8 comparison `repro energy` prints and the bench gate
+/// / `energy-smoke` CI job consume.
+#[derive(Clone, Debug)]
+pub struct CiEnergyReport {
+    pub rate_rps: f64,
+    pub duration_s: f64,
+    pub exp: EnergyCase,
+    pub int8: EnergyCase,
+}
+
+impl CiEnergyReport {
+    /// exp ÷ INT8 joules per request — the paper's Fig. 9 direction
+    /// demands ≤ 0.5 on this shape (≈ 66% savings ⇒ ratio ≈ 0.34–0.42
+    /// depending on bitwidth).
+    pub fn ratio(&self) -> f64 {
+        if self.int8.j_per_request > 0.0 {
+            self.exp.j_per_request / self.int8.j_per_request
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut scenario = Json::obj();
+        scenario
+            .set("name", "ci-energy")
+            .set("seed", CI_ENERGY_SEED)
+            .set("rate_rps", self.rate_rps)
+            .set("duration_s", self.duration_s);
+        let mut j = Json::obj();
+        j.set("scenario", scenario)
+            .set("exp", self.exp.to_json())
+            .set("int8", self.int8.to_json())
+            .set("ratio_j_per_request", self.ratio());
+        j
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "ci-energy: exp {:.4e} J/req vs int8 {:.4e} J/req (ratio {:.3}) over {} requests",
+            self.exp.j_per_request,
+            self.int8.j_per_request,
+            self.ratio(),
+            self.exp.offered,
+        )
+    }
+}
+
+fn run_case(plan: &QuantConfig, rate_rps: f64, duration_s: f64) -> EnergyCase {
+    let em = EnergyModel::default();
+    let accel = AccelConfig::default();
+    let cost = CostModel::from_config(plan, &em, &accel);
+    let engine = Arc::new(CoSimEngine::new(counting_engine(CI_ENGINE_SEED), cost));
+    let coordinator = Coordinator::start(
+        engine,
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+            min_workers: 2,
+            max_workers: 2,
+            queue_depth: 4096,
+            admission: AdmissionPolicy::Block,
+            power_envelope_watts: None,
+        },
+    );
+    let scenario = Scenario {
+        name: "ci-energy".into(),
+        pattern: ArrivalPattern::Poisson,
+        rate_rps,
+        duration_s,
+        seed: CI_ENERGY_SEED,
+        priority_mix: [1.0, 2.0, 1.0],
+        deadline: None,
+    };
+    let data = ImageDataset::synthetic(32, 0xC1DA7A);
+    let payloads: Vec<Payload> = (0..data.len()).map(|i| Payload::Image(data.image(i))).collect();
+    let report = scenario.run(&coordinator.client(), &payloads);
+    let snap = coordinator.shutdown_and_drain();
+    EnergyCase {
+        plan: plan.model.clone(),
+        offered: report.offered,
+        completed: snap.completed,
+        energy_total_j: snap.energy_total_j,
+        j_per_request: snap.energy_j_per_request,
+        j_per_output: snap.energy_j_per_output,
+        energy_shed: snap.energy_shed,
+    }
+}
+
+/// Run the seeded head-to-head at the given offered load. Blocking
+/// admission and no deadline mean every offered request completes, so
+/// the joule totals depend only on the (seeded) arrival count and the
+/// plans — not on machine speed.
+pub fn run_ci_energy(rate_rps: f64, duration_s: f64) -> CiEnergyReport {
+    let exp = run_case(&exp_plan(), rate_rps, duration_s);
+    let int8 = run_case(&int8_plan(), rate_rps, duration_s);
+    CiEnergyReport { rate_rps, duration_s, exp, int8 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ci_plans_price_in_the_papers_direction() {
+        let em = EnergyModel::default();
+        let accel = AccelConfig::default();
+        let exp = CostModel::from_config(&exp_plan(), &em, &accel);
+        let int8 = CostModel::from_config(&int8_plan(), &em, &accel);
+        let ratio = exp.joules_per_item() / int8.joules_per_item();
+        assert!(ratio <= 0.5, "exp/int8 per-item ratio {ratio}");
+        // The INT8 anchor is exact: 3072·256 elements × 0.80 pJ.
+        let want = (CI_FC_IN * CI_FC_OUT) as f64 * 0.80e-12;
+        assert!((int8.joules_per_item() - want).abs() < 1e-9 * want);
+    }
+
+    #[test]
+    fn report_json_has_the_gate_keys() {
+        let report = CiEnergyReport {
+            rate_rps: 100.0,
+            duration_s: 1.0,
+            exp: EnergyCase {
+                plan: "ci-fc-exp4".into(),
+                offered: 10,
+                completed: 10,
+                energy_total_j: 2.0e-6,
+                j_per_request: 2.0e-7,
+                j_per_output: 2.0e-7,
+                energy_shed: 0,
+            },
+            int8: EnergyCase {
+                plan: "ci-fc-uniform8".into(),
+                offered: 10,
+                completed: 10,
+                energy_total_j: 6.0e-6,
+                j_per_request: 6.0e-7,
+                j_per_output: 6.0e-7,
+                energy_shed: 0,
+            },
+        };
+        assert!((report.ratio() - 1.0 / 3.0).abs() < 1e-12);
+        let j = report.to_json();
+        assert!(j.req("ratio_j_per_request").unwrap().as_f64().unwrap() < 0.5);
+        assert!(j.req("exp").unwrap().req("energy_total_j").is_ok());
+        assert!(j.req("int8").unwrap().req("j_per_request").is_ok());
+        assert_eq!(
+            j.req("scenario").unwrap().req("seed").unwrap().as_usize().unwrap() as u64,
+            CI_ENERGY_SEED
+        );
+        assert!(report.summary().contains("ratio"));
+    }
+}

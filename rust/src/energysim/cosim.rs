@@ -1,0 +1,274 @@
+//! Plan → joules: the per-request energy cost model and the
+//! [`CoSimEngine`] decorator that attaches it to any serving engine.
+//!
+//! The model is deliberately *per-item arithmetic*: one inference costs
+//! the same joules regardless of how the batcher grouped it or how long
+//! it waited in queue. That makes per-request energy — and therefore
+//! the `ci-energy` totals the CI gate pins — bit-deterministic across
+//! runs, while timing-dependent quantities (rolling watts) are derived
+//! separately by the [`super::PowerMeter`].
+
+use crate::accel::{
+    simulate_layer, AccelConfig, EnergyModel, LayerShape, Scheme as AccelScheme, PJ_TO_J,
+};
+use crate::coordinator::{Capabilities, Engine, InferError, Output, Payload};
+use crate::dnateq::config::{QuantConfig, Scheme as PlanScheme};
+use std::sync::Arc;
+
+/// Energy accounting for one layer of the active plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerEnergy {
+    pub name: String,
+    /// Planner scheme name (`exp` / `uniform` / `pwlN`).
+    pub scheme: String,
+    pub n_bits: u8,
+    /// Headline compute joules per inference — weight elements ×
+    /// [`EnergyModel::plan_element_pj`] × [`PJ_TO_J`], the same product
+    /// [`EnergyModel::config_energy_j`] sums offline.
+    pub joules: f64,
+    /// Full accelerator-sim energy (DRAM + NoC + SRAM + compute + post
+    /// + quantizer + leakage) for the layer replayed through
+    /// [`simulate_layer`], in pJ.
+    pub sim_total_pj: f64,
+    /// Simulated layer latency in accelerator cycles.
+    pub sim_cycles: u64,
+}
+
+/// Per-request energy report attached to responses and metrics.
+#[derive(Clone, Debug)]
+pub struct EnergyReport {
+    /// Simulated joules to serve this request.
+    pub joules: f64,
+    /// Joules per model output element (the plan-derived estimate; the
+    /// metrics layer divides by *actual* output units — tokens for
+    /// sequence outputs, 1 for a class id).
+    pub joules_per_output: f64,
+    /// Per-layer breakdown, plan order.
+    pub breakdown_by_layer: Vec<LayerEnergy>,
+}
+
+/// The per-inference energy cost of one quantization plan on the
+/// simulated accelerator.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Model name of the plan this was built from.
+    pub model: String,
+    /// Per-layer accounting, plan order.
+    pub layers: Vec<LayerEnergy>,
+    joules_per_item: f64,
+    out_units: f64,
+}
+
+/// Map a planner scheme onto the accelerator's two hardware pipelines:
+/// uniform grids run on the INT8 MAC datapath, exponential and PWL
+/// codes on the Counter-Set datapath.
+fn accel_scheme(scheme: PlanScheme) -> AccelScheme {
+    match scheme {
+        PlanScheme::Uniform => AccelScheme::Int8,
+        PlanScheme::Exp | PlanScheme::Pwl { .. } => AccelScheme::DnaTeq,
+    }
+}
+
+impl CostModel {
+    /// Build the cost model for `cfg`: headline joules from the same
+    /// `plan_element_pj` accounting the planner uses, plus a replay of
+    /// every layer through the cycle-level simulator for the extended
+    /// breakdown. Layer shapes are reconstructed from the plan's tensor
+    /// statistics — `acts.elems` inputs against `weights.elems` weight
+    /// elements, FC-style reuse (one MAC per weight element).
+    pub fn from_config(cfg: &QuantConfig, em: &EnergyModel, accel: &AccelConfig) -> Self {
+        let mut layers = Vec::with_capacity(cfg.layers.len());
+        let mut out_units = 1.0;
+        for l in &cfg.layers {
+            let joules =
+                l.weights.elems as f64 * em.plan_element_pj(l.scheme, l.n_bits) * PJ_TO_J;
+            let w_elems = l.weights.elems as u64;
+            let in_elems = (l.acts.elems as u64).max(1);
+            let out_elems = (w_elems / in_elems).max(1);
+            let shape = LayerShape {
+                name: l.name.clone(),
+                macs: w_elems,
+                w_elems,
+                in_elems,
+                out_elems,
+            };
+            let hw = accel_scheme(l.scheme);
+            let n_bits = if hw == AccelScheme::Int8 { 8 } else { l.n_bits };
+            let sim = simulate_layer(accel, em, hw, &shape, n_bits);
+            layers.push(LayerEnergy {
+                name: l.name.clone(),
+                scheme: l.scheme.name(),
+                n_bits: l.n_bits,
+                joules,
+                sim_total_pj: sim.total_pj(),
+                sim_cycles: sim.total_cycles,
+            });
+            out_units = out_elems as f64;
+        }
+        // The headline total goes through `config_energy_j` itself —
+        // not a re-summation — so the serving-time accounting is equal
+        // to the offline planner score to the last bit (unit-drift
+        // audit: both share PJ_TO_J and the same per-element products).
+        Self { model: cfg.model.clone(), layers, joules_per_item: em.config_energy_j(cfg), out_units }
+    }
+
+    /// Simulated joules for one inference.
+    pub fn joules_per_item(&self) -> f64 {
+        self.joules_per_item
+    }
+
+    /// Simulated accelerator cycles for one inference (all layers).
+    pub fn cycles_per_item(&self) -> u64 {
+        self.layers.iter().map(|l| l.sim_cycles).sum()
+    }
+
+    /// The per-request report this model produces.
+    pub fn report(&self) -> EnergyReport {
+        EnergyReport {
+            joules: self.joules_per_item,
+            joules_per_output: self.joules_per_item / self.out_units.max(1.0),
+            breakdown_by_layer: self.layers.clone(),
+        }
+    }
+}
+
+/// Engine decorator: the inner engine serves every batch unchanged
+/// while the decorator co-simulates the same workload through the
+/// accelerator model and reports per-request [`EnergyReport`]s via
+/// [`Engine::cosim_energy`]. Wraps an `Arc` so shared backends (the
+/// counting engine, registry entries) decorate without re-construction.
+pub struct CoSimEngine<E: Engine + ?Sized> {
+    inner: Arc<E>,
+    cost: CostModel,
+    name: String,
+}
+
+impl<E: Engine + ?Sized> CoSimEngine<E> {
+    pub fn new(inner: Arc<E>, cost: CostModel) -> Self {
+        let name = format!("{}+cosim[{}]", inner.name(), cost.model);
+        Self { inner, cost, name }
+    }
+
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
+    }
+}
+
+impl<E: Engine + ?Sized> Engine for CoSimEngine<E> {
+    fn infer_batch(&self, batch: &[Payload]) -> Vec<Result<Output, InferError>> {
+        self.inner.infer_batch(batch)
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.inner.capabilities()
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn cosim_energy(&self, batch: &[Payload]) -> Option<Vec<EnergyReport>> {
+        Some(batch.iter().map(|_| self.cost.report()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EchoEngine;
+    use crate::dnateq::config::{LayerKind, LayerQuant, TensorQuant};
+
+    fn mk_cfg(scheme: PlanScheme, n_bits: u8, in_elems: usize, out_elems: usize) -> QuantConfig {
+        let tq = |elems| TensorQuant { alpha: 1.0, beta: 0.0, rmae: 0.01, elems };
+        QuantConfig {
+            model: format!("m-{}{n_bits}", scheme.name()),
+            thr_w: 0.05,
+            layers: vec![LayerQuant {
+                name: "fc".into(),
+                kind: LayerKind::Fc,
+                scheme,
+                n_bits,
+                base: 1.5,
+                weights: tq(in_elems * out_elems),
+                acts: tq(in_elems),
+                seeded_by_weights: true,
+                rss_w: 0.0,
+                rss_a: 0.0,
+                converged: true,
+            }],
+        }
+    }
+
+    #[test]
+    fn headline_joules_equal_offline_config_energy_exactly() {
+        let em = EnergyModel::default();
+        let accel = AccelConfig::default();
+        for cfg in [
+            mk_cfg(PlanScheme::Exp, 4, 128, 32),
+            mk_cfg(PlanScheme::Uniform, 8, 128, 32),
+            mk_cfg(PlanScheme::Pwl { breaks: 1 }, 5, 64, 16),
+        ] {
+            let cost = CostModel::from_config(&cfg, &em, &accel);
+            // Bit-exact, not approximate: both sides are the same code path.
+            assert_eq!(cost.joules_per_item(), em.config_energy_j(&cfg), "{}", cfg.model);
+            assert!(cost.joules_per_item() > 0.0);
+        }
+    }
+
+    #[test]
+    fn breakdown_replays_the_layer_through_the_simulator() {
+        let em = EnergyModel::default();
+        let accel = AccelConfig::default();
+        let cost = CostModel::from_config(&mk_cfg(PlanScheme::Exp, 4, 128, 32), &em, &accel);
+        assert_eq!(cost.layers.len(), 1);
+        let l = &cost.layers[0];
+        assert_eq!(l.scheme, "exp");
+        assert!(l.sim_total_pj > 0.0, "simulator energy missing");
+        assert!(l.sim_cycles > 0, "simulator timing missing");
+        assert!(cost.cycles_per_item() == l.sim_cycles);
+        // The full-sim energy covers memory + leakage on top of the
+        // compute-only headline joules.
+        assert!(l.sim_total_pj * PJ_TO_J > l.joules);
+    }
+
+    #[test]
+    fn report_divides_by_model_output_width() {
+        let em = EnergyModel::default();
+        let accel = AccelConfig::default();
+        let cost = CostModel::from_config(&mk_cfg(PlanScheme::Exp, 4, 128, 32), &em, &accel);
+        let r = cost.report();
+        assert_eq!(r.joules, cost.joules_per_item());
+        assert!((r.joules_per_output - r.joules / 32.0).abs() < 1e-24);
+        assert_eq!(r.breakdown_by_layer.len(), 1);
+    }
+
+    #[test]
+    fn cosim_engine_delegates_and_reports_per_item() {
+        let em = EnergyModel::default();
+        let accel = AccelConfig::default();
+        let cost = CostModel::from_config(&mk_cfg(PlanScheme::Exp, 4, 128, 32), &em, &accel);
+        let per_item = cost.joules_per_item();
+        let engine = CoSimEngine::new(Arc::new(EchoEngine { delay_us: 0 }), cost);
+        assert!(engine.name().contains("echo") && engine.name().contains("cosim"));
+        let batch = [Payload::Seq(vec![1, 2]), Payload::Seq(vec![3])];
+        let results = engine.infer_batch(&batch);
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0], Ok(Output::Tokens(vec![1, 2])));
+        let reports = engine.cosim_energy(&batch).expect("decorator must report energy");
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].joules, per_item);
+        assert_eq!(reports[1].joules, per_item);
+        // A bare engine reports nothing.
+        assert!(EchoEngine { delay_us: 0 }.cosim_energy(&batch).is_none());
+    }
+
+    #[test]
+    fn exp_plans_undercut_int8_on_the_same_shape() {
+        let em = EnergyModel::default();
+        let accel = AccelConfig::default();
+        let exp = CostModel::from_config(&mk_cfg(PlanScheme::Exp, 4, 3072, 256), &em, &accel);
+        let int8 = CostModel::from_config(&mk_cfg(PlanScheme::Uniform, 8, 3072, 256), &em, &accel);
+        let ratio = exp.joules_per_item() / int8.joules_per_item();
+        assert!(ratio <= 0.5, "exp/int8 joules ratio {ratio} exceeds the paper's direction");
+    }
+}

@@ -1,0 +1,41 @@
+//! Energy co-simulation (L3.75): the accelerator simulator as a
+//! first-class serving concern.
+//!
+//! The paper's headline hardware claim — ~66% energy savings from
+//! dot-products in the exponential domain (Figs. 9–10) — lives in the
+//! offline [`crate::accel`] reproduction. This subsystem wires that
+//! model into the serving loop so energy becomes a *measured,
+//! per-request* property of a running coordinator:
+//!
+//! * [`CostModel`] — folds a quantization plan ([`crate::dnateq::config::QuantConfig`])
+//!   through the per-scheme [`crate::accel::EnergyModel`] and replays
+//!   every layer through [`crate::accel::simulate_layer`], yielding a
+//!   per-inference joule cost plus a per-layer breakdown. The headline
+//!   joules are *identical by construction* to the offline
+//!   [`crate::accel::EnergyModel::config_energy_j`] score (both go
+//!   through [`crate::accel::PJ_TO_J`]), so the planner's Pareto front
+//!   and the serving-time accounting can never drift apart.
+//! * [`CoSimEngine`] — an [`crate::coordinator::Engine`] decorator: the
+//!   inner engine serves the batch, the decorator co-simulates the same
+//!   workload and reports one [`EnergyReport`] per request. The
+//!   coordinator threads the joules into [`crate::coordinator::Metrics`]
+//!   (joules/request, joules/output, rolling watts) and into each
+//!   [`crate::coordinator::Response`].
+//! * [`PowerMeter`] — the rolling-window joules→watts estimator behind
+//!   the `EnergyBudget` admission policy
+//!   (`--admission energy-budget --power-envelope-watts W`): when the
+//!   simulated rolling power exceeds the envelope, new lowest-priority
+//!   submissions are shed (counted as `energy_shed`) until the window
+//!   cools down. Higher classes are never energy-shed and the drain
+//!   path is unaffected.
+//! * [`ci`] — the seeded `ci-energy` head-to-head (exp-4-bit vs INT8 on
+//!   the identical arrival schedule) behind `repro energy` and the
+//!   bench-gate energy floor.
+
+pub mod budget;
+pub mod ci;
+pub mod cosim;
+
+pub use budget::{PowerMeter, DEFAULT_POWER_WINDOW};
+pub use ci::{run_ci_energy, CiEnergyReport, EnergyCase, CI_ENERGY_SEED};
+pub use cosim::{CoSimEngine, CostModel, EnergyReport, LayerEnergy};

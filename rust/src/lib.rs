@@ -28,6 +28,7 @@
 //! | [`dnateq`] | §III | the quantization methodology (the contribution) |
 //! | [`expdot`] | §III-C, §IV | **batched** exponential counting-GEMM engines + INT8 baseline |
 //! | [`accel`] | §V, §VI-C/D | 3D-stacked accelerator simulator + energy |
+//! | [`energysim`] | §VI-C/D | energy co-simulation: accelerator-sim `Engine` decorator, joules/request metrics, power-envelope admission, seeded `ci-energy` gate |
 //! | [`runtime`] | — | PJRT loading/execution of AOT artifacts (feature `pjrt`) |
 //! | [`coordinator`] | — | serving: typed `InferenceClient`/`Ticket` API over fallible `Engine`s, priority queue + admission policies, continuous batching, autoscaling pools, registry, hot-swap, metrics |
 //! | [`loadgen`] | — | open-loop Poisson/bursty load generator + per-priority p50/p99/p999 recorder (`BENCH_loadgen.json`, tail-latency SLO gate) |
@@ -50,6 +51,7 @@ pub mod accel;
 pub mod coordinator;
 pub mod dataset;
 pub mod dnateq;
+pub mod energysim;
 pub mod expdot;
 pub mod loadgen;
 pub mod nn;

@@ -10,12 +10,14 @@
 use super::arrival::ArrivalPattern;
 use super::recorder::LoadReport;
 use super::scenario::Scenario;
+use crate::accel::{AccelConfig, EnergyModel};
 use crate::coordinator::{
     AdmissionPolicy, BatcherConfig, Coordinator, CoordinatorConfig, CountingFcBackend,
     EchoEngine, Payload,
 };
 use crate::dataset::ImageDataset;
 use crate::dnateq::ExpQuantParams;
+use crate::energysim::{ci, CoSimEngine, CostModel};
 use crate::expdot::CountingFc;
 use crate::tensor::{SplitMix64, Tensor};
 use crate::util::Json;
@@ -31,7 +33,7 @@ pub const CI_ENGINE_SEED: u64 = 0xC1_10AD;
 /// Flags `run_from_flags` understands. `simd` and `fail-on-errors` are
 /// accepted but handled by the callers (global dispatch override /
 /// bin exit code).
-const KNOWN_FLAGS: [&str; 19] = [
+const KNOWN_FLAGS: [&str; 20] = [
     "name",
     "pattern",
     "rate",
@@ -42,6 +44,7 @@ const KNOWN_FLAGS: [&str; 19] = [
     "priority-mix",
     "deadline-ms",
     "admission",
+    "power-envelope-watts",
     "engine",
     "delay-us",
     "max-batch",
@@ -156,6 +159,12 @@ pub fn run_from_flags(flags: &BTreeMap<String, String>) -> Result<LoadReport> {
     let min_workers = usize_flag(flags, "min-workers", 1)?;
     let max_workers = usize_flag(flags, "max-workers", 4)?.max(min_workers);
     let queue_depth = usize_flag(flags, "queue-depth", 1024)?;
+    let power_envelope_watts = match flags.get("power-envelope-watts") {
+        None => None,
+        Some(v) => Some(v.parse::<f64>().with_context(|| {
+            format!("--power-envelope-watts must be a number, got `{v}`")
+        })?),
+    };
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig {
             max_batch,
@@ -165,6 +174,7 @@ pub fn run_from_flags(flags: &BTreeMap<String, String>) -> Result<LoadReport> {
         max_workers,
         queue_depth,
         admission,
+        power_envelope_watts,
     };
 
     let engine_kind = flags.get("engine").map(String::as_str).unwrap_or("counting");
@@ -172,7 +182,16 @@ pub fn run_from_flags(flags: &BTreeMap<String, String>) -> Result<LoadReport> {
         "counting" => {
             let data = ImageDataset::synthetic(32, 0xC1DA7A);
             let payloads = (0..data.len()).map(|i| Payload::Image(data.image(i))).collect();
-            (Coordinator::start(counting_engine(CI_ENGINE_SEED), cfg), payloads)
+            // The counting engine is the real exp-4 hot path; co-simulate
+            // it under the matching exp-4 plan so every response carries
+            // joules (and the energy-budget admission has a power signal).
+            let cost = CostModel::from_config(
+                &ci::exp_plan(),
+                &EnergyModel::default(),
+                &AccelConfig::default(),
+            );
+            let engine = Arc::new(CoSimEngine::new(counting_engine(CI_ENGINE_SEED), cost));
+            (Coordinator::start(engine, cfg), payloads)
         }
         "echo" => {
             let delay_us = u64_flag(flags, "delay-us", 200)?;
@@ -212,7 +231,15 @@ pub fn run_from_flags(flags: &BTreeMap<String, String>) -> Result<LoadReport> {
             .set("max_workers", max_workers)
             .set("queue_depth", queue_depth)
             .set("scale_ups", snap.scale_ups)
-            .set("scale_downs", snap.scale_downs);
+            .set("scale_downs", snap.scale_downs)
+            .set("energy_total_j", snap.energy_total_j)
+            .set("energy_j_per_request", snap.energy_j_per_request)
+            .set("energy_j_per_output", snap.energy_j_per_output)
+            .set("energy_shed", snap.energy_shed);
+        match power_envelope_watts {
+            Some(w) => serving.set("power_envelope_watts", w),
+            None => serving.set("power_envelope_watts", Json::Null),
+        };
         let mut j = report.to_json();
         j.set("scenario", scenario.to_json()).set("serving", serving);
         j.write_file(out).with_context(|| format!("writing loadgen report to {out}"))?;

@@ -28,6 +28,9 @@ struct ClassRecord {
     submitted: u64,
     e2e: Vec<f64>,
     queue: Vec<f64>,
+    /// Per-request co-simulated joules (only for responses that carried
+    /// an energy report — engines without co-simulation record none).
+    energy: Vec<f64>,
     failures: BTreeMap<&'static str, u64>,
 }
 
@@ -45,10 +48,25 @@ impl Recorder {
     /// Record one completed request (latencies in seconds, as carried
     /// by `Response`).
     pub fn record_ok(&mut self, priority: Priority, e2e_s: f64, queue_s: f64) {
+        self.record_ok_energy(priority, e2e_s, queue_s, None);
+    }
+
+    /// [`Self::record_ok`] plus the response's co-simulated joules, when
+    /// the serving engine reported them.
+    pub fn record_ok_energy(
+        &mut self,
+        priority: Priority,
+        e2e_s: f64,
+        queue_s: f64,
+        energy_j: Option<f64>,
+    ) {
         let c = &mut self.classes[lane(priority)];
         c.submitted += 1;
         c.e2e.push(e2e_s);
         c.queue.push(queue_s);
+        if let Some(j) = energy_j {
+            c.energy.push(j);
+        }
     }
 
     /// Record one request that ended in a typed failure.
@@ -65,6 +83,7 @@ impl Recorder {
         let wall_s = wall.as_secs_f64().max(1e-9);
         let mut all_e2e = Vec::new();
         let mut all_queue = Vec::new();
+        let mut all_energy = Vec::new();
         let mut failures: BTreeMap<&'static str, u64> = BTreeMap::new();
         let mut submitted = 0u64;
         let mut completed = 0u64;
@@ -77,6 +96,7 @@ impl Recorder {
                 completed += c.e2e.len() as u64;
                 all_e2e.extend_from_slice(&c.e2e);
                 all_queue.extend_from_slice(&c.queue);
+                all_energy.extend_from_slice(&c.energy);
                 for (k, v) in &c.failures {
                     *failures.entry(k).or_insert(0) += v;
                 }
@@ -86,6 +106,9 @@ impl Recorder {
                     completed: c.e2e.len() as u64,
                     e2e: Percentiles::of(c.e2e.clone()),
                     queue: Percentiles::of(c.queue.clone()),
+                    energy_j: Percentiles::of(c.energy.clone()),
+                    energy_total_j: c.energy.iter().sum(),
+                    energy_samples: c.energy.len() as u64,
                     failures: c.failures.clone(),
                 }
             })
@@ -101,6 +124,9 @@ impl Recorder {
             goodput_rps: completed as f64 / wall_s,
             e2e: Percentiles::of(all_e2e),
             queue: Percentiles::of(all_queue),
+            energy_total_j: all_energy.iter().sum(),
+            energy_samples: all_energy.len() as u64,
+            energy_j: Percentiles::of(all_energy),
             classes,
             failures,
         }
@@ -115,6 +141,13 @@ pub struct ClassReport {
     pub completed: u64,
     pub e2e: Percentiles,
     pub queue: Percentiles,
+    /// Per-request co-simulated joules distribution (all-zero when the
+    /// engine reported no energy).
+    pub energy_j: Percentiles,
+    /// Total co-simulated joules this class spent.
+    pub energy_total_j: f64,
+    /// Completions that carried an energy report.
+    pub energy_samples: u64,
     pub failures: BTreeMap<&'static str, u64>,
 }
 
@@ -139,6 +172,12 @@ pub struct LoadReport {
     pub e2e: Percentiles,
     /// Overall queue-wait distribution (seconds).
     pub queue: Percentiles,
+    /// Overall per-request co-simulated joules distribution.
+    pub energy_j: Percentiles,
+    /// Total co-simulated joules across every completion that reported.
+    pub energy_total_j: f64,
+    /// Completions that carried an energy report.
+    pub energy_samples: u64,
     /// One entry per priority class, lane order (high, normal, low).
     pub classes: Vec<ClassReport>,
     /// Aggregated typed-failure tallies keyed by [`ServeError::kind`].
@@ -153,6 +192,16 @@ impl LoadReport {
     /// The `BENCH_loadgen.json` body (scenario/serving config is
     /// attached by the caller).
     pub fn to_json(&self) -> Json {
+        // Joules are emitted raw (not ms-scaled like the latencies).
+        fn energy_json(p: &Percentiles) -> Json {
+            let mut j = Json::obj();
+            j.set("mean_j", p.mean)
+                .set("p50_j", p.p50)
+                .set("p99_j", p.p99)
+                .set("p999_j", p.p999)
+                .set("max_j", p.max);
+            j
+        }
         let mut failures = Json::obj();
         for (k, v) in &self.failures {
             failures.set(*k, *v);
@@ -163,7 +212,10 @@ impl LoadReport {
             cj.set("submitted", c.submitted)
                 .set("completed", c.completed)
                 .set("e2e_ms", c.e2e.to_json_ms())
-                .set("queue_ms", c.queue.to_json_ms());
+                .set("queue_ms", c.queue.to_json_ms())
+                .set("energy_j", energy_json(&c.energy_j))
+                .set("energy_total_j", c.energy_total_j)
+                .set("energy_samples", c.energy_samples);
             let mut cf = Json::obj();
             for (k, v) in &c.failures {
                 cf.set(*k, *v);
@@ -181,6 +233,9 @@ impl LoadReport {
             .set("goodput_rps", self.goodput_rps)
             .set("e2e_ms", self.e2e.to_json_ms())
             .set("queue_ms", self.queue.to_json_ms())
+            .set("energy_j", energy_json(&self.energy_j))
+            .set("energy_total_j", self.energy_total_j)
+            .set("energy_samples", self.energy_samples)
             .set("failures", failures)
             .set("per_priority", per_priority);
         j
@@ -272,6 +327,32 @@ mod tests {
         for name in PRIORITY_NAMES {
             assert!(pp.get(name).is_some(), "missing class {name}");
         }
+    }
+
+    #[test]
+    fn energy_percentiles_aggregate_per_priority() {
+        let mut r = Recorder::new();
+        r.record_ok_energy(Priority::High, 0.002, 0.0005, Some(2.0e-7));
+        r.record_ok_energy(Priority::Normal, 0.010, 0.001, Some(2.0e-7));
+        r.record_ok_energy(Priority::Normal, 0.011, 0.001, Some(4.0e-7));
+        // A response without an energy report adds no sample.
+        r.record_ok(Priority::Low, 0.020, 0.002);
+        let rep = r.report(4, Duration::from_secs(1));
+        assert_eq!(rep.energy_samples, 3);
+        assert!((rep.energy_total_j - 8.0e-7).abs() < 1e-18);
+        assert!((rep.energy_j.max - 4.0e-7).abs() < 1e-18);
+        assert_eq!(rep.classes[1].energy_samples, 2);
+        assert!((rep.classes[1].energy_total_j - 6.0e-7).abs() < 1e-18);
+        assert_eq!(rep.classes[2].energy_samples, 0);
+        assert_eq!(rep.classes[2].energy_total_j, 0.0);
+        let j = rep.to_json();
+        assert!(j.req("energy_total_j").is_ok());
+        let normal = j.req("per_priority").unwrap().req("normal").unwrap();
+        assert!(
+            (normal.req("energy_j").unwrap().req("max_j").unwrap().as_f64().unwrap() - 4.0e-7)
+                .abs()
+                < 1e-18
+        );
     }
 
     #[test]

@@ -121,7 +121,12 @@ impl Scenario {
             for (priority, submitted) in rx {
                 match submitted {
                     Ok(ticket) => match ticket.wait() {
-                        Ok(resp) => rec.record_ok(priority, resp.e2e_s, resp.queue_s),
+                        Ok(resp) => rec.record_ok_energy(
+                            priority,
+                            resp.e2e_s,
+                            resp.queue_s,
+                            resp.energy_j,
+                        ),
                         Err(e) => rec.record_err(priority, &e),
                     },
                     Err(e) => rec.record_err(priority, &e),
@@ -201,6 +206,22 @@ mod tests {
     }
 
     #[test]
+    fn scenario_json_always_emits_the_seed() {
+        // The seed is what makes an emitted report reproducible; it must
+        // be present for default and custom scenarios alike.
+        let j = Scenario::default().to_json();
+        assert_eq!(
+            j.req("seed").unwrap().as_usize().unwrap() as u64,
+            Scenario::default().seed
+        );
+        let custom = Scenario { seed: 0xDEAD_BEEF, ..Scenario::default() };
+        assert_eq!(
+            custom.to_json().req("seed").unwrap().as_usize().unwrap(),
+            0xDEAD_BEEF
+        );
+    }
+
+    #[test]
     fn echo_scenario_end_to_end_completes_everything() {
         let c = Coordinator::start(
             Arc::new(EchoEngine { delay_us: 100 }),
@@ -210,6 +231,7 @@ mod tests {
                 max_workers: 2,
                 queue_depth: 1024,
                 admission: AdmissionPolicy::Block,
+                power_envelope_watts: None,
             },
         );
         let s = Scenario {

@@ -11,6 +11,8 @@
 //!   infer     [--model M] [--index I]    one PJRT inference from artifacts
 //!   loadgen   [--rate R] [--pattern poisson|burst] [--admission P] [--out F]
 //!             open-loop load generation (same flags as the `loadgen` bin)
+//!   energy    [--rate R] [--duration S] [--out F]   seeded ci-energy
+//!             head-to-head: exp vs INT8 joules/request through the batcher
 //!
 //! Global flag (after the subcommand): `--simd scalar|avx2|auto`
 //! forces the kernel dispatch backend before any engine is constructed
@@ -372,9 +374,21 @@ fn serve(args: &Args) -> Result<()> {
         .unwrap_or(defaults.max_workers)
         .max(min_workers);
 
+    let power_envelope_watts: Option<f64> = args
+        .get("power-envelope-watts")
+        .map(str::parse)
+        .transpose()
+        .context("--power-envelope-watts must be a number")?;
+
     let registry = ModelRegistry::new();
     let mut traffic = BTreeMap::new();
-    let coord_cfg = CoordinatorConfig { admission, min_workers, max_workers, ..defaults };
+    let coord_cfg = CoordinatorConfig {
+        admission,
+        min_workers,
+        max_workers,
+        power_envelope_watts,
+        ..defaults
+    };
     for m in &models {
         let t = register_model(&registry, m, kind, coord_cfg)?;
         traffic.insert(m.to_string(), t);
@@ -751,6 +765,31 @@ fn run() -> Result<()> {
                 );
             }
         }
+        "energy" => {
+            let rate: f64 = args.get("rate").unwrap_or("120").parse()?;
+            let duration: f64 = args.get("duration").unwrap_or("1.0").parse()?;
+            let report = dnateq::energysim::run_ci_energy(rate, duration);
+            println!("{}", report.summary());
+            for case in [&report.exp, &report.int8] {
+                println!(
+                    "  {:<16} offered {:>5}, completed {:>5}, total {:.6e} J, \
+                     {:.6e} J/req, {:.6e} J/output",
+                    case.plan,
+                    case.offered,
+                    case.completed,
+                    case.energy_total_j,
+                    case.j_per_request,
+                    case.j_per_output,
+                );
+            }
+            if let Some(out) = args.get("out") {
+                report
+                    .to_json()
+                    .write_file(out)
+                    .with_context(|| format!("writing energy report to {out}"))?;
+                println!("JSON -> {out}");
+            }
+        }
         "infer" => {
             let model = match args.get("model").unwrap_or("alexnet") {
                 "alexnet" | "alexnet_mini" => "alexnet",
@@ -774,12 +813,14 @@ fn run() -> Result<()> {
         _ => {
             println!(
                 "repro — DNA-TEQ reproduction\n\
-                 usage: repro <calibrate|report|simulate|serve|plans|swap|infer|loadgen> [flags]\n  \
+                 usage: repro <calibrate|report|simulate|serve|plans|swap|infer|loadgen|energy> \
+                 [flags]\n  \
                  calibrate [--model M] [--force] [--quick]\n  \
                  report    --all | --table N | --figure N | --area [--quick]\n  \
                  simulate  [--quick]\n  \
                  serve     [--models a,b,c] [--backend engine|quantized|pjrt] [--requests N]\n            \
-                 [--admission block|reject|shed] [--min-workers N] [--max-workers N]\n            \
+                 [--admission block|reject|shed|energy-budget] [--power-envelope-watts W]\n            \
+                 [--min-workers N] [--max-workers N]\n            \
                  [--plan-policy max-accuracy|min-bits|min-energy]\n  \
                  global    --simd scalar|avx2|auto   force the kernel dispatch backend\n  \
                  plans     list | show <model> [--version V] | diff <model> <v1> <v2>\n            \
@@ -788,7 +829,10 @@ fn run() -> Result<()> {
                  infer     [--model alexnet|resnet] [--index I]\n  \
                  loadgen   [--engine counting|echo] [--pattern poisson|burst] [--rate R]\n            \
                  [--duration S] [--seed N] [--priority-mix h:n:l] [--admission P]\n            \
-                 [--min-workers N] [--max-workers N] [--out BENCH_loadgen.json]"
+                 [--power-envelope-watts W] [--min-workers N] [--max-workers N]\n            \
+                 [--out BENCH_loadgen.json]\n  \
+                 energy    [--rate R] [--duration S] [--out BENCH_energy.json]\n            \
+                 seeded exp-vs-INT8 joules/request co-simulation through the batcher"
             );
         }
     }

@@ -57,6 +57,7 @@ fn slot_refill_serving_matches_stop_the_world_batching() {
                     max_workers: min_workers + 2,
                     queue_depth: 256,
                     admission: AdmissionPolicy::Block,
+                    power_envelope_watts: None,
                 },
             );
             let tickets: Vec<_> = payloads
@@ -95,6 +96,7 @@ fn block_admission_admits_when_a_slot_frees_before_the_deadline() {
             max_workers: 1,
             queue_depth: 1,
             admission: AdmissionPolicy::Block,
+            power_envelope_watts: None,
         },
     );
     // First request occupies the worker, second fills the queue.
@@ -131,6 +133,7 @@ fn block_admission_gives_up_when_the_deadline_expires_mid_wait() {
             max_workers: 1,
             queue_depth: 1,
             admission: AdmissionPolicy::Block,
+            power_envelope_watts: None,
         },
     );
     let a = c.submit(Payload::Seq(vec![1])).unwrap();

@@ -90,6 +90,7 @@ fn slow_single_worker(delay_us: u64) -> Coordinator {
             max_workers: 1,
             queue_depth: 64,
             admission: AdmissionPolicy::Block,
+            power_envelope_watts: None,
         },
     )
 }
@@ -144,6 +145,7 @@ fn blocked_admission_gives_up_at_the_requests_deadline() {
             max_workers: 1,
             queue_depth: 1,
             admission: AdmissionPolicy::Block,
+            power_envelope_watts: None,
         },
     );
     let client = c.client();
@@ -215,6 +217,7 @@ fn reject_policy_surfaces_queue_full_to_the_submitter() {
             max_workers: 1,
             queue_depth: 1,
             admission: AdmissionPolicy::Reject,
+            power_envelope_watts: None,
         },
     );
     let client = c.client();
@@ -253,6 +256,7 @@ fn shed_oldest_under_full_queue_resolves_shed_tickets_with_queue_full() {
             max_workers: 1,
             queue_depth: 2,
             admission: AdmissionPolicy::ShedOldest,
+            power_envelope_watts: None,
         },
     );
     let client = c.client();
@@ -369,6 +373,7 @@ fn drain_with_in_flight_batches_resolves_every_outstanding_ticket() {
             max_workers: 2,
             queue_depth: 64,
             admission: AdmissionPolicy::Block,
+            power_envelope_watts: None,
         },
     );
     let client = c.client();
@@ -407,6 +412,7 @@ fn high_priority_requests_overtake_queued_normal_traffic() {
             max_workers: 1,
             queue_depth: 64,
             admission: AdmissionPolicy::Block,
+            power_envelope_watts: None,
         },
     );
     let client = c.client();
@@ -457,6 +463,7 @@ fn typed_errors_surface_while_concurrent_healthy_traffic_stays_fifo() {
             max_workers: 1,
             queue_depth: depth,
             admission: AdmissionPolicy::Reject,
+            power_envelope_watts: None,
         },
     );
     let client = c.client();
