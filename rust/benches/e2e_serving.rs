@@ -57,6 +57,7 @@ fn drive(
         mean: per,
         mad: Duration::ZERO,
         iters: n as u64,
+        backend: None,
     }
 }
 
@@ -103,6 +104,7 @@ fn drive_registry(
         mean: per,
         mad: Duration::ZERO,
         iters: n as u64,
+        backend: None,
     }
 }
 

@@ -3,6 +3,9 @@
 //! columns. Batch-1 rows run the GEMV loop; batched rows run the batched
 //! engines (`forward_batch`), so the speedup from amortizing the weight
 //! stream and quantization pass across the batch is directly visible.
+//! Every row (including the forced-`[scalar]` twins) carries its SIMD
+//! backend in the summary line and the JSON `backend` field, so
+//! `BENCH_*.json` trajectories are attributable per backend.
 //! Emits `reports/bench_table3_simd_fc.json` alongside the text summary.
 //!
 //! `cargo bench --bench table3_simd_fc`
@@ -63,7 +66,8 @@ fn main() {
                 } else {
                     black_box(int8.forward_batch(&x));
                 }
-            });
+            })
+            .with_backend(backend.name());
             println!("{}", r.summary());
             results.push(r);
             for (bits, fc) in &counting {
@@ -73,7 +77,8 @@ fn main() {
                     } else {
                         black_box(fc.forward_batch(&x));
                     }
-                });
+                })
+                .with_backend(backend.name());
                 println!("{}", r.summary());
                 results.push(r);
             }
@@ -85,7 +90,8 @@ fn main() {
                     } else {
                         black_box(fc.forward_batch(&x));
                     }
-                });
+                })
+                .with_backend(SimdBackend::Scalar.name());
                 println!("{}", r.summary());
                 results.push(r);
             }

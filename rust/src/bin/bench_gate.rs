@@ -15,7 +15,13 @@
 //!   be zero under this healthy fixed-shape load;
 //! * on a SIMD-capable runner, the forced-SIMD kernel cases fall below
 //!   `--min-simd-ratio` × the forced-scalar cases at any batch size —
-//!   the explicit-SIMD counting path must never lose to its fallback;
+//!   the explicit-SIMD counting path must never lose to its fallback.
+//!   The floor is capability-aware: the runner's executable backends
+//!   are probed once (emitted as `simd_capability` in the JSON), every
+//!   executable non-scalar backend gets its own forced-kernel rows, the
+//!   AVX-512 rows carry a raised `≥ 1.15×` floor (the replicated-
+//!   histogram path must decisively beat scalar where it can run), and
+//!   backends the runner cannot execute are warn-skipped, not failed;
 //! * the open-loop **tail-latency SLO** regresses: a short seeded
 //!   Poisson loadgen scenario on the counting backend must keep its
 //!   end-to-end p99/p999 under the baseline `loadgen` ceilings ×
@@ -69,6 +75,11 @@ const ENERGY_DURATION_S: f64 = 0.75;
 /// ~66% savings ⇒ ratio ≈ 0.34–0.42; 0.5 leaves headroom for plan
 /// tweaks without ever letting the headline invert).
 const ENERGY_RATIO_CEILING: f64 = 0.5;
+/// Floor applied to AVX-512 kernel rows on runners that can execute
+/// them: `max(--min-simd-ratio, 1.15)`. The replicated-histogram
+/// counting path must beat forced scalar by a real margin, not merely
+/// avoid losing to it (warn-skipped where AVX-512 is unavailable).
+const AVX512_RATIO_FLOOR: f64 = 1.15;
 
 struct Opts {
     out: Option<String>,
@@ -278,20 +289,49 @@ fn run_sweep(counters: &mut FailureCounters) -> Vec<BenchResult> {
             mean: best,
             mad: Duration::ZERO,
             iters: REQUESTS as u64,
-        };
+            backend: None,
+        }
+        .with_backend(simd::active_backend().name());
         println!("{}", r.summary());
         results.push(r);
     }
     results
 }
 
+/// One forced-backend kernel measurement: `ratio` is the forced-scalar
+/// median divided by this backend's median at `batch` (>1 ⇒ faster than
+/// scalar).
+struct KernelRatio {
+    backend: SimdBackend,
+    batch: usize,
+    ratio: f64,
+}
+
+/// Probe (once) which SIMD backends this runner can execute. Emitted as
+/// the report's top-level `simd_capability` section so `BENCH_ci.json`
+/// trajectories record what the runner could run, and consulted by the
+/// gate to warn-skip `--min-simd-ratio` floors for backends the runner
+/// cannot execute.
+fn probe_capability() -> Json {
+    let mut o = Json::obj();
+    o.set("best", simd::best_available().name());
+    for b in SimdBackend::all() {
+        o.set(b.name(), simd::available(b));
+    }
+    o
+}
+
 /// Direct scalar-vs-SIMD kernel cases: the same 4-bit 3072→256 layer as
-/// the serving sweep, benched as bare `forward_batch` calls under both
-/// forced backends at batch {1, 8, 32}. On scalar-only runners the
-/// "simd" instance *is* scalar, so baseline case names always resolve
-/// and the ratio sits at ~1. Appends all six cases to `results` and
-/// returns the per-batch speedups as the report's `simd` section.
-fn run_kernel_sweep(results: &mut Vec<BenchResult>) -> (Json, Vec<(usize, f64)>) {
+/// the serving sweep, benched as bare `forward_batch` calls under forced
+/// backends at batch {1, 8, 32}. The legacy "scalar"/"simd" case names
+/// are kept for baseline compatibility (the "simd" instance is the
+/// runner's best backend; on scalar-only runners it *is* scalar, so
+/// baseline names always resolve and the ratio sits at ~1). Every other
+/// executable non-scalar backend gets its own explicitly-named rows, so
+/// an AVX-512 runner also records its AVX2 kernel trajectory. Appends
+/// all cases to `results` and returns the per-backend speedups as the
+/// report's `simd` section.
+fn run_kernel_sweep(results: &mut Vec<BenchResult>) -> (Json, Vec<KernelRatio>) {
     let mut rng = SplitMix64::new(0xC1_BE7C);
     let w = Tensor::rand_signed_exponential(&[OUT_FEATURES, IN_FEATURES], 3.0, &mut rng);
     let x_cal = Tensor::rand_signed_exponential(&[1, IN_FEATURES], 1.0, &mut rng);
@@ -301,6 +341,11 @@ fn run_kernel_sweep(results: &mut Vec<BenchResult>) -> (Json, Vec<(usize, f64)>)
     let best = simd::best_available();
     let fc_scalar = CountingFc::new(&w, wp, ap, None).with_backend(SimdBackend::Scalar);
     let fc_simd = CountingFc::new(&w, wp, ap, None).with_backend(best);
+    let extra_fcs: Vec<(SimdBackend, CountingFc)> = SimdBackend::all()
+        .into_iter()
+        .filter(|&b| b != SimdBackend::Scalar && b != best && simd::available(b))
+        .map(|b| (b, CountingFc::new(&w, wp, ap, None).with_backend(b)))
+        .collect();
 
     let mut info = Json::obj();
     info.set("active", best.name());
@@ -311,18 +356,34 @@ fn run_kernel_sweep(results: &mut Vec<BenchResult>) -> (Json, Vec<(usize, f64)>)
         let vname = format!("ci-fc-kernel {IN_FEATURES}x{OUT_FEATURES} simd b={batch}");
         let rs = bench(&sname, 200, || {
             black_box(fc_scalar.forward_batch(&x));
-        });
+        })
+        .with_backend("scalar");
         let rv = bench(&vname, 200, || {
             black_box(fc_simd.forward_batch(&x));
-        });
-        let ratio = rs.median.as_secs_f64() / rv.median.as_secs_f64().max(1e-12);
+        })
+        .with_backend(best.name());
+        let scalar_s = rs.median.as_secs_f64();
+        let ratio = scalar_s / rv.median.as_secs_f64().max(1e-12);
         println!("{}", rs.summary());
         println!("{}", rv.summary());
         println!("kernel simd speedup (b={batch}, backend {}): {ratio:.2}x", best.name());
         info.set(&format!("speedup_b{batch}"), ratio);
-        ratios.push((batch, ratio));
+        ratios.push(KernelRatio { backend: best, batch, ratio });
         results.push(rs);
         results.push(rv);
+        for (b, fc) in &extra_fcs {
+            let name = format!("ci-fc-kernel {IN_FEATURES}x{OUT_FEATURES} {} b={batch}", b.name());
+            let rb = bench(&name, 200, || {
+                black_box(fc.forward_batch(&x));
+            })
+            .with_backend(b.name());
+            let ratio = scalar_s / rb.median.as_secs_f64().max(1e-12);
+            println!("{}", rb.summary());
+            println!("kernel simd speedup (b={batch}, backend {}): {ratio:.2}x", b.name());
+            info.set(&format!("speedup_{}_b{batch}", b.name()), ratio);
+            ratios.push(KernelRatio { backend: *b, batch, ratio });
+            results.push(rb);
+        }
     }
     (info, ratios)
 }
@@ -332,11 +393,13 @@ fn median_of<'a>(results: &'a [BenchResult], suffix: &str) -> Option<&'a BenchRe
 }
 
 /// Encode a run as the gate's report JSON: timing cases + the failure
-/// counters the gate asserts on + the scalar-vs-SIMD kernel section +
-/// the open-loop tail-latency section + the energy co-sim section.
+/// counters the gate asserts on + the runner's probed SIMD capability +
+/// the scalar-vs-SIMD kernel section + the open-loop tail-latency
+/// section + the energy co-sim section.
 fn report_json(
     results: &[BenchResult],
     counters: &FailureCounters,
+    capability: &Json,
     simd_info: &Json,
     loadgen_info: &Json,
     energy_info: &Json,
@@ -344,6 +407,7 @@ fn report_json(
     let mut o = Json::obj();
     o.set("cases", Json::Arr(results.iter().map(|r| r.to_json()).collect()))
         .set("counters", counters.to_json())
+        .set("simd_capability", capability.clone())
         .set("simd", simd_info.clone())
         .set("loadgen", loadgen_info.clone())
         .set("energy", energy_info.clone());
@@ -406,9 +470,11 @@ fn load_energy_ratio(baseline: &Json) -> Option<f64> {
 
 fn main() {
     let opts = parse_opts();
+    let capability = probe_capability();
+    println!("simd capability: {}", capability.encode());
     let mut counters = FailureCounters::default();
     let mut results = run_sweep(&mut counters);
-    let (simd_info, simd_ratios) = run_kernel_sweep(&mut results);
+    let (simd_info, kernel_ratios) = run_kernel_sweep(&mut results);
     let (loadgen_info, load) = run_loadgen(&mut counters);
     let (energy_info, energy) = run_energy();
 
@@ -424,7 +490,7 @@ fn main() {
     if let Some(out) = &opts.out {
         write_report(
             out,
-            &report_json(&results, &counters, &simd_info, &loadgen_info, &energy_info),
+            &report_json(&results, &counters, &capability, &simd_info, &loadgen_info, &energy_info),
         );
         println!("JSON -> {out}");
     }
@@ -442,17 +508,36 @@ fn main() {
             counters.describe()
         ));
     }
-    // Only meaningful where the backends actually differ: on scalar-only
-    // runners both kernel instances ran the same code and the ratio is
-    // pure noise, so the SIMD floor is not enforced there.
-    if simd::best_available() != SimdBackend::Scalar {
-        for (batch, ratio) in &simd_ratios {
-            if *ratio < opts.min_simd_ratio {
-                failures.push(format!(
-                    "SIMD kernel at b={batch} ran {ratio:.2}x vs scalar, below the {:.2}x floor",
-                    opts.min_simd_ratio
-                ));
-            }
+    // Capability-aware SIMD floors. Backends the runner cannot execute
+    // never produced rows — warn-skip them instead of failing. Rows
+    // whose backend is scalar (scalar-only runners, where the dispatch
+    // "simd" instance fell back) carry a pure-noise ratio and are also
+    // skipped. AVX-512 rows must clear the raised replicated-histogram
+    // floor, not merely the parity floor.
+    for b in SimdBackend::all() {
+        if b != SimdBackend::Scalar && !simd::available(b) {
+            println!(
+                "warning: runner cannot execute {} — its --min-simd-ratio floor is skipped",
+                b.name()
+            );
+        }
+    }
+    for kr in &kernel_ratios {
+        if kr.backend == SimdBackend::Scalar {
+            continue;
+        }
+        let floor = if kr.backend == SimdBackend::Avx512 {
+            opts.min_simd_ratio.max(AVX512_RATIO_FLOOR)
+        } else {
+            opts.min_simd_ratio
+        };
+        if kr.ratio < floor {
+            failures.push(format!(
+                "{} kernel at b={} ran {:.2}x vs scalar, below the {floor:.2}x floor",
+                kr.backend.name(),
+                kr.batch,
+                kr.ratio
+            ));
         }
     }
     // The open-loop scenario must complete cleanly: every typed failure
@@ -482,8 +567,14 @@ fn main() {
 
     if let Some(baseline_path) = &opts.baseline {
         if opts.update_baseline {
-            let refreshed =
-                report_json(&results, &counters, &simd_info, &loadgen_info, &energy_info);
+            let refreshed = report_json(
+                &results,
+                &counters,
+                &capability,
+                &simd_info,
+                &loadgen_info,
+                &energy_info,
+            );
             write_report(baseline_path, &refreshed);
             println!("baseline refreshed -> {baseline_path}");
         } else {

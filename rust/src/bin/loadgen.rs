@@ -14,7 +14,8 @@
 //!
 //! `--fail-on-errors` exits 1 when any request ends in a typed failure
 //! (the CI smoke's zero-failure assertion). Force the SIMD backend via
-//! the `DNATEQ_SIMD` env var, as everywhere else.
+//! `--simd scalar|avx2|avx512|auto` (or the `DNATEQ_SIMD` env var, as
+//! everywhere else).
 
 use std::collections::BTreeMap;
 
@@ -44,6 +45,15 @@ fn parse_flags(args: &[String]) -> BTreeMap<String, String> {
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let flags = parse_flags(&args);
+    // Install the SIMD override before any engine is constructed, same
+    // as the `repro` front-end (backends bind at construction time).
+    if let Some(v) = flags.get("simd") {
+        let forced = dnateq::expdot::simd::parse(v).and_then(dnateq::expdot::simd::force);
+        if let Err(e) = forced {
+            eprintln!("loadgen error: {e}");
+            std::process::exit(2);
+        }
+    }
     let fail_on_errors = flags.contains_key("fail-on-errors");
     match dnateq::loadgen::cli::run_from_flags(&flags) {
         Ok(report) => {

@@ -5,6 +5,7 @@
 //! counting engines only accumulate integer counts and do a short
 //! float post-process per output neuron.
 
+use super::simd::{self, SimdBackend};
 use crate::dnateq::ExpQuantParams;
 
 /// Reconstruction context shared by all counting engines for one layer.
@@ -106,9 +107,26 @@ impl ExpDotContext {
     /// Reconstruct one output value from the four count tables
     /// (the Dequantizer stage, §V-D): each count is multiplied by its
     /// `b^int` from the BLUT and the terms are combined with the
-    /// coefficient products.
+    /// coefficient products. Scalar-kernel convenience wrapper around
+    /// [`ExpDotContext::reconstruct_with`] — every backend returns the
+    /// same bits, so the choice is pure speed.
     pub fn reconstruct(
         &self,
+        pair_counts: &[i32],
+        w_counts: &[i32],
+        a_counts: &[i32],
+        sign_count: i32,
+    ) -> f32 {
+        self.reconstruct_with(SimdBackend::Scalar, pair_counts, w_counts, a_counts, sign_count)
+    }
+
+    /// Backend-dispatched reconstruction: the three counter × BLUT
+    /// weighted sums run through [`simd::blut_dot`], whose fixed 8-lane
+    /// reduction tree is shared by the scalar twin — scalar, AVX2, and
+    /// AVX-512 produce bitwise-identical outputs.
+    pub fn reconstruct_with(
+        &self,
+        backend: SimdBackend,
         pair_counts: &[i32],
         w_counts: &[i32],
         a_counts: &[i32],
@@ -117,22 +135,9 @@ impl ExpDotContext {
         debug_assert_eq!(pair_counts.len(), self.pair_table_len());
         debug_assert_eq!(w_counts.len(), self.single_table_len());
         debug_assert_eq!(a_counts.len(), self.single_table_len());
-        let mut t1 = 0.0f64;
-        for (c, p) in pair_counts.iter().zip(&self.blut_pair) {
-            if *c != 0 {
-                t1 += *c as f64 * p;
-            }
-        }
-        let mut t2 = 0.0f64;
-        let mut t3 = 0.0f64;
-        for ((cw, ca), p) in w_counts.iter().zip(a_counts).zip(&self.blut_single) {
-            if *cw != 0 {
-                t2 += *cw as f64 * p;
-            }
-            if *ca != 0 {
-                t3 += *ca as f64 * p;
-            }
-        }
+        let t1 = simd::blut_dot(backend, pair_counts, &self.blut_pair);
+        let t2 = simd::blut_dot(backend, w_counts, &self.blut_single);
+        let t3 = simd::blut_dot(backend, a_counts, &self.blut_single);
         (self.c1 * t1 + self.c2 * t2 + self.c3 * t3 + self.c4 * sign_count as f64) as f32
     }
 }
@@ -192,6 +197,29 @@ mod tests {
         let want = -(a_val * w_val);
         // `got` is f32; compare at f32 precision.
         assert!((got as f64 - want).abs() < 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
+    fn reconstruct_is_bitwise_identical_across_backends() {
+        use crate::tensor::SplitMix64;
+        let pa = params(6, 1.22, 0.8, 0.015);
+        let pw = params(6, 1.22, 0.4, 0.003);
+        let ctx = ExpDotContext::new(pa, pw);
+        let mut rng = SplitMix64::new(0xB1C7);
+        let mut pair = vec![0i32; ctx.pair_table_len()];
+        let mut wc = vec![0i32; ctx.single_table_len()];
+        let mut ac = vec![0i32; ctx.single_table_len()];
+        for c in pair.iter_mut().chain(&mut wc).chain(&mut ac) {
+            *c = rng.next_below(41) as i32 - 20;
+        }
+        let want = ctx.reconstruct(&pair, &wc, &ac, 9);
+        for b in [SimdBackend::Avx2, SimdBackend::Avx512] {
+            if !simd::available(b) {
+                continue;
+            }
+            let got = ctx.reconstruct_with(b, &pair, &wc, &ac, 9);
+            assert_eq!(got.to_bits(), want.to_bits(), "{}", b.name());
+        }
     }
 
     #[test]

@@ -8,8 +8,8 @@
 //! nibble-packed weights for 3-bit layers.
 
 use super::context::ExpDotContext;
-use super::pack::{nibble_lut, pack_codes, PackedCodes};
-use super::simd::{self, SimdBackend};
+use super::pack::{nibble_lut_tables, pack_codes, NibbleLut, PackedCodes};
+use super::simd::{self, AccumScratch, SimdBackend};
 use crate::dnateq::{ExpQuantParams, QuantizedTensor, ZERO_CODE_SENTINEL};
 use crate::tensor::Tensor;
 use crate::util::parallel::parallel_row_blocks;
@@ -64,7 +64,7 @@ impl WeightStore {
         &'a self,
         j: usize,
         inf: usize,
-        lut: &[(u8, i8); 16],
+        lut: &NibbleLut,
         backend: SimdBackend,
         scratch: &'a mut RowScratch,
     ) -> (&'a [u8], &'a [i8]) {
@@ -259,8 +259,9 @@ impl CountingFc {
         let mut wcnt = vec![0i32; sets * (slen + 1)];
         let mut acnt = vec![0i32; sets * (slen + 1)];
 
-        let lut = nibble_lut(self.ctx.r_max);
+        let lut = nibble_lut_tables(self.ctx.r_max);
         let mut scratch = RowScratch::default();
+        let mut accum = AccumScratch::default();
         let width = j1 - j0;
         let mut out = vec![0.0f32; batch * width];
         let mut b0 = 0usize;
@@ -294,6 +295,7 @@ impl CountingFc {
                             &mut pair[pb..pb + plen],
                             &mut wcnt[sb..sb + slen],
                             &mut acnt[sb..sb + slen],
+                            &mut accum,
                         );
                     }
                 }
@@ -307,7 +309,8 @@ impl CountingFc {
                         let pbase = set * (plen + 1);
                         let sbase = set * (slen + 1);
                         let sign_count: i32 = pair[pbase..pbase + plen].iter().sum();
-                        let v = self.ctx.reconstruct(
+                        let v = self.ctx.reconstruct_with(
+                            self.backend,
                             &pair[pbase..pbase + plen],
                             &wcnt[sbase..sbase + slen],
                             &acnt[sbase..sbase + slen],
@@ -338,8 +341,9 @@ impl CountingFc {
         let mut wcnt = vec![0i32; NEURON_BLOCK * (slen + 1)];
         let mut acnt = vec![0i32; NEURON_BLOCK * (slen + 1)];
 
-        let lut = nibble_lut(r_max);
+        let lut = nibble_lut_tables(r_max);
         let mut scratch = RowScratch::default();
+        let mut accum = AccumScratch::default();
         let mut j0 = 0usize;
         while j0 < self.out_features {
             let jn = (j0 + NEURON_BLOCK).min(self.out_features);
@@ -349,7 +353,8 @@ impl CountingFc {
             acnt[..width * (slen + 1)].fill(0);
 
             // Inner loop of the §IV hot spot, one weight row per counter
-            // set (see `simd::accumulate_row` for the scalar/AVX2 pair).
+            // set (see `simd::accumulate_row` for the scalar/AVX2/AVX-512
+            // kernel trio).
             for (jj, j) in (j0..jn).enumerate() {
                 let (wrow, srow) =
                     self.store.row(j, self.in_features, &lut, self.backend, &mut scratch);
@@ -363,6 +368,7 @@ impl CountingFc {
                     &mut pair[pb..pb + plen],
                     &mut wcnt[sb..sb + slen],
                     &mut acnt[sb..sb + slen],
+                    &mut accum,
                 );
             }
 
@@ -372,7 +378,8 @@ impl CountingFc {
                 let pbase = jj * (plen + 1);
                 let sbase = jj * (slen + 1);
                 let sign_count: i32 = pair[pbase..pbase + plen].iter().sum();
-                let v = self.ctx.reconstruct(
+                let v = self.ctx.reconstruct_with(
+                    self.backend,
                     &pair[pbase..pbase + plen],
                     &wcnt[sbase..sbase + slen],
                     &acnt[sbase..sbase + slen],

@@ -3,7 +3,10 @@
 //! Mirrors the paper's best-effort VNNI implementation: weights quantized
 //! offline to INT8, activations quantized dynamically per input vector,
 //! i32-accumulating GEMV with an unrolled inner loop (the portable analog
-//! of `VPDPBUSD`), then a single dequantization multiply per output.
+//! of `VPDPBUSD`), then a single dequantization multiply per output. The
+//! inner dot dispatches through [`simd::dot_i8`] — scalar, AVX2
+//! (`pmaddwd`), or AVX-512 (`vpmaddwd` on 512-bit lanes) — all exact i32
+//! arithmetic, so every backend is bit-identical.
 
 use super::simd::{self, SimdBackend};
 use crate::dnateq::UniformParams;

@@ -18,9 +18,11 @@
 //! * [`int8`] — the VNNI-style INT8 dot-product baseline of Table III.
 //! * [`pack`] — nibble packing of (sign, exponent) codes; the 2×
 //!   footprint reduction is where the large-layer speedups come from.
-//! * [`simd`] — explicit AVX2 kernels for the counting/INT8 inner loops
-//!   behind runtime feature detection, bit-exact with the scalar
-//!   fallbacks and forcible to either backend for testing.
+//! * [`simd`] — explicit AVX2 and AVX-512 kernels for the counting/INT8
+//!   inner loops and the BLUT reconstruction, behind runtime feature
+//!   detection, bit-exact with the scalar fallbacks and forcible to any
+//!   backend for testing. The AVX-512 counting path replaces the
+//!   movemask drain with replicated counter copies folded at row end.
 
 pub mod context;
 pub mod counting;

@@ -81,6 +81,33 @@ pub fn shift_codes(codes: &[i8], r_max: i32) -> Vec<u8> {
         .collect()
 }
 
+/// Pre-split decode LUT: `pairs` feeds the scalar path; `plus` /
+/// `signs` are the same 16 entries as parallel byte tables in exactly
+/// the operand layout the SIMD lookups consume (`pshufb` /
+/// `vpermb`), built once per forward pass instead of re-split per
+/// decoded weight row.
+#[derive(Clone, Debug)]
+pub struct NibbleLut {
+    /// `(code + R_max, sign)` per nibble — the scalar kernel's view.
+    pub pairs: [(u8, i8); 16],
+    /// Pre-shifted codes only (`0xFF` for zero/invalid nibbles).
+    pub plus: [u8; 16],
+    /// Signs only (`0` for zero/invalid nibbles).
+    pub signs: [i8; 16],
+}
+
+/// Build the pre-split decode LUT (see [`NibbleLut`]).
+pub fn nibble_lut_tables(r_max: i32) -> NibbleLut {
+    let pairs = nibble_lut(r_max);
+    let mut plus = [0u8; 16];
+    let mut signs = [0i8; 16];
+    for (k, &(p, s)) in pairs.iter().enumerate() {
+        plus[k] = p;
+        signs[k] = s;
+    }
+    NibbleLut { pairs, plus, signs }
+}
+
 /// Decode LUT for the counting kernel: maps a nibble to
 /// `(code + R_max, sign)` with `(0xFF, 0)` for zero — so the kernel's
 /// inner loop is a table load + add + signed increment.
@@ -154,6 +181,18 @@ mod tests {
                 assert_eq!(shifted[i], 0xFF);
             } else {
                 assert_eq!(shifted[i] as i32, c as i32 + r_max);
+            }
+        }
+    }
+
+    #[test]
+    fn split_lut_tables_mirror_the_pair_lut() {
+        for r_max in [1, 3, 7] {
+            let split = nibble_lut_tables(r_max);
+            assert_eq!(split.pairs, nibble_lut(r_max));
+            for k in 0..16 {
+                assert_eq!(split.plus[k], split.pairs[k].0, "r_max={r_max} nib={k}");
+                assert_eq!(split.signs[k], split.pairs[k].1, "r_max={r_max} nib={k}");
             }
         }
     }

@@ -3,34 +3,47 @@
 //!
 //! The counting GEMM's inner loops are exponent extraction/shifting
 //! ([`shift_codes`]), nibble decoding of the packed 3-bit store
-//! ([`decode_nibbles`]), and the counter-table scatter itself
-//! ([`accumulate_row`]); the INT8 baseline's is the i8 dot product
+//! ([`decode_nibbles`]), the counter-table scatter itself
+//! ([`accumulate_row`]), and the BLUT reconstruction dot
+//! ([`blut_dot`]); the INT8 baseline's is the i8 dot product
 //! ([`dot_i8`]) and the f32 engine's im2col is a strided copy
-//! ([`copy_f32`]). Each has an AVX2 implementation (`std::arch`
-//! intrinsics behind `is_x86_feature_detected!`) and the original
-//! scalar code as the portable fallback. **Every SIMD path is bit-exact
-//! with scalar**: the vector work is integer (wrapping adds, compares,
-//! table lookups) or pure copies, and counter updates are commutative
-//! i32 adds, so only the order of side-effect-free operations changes.
+//! ([`copy_f32`]). Each has AVX2 and AVX-512 implementations
+//! (`std::arch` intrinsics behind `is_x86_feature_detected!`) and the
+//! original scalar code as the portable fallback. **Every SIMD path is
+//! bit-exact with scalar**: the vector work is integer (wrapping adds,
+//! compares, table lookups) or pure copies, counter updates are
+//! commutative i32 adds, and the float reconstruction shares one fixed
+//! 8-lane reduction tree across all backends, so only the order of
+//! side-effect-free operations changes.
+//!
+//! The AVX-512 accumulate path additionally breaks the histogram
+//! scatter dependency with *replicated counter copies*: lanes scatter
+//! round-robin into [`HIST_COPIES`] private copies of the counter set
+//! (lane `k` → copy `k mod HIST_COPIES`), so consecutive updates that
+//! hit the same (ap+wp) slot — common, exponent codes concentrate near
+//! zero — land in different cache lines and retire independently. The
+//! copies are folded back with a vectorized i32 reduction at row end;
+//! every update is a commutative i32 add, so the result is
+//! bit-identical to the single-table scalar scheme.
 //!
 //! Backend resolution (cheapest override wins):
 //! 1. a process-wide programmatic override installed via [`force`]
 //!    (the `--simd` CLI flag);
 //! 2. the `DNATEQ_SIMD` environment variable (`scalar` / `avx2` /
-//!    `auto`) — how the CI matrix pins each dispatch arm;
+//!    `avx512` / `auto`) — how the CI matrix pins each dispatch arm;
 //! 3. runtime CPU detection ([`detect`]).
 //!
 //! The engines capture [`active_backend`] at construction and expose a
 //! `with_backend` builder, so scalar and SIMD instances can be compared
 //! side by side in the same process (the equivalence property suite and
 //! `bench_gate` both do).
-//!
-//! AVX-512 is deliberately left out for now: the counter tables are
-//! scatter-bound, detection/intrinsic coverage on stable is younger,
-//! and the win over AVX2 would be marginal for these loops.
 
+use super::pack::NibbleLut;
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::__m512i;
 
 /// A counting-kernel instruction-set backend.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,6 +52,11 @@ pub enum SimdBackend {
     Scalar,
     /// 256-bit AVX2 integer kernels (x86_64 only, runtime-detected).
     Avx2,
+    /// 512-bit AVX-512 kernels (x86_64 only, runtime-detected via
+    /// `avx512f` + `avx512bw`): mask-register sentinel remap, single
+    /// `vpermb` nibble decode where `avx512vbmi` is present (512-bit
+    /// `pshufb` otherwise), and the replicated-histogram accumulate.
+    Avx512,
 }
 
 impl SimdBackend {
@@ -47,21 +65,27 @@ impl SimdBackend {
         match self {
             SimdBackend::Scalar => "scalar",
             SimdBackend::Avx2 => "avx2",
+            SimdBackend::Avx512 => "avx512",
         }
+    }
+
+    /// Every backend the crate knows, strongest first — the probe order
+    /// used by [`detect`] and the capability report in `bench_gate`.
+    pub fn all() -> [SimdBackend; 3] {
+        [SimdBackend::Avx512, SimdBackend::Avx2, SimdBackend::Scalar]
     }
 }
 
-/// `FORCE` values: 0 = no override, 1 = scalar, 2 = avx2.
+/// `FORCE` values: 0 = no override, 1 = scalar, 2 = avx2, 3 = avx512.
 static FORCE: AtomicU8 = AtomicU8::new(0);
 /// Resolved env-or-detected default, computed once.
 static DEFAULT: OnceLock<SimdBackend> = OnceLock::new();
 
-/// What the CPU supports, ignoring every override.
+/// What the CPU supports, ignoring every override (strongest backend).
 pub fn detect() -> SimdBackend {
-    #[cfg(target_arch = "x86_64")]
-    {
-        if is_x86_feature_detected!("avx2") {
-            return SimdBackend::Avx2;
+    for b in SimdBackend::all() {
+        if available(b) {
+            return b;
         }
     }
     SimdBackend::Scalar
@@ -73,19 +97,42 @@ pub fn best_available() -> SimdBackend {
     *BEST.get_or_init(detect)
 }
 
-/// Whether `backend` can execute on this host.
+/// Whether `backend` can execute on this host. Per-feature, not
+/// best-only: an AVX-512 host can still force `avx2` (the CI matrix
+/// relies on exactly that to pin its dispatch arms).
 pub fn available(backend: SimdBackend) -> bool {
-    backend == SimdBackend::Scalar || best_available() == backend
+    match backend {
+        SimdBackend::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2 => is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx512 => {
+            is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512bw")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => false,
+    }
 }
 
-/// Parse a backend name: `scalar`, `avx2`/`simd`, or `auto` (= clear
-/// the override and fall back to env/detection).
+/// Whether the nibble decode can use `vpermb` (cached; the AVX-512
+/// backend otherwise falls back to a 512-bit `pshufb`, bit-identical).
+#[cfg(target_arch = "x86_64")]
+fn has_avx512vbmi() -> bool {
+    static VBMI: OnceLock<bool> = OnceLock::new();
+    *VBMI.get_or_init(|| is_x86_feature_detected!("avx512vbmi"))
+}
+
+/// Parse a backend name: `scalar`, `avx2` (alias `simd`), `avx512`, or
+/// `auto` (= clear the override and fall back to env/detection).
 pub fn parse(name: &str) -> Result<Option<SimdBackend>, String> {
     match name {
         "auto" | "" => Ok(None),
         "scalar" => Ok(Some(SimdBackend::Scalar)),
         "avx2" | "simd" => Ok(Some(SimdBackend::Avx2)),
-        other => Err(format!("unknown SIMD backend `{other}`; use scalar, avx2 or auto")),
+        "avx512" => Ok(Some(SimdBackend::Avx512)),
+        other => {
+            Err(format!("unknown SIMD backend `{other}`; use scalar, avx2, avx512 or auto"))
+        }
     }
 }
 
@@ -102,6 +149,7 @@ pub fn force(backend: Option<SimdBackend>) -> Result<(), String> {
         None => 0,
         Some(SimdBackend::Scalar) => 1,
         Some(SimdBackend::Avx2) => 2,
+        Some(SimdBackend::Avx512) => 3,
     };
     FORCE.store(code, Ordering::Relaxed);
     Ok(())
@@ -114,6 +162,7 @@ pub fn active_backend() -> SimdBackend {
     match FORCE.load(Ordering::Relaxed) {
         1 => SimdBackend::Scalar,
         2 => SimdBackend::Avx2,
+        3 => SimdBackend::Avx512,
         _ => *DEFAULT.get_or_init(env_default),
     }
 }
@@ -150,8 +199,11 @@ pub fn shift_codes(backend: SimdBackend, codes: &[i8], r_max: i32) -> Vec<u8> {
         // SAFETY: `Avx2` is only constructible on hosts where
         // `is_x86_feature_detected!("avx2")` held (see `available`).
         SimdBackend::Avx2 => unsafe { shift_codes_avx2(codes, r_max) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx512` implies runtime avx512f+bw (see `available`).
+        SimdBackend::Avx512 => unsafe { shift_codes_avx512(codes, r_max) },
         #[cfg(not(target_arch = "x86_64"))]
-        SimdBackend::Avx2 => super::pack::shift_codes(codes, r_max),
+        _ => super::pack::shift_codes(codes, r_max),
     }
 }
 
@@ -187,6 +239,39 @@ unsafe fn shift_codes_avx2(codes: &[i8], r_max: i32) -> Vec<u8> {
     out
 }
 
+/// 64 codes per iteration. The sentinel test lands in a `__mmask64`
+/// register (`vpcmpeqb k, zmm, zmm`) and the `0xFF` remap is a single
+/// mask blend — no 256-bit cmp/blendv pair, no vector mask
+/// materialization.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn shift_codes_avx512(codes: &[i8], r_max: i32) -> Vec<u8> {
+    use std::arch::x86_64::*;
+    let n = codes.len();
+    let mut out = vec![0u8; n];
+    let sentinel = _mm512_set1_epi8(crate::dnateq::ZERO_CODE_SENTINEL);
+    let offset = _mm512_set1_epi8(r_max as i8);
+    let ff = _mm512_set1_epi8(-1);
+    let mut i = 0usize;
+    while i + 64 <= n {
+        let v = (codes.as_ptr().add(i) as *const __m512i).read_unaligned();
+        let is_zero = _mm512_cmpeq_epi8_mask(v, sentinel);
+        let shifted = _mm512_add_epi8(v, offset);
+        let res = _mm512_mask_blend_epi8(is_zero, shifted, ff);
+        (out.as_mut_ptr().add(i) as *mut __m512i).write_unaligned(res);
+        i += 64;
+    }
+    for j in i..n {
+        let c = codes[j];
+        out[j] = if c == crate::dnateq::ZERO_CODE_SENTINEL {
+            0xFF
+        } else {
+            (c as i32 + r_max) as u8
+        };
+    }
+    out
+}
+
 // ---------------------------------------------------------------------
 // Nibble decoding of the packed 3-bit weight store.
 // ---------------------------------------------------------------------
@@ -194,13 +279,15 @@ unsafe fn shift_codes_avx2(codes: &[i8], r_max: i32) -> Vec<u8> {
 /// Decode `n` nibble-packed elements into parallel pre-shifted-code /
 /// sign buffers via the 16-entry LUT (invalid or zero nibbles decode to
 /// `(0xFF, 0)`, which the accumulators mask out). The AVX2 path maps
-/// the LUT onto `pshufb`: 32 elements per iteration from 16 packed
-/// bytes.
+/// the LUT onto `pshufb` (32 elements per iteration from 16 packed
+/// bytes, double-pumped per table); the AVX-512 path decodes 64
+/// elements per iteration with one `vpermb` table lookup per output
+/// stream (512-bit `pshufb` on pre-VBMI parts — bit-identical).
 pub fn decode_nibbles(
     backend: SimdBackend,
     bytes: &[u8],
     n: usize,
-    lut: &[(u8, i8); 16],
+    lut: &NibbleLut,
     plus: &mut Vec<u8>,
     signs: &mut Vec<i8>,
 ) {
@@ -210,12 +297,16 @@ pub fn decode_nibbles(
     signs.clear();
     signs.resize(n, 0);
     match backend {
-        SimdBackend::Scalar => decode_nibbles_scalar(bytes, n, lut, plus, signs),
+        SimdBackend::Scalar => decode_nibbles_scalar(bytes, n, &lut.pairs, plus, signs),
         #[cfg(target_arch = "x86_64")]
         // SAFETY: `Avx2` implies runtime AVX2 support (see `available`).
         SimdBackend::Avx2 => unsafe { decode_nibbles_avx2(bytes, n, lut, plus, signs) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx512` implies runtime avx512f+bw; the `vpermb`
+        // branch is additionally gated on `has_avx512vbmi`.
+        SimdBackend::Avx512 => unsafe { decode_nibbles_avx512(bytes, n, lut, plus, signs) },
         #[cfg(not(target_arch = "x86_64"))]
-        SimdBackend::Avx2 => decode_nibbles_scalar(bytes, n, lut, plus, signs),
+        _ => decode_nibbles_scalar(bytes, n, &lut.pairs, plus, signs),
     }
 }
 
@@ -240,19 +331,13 @@ fn decode_nibbles_scalar(
 unsafe fn decode_nibbles_avx2(
     bytes: &[u8],
     n: usize,
-    lut: &[(u8, i8); 16],
+    lut: &NibbleLut,
     plus: &mut [u8],
     signs: &mut [i8],
 ) {
     use std::arch::x86_64::*;
-    let mut plus_tbl = [0u8; 16];
-    let mut sign_tbl = [0i8; 16];
-    for (k, &(p, s)) in lut.iter().enumerate() {
-        plus_tbl[k] = p;
-        sign_tbl[k] = s;
-    }
-    let plus_lut = _mm_loadu_si128(plus_tbl.as_ptr() as *const __m128i);
-    let sign_lut = _mm_loadu_si128(sign_tbl.as_ptr() as *const __m128i);
+    let plus_lut = _mm_loadu_si128(lut.plus.as_ptr() as *const __m128i);
+    let sign_lut = _mm_loadu_si128(lut.signs.as_ptr() as *const __m128i);
     let low = _mm_set1_epi8(0x0F);
     let mut i = 0usize;
     while i + 32 <= n {
@@ -275,12 +360,84 @@ unsafe fn decode_nibbles_avx2(
         );
         i += 32;
     }
-    decode_nibbles_scalar(&bytes[i / 2..], n - i, lut, &mut plus[i..], &mut signs[i..]);
+    decode_nibbles_scalar(&bytes[i / 2..], n - i, &lut.pairs, &mut plus[i..], &mut signs[i..]);
+}
+
+/// `vpermb` lookup: one instruction maps 64 nibble indices to 64 LUT
+/// bytes (indices are < 16, so only the table's first 128-bit copy is
+/// ever read — same bytes the `pshufb` fallback selects per lane).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512vbmi")]
+unsafe fn vpermb_lookup(table: __m512i, idx: __m512i) -> __m512i {
+    std::arch::x86_64::_mm512_permutexvar_epi8(idx, table)
+}
+
+/// 64 elements per iteration from 32 packed bytes: widen bytes to
+/// 16-bit lanes, split nibbles into the lane's (low, high) byte pair —
+/// which *is* element order — then one table lookup per output stream.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn decode_nibbles_avx512(
+    bytes: &[u8],
+    n: usize,
+    lut: &NibbleLut,
+    plus: &mut [u8],
+    signs: &mut [i8],
+) {
+    use std::arch::x86_64::*;
+    let plus_tbl =
+        _mm512_broadcast_i32x4(_mm_loadu_si128(lut.plus.as_ptr() as *const __m128i));
+    let sign_tbl =
+        _mm512_broadcast_i32x4(_mm_loadu_si128(lut.signs.as_ptr() as *const __m128i));
+    let nib = _mm512_set1_epi16(0x000F);
+    let vbmi = has_avx512vbmi();
+    let mut i = 0usize;
+    while i + 64 <= n {
+        let b = _mm256_loadu_si256(bytes.as_ptr().add(i / 2) as *const __m256i);
+        let w = _mm512_cvtepu8_epi16(b);
+        let lo = _mm512_and_si512(w, nib);
+        let hi = _mm512_and_si512(_mm512_srli_epi16::<4>(w), nib);
+        // 16-bit lane k → bytes (2k, 2k+1) = (low nibble, high nibble):
+        // exactly elements 2k and 2k+1 (low nibble first).
+        let idx = _mm512_or_si512(lo, _mm512_slli_epi16::<8>(hi));
+        let (pv, sv) = if vbmi {
+            // SAFETY: `has_avx512vbmi` checked above.
+            (vpermb_lookup(plus_tbl, idx), vpermb_lookup(sign_tbl, idx))
+        } else {
+            (_mm512_shuffle_epi8(plus_tbl, idx), _mm512_shuffle_epi8(sign_tbl, idx))
+        };
+        (plus.as_mut_ptr().add(i) as *mut __m512i).write_unaligned(pv);
+        (signs.as_mut_ptr().add(i) as *mut __m512i).write_unaligned(sv);
+        i += 64;
+    }
+    decode_nibbles_scalar(&bytes[i / 2..], n - i, &lut.pairs, &mut plus[i..], &mut signs[i..]);
 }
 
 // ---------------------------------------------------------------------
 // Counter-table scatter: the §IV counting hot spot.
 // ---------------------------------------------------------------------
+
+/// Private counter-set copies kept by the replicated-histogram scheme
+/// (copy 0 is the caller's tables). Lane `k` scatters into copy
+/// `k mod HIST_COPIES`, so consecutive live lanes update independent
+/// cache lines even when their `(ap+wp)` indices collide.
+pub const HIST_COPIES: usize = 4;
+
+/// The replicated path pays `(HIST_COPIES-1)` zero+fold sweeps over the
+/// counter set per row; it only wins when the row is long relative to
+/// the tables. Replication turns on when
+/// `row_len >= REPLICATE_MIN_RATIO × counter_set_len` — a pure
+/// performance policy, both schemes are bit-identical.
+pub const REPLICATE_MIN_RATIO: usize = 8;
+
+/// Reusable backing for the replicated-histogram copies
+/// (`HIST_COPIES - 1` private `[pair | wcnt | acnt]` counter sets).
+/// Construct one per forward pass and thread it through
+/// [`accumulate_row`]; scalar and AVX2 backends leave it untouched.
+#[derive(Default)]
+pub struct AccumScratch {
+    buf: Vec<i32>,
+}
 
 /// Accumulate one (weight row × activation row) pass into the three
 /// count tables: `pair[ap+wp] += s`, `wcnt[wp] += s`, `acnt[ap] += s`
@@ -290,8 +447,13 @@ unsafe fn decode_nibbles_avx2(
 /// The AVX2 path computes the 32-lane validity mask and sign products
 /// branchlessly, then drains only the live lanes through the scatter
 /// (bit-scan over the movemask); zero-dense tensors — DNA-TEQ's common
-/// case — skip their dead lanes almost for free. Updates are
-/// commutative i32 adds, so the result is bit-identical to scalar.
+/// case — skip their dead lanes almost for free. The AVX-512 path does
+/// the same over 64 lanes with mask registers and, for long rows,
+/// scatters round-robin into [`HIST_COPIES`] replicated counter copies
+/// (gather-free: no `vpconflictd` probing, no same-address dependency
+/// chains) folded back with a vectorized i32 reduction at row end.
+/// Updates are commutative i32 adds, so every path is bit-identical to
+/// scalar.
 ///
 /// Caller contract (same trust the scalar kernel always had, checked
 /// via `debug_assert`): every non-`0xFF` byte in `w_plus`/`a_plus` is
@@ -307,10 +469,12 @@ pub fn accumulate_row(
     pair: &mut [i32],
     wcnt: &mut [i32],
     acnt: &mut [i32],
+    scratch: &mut AccumScratch,
 ) {
     assert_eq!(w_plus.len(), w_signs.len());
     assert_eq!(a_plus.len(), a_signs.len());
     assert_eq!(w_plus.len(), a_plus.len());
+    let _ = &scratch; // non-AVX-512 arms leave the scratch untouched
     match backend {
         SimdBackend::Scalar => {
             accumulate_row_scalar(w_plus, w_signs, a_plus, a_signs, pair, wcnt, acnt)
@@ -320,10 +484,13 @@ pub fn accumulate_row(
         SimdBackend::Avx2 => unsafe {
             accumulate_row_avx2(w_plus, w_signs, a_plus, a_signs, pair, wcnt, acnt)
         },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx512` implies runtime avx512f+bw (see `available`).
+        SimdBackend::Avx512 => unsafe {
+            accumulate_row_avx512(w_plus, w_signs, a_plus, a_signs, pair, wcnt, acnt, scratch)
+        },
         #[cfg(not(target_arch = "x86_64"))]
-        SimdBackend::Avx2 => {
-            accumulate_row_scalar(w_plus, w_signs, a_plus, a_signs, pair, wcnt, acnt)
-        }
+        _ => accumulate_row_scalar(w_plus, w_signs, a_plus, a_signs, pair, wcnt, acnt),
     }
 }
 
@@ -413,13 +580,230 @@ unsafe fn accumulate_row_avx2(
     );
 }
 
+/// 64 lanes per iteration with mask-register liveness and the
+/// replicated-histogram scatter for long rows: lane `k` drains into
+/// counter copy `k & (HIST_COPIES-1)`, so adjacent live lanes — the
+/// ones most likely to share an `(ap+wp)` slot, exponent codes being
+/// concentrated — never serialize on one cache line. Short rows skip
+/// replication (the fold would dominate) and drain into the caller's
+/// tables directly, exactly like the AVX2 path.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn accumulate_row_avx512(
+    w_plus: &[u8],
+    w_signs: &[i8],
+    a_plus: &[u8],
+    a_signs: &[i8],
+    pair: &mut [i32],
+    wcnt: &mut [i32],
+    acnt: &mut [i32],
+    scratch: &mut AccumScratch,
+) {
+    use std::arch::x86_64::*;
+    let n = w_plus.len();
+    let (plen, wlen, alen) = (pair.len(), wcnt.len(), acnt.len());
+    let set = plen + wlen + alen;
+    let replicate = n >= 64 && n >= REPLICATE_MIN_RATIO * set;
+
+    // Copy 0 is the caller's tables; copies 1.. live in the scratch
+    // (zeroed here, folded back below). Raw pointers because the drain
+    // picks its copy per lane.
+    let mut pair_ptrs = [pair.as_mut_ptr(); HIST_COPIES];
+    let mut wcnt_ptrs = [wcnt.as_mut_ptr(); HIST_COPIES];
+    let mut acnt_ptrs = [acnt.as_mut_ptr(); HIST_COPIES];
+    if replicate {
+        scratch.buf.clear();
+        scratch.buf.resize((HIST_COPIES - 1) * set, 0);
+        for c in 1..HIST_COPIES {
+            let base = scratch.buf.as_mut_ptr().add((c - 1) * set);
+            pair_ptrs[c] = base;
+            wcnt_ptrs[c] = base.add(plen);
+            acnt_ptrs[c] = base.add(plen + wlen);
+        }
+    }
+
+    let ff = _mm512_set1_epi8(-1);
+    let zero = _mm512_setzero_si512();
+    let mut sbuf = [0i8; 64];
+    let mut i = 0usize;
+    while i + 64 <= n {
+        let wv = (w_plus.as_ptr().add(i) as *const __m512i).read_unaligned();
+        let av = (a_plus.as_ptr().add(i) as *const __m512i).read_unaligned();
+        let dead = _mm512_cmpeq_epi8_mask(wv, ff) | _mm512_cmpeq_epi8_mask(av, ff);
+        let mut live: u64 = !dead;
+        if live != 0 {
+            // ±1 sign product without psignb (no EVEX encoding): negate
+            // the weight signs wherever the activation sign is negative.
+            // Dead lanes may hold junk but are never read back.
+            let ws = (w_signs.as_ptr().add(i) as *const __m512i).read_unaligned();
+            let asv = (a_signs.as_ptr().add(i) as *const __m512i).read_unaligned();
+            let negate = _mm512_cmplt_epi8_mask(asv, zero);
+            let prod = _mm512_mask_blend_epi8(negate, ws, _mm512_sub_epi8(zero, ws));
+            (sbuf.as_mut_ptr() as *mut __m512i).write_unaligned(prod);
+            while live != 0 {
+                let k = live.trailing_zeros() as usize;
+                live &= live - 1;
+                let wp = *w_plus.get_unchecked(i + k) as usize;
+                let ap = *a_plus.get_unchecked(i + k) as usize;
+                let s = *sbuf.get_unchecked(k) as i32;
+                let c = k & (HIST_COPIES - 1);
+                debug_assert!(ap + wp < plen && wp < wlen && ap < alen);
+                *pair_ptrs[c].add(ap + wp) += s;
+                *wcnt_ptrs[c].add(wp) += s;
+                *acnt_ptrs[c].add(ap) += s;
+            }
+        }
+        i += 64;
+    }
+    // Tail (< 64 lanes) goes straight into the caller's tables.
+    accumulate_row_scalar(
+        &w_plus[i..],
+        &w_signs[i..],
+        &a_plus[i..],
+        &a_signs[i..],
+        pair,
+        wcnt,
+        acnt,
+    );
+    if replicate {
+        for c in 1..HIST_COPIES {
+            let base = (c - 1) * set;
+            let src = &scratch.buf[base..base + set];
+            fold_add_avx512(pair, &src[..plen]);
+            fold_add_avx512(wcnt, &src[plen..plen + wlen]);
+            fold_add_avx512(acnt, &src[plen + wlen..]);
+        }
+    }
+}
+
+/// Vectorized i32 fold of one replicated counter copy back into the
+/// caller's table (`dst[i] += src[i]`, 16 lanes per iteration).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn fold_add_avx512(dst: &mut [i32], src: &[i32]) {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(dst.len(), src.len());
+    let n = dst.len();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let d = (dst.as_ptr().add(i) as *const __m512i).read_unaligned();
+        let s = (src.as_ptr().add(i) as *const __m512i).read_unaligned();
+        (dst.as_mut_ptr().add(i) as *mut __m512i).write_unaligned(_mm512_add_epi32(d, s));
+        i += 16;
+    }
+    while i < n {
+        dst[i] += src[i];
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// BLUT reconstruction dot (the Dequantizer stage, §V-D).
+// ---------------------------------------------------------------------
+
+/// Fixed 8-lane reduction tree shared by every [`blut_dot`] backend:
+/// element `i` accumulates into lane `i mod 8` (in index order within
+/// the lane), and the lanes combine pairwise. Scalar and SIMD execute
+/// the exact same IEEE adds/multiplies in the exact same order, so the
+/// reconstruction stays bitwise identical across backends.
+#[inline]
+fn fold_tree8(acc: &[f64; 8]) -> f64 {
+    let b0 = acc[0] + acc[1];
+    let b1 = acc[2] + acc[3];
+    let b2 = acc[4] + acc[5];
+    let b3 = acc[6] + acc[7];
+    (b0 + b1) + (b2 + b3)
+}
+
+/// Weighted count sum of the BLUT reconstruction:
+/// `Σ counts[i] · blut[i]` in f64, over the fixed [`fold_tree8`]
+/// reduction order. `i32 → f64` conversion and the mul/add pair are
+/// exact per IEEE-754 lane-for-lane (no FMA contraction on any path),
+/// so scalar, AVX2, and AVX-512 return the same bits.
+pub fn blut_dot(backend: SimdBackend, counts: &[i32], blut: &[f64]) -> f64 {
+    assert_eq!(counts.len(), blut.len(), "counts/BLUT length mismatch");
+    match backend {
+        SimdBackend::Scalar => blut_dot_scalar(counts, blut),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx2` implies runtime AVX2 support (see `available`).
+        SimdBackend::Avx2 => unsafe { blut_dot_avx2(counts, blut) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx512` implies runtime avx512f+bw (see `available`).
+        SimdBackend::Avx512 => unsafe { blut_dot_avx512(counts, blut) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => blut_dot_scalar(counts, blut),
+    }
+}
+
+/// The scalar twin of the vector paths: strided 8-lane partials in the
+/// same per-lane order, folded by the same tree.
+fn blut_dot_scalar(counts: &[i32], blut: &[f64]) -> f64 {
+    let mut acc = [0.0f64; 8];
+    for (i, (&c, &p)) in counts.iter().zip(blut).enumerate() {
+        acc[i & 7] += c as f64 * p;
+    }
+    fold_tree8(&acc)
+}
+
+/// Two 4-lane f64 accumulators = the 8 tree lanes; `vcvtdq2pd` widens
+/// counts exactly, separate mul + add (no FMA) keeps lane arithmetic
+/// identical to scalar.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn blut_dot_avx2(counts: &[i32], blut: &[f64]) -> f64 {
+    use std::arch::x86_64::*;
+    let n = counts.len();
+    let mut acc_lo = _mm256_setzero_pd();
+    let mut acc_hi = _mm256_setzero_pd();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let c_lo = _mm256_cvtepi32_pd(_mm_loadu_si128(counts.as_ptr().add(i) as *const __m128i));
+        let c_hi =
+            _mm256_cvtepi32_pd(_mm_loadu_si128(counts.as_ptr().add(i + 4) as *const __m128i));
+        acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(c_lo, _mm256_loadu_pd(blut.as_ptr().add(i))));
+        acc_hi =
+            _mm256_add_pd(acc_hi, _mm256_mul_pd(c_hi, _mm256_loadu_pd(blut.as_ptr().add(i + 4))));
+        i += 8;
+    }
+    let mut acc = [0.0f64; 8];
+    _mm256_storeu_pd(acc.as_mut_ptr(), acc_lo);
+    _mm256_storeu_pd(acc.as_mut_ptr().add(4), acc_hi);
+    for j in i..n {
+        acc[j & 7] += counts[j] as f64 * blut[j];
+    }
+    fold_tree8(&acc)
+}
+
+/// One 8-lane f64 accumulator — the tree lanes map 1:1 onto the zmm.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn blut_dot_avx512(counts: &[i32], blut: &[f64]) -> f64 {
+    use std::arch::x86_64::*;
+    let n = counts.len();
+    let mut accv = _mm512_setzero_pd();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let c = _mm512_cvtepi32_pd(_mm256_loadu_si256(counts.as_ptr().add(i) as *const __m256i));
+        accv = _mm512_add_pd(accv, _mm512_mul_pd(c, _mm512_loadu_pd(blut.as_ptr().add(i))));
+        i += 8;
+    }
+    let mut acc = [0.0f64; 8];
+    _mm512_storeu_pd(acc.as_mut_ptr(), accv);
+    for j in i..n {
+        acc[j & 7] += counts[j] as f64 * blut[j];
+    }
+    fold_tree8(&acc)
+}
+
 // ---------------------------------------------------------------------
 // INT8 dot product (the VNNI-style baseline).
 // ---------------------------------------------------------------------
 
 /// i32-accumulating i8 dot product. The AVX2 path widens 16 lanes at a
-/// time to i16 and uses `pmaddwd` (exact i32 pair sums of i8 products),
-/// so it computes the same mod-2³² integer sum as the scalar reference
+/// time to i16 and uses `pmaddwd` (exact i32 pair sums of i8 products);
+/// AVX-512 does the same 32 lanes at a time. Both compute the same
+/// mod-2³² integer sum as the scalar reference
 /// [`crate::expdot::int8::gemv_i8`] in a different association order —
 /// identical results, integer adds being commutative.
 pub fn dot_i8(backend: SimdBackend, a: &[i8], w: &[i8]) -> i32 {
@@ -429,8 +813,11 @@ pub fn dot_i8(backend: SimdBackend, a: &[i8], w: &[i8]) -> i32 {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: `Avx2` implies runtime AVX2 support (see `available`).
         SimdBackend::Avx2 => unsafe { dot_i8_avx2(a, w) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx512` implies runtime avx512f+bw (see `available`).
+        SimdBackend::Avx512 => unsafe { dot_i8_avx512(a, w) },
         #[cfg(not(target_arch = "x86_64"))]
-        SimdBackend::Avx2 => super::int8::gemv_i8(a, w),
+        _ => super::int8::gemv_i8(a, w),
     }
 }
 
@@ -455,13 +842,37 @@ unsafe fn dot_i8_avx2(a: &[i8], w: &[i8]) -> i32 {
     _mm_cvtsi128_si32(s) + super::int8::gemv_i8(&a[i..], &w[i..])
 }
 
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn dot_i8_avx512(a: &[i8], w: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let mut acc = _mm512_setzero_si512();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let va = _mm512_cvtepi8_epi16(_mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i));
+        let vw = _mm512_cvtepi8_epi16(_mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i));
+        acc = _mm512_add_epi32(acc, _mm512_madd_epi16(va, vw));
+        i += 32;
+    }
+    let lo256 = _mm512_castsi512_si256(acc);
+    let hi256 = _mm512_extracti64x4_epi64::<1>(acc);
+    let s256 = _mm256_add_epi32(lo256, hi256);
+    let lo = _mm256_castsi256_si128(s256);
+    let hi = _mm256_extracti128_si256::<1>(s256);
+    let s = _mm_add_epi32(lo, hi);
+    let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<1>(s));
+    _mm_cvtsi128_si32(s) + super::int8::gemv_i8(&a[i..], &w[i..])
+}
+
 // ---------------------------------------------------------------------
 // f32 block copy (im2col's stride-1 inner loop).
 // ---------------------------------------------------------------------
 
 /// Copy `src` into `dst` (equal lengths). Scalar uses `copy_from_slice`
-/// (memcpy); AVX2 runs explicit 8-wide unaligned vector moves. Copies
-/// are trivially bit-exact.
+/// (memcpy); AVX2 runs explicit 8-wide and AVX-512 16-wide unaligned
+/// vector moves. Copies are trivially bit-exact.
 pub fn copy_f32(backend: SimdBackend, dst: &mut [f32], src: &[f32]) {
     assert_eq!(dst.len(), src.len());
     match backend {
@@ -469,8 +880,13 @@ pub fn copy_f32(backend: SimdBackend, dst: &mut [f32], src: &[f32]) {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: `Avx2` implies runtime AVX2 (and thus AVX) support.
         SimdBackend::Avx2 => unsafe { copy_f32_avx(dst.as_mut_ptr(), src.as_ptr(), dst.len()) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx512` implies runtime avx512f support.
+        SimdBackend::Avx512 => unsafe {
+            copy_f32_avx512(dst.as_mut_ptr(), src.as_ptr(), dst.len())
+        },
         #[cfg(not(target_arch = "x86_64"))]
-        SimdBackend::Avx2 => dst.copy_from_slice(src),
+        _ => dst.copy_from_slice(src),
     }
 }
 
@@ -489,21 +905,36 @@ unsafe fn copy_f32_avx(dst: *mut f32, src: *const f32, n: usize) {
     }
 }
 
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn copy_f32_avx512(dst: *mut f32, src: *const f32, n: usize) {
+    use std::arch::x86_64::*;
+    let mut i = 0usize;
+    while i + 16 <= n {
+        _mm512_storeu_ps(dst.add(i), _mm512_loadu_ps(src.add(i)));
+        i += 16;
+    }
+    while i < n {
+        *dst.add(i) = *src.add(i);
+        i += 1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::dnateq::ZERO_CODE_SENTINEL;
-    use crate::expdot::pack::{self, nibble_lut};
+    use crate::expdot::pack::{self, nibble_lut_tables};
     use crate::tensor::SplitMix64;
 
-    /// The SIMD backend to exercise, or `None` on scalar-only hosts
-    /// (the avx2-vs-scalar tests then pass vacuously; CI's simd lane
-    /// and the sanitizer job run them for real).
-    fn simd() -> Option<SimdBackend> {
-        match best_available() {
-            SimdBackend::Scalar => None,
-            b => Some(b),
-        }
+    /// Every non-scalar backend this host can execute (empty on
+    /// scalar-only hosts — the vs-scalar tests then pass vacuously;
+    /// CI's simd/avx512 lanes and the sanitizer job run them for real).
+    fn simd_backends() -> Vec<SimdBackend> {
+        [SimdBackend::Avx2, SimdBackend::Avx512]
+            .into_iter()
+            .filter(|&b| available(b))
+            .collect()
     }
 
     fn rand_codes(
@@ -532,6 +963,7 @@ mod tests {
         assert_eq!(parse("scalar"), Ok(Some(SimdBackend::Scalar)));
         assert_eq!(parse("avx2"), Ok(Some(SimdBackend::Avx2)));
         assert_eq!(parse("simd"), Ok(Some(SimdBackend::Avx2)));
+        assert_eq!(parse("avx512"), Ok(Some(SimdBackend::Avx512)));
         assert_eq!(parse("auto"), Ok(None));
         assert!(parse("neon").is_err());
     }
@@ -541,53 +973,100 @@ mod tests {
         assert!(available(SimdBackend::Scalar));
         // Whatever detection says is, by definition, available.
         assert!(available(best_available()));
+        // And the stronger backend always implies the weaker one.
+        if available(SimdBackend::Avx512) {
+            assert!(available(SimdBackend::Avx2));
+        }
     }
 
     #[test]
     fn shift_codes_matches_scalar_all_widths() {
-        let Some(simd) = simd() else { return };
         let mut rng = SplitMix64::new(0x5111);
         // Odd lengths hit the tail; r_max 127 hits the wrapping add.
         for (n, r_max, zero_every) in [(33, 1, 3), (257, 7, 5), (96, 127, 1), (500, 127, 7)] {
             let (codes, _) = rand_codes(n, r_max, zero_every, &mut rng);
             let want = pack::shift_codes(&codes, r_max);
-            let got = shift_codes(simd, &codes, r_max);
-            assert_eq!(got, want, "n={n} r_max={r_max}");
+            for b in simd_backends() {
+                let got = shift_codes(b, &codes, r_max);
+                assert_eq!(got, want, "{} n={n} r_max={r_max}", b.name());
+            }
         }
     }
 
     #[test]
     fn decode_nibbles_matches_scalar() {
-        let Some(simd) = simd() else { return };
         let mut rng = SplitMix64::new(0x5112);
-        let lut = nibble_lut(3);
-        for n in [31usize, 32, 64, 97, 320] {
+        let lut = nibble_lut_tables(3);
+        for n in [31usize, 32, 63, 64, 97, 320] {
             let bytes: Vec<u8> = (0..n.div_ceil(2)).map(|_| rng.next_below(256) as u8).collect();
             let (mut ps, mut ss) = (Vec::new(), Vec::new());
-            let (mut pv, mut sv) = (Vec::new(), Vec::new());
             decode_nibbles(SimdBackend::Scalar, &bytes, n, &lut, &mut ps, &mut ss);
-            decode_nibbles(simd, &bytes, n, &lut, &mut pv, &mut sv);
-            assert_eq!(pv, ps, "plus n={n}");
-            assert_eq!(sv, ss, "signs n={n}");
+            for b in simd_backends() {
+                let (mut pv, mut sv) = (Vec::new(), Vec::new());
+                decode_nibbles(b, &bytes, n, &lut, &mut pv, &mut sv);
+                assert_eq!(pv, ps, "{} plus n={n}", b.name());
+                assert_eq!(sv, ss, "{} signs n={n}", b.name());
+            }
         }
     }
 
     #[test]
     fn accumulate_row_matches_scalar() {
-        let Some(simd) = simd() else { return };
         let mut rng = SplitMix64::new(0x5113);
-        for (n, r_max, zero_every) in [(64usize, 3, 4), (129, 7, 0), (333, 127, 2), (31, 1, 1)] {
+        // n=2048 with r_max ≤ 7 crosses the replication threshold, so
+        // the AVX-512 fold path is exercised; 31/64/129/333 stay on the
+        // direct drain.
+        for (n, r_max, zero_every) in
+            [(64usize, 3, 4), (129, 7, 0), (333, 127, 2), (31, 1, 1), (2048, 3, 3), (2048, 7, 0)]
+        {
             let (wc, ws) = rand_codes(n, r_max, zero_every, &mut rng);
             let (ac, asn) = rand_codes(n, r_max, zero_every.max(1) + 1, &mut rng);
             let wp = pack::shift_codes(&wc, r_max);
             let ap = pack::shift_codes(&ac, r_max);
             let (plen, slen) = ((4 * r_max + 1) as usize, (2 * r_max + 1) as usize);
             let mut t_s = (vec![0i32; plen], vec![0i32; slen], vec![0i32; slen]);
-            let mut t_v = t_s.clone();
             let sc = SimdBackend::Scalar;
-            accumulate_row(sc, &wp, &ws, &ap, &asn, &mut t_s.0, &mut t_s.1, &mut t_s.2);
-            accumulate_row(simd, &wp, &ws, &ap, &asn, &mut t_v.0, &mut t_v.1, &mut t_v.2);
-            assert_eq!(t_v, t_s, "n={n} r_max={r_max}");
+            let mut scratch = AccumScratch::default();
+            accumulate_row(
+                sc, &wp, &ws, &ap, &asn, &mut t_s.0, &mut t_s.1, &mut t_s.2, &mut scratch,
+            );
+            for b in simd_backends() {
+                let mut t_v = (vec![0i32; plen], vec![0i32; slen], vec![0i32; slen]);
+                accumulate_row(
+                    b, &wp, &ws, &ap, &asn, &mut t_v.0, &mut t_v.1, &mut t_v.2, &mut scratch,
+                );
+                assert_eq!(t_v, t_s, "{} n={n} r_max={r_max}", b.name());
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_row_accumulates_into_nonzero_tables() {
+        // The `+=` contract must survive the replicated-copy fold: a
+        // second pass lands on top of the first, on every backend.
+        let mut rng = SplitMix64::new(0x5117);
+        let (n, r_max) = (2048usize, 3);
+        let (wc, ws) = rand_codes(n, r_max, 3, &mut rng);
+        let (ac, asn) = rand_codes(n, r_max, 4, &mut rng);
+        let wp = pack::shift_codes(&wc, r_max);
+        let ap = pack::shift_codes(&ac, r_max);
+        let (plen, slen) = ((4 * r_max + 1) as usize, (2 * r_max + 1) as usize);
+        let mut want = (vec![0i32; plen], vec![0i32; slen], vec![0i32; slen]);
+        let mut scratch = AccumScratch::default();
+        let sc = SimdBackend::Scalar;
+        for _ in 0..2 {
+            accumulate_row(
+                sc, &wp, &ws, &ap, &asn, &mut want.0, &mut want.1, &mut want.2, &mut scratch,
+            );
+        }
+        for b in simd_backends() {
+            let mut got = (vec![0i32; plen], vec![0i32; slen], vec![0i32; slen]);
+            for _ in 0..2 {
+                accumulate_row(
+                    b, &wp, &ws, &ap, &asn, &mut got.0, &mut got.1, &mut got.2, &mut scratch,
+                );
+            }
+            assert_eq!(got, want, "{} double accumulate", b.name());
         }
     }
 
@@ -596,35 +1075,112 @@ mod tests {
         let n = 70;
         let wp = vec![0xFFu8; n];
         let ws = vec![1i8; n];
-        let mut tables = (vec![0i32; 13], vec![0i32; 7], vec![0i32; 7]);
-        for b in [SimdBackend::Scalar, best_available()] {
-            accumulate_row(b, &wp, &ws, &wp, &ws, &mut tables.0, &mut tables.1, &mut tables.2);
+        let mut scratch = AccumScratch::default();
+        for b in [SimdBackend::Scalar].into_iter().chain(simd_backends()) {
+            let mut tables = (vec![0i32; 13], vec![0i32; 7], vec![0i32; 7]);
+            accumulate_row(
+                b, &wp, &ws, &wp, &ws, &mut tables.0, &mut tables.1, &mut tables.2, &mut scratch,
+            );
             assert!(tables.0.iter().chain(&tables.1).chain(&tables.2).all(|&c| c == 0));
         }
     }
 
+    /// Portable model of the replicated-histogram scheme — the fold
+    /// logic the AVX-512 kernel relies on, runnable under Miri's
+    /// scalar-forced lane: scatter round-robin (`lane mod HIST_COPIES`)
+    /// into private copies, fold by plain i32 adds, compare against the
+    /// single-table scalar kernel.
+    #[test]
+    fn replicated_fold_model_matches_plain_scalar() {
+        let mut rng = SplitMix64::new(0x5116);
+        let (n, r_max) = (320usize, 5);
+        let (wc, ws) = rand_codes(n, r_max, 3, &mut rng);
+        let (ac, asn) = rand_codes(n, r_max, 5, &mut rng);
+        let wp = pack::shift_codes(&wc, r_max);
+        let ap = pack::shift_codes(&ac, r_max);
+        let (plen, slen) = ((4 * r_max + 1) as usize, (2 * r_max + 1) as usize);
+
+        // Replicated scheme, portable: HIST_COPIES private table sets.
+        let mut copies = vec![(vec![0i32; plen], vec![0i32; slen], vec![0i32; slen]); HIST_COPIES];
+        for i in 0..n {
+            let (w, a) = (wp[i] as usize, ap[i] as usize);
+            if w == 0xFF || a == 0xFF {
+                continue;
+            }
+            let s = (ws[i] * asn[i]) as i32;
+            let t = &mut copies[i & (HIST_COPIES - 1)];
+            t.0[a + w] += s;
+            t.1[w] += s;
+            t.2[a] += s;
+        }
+        let mut folded = copies[0].clone();
+        for c in &copies[1..] {
+            for (d, s) in folded.0.iter_mut().zip(&c.0) {
+                *d += *s;
+            }
+            for (d, s) in folded.1.iter_mut().zip(&c.1) {
+                *d += *s;
+            }
+            for (d, s) in folded.2.iter_mut().zip(&c.2) {
+                *d += *s;
+            }
+        }
+
+        let mut want = (vec![0i32; plen], vec![0i32; slen], vec![0i32; slen]);
+        accumulate_row_scalar(&wp, &ws, &ap, &asn, &mut want.0, &mut want.1, &mut want.2);
+        assert_eq!(folded, want);
+    }
+
+    #[test]
+    fn blut_dot_matches_scalar_bitwise() {
+        let mut rng = SplitMix64::new(0x5118);
+        for n in [0usize, 1, 7, 8, 9, 29, 61, 509] {
+            let counts: Vec<i32> =
+                (0..n).map(|_| rng.next_below(2001) as i32 - 1000).collect();
+            let blut: Vec<f64> = (0..n).map(|i| 1.3f64.powi(i as i32 - (n as i32) / 2)).collect();
+            let want = blut_dot(SimdBackend::Scalar, &counts, &blut);
+            for b in simd_backends() {
+                let got = blut_dot(b, &counts, &blut);
+                assert_eq!(got.to_bits(), want.to_bits(), "{} n={n}", b.name());
+            }
+        }
+    }
+
+    #[test]
+    fn blut_dot_scalar_agrees_with_naive_sum() {
+        // The fixed tree reassociates, so compare within f64 tolerance.
+        let counts = [3i32, -2, 0, 7, 1, -5, 4, 0, 2, -1, 6];
+        let blut: Vec<f64> = (0..counts.len()).map(|i| 1.25f64.powi(i as i32 - 5)).collect();
+        let naive: f64 = counts.iter().zip(&blut).map(|(&c, &p)| c as f64 * p).sum();
+        let got = blut_dot(SimdBackend::Scalar, &counts, &blut);
+        assert!((got - naive).abs() < 1e-12 * naive.abs().max(1.0), "{got} vs {naive}");
+    }
+
     #[test]
     fn dot_i8_matches_scalar_reference() {
-        let Some(simd) = simd() else { return };
         let mut rng = SplitMix64::new(0x5114);
-        for n in [0usize, 1, 15, 16, 17, 64, 333, 1001] {
+        for n in [0usize, 1, 15, 16, 17, 31, 32, 64, 333, 1001] {
             let a: Vec<i8> = (0..n).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect();
             let w: Vec<i8> = (0..n).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect();
-            assert_eq!(dot_i8(simd, &a, &w), super::super::int8::gemv_i8(&a, &w), "n={n}");
+            let want = super::super::int8::gemv_i8(&a, &w);
+            for b in simd_backends() {
+                assert_eq!(dot_i8(b, &a, &w), want, "{} n={n}", b.name());
+            }
         }
     }
 
     #[test]
     fn copy_f32_matches_scalar() {
-        let Some(simd) = simd() else { return };
         let mut rng = SplitMix64::new(0x5115);
-        for n in [0usize, 1, 7, 8, 9, 31, 100] {
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 31, 100] {
             let src: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
             let mut a = vec![0.0f32; n];
-            let mut b = vec![0.0f32; n];
             copy_f32(SimdBackend::Scalar, &mut a, &src);
-            copy_f32(simd, &mut b, &src);
-            assert_eq!(a, b, "n={n}");
+            for bk in simd_backends() {
+                let mut b = vec![0.0f32; n];
+                copy_f32(bk, &mut b, &src);
+                assert_eq!(a, b, "{} n={n}", bk.name());
+            }
         }
     }
 }

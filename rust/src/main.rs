@@ -14,7 +14,7 @@
 //!   energy    [--rate R] [--duration S] [--out F]   seeded ci-energy
 //!             head-to-head: exp vs INT8 joules/request through the batcher
 //!
-//! Global flag (after the subcommand): `--simd scalar|avx2|auto`
+//! Global flag (after the subcommand): `--simd scalar|avx2|avx512|auto`
 //! forces the kernel dispatch backend before any engine is constructed
 //! (default: `DNATEQ_SIMD` env var, then runtime CPU detection).
 
@@ -663,7 +663,7 @@ fn swap(args: &Args) -> Result<()> {
 
 fn run() -> Result<()> {
     let args = Args::parse();
-    // Global SIMD override (`--simd scalar|avx2|auto`), installed before
+    // Global SIMD override (`--simd scalar|avx2|avx512|auto`), installed before
     // any engine is constructed so every backend binds to it.
     if let Some(v) = args.get("simd") {
         let backend = dnateq::expdot::simd::parse(v).map_err(anyhow::Error::msg)?;
@@ -822,7 +822,7 @@ fn run() -> Result<()> {
                  [--admission block|reject|shed|energy-budget] [--power-envelope-watts W]\n            \
                  [--min-workers N] [--max-workers N]\n            \
                  [--plan-policy max-accuracy|min-bits|min-energy]\n  \
-                 global    --simd scalar|avx2|auto   force the kernel dispatch backend\n  \
+                 global    --simd scalar|avx2|avx512|auto   force the kernel dispatch backend\n  \
                  plans     list | show <model> [--version V] | diff <model> <v1> <v2>\n            \
                  | build <model> [--thr-w T] | front <model>\n  \
                  swap      <model> [--thr-w T] [--requests N]\n  \

@@ -171,7 +171,7 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
 /// `ix = ox + kx - pad` read a *contiguous* input run, so the inner `ox`
 /// loop collapses to a single block copy of the in-bounds span
 /// (`orow` positions outside it keep their zero padding), vectorized via
-/// [`simd::copy_f32`].
+/// [`simd::copy_f32`] (8-wide on AVX2, 16-wide on AVX-512).
 fn copy_patch_row(
     backend: simd::SimdBackend,
     in_row: &[f32],
@@ -399,6 +399,28 @@ mod tests {
                         }
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn copy_patch_row_identical_across_simd_backends() {
+        // The stride-1 fast path is a pure block copy under every
+        // backend, so patch rows must be bit-identical regardless of
+        // dispatch (including spans that exercise the 16-wide AVX-512
+        // body plus a ragged tail).
+        let mut rng = SplitMix64::new(107);
+        let in_row: Vec<f32> = (0..37).map(|_| rng.next_below(1000) as f32 - 500.0).collect();
+        for (ow, kx, pad) in [(37usize, 0usize, 0usize), (37, 2, 1), (5, 1, 2), (40, 0, 3)] {
+            let mut want = vec![0.0f32; ow];
+            copy_patch_row(simd::SimdBackend::Scalar, &in_row, &mut want, kx, pad);
+            for b in [simd::SimdBackend::Avx2, simd::SimdBackend::Avx512] {
+                if !simd::available(b) {
+                    continue;
+                }
+                let mut got = vec![0.0f32; ow];
+                copy_patch_row(b, &in_row, &mut got, kx, pad);
+                assert_eq!(got, want, "backend {} ow={ow} kx={kx} pad={pad}", b.name());
             }
         }
     }

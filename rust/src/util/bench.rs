@@ -23,6 +23,10 @@ pub struct BenchResult {
     pub mad: Duration,
     /// Total iterations measured.
     pub iters: u64,
+    /// SIMD backend the case ran under (`None` for cases where dispatch
+    /// is irrelevant); emitted into the bench JSON so `BENCH_*.json`
+    /// trajectories are attributable per backend.
+    pub backend: Option<String>,
 }
 
 impl BenchResult {
@@ -34,15 +38,25 @@ impl BenchResult {
         self.median.as_secs_f64() * 1e6
     }
 
+    /// Tag this result with the SIMD backend it ran under.
+    pub fn with_backend(mut self, backend: &str) -> Self {
+        self.backend = Some(backend.to_string());
+        self
+    }
+
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "{:<40} {:>12.4} ms/iter  (±{:.4} ms MAD, {} iters)",
             self.name,
             self.per_iter_ms(),
             self.mad.as_secs_f64() * 1e3,
             self.iters
-        )
+        );
+        if let Some(b) = &self.backend {
+            line.push_str(&format!("  [{b}]"));
+        }
+        line
     }
 
     /// Machine-readable form (times in milliseconds per iteration).
@@ -53,6 +67,9 @@ impl BenchResult {
             .set("mean_ms", self.mean.as_secs_f64() * 1e3)
             .set("mad_ms", self.mad.as_secs_f64() * 1e3)
             .set("iters", self.iters);
+        if let Some(b) = &self.backend {
+            o.set("backend", b.as_str());
+        }
         o
     }
 }
@@ -119,6 +136,7 @@ pub fn bench(name: &str, target_ms: u64, mut f: impl FnMut()) -> BenchResult {
         mean: Duration::from_secs_f64(mean),
         mad: Duration::from_secs_f64(mad),
         iters: total_iters,
+        backend: None,
     }
 }
 
@@ -168,11 +186,15 @@ mod tests {
             mean: Duration::from_micros(1600),
             mad: Duration::from_micros(20),
             iters: 42,
-        };
+            backend: None,
+        }
+        .with_backend("avx512");
         let j = r.to_json();
         assert_eq!(j.get("name").unwrap().as_str().unwrap(), "fc1024 b=8");
         assert!((j.get("median_ms").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-9);
         assert_eq!(j.get("iters").unwrap().as_usize().unwrap(), 42);
+        assert_eq!(j.get("backend").unwrap().as_str().unwrap(), "avx512");
+        assert!(r.summary().ends_with("[avx512]"));
 
         let dir = TempDir::new().unwrap();
         let path = dir.path().join("reports/bench.json");

@@ -1,24 +1,31 @@
-//! Scalar == SIMD bit-exactness suite for the explicit `expdot::simd`
-//! kernels, driven through the public engine APIs.
+//! Scalar == AVX2 == AVX-512 bit-exactness suite for the explicit
+//! `expdot::simd` kernels, driven through the public engine APIs and
+//! the kernel entry points directly.
 //!
-//! Every test builds paired engine instances — one forced to
-//! `SimdBackend::Scalar`, one bound to the best backend this host can
-//! run — and requires **bitwise identical** outputs across bit-widths
-//! 2..=8 (all `R_max` values the quantizer produces), odd vector
-//! lengths (tail handling), random sign patterns, and
-//! `ZERO_CODE_SENTINEL`-dense inputs. On scalar-only hosts the pairs
-//! collapse to scalar==scalar identities and the suite still passes;
-//! CI's forced-SIMD lane runs it with AVX2 actually engaged.
+//! Every test compares a `SimdBackend::Scalar` run against **every**
+//! non-scalar backend this host can execute (and the vector backends
+//! against each other), requiring **bitwise identical** outputs across
+//! bit-widths 2..=8 (all `R_max` values the quantizer produces), odd
+//! vector lengths (tail handling), random sign patterns, and
+//! `ZERO_CODE_SENTINEL`-dense inputs — including the AVX-512
+//! replicated-histogram accumulate (both below and above its
+//! replication threshold) and the backend-dispatched BLUT
+//! reconstruction. On scalar-only hosts the pairs collapse to
+//! scalar==scalar identities and the suite still passes; CI's forced
+//! avx2/avx512 lanes run it with the vector kernels actually engaged.
+//! Heavy property sweeps are `cfg_attr(miri, ignore)`; the Miri lane
+//! covers the fold logic through the in-crate scalar-model unit test.
 
 use dnateq::dnateq::ExpQuantParams;
-use dnateq::expdot::simd::{self, dot_i8};
+use dnateq::expdot::pack::nibble_lut_tables;
+use dnateq::expdot::simd::{self, dot_i8, AccumScratch, REPLICATE_MIN_RATIO};
 use dnateq::expdot::{exp_dot_reference, CountingFc, ExpDotContext, Int8Fc, SimdBackend};
 use dnateq::tensor::{SplitMix64, Tensor};
 use dnateq::util::prop::{for_all, PropConfig};
 
-/// The non-scalar backend under test, or `None` (with a notice) when
-/// this host has nothing beyond scalar — the pairs then degenerate to
-/// identities rather than silently skipping the whole suite.
+/// The best non-scalar backend under test, or `None` (with a notice)
+/// when this host has nothing beyond scalar — the pairs then degenerate
+/// to identities rather than silently skipping the whole suite.
 fn simd_backend() -> Option<SimdBackend> {
     match simd::best_available() {
         SimdBackend::Scalar => {
@@ -27,6 +34,14 @@ fn simd_backend() -> Option<SimdBackend> {
         }
         b => Some(b),
     }
+}
+
+/// Every non-scalar backend this host can execute (possibly empty).
+fn nonscalar_backends() -> Vec<SimdBackend> {
+    SimdBackend::all()
+        .into_iter()
+        .filter(|&b| b != SimdBackend::Scalar && simd::available(b))
+        .collect()
 }
 
 fn shared_params(w: &Tensor, a: &Tensor, n: u8) -> (ExpQuantParams, ExpQuantParams) {
@@ -49,8 +64,9 @@ fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) -> Result<(), String> {
 }
 
 #[test]
+#[cfg_attr(miri, ignore)] // heavy: 16-case property sweep per backend
 fn counting_fc_scalar_and_simd_agree_bitwise() {
-    let simd_b = simd_backend().unwrap_or(SimdBackend::Scalar);
+    let _ = simd_backend(); // emit the scalar-only notice once
     for_all(
         PropConfig { cases: 16, seed: 0x51D0_7E57 },
         |rng, size| {
@@ -81,13 +97,25 @@ fn counting_fc_scalar_and_simd_agree_bitwise() {
             let bias: Vec<f32> = (0..w.shape()[0]).map(|j| j as f32 * 0.5 - 1.0).collect();
             let scalar = CountingFc::new(w, wp, ap, Some(bias.clone()))
                 .with_backend(SimdBackend::Scalar);
-            let vector = CountingFc::new(w, wp, ap, Some(bias)).with_backend(simd_b);
-            assert_bits_eq(
-                vector.forward_batch(x).data(),
-                scalar.forward_batch(x).data(),
-                "forward_batch",
-            )?;
-            assert_bits_eq(vector.forward(x).data(), scalar.forward(x).data(), "forward")
+            let want_batch = scalar.forward_batch(x);
+            let want_one = scalar.forward(x);
+            // Pairwise across all executable backends: each vector
+            // backend vs scalar, which chains into avx2==avx512.
+            for b in nonscalar_backends() {
+                let vector =
+                    CountingFc::new(w, wp, ap, Some(bias.clone())).with_backend(b);
+                assert_bits_eq(
+                    vector.forward_batch(x).data(),
+                    want_batch.data(),
+                    &format!("forward_batch [{}]", b.name()),
+                )?;
+                assert_bits_eq(
+                    vector.forward(x).data(),
+                    want_one.data(),
+                    &format!("forward [{}]", b.name()),
+                )?;
+            }
+            Ok(())
         },
     );
 }
@@ -104,7 +132,9 @@ fn counting_fc_all_zero_input_yields_bias_exactly() {
         let (wp, ap) = shared_params(&w, &cal, n);
         let bias: Vec<f32> = (0..9).map(|j| j as f32 - 4.0).collect();
         let zero = Tensor::zeros(&[3, inf]);
-        for backend in [SimdBackend::Scalar, simd::best_available()] {
+        let mut backends = vec![SimdBackend::Scalar];
+        backends.extend(nonscalar_backends());
+        for backend in backends {
             let fc =
                 CountingFc::new(&w, wp, ap, Some(bias.clone())).with_backend(backend);
             let out = fc.forward_batch(&zero);
@@ -138,26 +168,31 @@ fn counting_kernel_tracks_reference_dot_under_both_backends() {
         let ctx = ExpDotContext::new(ap, wp);
         let qa = ap.quantize(&Tensor::from_vec(&[inf], x.row(0).to_vec()));
         let scalar = CountingFc::new(&w, wp, ap, None).with_backend(SimdBackend::Scalar);
-        let vector =
-            CountingFc::new(&w, wp, ap, None).with_backend(simd::best_available());
         let got_s = scalar.forward(&x);
-        let got_v = vector.forward(&x);
+        let got_v: Vec<(SimdBackend, Tensor)> = nonscalar_backends()
+            .into_iter()
+            .map(|b| (b, CountingFc::new(&w, wp, ap, None).with_backend(b).forward(&x)))
+            .collect();
         for j in 0..outf {
             let qw = wp.quantize(&Tensor::from_vec(&[inf], w.row(j).to_vec()));
             let want = exp_dot_reference(&ctx, &qa, &qw);
             let g = got_s.data()[j];
             let tol = want.abs().max(0.5) * 1e-3;
             assert!((g - want).abs() < tol, "n={n} j={j}: {g} vs oracle {want}");
-            assert_eq!(
-                got_v.data()[j].to_bits(),
-                g.to_bits(),
-                "n={n} j={j}: backends disagree"
-            );
+            for (b, got) in &got_v {
+                assert_eq!(
+                    got.data()[j].to_bits(),
+                    g.to_bits(),
+                    "n={n} j={j}: {} disagrees with scalar",
+                    b.name()
+                );
+            }
         }
     }
 }
 
 #[test]
+#[cfg_attr(miri, ignore)] // heavy: 16-case property sweep
 fn int8_fc_scalar_and_simd_agree_bitwise() {
     let simd_b = simd_backend().unwrap_or(SimdBackend::Scalar);
     for_all(
@@ -187,13 +222,150 @@ fn int8_fc_scalar_and_simd_agree_bitwise() {
 
 #[test]
 fn dot_i8_exact_across_lengths_and_backends() {
-    let Some(simd_b) = simd_backend() else { return };
     let mut rng = SplitMix64::new(0xD071);
     for n in [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 500, 1001] {
         let a: Vec<i8> = (0..n).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect();
         let w: Vec<i8> = (0..n).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect();
         let naive: i32 = a.iter().zip(&w).map(|(&x, &y)| x as i32 * y as i32).sum();
         assert_eq!(dot_i8(SimdBackend::Scalar, &a, &w), naive, "scalar n={n}");
-        assert_eq!(dot_i8(simd_b, &a, &w), naive, "simd n={n}");
+        for b in nonscalar_backends() {
+            assert_eq!(dot_i8(b, &a, &w), naive, "{} n={n}", b.name());
+        }
+    }
+}
+
+/// Random valid (plus, sign) rows for `accumulate_row`, sentinel-dense,
+/// with codes bounded by `r_max` on each side.
+fn accum_inputs(
+    rng: &mut SplitMix64,
+    n: usize,
+    r_max: usize,
+) -> (Vec<u8>, Vec<i8>, Vec<u8>, Vec<i8>) {
+    let mut mk = |rng: &mut SplitMix64| {
+        let mut plus = Vec::with_capacity(n);
+        let mut signs = Vec::with_capacity(n);
+        for _ in 0..n {
+            if rng.next_below(4) == 0 {
+                plus.push(0xFFu8);
+                signs.push(0i8);
+            } else {
+                plus.push(rng.next_below(2 * r_max + 1) as u8);
+                signs.push(if rng.next_below(2) == 0 { 1 } else { -1 });
+            }
+        }
+        (plus, signs)
+    };
+    let (wp, ws) = mk(rng);
+    let (ap, asg) = mk(rng);
+    (wp, ws, ap, asg)
+}
+
+#[test]
+fn accumulate_row_bitwise_across_backends_and_replication_regimes() {
+    // Direct kernel-level check of the AVX-512 replicated-histogram
+    // fold: row lengths straddle the `REPLICATE_MIN_RATIO` threshold so
+    // both the plain mask-drain path and the replicated+fold path run,
+    // and tables start from a nonzero state to pin the `+=` contract.
+    let mut rng = SplitMix64::new(0xACC0);
+    for r_max in [1usize, 3, 7] {
+        let (plen, slen) = (4 * r_max + 1, 2 * r_max + 1);
+        let set = plen + 2 * slen;
+        for n in [0usize, 1, 63, 64, 65, 257, REPLICATE_MIN_RATIO * set + 64, 4096] {
+            let (wp, ws, ap, asg) = accum_inputs(&mut rng, n, r_max);
+            let seed: Vec<i32> = (0..set).map(|i| i as i32 % 5 - 2).collect();
+            let run = |backend: SimdBackend| {
+                let mut pair = seed[..plen].to_vec();
+                let mut wcnt = seed[plen..plen + slen].to_vec();
+                let mut acnt = seed[plen + slen..].to_vec();
+                let mut scratch = AccumScratch::default();
+                // Two passes through the same scratch: accumulation must
+                // compose, and scratch reuse must not leak state.
+                for _ in 0..2 {
+                    simd::accumulate_row(
+                        backend, &wp, &ws, &ap, &asg, &mut pair, &mut wcnt, &mut acnt,
+                        &mut scratch,
+                    );
+                }
+                (pair, wcnt, acnt)
+            };
+            let want = run(SimdBackend::Scalar);
+            for b in nonscalar_backends() {
+                assert_eq!(run(b), want, "{} r_max={r_max} n={n}", b.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_nibbles_bitwise_across_backends() {
+    let mut rng = SplitMix64::new(0xDEC0);
+    let lut = nibble_lut_tables(3);
+    for n in [0usize, 1, 31, 63, 64, 65, 127, 509] {
+        let bytes: Vec<u8> = (0..n.div_ceil(2)).map(|_| rng.next_below(256) as u8).collect();
+        let (mut wplus, mut wsigns) = (Vec::new(), Vec::new());
+        simd::decode_nibbles(SimdBackend::Scalar, &bytes, n, &lut, &mut wplus, &mut wsigns);
+        for b in nonscalar_backends() {
+            let (mut vplus, mut vsigns) = (Vec::new(), Vec::new());
+            simd::decode_nibbles(b, &bytes, n, &lut, &mut vplus, &mut vsigns);
+            assert_eq!(vplus, wplus, "{} n={n} plus", b.name());
+            assert_eq!(vsigns, wsigns, "{} n={n} signs", b.name());
+        }
+    }
+}
+
+#[test]
+fn shift_codes_bitwise_across_backends() {
+    let mut rng = SplitMix64::new(0x5F1F);
+    for r_max in [1i32, 3, 7, 127] {
+        for n in [0usize, 1, 31, 32, 33, 63, 64, 65, 257] {
+            let codes: Vec<i8> = (0..n)
+                .map(|_| {
+                    if rng.next_below(5) == 0 {
+                        dnateq::dnateq::ZERO_CODE_SENTINEL
+                    } else {
+                        (rng.next_below((2 * r_max + 1) as usize) as i32 - r_max) as i8
+                    }
+                })
+                .collect();
+            let want = simd::shift_codes(SimdBackend::Scalar, &codes, r_max);
+            for b in nonscalar_backends() {
+                let got = simd::shift_codes(b, &codes, r_max);
+                assert_eq!(got, want, "{} r_max={r_max} n={n}", b.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn blut_reconstruction_bitwise_across_backends() {
+    // The backend-dispatched BLUT weighted sum shares one fixed 8-lane
+    // reduction tree, so `reconstruct_with` must return identical bits
+    // under every backend — both at the raw `blut_dot` level and
+    // through a full `ExpDotContext`.
+    let mut rng = SplitMix64::new(0xB1_D07);
+    for n in [0usize, 1, 7, 8, 9, 16, 17, 61, 127, 509] {
+        let counts: Vec<i32> = (0..n).map(|_| rng.next_below(81) as i32 - 40).collect();
+        let blut: Vec<f64> = (0..n).map(|_| rng.next_below(1000) as f64 / 250.0 - 2.0).collect();
+        let want = simd::blut_dot(SimdBackend::Scalar, &counts, &blut);
+        for b in nonscalar_backends() {
+            let got = simd::blut_dot(b, &counts, &blut);
+            assert_eq!(got.to_bits(), want.to_bits(), "{} n={n}", b.name());
+        }
+    }
+    for n_bits in [3u8, 5, 8] {
+        let wp = ExpQuantParams { base: 1.3, alpha: 0.6, beta: 0.004, n_bits };
+        let ap = ExpQuantParams { base: 1.3, alpha: 0.9, beta: 0.02, n_bits };
+        let ctx = ExpDotContext::new(ap, wp);
+        let pair: Vec<i32> =
+            (0..ctx.pair_table_len()).map(|_| rng.next_below(41) as i32 - 20).collect();
+        let wc: Vec<i32> =
+            (0..ctx.single_table_len()).map(|_| rng.next_below(41) as i32 - 20).collect();
+        let ac: Vec<i32> =
+            (0..ctx.single_table_len()).map(|_| rng.next_below(41) as i32 - 20).collect();
+        let want = ctx.reconstruct(&pair, &wc, &ac, 7);
+        for b in nonscalar_backends() {
+            let got = ctx.reconstruct_with(b, &pair, &wc, &ac, 7);
+            assert_eq!(got.to_bits(), want.to_bits(), "{} n_bits={n_bits}", b.name());
+        }
     }
 }
